@@ -1,0 +1,154 @@
+//! Microbenchmarks of the L3 hot paths: per-layer accelerator simulation,
+//! whole-net simulation, auto-mapper search, PJRT step execution (when
+//! artifacts exist), and the substrate primitives (RNG, JSON, par_map).
+//!
+//! These feed the EXPERIMENTS.md §Perf iteration log.
+
+use nasa::accel::{
+    allocate, AreaBudget, ChunkAccelerator, Mapping, MemoryConfig, UNIT_ENERGY_45NM,
+};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::zoo::mobilenet_v2_like;
+use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
+use nasa::util::bench::{header, Bench};
+use nasa::util::rng::Rng;
+
+fn hybrid_arch(n_blocks: usize) -> Arch {
+    let kinds = [OpKind::Conv, OpKind::Shift, OpKind::Adder];
+    let mk = |name: &str, kind, cin: usize, cout: usize, hw: usize, k: usize, groups: usize| LayerDesc {
+        name: name.into(),
+        kind,
+        cin,
+        cout,
+        h_out: hw,
+        w_out: hw,
+        k,
+        stride: 1,
+        groups,
+    };
+    let mut layers = vec![mk("stem", OpKind::Conv, 3, 16, 16, 3, 1)];
+    for i in 0..n_blocks {
+        let kind = kinds[i % 3];
+        let c = 16 + 8 * (i % 4);
+        let mid = c * 3;
+        let hw = if i < n_blocks / 2 { 16 } else { 8 };
+        layers.push(mk(&format!("L{i}/pw1"), kind, c, mid, hw, 1, 1));
+        layers.push(mk(&format!("L{i}/dw"), kind, mid, mid, hw, 3, mid));
+        layers.push(mk(&format!("L{i}/pw2"), kind, mid, c, hw, 1, 1));
+    }
+    Arch { name: "bench".into(), layers, choices: vec![] }
+}
+
+fn main() {
+    header();
+    let q = QuantSpec::default();
+    let costs = UNIT_ENERGY_45NM;
+    let arch = hybrid_arch(6);
+    let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
+    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    let mapping = Mapping::all_rs(arch.layers.len());
+
+    Bench::new("accel/simulate_net_19layers").run(|| {
+        let s = accel.simulate(&arch, &mapping, &q).unwrap();
+        std::hint::black_box(s.energy_pj);
+    });
+
+    // Large workload: MBv2 under all-RS can be legitimately infeasible
+    // (the Fig. 8 residency effect) — bench whichever outcome, since the
+    // cost being measured is the simulation itself.
+    let mbv2 = mobilenet_v2_like(OpKind::Adder, 16, 10, 500);
+    let alloc2 = allocate(&mbv2, AreaBudget::macs_equivalent(168, &costs), &costs);
+    let accel2 = ChunkAccelerator::new(alloc2, MemoryConfig::default(), costs);
+    let mapping2 = Mapping::all_rs(mbv2.layers.len());
+    Bench::new("accel/simulate_net_mbv2_53layers").run(|| {
+        let r = accel2.simulate(&mbv2, &mapping2, &q);
+        std::hint::black_box(r.map(|s| s.energy_pj).ok());
+    });
+
+    Bench::new("mapper/auto_map_full_19layers").run(|| {
+        let r = auto_map(&accel, &arch, &q, &MapperConfig::default());
+        std::hint::black_box(r.combos_tried);
+    });
+
+    Bench::new("mapper/auto_map_orderings_only").run(|| {
+        let r = auto_map(
+            &accel,
+            &arch,
+            &q,
+            &MapperConfig { search_tilings: false, ..Default::default() },
+        );
+        std::hint::black_box(r.combos_tried);
+    });
+
+    // Substrates.
+    let mut rng = Rng::new(1);
+    Bench::new("util/rng_gumbel_1k").run(|| {
+        let mut buf = vec![0.0f32; 1000];
+        rng.fill_gumbel(&mut buf);
+        std::hint::black_box(buf[999]);
+    });
+
+    if let Ok(src) = std::fs::read_to_string("artifacts/manifest.json") {
+        Bench::new("util/json_parse_manifest").run(|| {
+            let v = nasa::util::json::Json::parse(&src).unwrap();
+            std::hint::black_box(matches!(v, nasa::util::json::Json::Obj(_)));
+        });
+    }
+
+    let items: Vec<u64> = (0..10_000).collect();
+    Bench::new("util/par_map_10k").run(|| {
+        let v = nasa::util::par::par_map(&items, |x| x.wrapping_mul(2654435761));
+        std::hint::black_box(v[9999]);
+    });
+
+    // PJRT paths (the search-loop inner loop), if artifacts exist.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        bench_pjrt();
+    }
+}
+
+fn bench_pjrt() {
+    use nasa::coordinator::{Batcher, Dataset, DatasetConfig};
+    use nasa::nas::{cost_table, init_params, ArchParams};
+    use nasa::runtime::{lit_f32, Engine, Manifest};
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let Ok(sn) = manifest.supernet("hybrid_all_c10") else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let exe = engine.load(&manifest.dir, &sn.step).unwrap();
+    let mut rng = Rng::new(0);
+    let params = init_params(sn, &mut rng, true).unwrap();
+    let ap = ArchParams::zeros(sn.n_layers, sn.n_cand);
+    let mask = vec![1.0f32; ap.alpha.len()];
+    let mut gumbel = vec![0.0f32; ap.alpha.len()];
+    rng.fill_gumbel(&mut gumbel);
+    let cost = cost_table(sn);
+    let d = Dataset::generate(DatasetConfig::cifar10_like(sn.input_hw));
+    let mut b = Batcher::new(d.train.n, sn.batch, 0);
+    let (x, y) = b.next_batch(&d.train);
+
+    Bench::quick("runtime/supernet_step_exec").run(|| {
+        let out = nasa::coordinator::search_loop::run_step(
+            &exe, sn, &params, &ap.alpha, &gumbel, &mask, 5.0, 0.0, &cost, &x, &y,
+        )
+        .unwrap();
+        std::hint::black_box(out.loss);
+    });
+
+    if let Some(fc) = &manifest.fixed_child {
+        let pallas = engine.load(&manifest.dir, &fc.pallas).unwrap();
+        let jnp = engine.load(&manifest.dir, &fc.jnp).unwrap();
+        let inputs = vec![
+            lit_f32(&[sn.n_params], &params).unwrap(),
+            lit_f32(&[sn.batch, sn.input_hw, sn.input_hw, sn.input_ch], &x).unwrap(),
+        ];
+        Bench::quick("runtime/child_infer_pallas").run(|| {
+            let o = pallas.run(&inputs).unwrap();
+            std::hint::black_box(o.len());
+        });
+        Bench::quick("runtime/child_infer_jnp").run(|| {
+            let o = jnp.run(&inputs).unwrap();
+            std::hint::black_box(o.len());
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! Bench/exhibit: regenerate Fig. 6 — NASA (searched hybrid on the chunk
+//! accelerator + auto-mapper) vs the SOTA baseline systems:
+//!
+//!   * FBNet-style conv-only model on Eyeriss with MACs,
+//!   * DeepShift-MobileNetV2 on Eyeriss with Shift Units,
+//!   * AdderNet-MobileNetV2 on Eyeriss with Adder Units,
+//!   * AdderNet-ResNet32 on the dedicated adder accelerator [21],
+//!
+//! all under the same 168-MAC-equivalent area budget, CMOS 45nm, 250MHz.
+//! Accuracy columns join from runs/ (populated by the e2e example);
+//! without them, EDP ordering (the hardware half of the figure) still
+//! prints.
+//!
+//! Run: cargo bench --bench fig6_nasa_vs_sota
+
+use nasa::accel::{
+    addernet_accel, allocate, AreaBudget, ChunkAccelerator, EyerissSim, MemoryConfig,
+    PeKind, UNIT_ENERGY_45NM,
+};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::{zoo, Arch, OpKind, QuantSpec};
+use nasa::report::fig6::{points_to_log, print_points, Fig6Point};
+use nasa::runtime::Manifest;
+use nasa::util::bench::{header, Bench};
+use std::path::Path;
+
+fn searched_hybrid() -> Option<Arch> {
+    // Prefer a searched arch from runs/, else representative via manifest.
+    let saved = nasa::report::load_archs(Path::new("runs")).unwrap_or_default();
+    if let Some(a) = saved.iter().find(|a| a.name.contains("hybrid_all")) {
+        return Some(a.clone());
+    }
+    let manifest = Manifest::load(Path::new("artifacts")).ok()?;
+    let sn = manifest.supernet("hybrid_all_c10").ok()?;
+    let find = |t_: &str, e: usize, k: usize| {
+        sn.cands.iter().position(|c| c.t == t_ && c.e == e && c.k == k).unwrap()
+    };
+    Arch::from_choices(
+        sn,
+        &[
+            find("conv", 3, 3),
+            find("shift", 3, 3),
+            find("adder", 3, 5),
+            find("conv", 6, 5),
+            find("shift", 1, 3),
+            find("adder", 6, 3),
+        ],
+        "hybrid-all (repr.)",
+    )
+    .ok()
+}
+
+fn conv_searched() -> Option<Arch> {
+    let saved = nasa::report::load_archs(Path::new("runs")).unwrap_or_default();
+    // Prefer the conv-twin of the searched hybrid (iso-architecture: same
+    // (E,K) geometry with every block multiplication-based) — the paper's
+    // comparisons hold the accuracy/size point fixed; a conv-only search
+    // at a different lambda operating point would not.
+    if let Some(a) = saved.iter().find(|a| a.name.contains("conv_twin")) {
+        return Some(a.clone());
+    }
+    if let Some(a) = saved.iter().find(|a| a.name.contains("conv_only")) {
+        return Some(a.clone());
+    }
+    let manifest = Manifest::load(Path::new("artifacts")).ok()?;
+    let sn = manifest.supernet("conv_only_c10").ok()?;
+    let find = |e: usize, k: usize| {
+        sn.cands.iter().position(|c| c.t == "conv" && c.e == e && c.k == k).unwrap()
+    };
+    Arch::from_choices(
+        sn,
+        &[find(3, 3), find(3, 3), find(6, 3), find(3, 5), find(6, 5), find(3, 3)],
+        "FBNet-like (repr.)",
+    )
+    .ok()
+}
+
+fn acc_from_runs(space: &str) -> Option<f64> {
+    let logs = nasa::report::load_runs(Path::new("runs")).ok()?;
+    logs.iter()
+        .find(|l| l.name == format!("train_{space}"))
+        .and_then(|l| l.scalar("test_acc_fp32"))
+}
+
+fn main() {
+    let q = QuantSpec::default();
+    let costs = UNIT_ENERGY_45NM;
+    let budget = AreaBudget::macs_equivalent(168, &costs);
+    let mem = MemoryConfig::default();
+    let mut points = Vec::new();
+
+    // --- NASA: hybrid searched model on chunk accel + auto-mapper ---
+    let hybrid = searched_hybrid();
+    if let Some(arch) = &hybrid {
+        let alloc = allocate(arch, budget, &costs);
+        let accel = ChunkAccelerator::new(alloc, mem, costs);
+        if let Some((_, s)) = auto_map(&accel, arch, &q, &MapperConfig::default()).best {
+            points.push(Fig6Point {
+                system: "NASA (hybrid + chunk accel + auto-mapper)".into(),
+                acc: acc_from_runs("hybrid_all_c10").unwrap_or(f64::NAN),
+                edp_pj_s: s.edp(accel.clock_hz),
+            });
+        }
+    }
+
+    // --- FBNet-on-Eyeriss(MAC) ---
+    if let Some(arch) = &conv_searched() {
+        let ey = EyerissSim::with_budget(PeKind::Mac, budget.total_um2, mem, costs);
+        if let Ok(s) = ey.simulate(arch, &q) {
+            let acc = if arch.name.contains("twin") {
+                acc_from_runs("conv_twin").unwrap_or(f64::NAN)
+            } else {
+                acc_from_runs("conv_only_c10").unwrap_or(f64::NAN)
+            };
+            points.push(Fig6Point {
+                system: "FBNet-style conv [22] on Eyeriss-MAC".into(),
+                acc,
+                edp_pj_s: s.edp(ey.clock_hz),
+            });
+        }
+    }
+
+    // --- DeepShift-MBv2 on Eyeriss(Shift) ---
+    let ds = zoo::mobilenet_v2_like(OpKind::Shift, 16, 10, 500);
+    let ey_s = EyerissSim::with_budget(PeKind::ShiftUnit, budget.total_um2, mem, costs);
+    if let Ok(s) = ey_s.simulate(&ds, &q) {
+        points.push(Fig6Point {
+            system: "DeepShift-MBv2 [6] on Eyeriss-Shift".into(),
+            acc: f64::NAN,
+            edp_pj_s: s.edp(ey_s.clock_hz),
+        });
+    }
+
+    // --- AdderNet-MBv2 on Eyeriss(Adder) ---
+    let an = zoo::mobilenet_v2_like(OpKind::Adder, 16, 10, 500);
+    let ey_a = EyerissSim::with_budget(PeKind::AdderUnit, budget.total_um2, mem, costs);
+    if let Ok(s) = ey_a.simulate(&an, &q) {
+        points.push(Fig6Point {
+            system: "AdderNet-MBv2 [20] on Eyeriss-Adder".into(),
+            acc: f64::NAN,
+            edp_pj_s: s.edp(ey_a.clock_hz),
+        });
+    }
+
+    // --- AdderNet-ResNet32 on the dedicated accelerator [21] ---
+    let rn = zoo::resnet32_adder_like(16, 10);
+    let ded = addernet_accel(budget.total_um2, mem, costs);
+    if let Ok(s) = ded.simulate(&rn, &q) {
+        points.push(Fig6Point {
+            system: "AdderNet-ResNet32 on dedicated accel [21]".into(),
+            acc: f64::NAN,
+            edp_pj_s: s.edp(ded.clock_hz),
+        });
+    }
+
+    print_points(&points);
+    let _ = std::fs::create_dir_all("runs");
+    let _ = points_to_log(&points, "fig6_bench").save(Path::new("runs"));
+
+    // Headline ratios (Sec. 5.2): NASA EDP vs FBNet-on-Eyeriss.
+    if let (Some(nasa_p), Some(fbnet_p)) = (
+        points.iter().find(|p| p.system.starts_with("NASA")),
+        points.iter().find(|p| p.system.starts_with("FBNet")),
+    ) {
+        println!(
+            "\nheadline: NASA EDP is {:.1}% lower than FBNet-on-Eyeriss (paper: 51.5-59.7%)",
+            (1.0 - nasa_p.edp_pj_s / fbnet_p.edp_pj_s) * 100.0
+        );
+    }
+
+    println!();
+    header();
+    if let Some(arch) = &hybrid {
+        let alloc = allocate(arch, budget, &costs);
+        let accel = ChunkAccelerator::new(alloc, mem, costs);
+        Bench::new("fig6/nasa_pipeline_simulation").run(|| {
+            let m = nasa::accel::Mapping::all_rs(arch.layers.len());
+            std::hint::black_box(accel.simulate(arch, &m, &q).map(|s| s.energy_pj).ok());
+        });
+    }
+}

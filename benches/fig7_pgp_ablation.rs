@@ -1,0 +1,84 @@
+//! Bench/exhibit: regenerate Fig. 7 — the PGP ablation. Pretrains the
+//! hybrid-adder and hybrid-all supernets under (a) vanilla joint
+//! pretraining (FBNet recipe) and (b) the three-stage PGP with the
+//! customized recipe (gamma-zero init + bigger lr), and prints the
+//! training trajectories.
+//!
+//! This is the one bench that exercises the PJRT path, so it is sized to
+//! stay in minutes: NASA_FIG7_EPOCHS / NASA_FIG7_STEPS override the
+//! defaults.
+//!
+//! Run: cargo bench --bench fig7_pgp_ablation
+
+use nasa::coordinator::{run_search, Dataset, DatasetConfig, SearchConfig};
+use nasa::nas::PgpSchedule;
+use nasa::report::fig7::print_runs;
+use nasa::runtime::{Engine, Manifest};
+use std::path::Path;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("no artifacts/ — run `make artifacts` first; exhibit skipped");
+        return Ok(());
+    }
+    let pretrain = env_usize("NASA_FIG7_EPOCHS", 4);
+    let steps = env_usize("NASA_FIG7_STEPS", 6);
+
+    let manifest = Manifest::load(dir)?;
+    let mut engine = Engine::cpu()?;
+    let mut logs = Vec::new();
+
+    for space in ["hybrid_adder_c10", "hybrid_all_c10"] {
+        let Ok(sn) = manifest.supernet(space) else {
+            println!("({space} not built, skipping)");
+            continue;
+        };
+        let dataset = Dataset::generate(DatasetConfig::cifar10_like(sn.input_hw));
+        for (tag, vanilla, recipe) in [
+            ("pgp+recipe", false, true),
+            ("vanilla", true, false),
+        ] {
+            let mut cfg = SearchConfig::for_space(space, pretrain, 0);
+            cfg.steps_per_epoch = steps;
+            cfg.gamma_zero_recipe = recipe;
+            if vanilla {
+                cfg.schedule = PgpSchedule::vanilla(pretrain, 0);
+                // Vanilla recipe also means the default (small) lr.
+                cfg.lr_w = 0.05;
+            }
+            let t0 = std::time::Instant::now();
+            let mut outcome = run_search(&mut engine, &manifest, &dataset, &cfg)?;
+            outcome.log.name = format!("fig7_{space}_{tag}");
+            println!(
+                "{space}/{tag}: {:.0}s, final loss {:.3}",
+                t0.elapsed().as_secs_f64(),
+                outcome.log.curve("train_loss").unwrap().tail_mean(2)
+            );
+            let _ = std::fs::create_dir_all("runs");
+            let _ = outcome.log.save(Path::new("runs"));
+            logs.push(outcome.log);
+        }
+    }
+
+    let refs: Vec<_> = logs.iter().collect();
+    print_runs(&refs);
+
+    // Fig. 7 shape assertion: PGP final loss <= vanilla final loss.
+    for space in ["hybrid_adder_c10", "hybrid_all_c10"] {
+        let get = |tag: &str| {
+            logs.iter()
+                .find(|l| l.name == format!("fig7_{space}_{tag}"))
+                .map(|l| l.curve("train_loss").unwrap().tail_mean(2))
+        };
+        if let (Some(pgp), Some(van)) = (get("pgp+recipe"), get("vanilla")) {
+            let verdict = if pgp <= van { "PGP better (paper shape holds)" } else { "UNEXPECTED" };
+            println!("{space}: PGP {pgp:.3} vs vanilla {van:.3} -> {verdict}");
+        }
+    }
+    Ok(())
+}

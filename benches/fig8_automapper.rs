@@ -1,0 +1,128 @@
+//! Bench/exhibit: regenerate Fig. 8 — auto-mapper vs expert all-RS
+//! dataflow on the chunk accelerator, across several hybrid models and
+//! two shared-buffer budgets (the tight one exhibits the paper's
+//! "fixed RS fails to map" green-dotted-line cases).
+//!
+//! Run: cargo bench --bench fig8_automapper
+
+use nasa::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, UNIT_ENERGY_45NM};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
+use nasa::report::fig8::{print_rows, rows_to_log, Fig8Row};
+use nasa::runtime::Manifest;
+use nasa::util::bench::{header, Bench};
+use std::path::Path;
+
+fn model_set() -> Vec<Arch> {
+    // Searched archs if available; else representative hybrids from the
+    // manifest; else synthetic fallbacks.
+    let saved = nasa::report::load_archs(Path::new("runs")).unwrap_or_default();
+    if saved.len() >= 2 {
+        return saved;
+    }
+    if let Ok(manifest) = Manifest::load(Path::new("artifacts")) {
+        if let Ok(sn) = manifest.supernet("hybrid_all_c10") {
+            let find = |t_: &str, e: usize, k: usize| {
+                sn.cands.iter().position(|c| c.t == t_ && c.e == e && c.k == k).unwrap()
+            };
+            let mk = |name: &str, ch: Vec<usize>| Arch::from_choices(sn, &ch, name).unwrap();
+            return vec![
+                mk(
+                    "hybrid-all-A",
+                    vec![
+                        find("conv", 3, 3),
+                        find("shift", 3, 3),
+                        find("adder", 3, 5),
+                        find("conv", 6, 5),
+                        find("shift", 1, 3),
+                        find("adder", 6, 3),
+                    ],
+                ),
+                mk(
+                    "hybrid-all-B",
+                    vec![
+                        find("shift", 6, 3),
+                        find("adder", 6, 3),
+                        find("conv", 3, 5),
+                        find("shift", 3, 3),
+                        find("adder", 3, 3),
+                        find("conv", 6, 3),
+                    ],
+                ),
+                mk(
+                    "hybrid-shift-A",
+                    vec![
+                        find("conv", 3, 3),
+                        find("shift", 6, 3),
+                        find("shift", 3, 5),
+                        find("conv", 3, 3),
+                        find("shift", 6, 5),
+                        find("shift", 3, 3),
+                    ],
+                ),
+                mk(
+                    "hybrid-adder-heavy",
+                    vec![
+                        find("adder", 6, 3),
+                        find("adder", 6, 5),
+                        find("conv", 3, 3),
+                        find("adder", 6, 3),
+                        find("shift", 3, 3),
+                        find("adder", 6, 5),
+                    ],
+                ),
+            ];
+        }
+    }
+    vec![]
+}
+
+fn run_setting(models: &[Arch], mem: MemoryConfig, label: &str) -> Vec<Fig8Row> {
+    let q = QuantSpec::default();
+    let costs = UNIT_ENERGY_45NM;
+    let budget = AreaBudget::macs_equivalent(168, &costs);
+    let mut rows = Vec::new();
+    for arch in models {
+        let alloc = allocate(arch, budget, &costs);
+        let accel = ChunkAccelerator::new(alloc, mem, costs);
+        let r = auto_map(&accel, arch, &q, &MapperConfig::default());
+        let Some((m, s)) = &r.best else {
+            println!("  {}/{}: nothing feasible!", label, arch.name);
+            continue;
+        };
+        rows.push(Fig8Row {
+            model: format!("{} [{}]", arch.name, label),
+            rs_edp: r.rs_baseline.as_ref().ok().map(|st| st.edp(accel.clock_hz)),
+            auto_edp: s.edp(accel.clock_hz),
+            auto_df: format!("{}/{}/{}", m.clp_df.name(), m.slp_df.name(), m.alp_df.name()),
+            infeasible_combos: r.combos_infeasible,
+        });
+    }
+    rows
+}
+
+fn main() {
+    let models = model_set();
+    if models.is_empty() {
+        println!("no models available (need artifacts/ or runs/) — exhibit skipped");
+        return;
+    }
+    let mut rows = run_setting(&models, MemoryConfig::default(), "108KB GB");
+    rows.extend(run_setting(&models, MemoryConfig::tight(), "32KB GB"));
+    print_rows(&rows);
+    let _ = std::fs::create_dir_all("runs");
+    let _ = rows_to_log(&rows, "fig8_bench").save(Path::new("runs"));
+
+    // Timing: the mapper search itself (the L3 hot path of Sec. 4.2).
+    println!();
+    header();
+    let arch = &models[0];
+    let costs = UNIT_ENERGY_45NM;
+    let alloc = allocate(arch, AreaBudget::macs_equivalent(168, &costs), &costs);
+    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    let q = QuantSpec::default();
+    Bench::new("fig8/auto_map_one_model").run(|| {
+        let r = auto_map(&accel, arch, &q, &MapperConfig::default());
+        std::hint::black_box(r.combos_tried);
+    });
+}

@@ -1,0 +1,109 @@
+//! Bench/exhibit: regenerate Table 2 — operation numbers (Mult / Shift /
+//! Addition) for the handcrafted multiplication-free baselines and for
+//! NASA-searched hybrids (read from runs/ when present, else a
+//! representative set of choice vectors through the manifest geometry).
+//!
+//! Run: cargo bench --bench table2_ops
+
+use nasa::model::{arch_op_counts, zoo, Arch, OpKind};
+use nasa::report::Table;
+use nasa::runtime::Manifest;
+use nasa::util::bench::{header, Bench};
+use std::path::Path;
+
+fn main() {
+    // --- the exhibit ---
+    let mut t = Table::new(&["Model", "Mult.", "Shift", "Addition", "mult-reduction vs conv"]);
+    let conv_ref = zoo::mobilenet_v2_like(OpKind::Conv, 16, 10, 500);
+    let conv_mult = arch_op_counts(&conv_ref).mult as f64;
+
+    let mut add_row = |name: &str, arch: &Arch| {
+        let c = arch_op_counts(arch);
+        let (m, s, a) = c.in_millions();
+        let red = if c.mult > 0 {
+            format!("{:.1}x", conv_mult / c.mult as f64)
+        } else {
+            "inf".into()
+        };
+        t.row(vec![
+            name.to_string(),
+            format!("{m:.2}M"),
+            format!("{s:.2}M"),
+            format!("{a:.2}M"),
+            red,
+        ]);
+    };
+
+    add_row("Conv-MobileNetV2 (ref)", &conv_ref);
+    add_row("DeepShift-MobileNetV2 [6]", &zoo::mobilenet_v2_like(OpKind::Shift, 16, 10, 500));
+    add_row("AdderNet-MobileNetV2 [20]", &zoo::mobilenet_v2_like(OpKind::Adder, 16, 10, 500));
+    add_row("AdderNet-ResNet32 [21]", &zoo::resnet32_adder_like(16, 10));
+    add_row("ShiftAddNet-VGG [26]", &zoo::shiftaddnet_like(16, 10));
+
+    // Searched archs from runs/ (produced by `nasa search` / e2e example),
+    // else representative choice vectors through the real manifest.
+    let runs = Path::new("runs");
+    let saved = nasa::report::load_archs(runs).unwrap_or_default();
+    if !saved.is_empty() {
+        for a in &saved {
+            add_row(&a.name, a);
+        }
+    } else if let Ok(manifest) = Manifest::load(Path::new("artifacts")) {
+        if let Ok(sn) = manifest.supernet("hybrid_all_c10") {
+            let find = |t_: &str, e: usize, k: usize| {
+                sn.cands.iter().position(|c| c.t == t_ && c.e == e && c.k == k).unwrap()
+            };
+            let variants: Vec<(&str, Vec<usize>)> = vec![
+                (
+                    "Hybrid-All-A (repr.)",
+                    vec![
+                        find("conv", 3, 3),
+                        find("shift", 3, 3),
+                        find("adder", 3, 5),
+                        find("conv", 6, 5),
+                        find("shift", 1, 3),
+                        find("adder", 6, 3),
+                    ],
+                ),
+                (
+                    "Hybrid-All-B (repr.)",
+                    vec![
+                        find("shift", 6, 3),
+                        find("adder", 3, 3),
+                        find("conv", 3, 5),
+                        find("shift", 3, 3),
+                        find("adder", 1, 3),
+                        find("conv", 6, 3),
+                    ],
+                ),
+                (
+                    "Hybrid-Shift-A (repr.)",
+                    vec![
+                        find("conv", 3, 3),
+                        find("shift", 6, 3),
+                        find("shift", 3, 5),
+                        find("conv", 3, 3),
+                        find("shift", 6, 5),
+                        find("shift", 3, 3),
+                    ],
+                ),
+            ];
+            for (name, choices) in variants {
+                let arch = Arch::from_choices(sn, &choices, name).unwrap();
+                add_row(name, &arch);
+            }
+        }
+    }
+
+    println!("\n== Table 2 (reproduction): operation numbers ==");
+    println!("(accuracy columns come from `nasa report table2` after training runs)\n");
+    t.print();
+
+    // --- the timing component: op counting throughput ---
+    println!();
+    header();
+    let big = zoo::mobilenet_v2_like(OpKind::Adder, 32, 100, 1000);
+    Bench::new("table2/op_count_mbv2_53layers").run(|| {
+        std::hint::black_box(arch_op_counts(&big).total());
+    });
+}

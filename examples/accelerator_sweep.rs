@@ -1,0 +1,127 @@
+//! Accelerator design-space sweep: how the chunk-based NASA accelerator
+//! behaves across area budgets, memory configurations and PE allocation
+//! strategies — the domain exploration a hardware architect would run
+//! before committing to a floorplan.
+//!
+//! Sweeps: (a) area budget 64..512 MAC-equivalents, (b) Eq. 8 vs equal
+//! allocation, (c) default vs tight shared buffer, for three workloads
+//! (hybrid searched-style, DeepShift-MBv2, AdderNet-MBv2).
+//!
+//! Run: cargo run --release --example accelerator_sweep
+
+use nasa::accel::{
+    allocate, allocate_equal, AreaBudget, ChunkAccelerator, Mapping, MemoryConfig,
+    UNIT_ENERGY_45NM,
+};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::zoo::mobilenet_v2_like;
+use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
+
+fn hybrid_arch() -> Arch {
+    let mk = |name: &str, kind, cin: usize, cout: usize, hw: usize, k: usize, groups: usize| LayerDesc {
+        name: name.into(),
+        kind,
+        cin,
+        cout,
+        h_out: hw,
+        w_out: hw,
+        k,
+        stride: 1,
+        groups,
+    };
+    let mut layers = vec![mk("stem", OpKind::Conv, 3, 16, 16, 3, 1)];
+    for (i, (kind, c, hw)) in [
+        (OpKind::Conv, 16, 16),
+        (OpKind::Shift, 24, 8),
+        (OpKind::Adder, 24, 8),
+        (OpKind::Conv, 32, 4),
+        (OpKind::Shift, 32, 4),
+        (OpKind::Adder, 64, 4),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let mid = c * 3;
+        layers.push(mk(&format!("L{i}/pw1"), *kind, *c, mid, *hw, 1, 1));
+        layers.push(mk(&format!("L{i}/dw"), *kind, mid, mid, *hw, 3, mid));
+        layers.push(mk(&format!("L{i}/pw2"), *kind, mid, *c, *hw, 1, 1));
+    }
+    layers.push(mk("head", OpKind::Conv, 64, 128, 4, 1, 1));
+    Arch { name: "hybrid".into(), layers, choices: vec![] }
+}
+
+fn main() {
+    let q = QuantSpec::default();
+    let costs = UNIT_ENERGY_45NM;
+    let workloads = vec![
+        ("hybrid-searched", hybrid_arch()),
+        ("deepshift-mbv2", mobilenet_v2_like(OpKind::Shift, 16, 10, 500)),
+        ("addernet-mbv2", mobilenet_v2_like(OpKind::Adder, 16, 10, 500)),
+    ];
+
+    println!("== (a) area-budget sweep (auto-mapped EDP, default memory) ==");
+    println!("{:<18} {:>8} {:>10} {:>10} {:>10}", "workload", "budget", "CLP/SLP/ALP", "period", "EDP pJ*s");
+    for (name, arch) in &workloads {
+        for budget_pes in [64, 128, 168, 256, 512] {
+            let budget = AreaBudget::macs_equivalent(budget_pes, &costs);
+            let alloc = allocate(arch, budget, &costs);
+            let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+            let r = auto_map(&accel, arch, &q, &MapperConfig::default());
+            match r.best {
+                Some((_, s)) => println!(
+                    "{:<18} {:>8} {:>10} {:>10.0} {:>10.3e}",
+                    name,
+                    budget_pes,
+                    format!("{}/{}/{}", alloc.clp, alloc.slp, alloc.alp),
+                    s.period_cycles,
+                    s.edp(accel.clock_hz)
+                ),
+                None => println!("{name:<18} {budget_pes:>8} INFEASIBLE"),
+            }
+        }
+    }
+
+    println!("\n== (b) Eq. 8 proportional vs equal-split allocation (all-RS mapping) ==");
+    println!("{:<18} {:>14} {:>14} {:>9}", "workload", "Eq.8 period", "equal period", "gain");
+    for (name, arch) in &workloads {
+        let budget = AreaBudget::macs_equivalent(168, &costs);
+        let m = Mapping::all_rs(arch.layers.len());
+        let prop = ChunkAccelerator::new(allocate(arch, budget, &costs), MemoryConfig::default(), costs);
+        let eq = ChunkAccelerator::new(allocate_equal(arch, budget, &costs), MemoryConfig::default(), costs);
+        match (prop.simulate(arch, &m, &q), eq.simulate(arch, &m, &q)) {
+            (Ok(sp), Ok(se)) => println!(
+                "{:<18} {:>14.0} {:>14.0} {:>8.1}%",
+                name,
+                sp.period_cycles,
+                se.period_cycles,
+                (1.0 - sp.period_cycles / se.period_cycles) * 100.0
+            ),
+            _ => println!("{name:<18} (infeasible under all-RS)"),
+        }
+    }
+
+    println!("\n== (c) shared-buffer pressure (auto-mapper resilience) ==");
+    println!("{:<18} {:>12} {:>12} {:>14}", "workload", "default EDP", "tight EDP", "RS@tight");
+    for (name, arch) in &workloads {
+        let budget = AreaBudget::macs_equivalent(168, &costs);
+        let mk = |mem| {
+            let accel = ChunkAccelerator::new(allocate(arch, budget, &costs), mem, costs);
+            let r = auto_map(&accel, arch, &q, &MapperConfig::default());
+            (accel, r)
+        };
+        let (a1, r1) = mk(MemoryConfig::default());
+        let (a2, r2) = mk(MemoryConfig::tight());
+        let rs_tight = match &r2.rs_baseline {
+            Ok(s) => format!("{:.3e}", s.edp(a2.clock_hz)),
+            Err((i, _)) => format!("INFEASIBLE@{i}"),
+        };
+        println!(
+            "{:<18} {:>12} {:>12} {:>14}",
+            name,
+            r1.best.map(|(_, s)| format!("{:.3e}", s.edp(a1.clock_hz))).unwrap_or("-".into()),
+            r2.best.map(|(_, s)| format!("{:.3e}", s.edp(a2.clock_hz))).unwrap_or("-".into()),
+            rs_tight
+        );
+    }
+    println!("\naccelerator sweep complete");
+}

@@ -1,0 +1,223 @@
+//! END-TO-END driver (the required full-system validation): the complete
+//! NASA pipeline on the fast config —
+//!
+//!   1. generate the synthetic CIFAR-like workload,
+//!   2. PGP pretrain + DNAS search on the hybrid-all space (L3 rust loop
+//!      driving the AOT L2 graph hundreds of times),
+//!   3. derive the architecture, train it from scratch (loss curve
+//!      logged), evaluate FP32 and FXP8/6 accuracy,
+//!   4. search the conv-only (FBNet-baseline) space with the same engine,
+//!   5. map both archs onto the chunk accelerator with the auto-mapper
+//!      and print the accuracy/EDP comparison (the Fig. 6 headline),
+//!   6. dump Fig. 2 weight histoghram data from the trained child.
+//!
+//! Results land in runs/ and are summarized in EXPERIMENTS.md.
+//!
+//! Run: cargo run --release --example e2e_search_train
+//! (fast mode: NASA_E2E_FAST=1 shrinks epochs for CI-style smoke runs)
+
+use anyhow::{bail, Result};
+use nasa::accel::{allocate, AreaBudget, ChunkAccelerator, EyerissSim, MemoryConfig, PeKind, UNIT_ENERGY_45NM};
+use nasa::coordinator::{run_search, train_child, Dataset, DatasetConfig, SearchConfig, TrainConfig};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::{arch_op_counts, QuantSpec};
+use nasa::report::fig6::{print_points, points_to_log, Fig6Point};
+use nasa::runtime::{Engine, Manifest};
+use nasa::util::json::Json;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        bail!("run `make artifacts` first");
+    }
+    let fast = std::env::var("NASA_E2E_FAST").is_ok();
+    // Sized for the single-core CPU-PJRT testbed (~5s per hybrid-all step
+    // at LLVM -O0): full mode ~25-30 min end to end.
+    let (pretrain, search_epochs, steps, train_epochs) =
+        if fast { (3, 3, 4, 4) } else { (6, 6, 8, 10) };
+
+    let manifest = Manifest::load(dir)?;
+    let runs = Path::new("runs");
+    std::fs::create_dir_all(runs)?;
+    let mut engine = Engine::cpu()?;
+    let q = QuantSpec::default();
+    let costs = UNIT_ENERGY_45NM;
+    let budget = AreaBudget::macs_equivalent(168, &costs);
+
+    let mut fig6_points = Vec::new();
+
+    // ---- search + train on both spaces with the same engine/loop ----
+    for space in ["hybrid_all_c10", "conv_only_c10"] {
+        let sn = manifest.supernet(space)?;
+        let dataset = Dataset::generate(DatasetConfig::cifar10_like(sn.input_hw));
+        println!("\n=== [{space}] NAS search (PGP where applicable) ===");
+        let mut cfg = SearchConfig::for_space(space, pretrain, search_epochs);
+        cfg.steps_per_epoch = steps;
+        let t0 = std::time::Instant::now();
+        let outcome = run_search(&mut engine, &manifest, &dataset, &cfg)?;
+        println!(
+            "search: {:.1}s, choices {:?}, final train acc {:.3}",
+            t0.elapsed().as_secs_f64(),
+            outcome.choices,
+            outcome.log.curve("train_acc").unwrap().tail_mean(3)
+        );
+        outcome.log.save(runs)?;
+        outcome.arch.save(&runs.join(format!("arch_{space}.json")))?;
+
+        println!("=== [{space}] train derived child from scratch ===");
+        let mut tcfg = TrainConfig::for_space(space, train_epochs);
+        tcfg.steps_per_epoch = steps;
+        let t1 = std::time::Instant::now();
+        let trained = train_child(&mut engine, &manifest, &dataset, &outcome.choices, &tcfg)?;
+        println!(
+            "train: {:.1}s, loss curve: {}",
+            t1.elapsed().as_secs_f64(),
+            nasa::coordinator::sparkline(&trained.log.curve("train_loss").unwrap().ys, 40)
+        );
+        println!(
+            "test acc: FP32={:.4}  FXP8/6={:.4}",
+            trained.test_acc_fp32, trained.test_acc_quant
+        );
+        trained.log.save(runs)?;
+
+        // ---- hardware: auto-map onto the chunk accelerator ----
+        let arch = &outcome.arch;
+        let counts = arch_op_counts(arch);
+        let (m, s, a) = counts.in_millions();
+        println!("ops: mult={m:.2}M shift={s:.2}M add={a:.2}M");
+        let alloc = allocate(arch, budget, &costs);
+        let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+        let mapped = auto_map(&accel, arch, &q, &MapperConfig::default());
+        let edp = match &mapped.best {
+            Some((_, st)) => st.edp(accel.clock_hz),
+            None => f64::NAN,
+        };
+        let system = if space.starts_with("conv") {
+            "FBNet-like (conv-only) on NASA accel".to_string()
+        } else {
+            "NASA hybrid-all on NASA accel + auto-mapper".to_string()
+        };
+        fig6_points.push(Fig6Point { system, acc: trained.test_acc_fp32, edp_pj_s: edp });
+
+        // Conv-only arch also on Eyeriss-MAC = the paper's FBNet baseline.
+        if space.starts_with("conv") {
+            let ey = EyerissSim::with_budget(PeKind::Mac, budget.total_um2, MemoryConfig::default(), costs);
+            if let Ok(st) = ey.simulate(arch, &q) {
+                fig6_points.push(Fig6Point {
+                    system: "FBNet-like on Eyeriss-MAC".into(),
+                    acc: trained.test_acc_fp32,
+                    edp_pj_s: st.edp(ey.clock_hz),
+                });
+            }
+        }
+
+        // ---- Fig. 2 data from the trained hybrid SUPERNET (the paper
+        // plots supernet weights, so all three operator families are
+        // present regardless of which candidates the search selected) ----
+        if space == "hybrid_all_c10" {
+            dump_fig2_weights(sn, &outcome.params, runs)?;
+
+            // ---- conv-twin: the same searched architecture with every
+            // shift/adder block replaced by the conv candidate of equal
+            // (E, K) — the iso-architecture multiplication-based baseline
+            // for the Fig. 6 comparison. ----
+            let twin: Vec<usize> = outcome
+                .choices
+                .iter()
+                .map(|&ci| conv_twin_choice(sn, ci))
+                .collect();
+            println!("=== [conv-twin of searched hybrid] train from scratch ===");
+            let mut tw_cfg = TrainConfig::for_space(space, train_epochs);
+            tw_cfg.steps_per_epoch = steps;
+            let tw = train_child(&mut engine, &manifest, &dataset, &twin, &tw_cfg)?;
+            println!(
+                "conv-twin test acc: FP32={:.4} FXP8/6={:.4}",
+                tw.test_acc_fp32, tw.test_acc_quant
+            );
+            let mut tw_log = tw.log;
+            tw_log.name = "train_conv_twin".into();
+            tw_log.save(runs)?;
+            let tw_arch = nasa::model::Arch::from_choices(sn, &twin, "conv_twin")?;
+            tw_arch.save(&runs.join("arch_conv_twin.json"))?;
+            let ey = EyerissSim::with_budget(PeKind::Mac, budget.total_um2, MemoryConfig::default(), costs);
+            if let Ok(st) = ey.simulate(&tw_arch, &q) {
+                fig6_points.push(Fig6Point {
+                    system: "Conv-twin of NASA arch on Eyeriss-MAC".into(),
+                    acc: tw.test_acc_fp32,
+                    edp_pj_s: st.edp(ey.clock_hz),
+                });
+            }
+        }
+    }
+
+    print_points(&fig6_points);
+    points_to_log(&fig6_points, "fig6_e2e").save(runs)?;
+    println!("\nE2E pipeline complete; artifacts in runs/");
+    Ok(())
+}
+
+/// Map a hybrid candidate index to the conv candidate with equal (E, K).
+fn conv_twin_choice(sn: &nasa::runtime::SupernetManifest, ci: usize) -> usize {
+    let cand = &sn.cands[ci];
+    if cand.is_skip() || cand.t == "conv" {
+        return ci;
+    }
+    sn.cands
+        .iter()
+        .position(|c| c.t == "conv" && c.e == cand.e && c.k == cand.k)
+        .expect("conv candidate with matching (E,K)")
+}
+
+/// Collect trained supernet weights per operator family (Fig. 2): conv
+/// weights raw, shift weights after DeepShift-Q pow2 quantization, adder
+/// weights raw — across ALL candidate blocks (the paper plots supernet
+/// weights of a searched hybrid-all model).
+fn dump_fig2_weights(
+    sn: &nasa::runtime::SupernetManifest,
+    params: &[f32],
+    runs: &Path,
+) -> Result<()> {
+    let mut conv = Vec::new();
+    let mut shift_q = Vec::new();
+    let mut adder = Vec::new();
+    for e in &sn.layout {
+        let is_weight = e.name.ends_with("/pw1") || e.name.ends_with("/pw2") || e.name.ends_with("/dw");
+        if !is_weight {
+            continue;
+        }
+        let w = &params[e.offset..e.offset + e.size];
+        match e.ltype.as_str() {
+            "conv" => conv.extend_from_slice(w),
+            "shift" => shift_q.extend(w.iter().map(|&v| pow2_quant(v))),
+            "adder" => adder.extend_from_slice(w),
+            _ => {}
+        }
+    }
+    let sub = |v: &[f32]| -> Vec<f32> { v.iter().step_by((v.len() / 4000).max(1)).cloned().collect() };
+    let j = Json::obj(vec![
+        ("conv", Json::arr_f32(&sub(&conv))),
+        ("shift_q", Json::arr_f32(&sub(&shift_q))),
+        ("adder", Json::arr_f32(&sub(&adder))),
+    ]);
+    std::fs::write(runs.join("fig2_weights.json"), j.to_string())?;
+    for (name, w) in [("conv", &conv), ("shift_q", &shift_q), ("adder", &adder)] {
+        if !w.is_empty() {
+            let s = nasa::report::fig2::weight_stats(w);
+            println!(
+                "fig2[{name}]: n={} std={:.4} excess_kurtosis={:+.2}",
+                s.n, s.std, s.excess_kurtosis
+            );
+        }
+    }
+    Ok(())
+}
+
+/// DeepShift-Q (Eq. 3) on the host, mirroring kernels/ref.py.
+fn pow2_quant(w: f32) -> f32 {
+    if w.abs() < 2.0f32.powi(-15) {
+        return 0.0;
+    }
+    let p = (w.abs().log2()).round().clamp(-14.0, 0.0);
+    w.signum() * 2.0f32.powf(p)
+}

@@ -1,0 +1,112 @@
+//! Auto-mapper anatomy: for one hybrid model, show the full dataflow
+//! search — all 64 per-chunk ordering combinations, the resource-split
+//! candidates, per-layer tiling choices, and why the expert all-RS
+//! mapping loses (Sec. 4.2 / Fig. 8 intuition).
+//!
+//! Run: cargo run --release --example mapper_demo
+
+use nasa::accel::{
+    allocate, AreaBudget, ChunkAccelerator, Mapping, MemoryConfig, UNIT_ENERGY_45NM,
+    ALL_DATAFLOWS,
+};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
+
+fn demo_arch() -> Arch {
+    let mk = |name: &str, kind, cin: usize, cout: usize, hw: usize, k: usize, groups: usize| LayerDesc {
+        name: name.into(),
+        kind,
+        cin,
+        cout,
+        h_out: hw,
+        w_out: hw,
+        k,
+        stride: 1,
+        groups,
+    };
+    Arch {
+        name: "mapper_demo".into(),
+        layers: vec![
+            mk("stem", OpKind::Conv, 3, 16, 16, 3, 1),
+            mk("conv_pw", OpKind::Conv, 16, 96, 16, 1, 1),
+            mk("shift_dw", OpKind::Shift, 96, 96, 8, 5, 96),
+            mk("shift_pw", OpKind::Shift, 96, 32, 8, 1, 1),
+            mk("adder_pw", OpKind::Adder, 32, 192, 8, 1, 1),
+            mk("adder_dw", OpKind::Adder, 192, 192, 4, 3, 192),
+            mk("head", OpKind::Conv, 192, 128, 4, 1, 1),
+        ],
+        choices: vec![],
+    }
+}
+
+fn main() {
+    let arch = demo_arch();
+    let q = QuantSpec::default();
+    let costs = UNIT_ENERGY_45NM;
+    let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
+    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    println!(
+        "model '{}' -> Eq.8 allocation CLP={} SLP={} ALP={}",
+        arch.name, alloc.clp, alloc.slp, alloc.alp
+    );
+
+    // Exhaustive view: EDP for every per-chunk dataflow combo (even split).
+    println!("\nEDP by (CLP, SLP, ALP) dataflow combo (even GB split, greedy tiling):");
+    print!("{:>14}", "");
+    for a in ALL_DATAFLOWS {
+        print!("{:>12}", format!("ALP={}", a.name()));
+    }
+    println!();
+    for c in ALL_DATAFLOWS {
+        for s in ALL_DATAFLOWS {
+            print!("{:>14}", format!("CLP={} SLP={}", c.name(), s.name()));
+            for a in ALL_DATAFLOWS {
+                let m = Mapping {
+                    clp_df: c,
+                    slp_df: s,
+                    alp_df: a,
+                    tilings: vec![None; arch.layers.len()],
+                    gb_split: [1.0 / 3.0; 3],
+                    noc_split: [1.0 / 3.0; 3],
+                };
+                match accel.simulate(&arch, &m, &q) {
+                    Ok(st) => print!("{:>12.3e}", st.edp(accel.clock_hz)),
+                    Err(_) => print!("{:>12}", "infeas"),
+                }
+            }
+            println!();
+        }
+    }
+
+    // Full search incl. tilings + splits.
+    let r = auto_map(&accel, &arch, &q, &MapperConfig::default());
+    println!(
+        "\nfull auto-map: {} candidates evaluated, {} infeasible",
+        r.combos_tried, r.combos_infeasible
+    );
+    if let Some((m, s)) = &r.best {
+        println!(
+            "best mapping: CLP={} SLP={} ALP={} gb_split=[{:.2},{:.2},{:.2}] EDP={:.3e}",
+            m.clp_df.name(),
+            m.slp_df.name(),
+            m.alp_df.name(),
+            m.gb_split[0],
+            m.gb_split[1],
+            m.gb_split[2],
+            s.edp(accel.clock_hz)
+        );
+        println!("per-layer tilings (tm x tn):");
+        for (l, t) in arch.layers.iter().zip(&m.tilings) {
+            if let Some(t) = t {
+                println!("  {:<10} {:>4} x {:<4}", l.name, t.tm, t.tn);
+            }
+        }
+    }
+    match &r.rs_baseline {
+        Ok(s) => println!("expert all-RS: EDP={:.3e}", s.edp(accel.clock_hz)),
+        Err((i, e)) => println!("expert all-RS: INFEASIBLE at layer {i}: {e}"),
+    }
+    if let Some(saving) = r.edp_saving_vs_rs(accel.clock_hz) {
+        println!("auto-mapper saving vs RS: {:.1}%", saving * 100.0);
+    }
+}

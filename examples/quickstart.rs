@@ -1,0 +1,89 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the manifest + a Pallas-kernel artifact produced by
+//!    `make artifacts` (python runs once, never again).
+//! 2. Execute the fixed hybrid child (conv + shift + adder blocks) through
+//!    PJRT from rust, cross-checking the Pallas and jnp lowerings.
+//! 3. Run the same architecture through the NASA chunk-based accelerator
+//!    model + auto-mapper and print op counts and EDP.
+//!
+//! Run: cargo run --release --example quickstart
+
+use anyhow::{bail, Result};
+use nasa::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, UNIT_ENERGY_45NM};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::{arch_op_counts, Arch, QuantSpec};
+use nasa::nas::init_params;
+use nasa::runtime::{lit_f32, Engine, Manifest};
+use nasa::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        bail!("run `make artifacts` first");
+    }
+    let manifest = Manifest::load(dir)?;
+    let Some(fc) = &manifest.fixed_child else { bail!("fixed child not in manifest") };
+    let sn = manifest.supernet(&fc.space_key)?;
+    println!(
+        "supernet '{}': {} searchable layers x {} candidates, {} params",
+        sn.space, sn.n_layers, sn.n_cand, sn.n_params
+    );
+
+    // --- L1/L2 on the rust request path ---
+    let mut engine = Engine::cpu()?;
+    let pallas = engine.load(&manifest.dir, &fc.pallas)?;
+    let jnp = engine.load(&manifest.dir, &fc.jnp)?;
+    let mut rng = Rng::new(0);
+    let params = init_params(sn, &mut rng, false)?;
+    let mut x = vec![0.0f32; sn.batch * sn.input_hw * sn.input_hw * sn.input_ch];
+    for v in x.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    let inputs = vec![
+        lit_f32(&[sn.n_params], &params)?,
+        lit_f32(&[sn.batch, sn.input_hw, sn.input_hw, sn.input_ch], &x)?,
+    ];
+    let lp = pallas.run(&inputs)?[0].to_vec::<f32>()?;
+    let lj = jnp.run(&inputs)?[0].to_vec::<f32>()?;
+    let max_diff = lp
+        .iter()
+        .zip(&lj)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "fixed hybrid child logits: batch {} x {} classes; pallas-vs-jnp max |diff| = {max_diff:.2e}",
+        sn.batch, sn.num_classes
+    );
+
+    // --- the same arch on the NASA accelerator (L3 hardware side) ---
+    let choices = fc.cand_indices.clone();
+    let arch = Arch::from_choices(sn, &choices, "fixed_child")?;
+    let counts = arch_op_counts(&arch);
+    let (m, s, a) = counts.in_millions();
+    println!("ops: mult={m:.2}M shift={s:.2}M add={a:.2}M");
+
+    let costs = UNIT_ENERGY_45NM;
+    let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
+    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    println!(
+        "Eq.8 PE allocation under a 168-MAC-equivalent area budget: CLP={} SLP={} ALP={}",
+        accel.alloc.clp, accel.alloc.slp, accel.alloc.alp
+    );
+    let r = auto_map(&accel, &arch, &QuantSpec::default(), &MapperConfig::default());
+    if let Some((mapping, stats)) = &r.best {
+        println!(
+            "auto-mapped dataflows: CLP={} SLP={} ALP={} -> EDP {:.3e} pJ*s",
+            mapping.clp_df.name(),
+            mapping.slp_df.name(),
+            mapping.alp_df.name(),
+            stats.edp(accel.clock_hz)
+        );
+    }
+    if let Some(saving) = r.edp_saving_vs_rs(accel.clock_hz) {
+        println!("saving vs expert all-RS mapping: {:.1}%", saving * 100.0);
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,299 @@
+"""AOT compile path: lower every NASA entry point to HLO *text* + manifest.
+
+Run once via `make artifacts`; python never runs on the rust request path.
+
+Interchange format is HLO text, NOT `lowered.compiler_ir("hlo").serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts (fast config, default):
+  supernet_step_{space}_{ds}.hlo.txt        training step: loss + grads
+  supernet_eval_{space}_{ds}.hlo.txt        deterministic eval (FP32)
+  supernet_eval_quant_{space}_{ds}.hlo.txt  FXP8/FXP6 fake-quant eval
+  child_infer_pallas.hlo.txt                fixed child, Pallas kernels
+  child_infer_jnp.hlo.txt                   fixed child, jnp ops
+  kernel_{conv_pw,shift_pw,adder_pw,dw_conv}.hlo.txt   L1 micro artifacts
+  fig2b_ps_toy.json                         DeepShift-PS collapse toy data
+  manifest.json                             shapes + layouts + candidates
+
+The manifest is the single source of truth the rust side reads for
+parameter layouts, candidate enumeration and artifact I/O shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    print(f"  wrote {path} ({len(text)/1e6:.2f} MB, {dt:.1f}s)")
+    return {
+        "path": os.path.basename(path),
+        "inputs": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+        ],
+    }
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def supernet_specs(cfg: M.SupernetConfig):
+    """Input specs for (step, eval) entry points, in argument order."""
+    L, NC, B, H = cfg.n_layers, cfg.n_cand, cfg.batch, cfg.input_hw
+    P = M.n_params(M.build_layout(cfg))
+    step = [
+        spec((P,)),  # flat params
+        spec((L, NC)),  # alpha
+        spec((L, NC)),  # gumbel noise
+        spec((L, NC)),  # mask (top-k & PGP gate)
+        spec(()),  # tau
+        spec(()),  # lambda
+        spec((L, NC)),  # hw cost table
+        spec((B, H, H, cfg.input_ch)),  # x
+        spec((B,), I32),  # labels
+    ]
+    evalf = [
+        spec((P,)),
+        spec((L, NC)),
+        spec((L, NC)),
+        spec(()),
+        spec((B, H, H, cfg.input_ch)),
+        spec((B,), I32),
+    ]
+    return step, evalf
+
+
+def layout_json(cfg: M.SupernetConfig) -> Dict[str, Any]:
+    layout = M.build_layout(cfg)
+    cands = M.candidates(cfg.space)
+    # Per-layer geometry for the rust hw-cost table / op counting.
+    layers = []
+    h = cfg.input_hw
+    cin = cfg.stem_ch
+    for cout, stride in cfg.plan:
+        ho = -(-h // stride)
+        layers.append(
+            {
+                "cin": cin,
+                "cout": cout,
+                "h_in": h,
+                "w_in": h,
+                "h_out": ho,
+                "w_out": ho,
+                "stride": stride,
+            }
+        )
+        h, cin = ho, cout
+    return {
+        "space": cfg.space,
+        "n_layers": cfg.n_layers,
+        "n_cand": cfg.n_cand,
+        "cands": cands,
+        "layers": layers,
+        "n_params": M.n_params(layout),
+        "param_layout": layout,
+        "stem": {"ch": cfg.stem_ch, "k": 3},
+        "head": {"ch": cfg.head_ch},
+        "num_classes": cfg.num_classes,
+        "batch": cfg.batch,
+        "input_hw": cfg.input_hw,
+        "input_ch": cfg.input_ch,
+    }
+
+
+def build_fig2b_ps_toy(out_dir: str) -> None:
+    """Toy reproduction of Fig. 2(b): train a DeepShift-PS layer and a
+    DeepShift-Q layer side by side inside a hybrid (conv + shift) net on a
+    small regression; record the realized W_shift histograms.
+
+    PS parameterizes (s, p) directly; because round(p) only changes when p
+    crosses integer boundaries and the straight-through gradient keeps
+    pushing |p| up for small targets, the realized weights s*2^p collapse
+    toward 0/degenerate values when mixed with conv layers whose weights
+    are small (|w| << 1). Q re-quantizes a healthy latent conv weight each
+    step and stays matched to the conv distribution (Fig. 2c).
+    """
+    rng = np.random.default_rng(0)
+    din, dout, n = 32, 32, 512
+    x = jnp.asarray(rng.normal(size=(n, din)).astype(np.float32))
+    w_true = jnp.asarray((rng.normal(size=(din, dout)) * 0.1).astype(np.float32))
+    y = x @ w_true
+
+    def ste(f, w):  # straight-through: forward f(w), backward identity
+        return w + jax.lax.stop_gradient(f(w) - w)
+
+    # --- PS: optimize s, p directly (Eq. 2) ---
+    s = jnp.asarray(rng.normal(size=(din, dout)).astype(np.float32))
+    p = jnp.asarray((rng.normal(size=(din, dout)) - 4.0).astype(np.float32))
+
+    def ps_loss(s, p):
+        w = ste(lambda v: jnp.clip(jnp.round(v), -1, 1), s) * 2.0 ** ste(
+            lambda v: jnp.clip(jnp.round(v), M.ref.P_MIN, M.ref.P_MAX), p
+        )
+        return jnp.mean((x @ w - y) ** 2)
+
+    ps_grad = jax.jit(jax.grad(ps_loss, argnums=(0, 1)))
+    for _ in range(200):
+        gs_, gp_ = ps_grad(s, p)
+        s, p = s - 0.05 * gs_, p - 0.05 * gp_
+    w_ps = np.asarray(M.ref.ps_construct(s, p))
+
+    # --- Q: optimize latent w*, quantize each forward (Eq. 3) ---
+    wq = jnp.asarray((rng.normal(size=(din, dout)) * 0.1).astype(np.float32))
+
+    def q_loss(w):
+        return jnp.mean((x @ ste(M.ref.pow2_quant, w) - y) ** 2)
+
+    q_grad = jax.jit(jax.grad(q_loss))
+    for _ in range(200):
+        wq = wq - 0.05 * q_grad(wq)
+    w_q = np.asarray(M.ref.pow2_quant(wq))
+
+    def hist(a):
+        h, edges = np.histogram(a.ravel(), bins=41, range=(-1.0, 1.0))
+        return {"counts": h.tolist(), "edges": edges.tolist()}
+
+    data = {
+        "ps": hist(w_ps),
+        "q": hist(w_q),
+        "ps_frac_zero": float(np.mean(np.abs(w_ps) < 1e-6)),
+        "q_frac_zero": float(np.mean(np.abs(w_q) < 1e-6)),
+        "ps_mean_abs": float(np.mean(np.abs(w_ps))),
+        "q_mean_abs": float(np.mean(np.abs(w_q))),
+    }
+    with open(os.path.join(out_dir, "fig2b_ps_toy.json"), "w") as f:
+        json.dump(data, f)
+    print(
+        f"  fig2b toy: PS zero-frac={data['ps_frac_zero']:.2f} "
+        f"Q zero-frac={data['q_frac_zero']:.2f}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--spaces",
+        default="conv_only,hybrid_shift,hybrid_adder,hybrid_all",
+        help="comma-separated search spaces to lower",
+    )
+    ap.add_argument(
+        "--datasets",
+        default="c10,c100",
+        help="c10 (10 classes) and/or c100 (100 classes)",
+    )
+    ap.add_argument("--skip-child", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    manifest: Dict[str, Any] = {"supernets": {}, "kernels": {}, "fixed_child": {}}
+
+    classes = {"c10": 10, "c100": 100}
+    for ds in args.datasets.split(","):
+        for space in args.spaces.split(","):
+            cfg = M.SupernetConfig(space=space, num_classes=classes[ds])
+            key = f"{space}_{ds}"
+            print(f"[supernet {key}] n_params={M.n_params(M.build_layout(cfg))}")
+            step_specs, eval_specs = supernet_specs(cfg)
+            ents: Dict[str, Any] = {"layout": layout_json(cfg)}
+            ents["step"] = lower_to_file(
+                M.make_step_fn(cfg), step_specs, f"{out}/supernet_step_{key}.hlo.txt"
+            )
+            ents["eval"] = lower_to_file(
+                M.make_eval_fn(cfg, quant=False),
+                eval_specs,
+                f"{out}/supernet_eval_{key}.hlo.txt",
+            )
+            ents["eval_quant"] = lower_to_file(
+                M.make_eval_fn(cfg, quant=True),
+                eval_specs,
+                f"{out}/supernet_eval_quant_{key}.hlo.txt",
+            )
+            manifest["supernets"][key] = ents
+
+    if not args.skip_child:
+        cfg = M.SupernetConfig(space="hybrid_all", num_classes=10)
+        P = M.n_params(M.build_layout(cfg))
+        B, H = cfg.batch, cfg.input_hw
+        child_specs = [spec((P,)), spec((B, H, H, cfg.input_ch))]
+        print("[fixed child]")
+        manifest["fixed_child"] = {
+            "arch": M.FIXED_CHILD,
+            "space_key": "hybrid_all_c10",
+            "cand_indices": M.child_cand_indices(cfg, M.FIXED_CHILD),
+            "pallas": lower_to_file(
+                M.make_child_infer_fn(cfg, M.FIXED_CHILD, use_pallas=True),
+                child_specs,
+                f"{out}/child_infer_pallas.hlo.txt",
+            ),
+            "jnp": lower_to_file(
+                M.make_child_infer_fn(cfg, M.FIXED_CHILD, use_pallas=False),
+                child_specs,
+                f"{out}/child_infer_jnp.hlo.txt",
+            ),
+        }
+
+    if not args.skip_kernels:
+        from .kernels import adder_pw, conv_pw, dw_apply, shift_pw
+
+        print("[kernel micro artifacts]")
+        m, k, n = 64, 48, 32
+        pw_specs = [spec((m, k)), spec((k, n))]
+        manifest["kernels"]["conv_pw"] = lower_to_file(
+            lambda x, w: (conv_pw(x, w),), pw_specs, f"{out}/kernel_conv_pw.hlo.txt"
+        )
+        manifest["kernels"]["shift_pw"] = lower_to_file(
+            lambda x, w: (shift_pw(x, w),), pw_specs, f"{out}/kernel_shift_pw.hlo.txt"
+        )
+        manifest["kernels"]["adder_pw"] = lower_to_file(
+            lambda x, w: (adder_pw(x, w),), pw_specs, f"{out}/kernel_adder_pw.hlo.txt"
+        )
+        dw_specs = [spec((4, 12, 12, 16)), spec((3, 3, 16))]
+        manifest["kernels"]["dw_conv"] = lower_to_file(
+            lambda x, w: (dw_apply(x, w, stride=1, mode="adder"),),
+            dw_specs,
+            f"{out}/kernel_dw_conv.hlo.txt",
+        )
+
+    build_fig2b_ps_toy(out)
+
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest -> {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

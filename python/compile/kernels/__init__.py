@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for NASA's hybrid operators + pure-jnp oracles.
+
+conv_pw  — multiplication-based pointwise conv (tiled matmul, CLP work)
+shift_pw — DeepShift-Q pointwise layer (fused pow2-quant matmul, SLP work)
+adder_pw — AdderNet l1-distance pointwise layer (ALP work)
+dw_apply — depthwise KxK layer in conv/shift/adder flavours
+ref      — ground-truth jnp semantics for all of the above
+"""
+
+from .adder_pw import adder_pw
+from .conv_pw import conv_pw
+from .dw_conv import dw_apply
+from .shift_pw import shift_pw
+
+__all__ = ["adder_pw", "conv_pw", "dw_apply", "shift_pw"]

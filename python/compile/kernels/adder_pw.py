@@ -1,0 +1,76 @@
+"""Pallas kernel: AdderNet pointwise layer — negative l1 distance (Eq. 4).
+
+The ALP chunk's workload: Y[m,n] = -sum_k |x[m,k] - w[k,n]|. There is no
+multiplication anywhere in this kernel — it is broadcast-subtract /
+abs / reduce, i.e. pure adder/comparator work, which is exactly the
+algorithmic property the paper's Adder Units exploit (an 8-bit adder is
+~3-5x cheaper than an 8-bit multiplier at 45nm).
+
+Kernel-roofline:
+  * This is VPU (vector) work on TPU, not MXU: arithmetic intensity is
+    3 ops (sub, abs, add) per element-pair versus the MXU's 2-flops/pair
+    fused MAC, and there is no systolic reuse — the TPU rethink (DESIGN.md
+    §Hardware-Adaptation) tiles it so each [bm, K] activation tile stays
+    VMEM-resident while sweeping bn weight columns (input-stationary).
+  * Block shapes: x [bm, K], w [K, bn]; scratch accumulator [bm, bn].
+    Inner loop over K in chunks of kc=8 keeps the broadcast tensor
+    [bm, kc, bn] bounded: 64*8*128*4 = 256 KiB VMEM at the default tiles.
+  * Grid: (M/bm, N/bn) output-stationary like conv_pw, so partial l1 sums
+    never spill to HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import cdiv, pad_to, pick_block
+
+
+def _adder_kernel(x_ref, w_ref, o_ref, *, kc: int):
+    x = x_ref[...]  # [bm, K]
+    w = w_ref[...]  # [K, bn]
+    k = x.shape[1]
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    # Chunked reduction over the contraction dim bounds the broadcast
+    # intermediate to [bm, kc, bn] (VMEM scratch), cf. header analysis.
+    for k0 in range(0, k, kc):
+        xs = x[:, k0 : k0 + kc]  # [bm, kc]
+        ws = w[k0 : k0 + kc, :]  # [kc, bn]
+        acc = acc + jnp.sum(jnp.abs(xs[:, :, None] - ws[None, :, :]), axis=1)
+    o_ref[...] = -acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "kc"))
+def adder_pw(
+    x2d: jnp.ndarray, w: jnp.ndarray, bm: int = 64, bn: int = 128, kc: int = 8
+):
+    """Adder pointwise layer: x2d [M, Cin], w [Cin, Cout] -> [M, Cout].
+
+    Zero-padding is correctness-preserving here because BOTH operands pad
+    with zeros on the contraction axis: |0 - 0| = 0 contributes nothing.
+    """
+    m, k = x2d.shape
+    k2, n = w.shape
+    assert k == k2
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    xp = pad_to(x2d, 0, bm)
+    wp = pad_to(w, 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    kernel = functools.partial(_adder_kernel, kc=kc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(cdiv(mp, bm), cdiv(np_, bn)),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,59 @@
+"""Pallas kernel: pointwise (1x1) convolution as a tiled matmul.
+
+This is the multiplication-based operator of the hybrid search space — the
+CLP chunk's workload in the NASA accelerator.
+
+Kernel-roofline (L1 estimate, recorded per DESIGN.md §Kernel-roofline):
+  * Block shapes: x [bm, K] in VMEM, w [K, bn] in VMEM, out [bm, bn].
+    With bm=128, bn=128, K<=256 (our channel sizes), VMEM footprint is
+    128*256*4 + 256*128*4 + 128*128*4 = 320 KiB  << 16 MiB VMEM.
+  * MXU: the inner jnp.dot maps to 128x128 systolic passes; with
+    K un-tiled the kernel performs ceil(K/128) MXU passes per block and is
+    compute-bound once M*N >= 128^2 (arithmetic intensity 2*K flops per
+    4*(K+K+1) bytes moved per output row/col pair).
+  * Grid: (M/bm, N/bn); each program owns one output tile => no revisits of
+    HBM for partial sums (output-stationary schedule, cf. the paper's OS
+    dataflow choice for CLP).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import LANE, cdiv, pad_to, pick_block
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One [bm, K] x [K, bn] tile product per program instance.
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def conv_pw(x2d: jnp.ndarray, w: jnp.ndarray, bm: int = 128, bn: int = LANE):
+    """Pointwise conv: x2d [M, Cin] @ w [Cin, Cout] -> [M, Cout]."""
+    m, k = x2d.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    xp = pad_to(x2d, 0, bm)
+    wp = pad_to(w, 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(cdiv(mp, bm), cdiv(np_, bn)),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(xp, wp)
+    return out[:m, :n]

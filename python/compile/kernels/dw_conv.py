@@ -1,0 +1,89 @@
+"""Pallas kernel: depthwise KxK layer in all three operator flavours.
+
+Depthwise layers dominate the DW stage of every candidate block
+(PW -> DW -> PW, Fig. 3 right). The patch extraction (SAME padding +
+stride) is done once in jnp — it is pure data movement that XLA fuses —
+and the Pallas kernel performs the per-channel reduction over the K*K
+window in the requested flavour:
+
+  mode="conv"  : sum_ij patch[i,j,c] * w[i,j,c]          (MAC work, CLP)
+  mode="shift" : sum_ij patch[i,j,c] * pow2(w[i,j,c])    (shift work, SLP)
+  mode="adder" : -sum_ij |patch[i,j,c] - w[i,j,c]|       (adder work, ALP)
+
+Kernel-roofline:
+  * Input tile [bm, KK, bc] + weight [KK, bc] in VMEM; KK<=25, so with
+    bm=128, bc=128 the footprint is 128*25*128*4 = 1.6 MiB — VMEM-resident.
+  * Depthwise work is VPU-bound on TPU (no contraction across channels =>
+    no MXU); the schedule is output-stationary over (M, C) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import P_MAX, P_MIN, _dw_patches
+from .tiling import cdiv, pad_to, pick_block
+
+
+def _dw_kernel(p_ref, w_ref, o_ref, *, mode: str):
+    patch = p_ref[...]  # [bm, KK, bc]
+    w = w_ref[...]  # [KK, bc]
+    if mode == "conv":
+        o_ref[...] = jnp.sum(patch * w[None], axis=1)
+    elif mode == "shift":
+        eps = 1e-12
+        s = jnp.sign(w)
+        p = jnp.clip(jnp.round(jnp.log2(jnp.abs(w) + eps)), P_MIN, P_MAX)
+        wq = jnp.where(jnp.abs(w) < 2.0 ** (P_MIN - 1), 0.0, s * 2.0**p)
+        o_ref[...] = jnp.sum(patch * wq[None], axis=1)
+    elif mode == "adder":
+        o_ref[...] = -jnp.sum(jnp.abs(patch - w[None]), axis=1)
+    else:  # pragma: no cover
+        raise ValueError(mode)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "mode", "bm", "bc"))
+def dw_apply(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    mode: str = "conv",
+    bm: int = 128,
+    bc: int = 128,
+):
+    """Depthwise layer: x [B,H,W,C] NHWC, w [K,K,C] -> [B,Ho,Wo,C].
+
+    Adder-mode padding note: channels pad with zeros on BOTH patch and
+    weight (|0-0| = 0), and the padded output channels are sliced away, so
+    zero-padding is correctness-preserving in every mode.
+    """
+    b, h, w_dim, c = x.shape
+    k = w.shape[0]
+    patches = _dw_patches(x, k, stride)  # [B,Ho,Wo,K,K,C]
+    _, ho, wo = patches.shape[:3]
+    m = b * ho * wo
+    p2 = patches.reshape(m, k * k, c)
+    w2 = w.reshape(k * k, c)
+    bm_ = pick_block(m, bm)
+    bc_ = pick_block(c, bc)
+    p2 = pad_to(p2, 0, bm_)
+    p2 = pad_to(p2, 2, bc_)
+    w2 = pad_to(w2, 1, bc_)
+    mp, _, cp = p2.shape
+    kernel = functools.partial(_dw_kernel, mode=mode)
+    out = pl.pallas_call(
+        kernel,
+        grid=(cdiv(mp, bm_), cdiv(cp, bc_)),
+        in_specs=[
+            pl.BlockSpec((bm_, k * k, bc_), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((k * k, bc_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bc_), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, cp), jnp.float32),
+        interpret=True,
+    )(p2, w2)
+    return out[:m, :c].reshape(b, ho, wo, c)

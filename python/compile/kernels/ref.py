@@ -1,0 +1,180 @@
+"""Pure-jnp reference oracles for NASA's hybrid operators (L1 correctness).
+
+These are the ground-truth semantics for the three operator families the
+paper mixes in its hybrid search spaces (Sec. 3.1):
+
+  * convolutions          — multiplication-based cross-correlation,
+  * shift layers          — DeepShift [6]: weights constrained to sign*2^p.
+                            Two constructions: PS (train s, p directly; the
+                            paper shows it collapses in hybrid nets, Fig. 2b)
+                            and Q (quantize a latent conv weight w* to the
+                            nearest power of two, Eq. 3 — what NASA uses),
+  * adder layers          — AdderNet [20]: negative l1 distance between the
+                            input patch and the weight (Eq. 4).
+
+Every Pallas kernel in this package is pytest-checked against these
+functions (assert_allclose), and the AOT-lowered HLO executed from rust is
+integration-checked against the same numbers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# DeepShift weight constructions (Eq. 2 and Eq. 3 of the paper)
+# ---------------------------------------------------------------------------
+
+# Shift exponents are clipped to a small signed range, mirroring the paper's
+# 6-bit shift-layer quantization (sign + 5-bit exponent field in spirit).
+P_MIN, P_MAX = -14.0, 0.0
+
+
+def pow2_quant(w: jnp.ndarray) -> jnp.ndarray:
+    """DeepShift-Q (Eq. 3): w_shift = sign(w*) * 2^round(log2|w*|).
+
+    Zero weights stay zero. Exponents clip to [P_MIN, P_MAX] so the result
+    is representable in a small shift field (the paper quantizes shift
+    layers to 6 bits).
+    """
+    eps = 1e-12
+    s = jnp.sign(w)
+    p = jnp.round(jnp.log2(jnp.abs(w) + eps))
+    p = jnp.clip(p, P_MIN, P_MAX)
+    return jnp.where(jnp.abs(w) < 2.0 ** (P_MIN - 1), 0.0, s * 2.0**p)
+
+
+def ps_construct(s: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """DeepShift-PS (Eq. 2): W_shift = s * 2^p with s in [-1, 0, 1], p int.
+
+    `s` is ternarized by rounding+clipping, `p` rounded to an integer. This
+    is the construction that Fig. 2(b) shows collapsing to ~0 in hybrid
+    nets; it exists here for the Fig. 2 reproduction.
+    """
+    s_q = jnp.clip(jnp.round(s), -1.0, 1.0)
+    p_q = jnp.clip(jnp.round(p), P_MIN, P_MAX)
+    return s_q * 2.0**p_q
+
+
+# ---------------------------------------------------------------------------
+# Pointwise (1x1) layer references. x2d: [M, Cin] (M = B*H*W), w: [Cin, Cout]
+# ---------------------------------------------------------------------------
+
+
+def conv_pw_ref(x2d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Multiplication-based pointwise conv == plain matmul."""
+    return x2d @ w
+
+
+def shift_pw_ref(x2d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """DeepShift-Q pointwise layer: matmul against pow2-quantized weights.
+
+    On real shift hardware every product x * (s*2^p) is a bitwise shift of x
+    by p plus a sign flip — multiplication-free. Numerically it is exactly
+    this matmul.
+    """
+    return x2d @ pow2_quant(w)
+
+
+def adder_pw_ref(x2d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """AdderNet pointwise layer (Eq. 4): Y[m,n] = -sum_k |x[m,k] - w[k,n]|."""
+    # [M, 1, Cin] - [1, Cout, Cin] -> [M, Cout, Cin]
+    diff = x2d[:, None, :] - w.T[None, :, :]
+    return -jnp.sum(jnp.abs(diff), axis=-1)
+
+
+def adder_pw_masked_ref(
+    x2d: jnp.ndarray, w: jnp.ndarray, kmask: jnp.ndarray
+) -> jnp.ndarray:
+    """Adder pointwise layer with a soft contraction-channel mask:
+    Y[m,n] = -sum_k kmask[k] * |x[m,k] - w[k,n]|.
+
+    Used by the FBNetV2-style channel-masked supernet (DESIGN.md): unlike
+    conv/shift, masking an adder layer's input with zeros does NOT remove
+    the masked channels' contribution (|0 - w| != 0), so the mask must
+    enter the contraction itself. kmask == slicing indicator reproduces
+    the exact E-sliced adder layer.
+    """
+    diff = jnp.abs(x2d[:, None, :] - w.T[None, :, :])  # [M, Cout, Cin]
+    return -jnp.einsum("mnk,k->mn", diff, kmask)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise KxK layer references. x: [B, H, W, C] (NHWC), w: [K, K, C]
+# ---------------------------------------------------------------------------
+
+
+def _dw_patches(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    """Extract depthwise patches -> [B, Ho, Wo, K, K, C] with SAME padding.
+
+    Uses lax.slice with native strides: strided *basic indexing* would
+    lower to gather (and its VJP to scatter), which blows up both compile
+    time and runtime on the PJRT CPU backend this project AOT-targets.
+    """
+    b, h, w_, c = x.shape
+    pad = (k - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    hp, wp = h + 2 * pad, w_ + 2 * pad
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+    rows = []
+    for i in range(k):
+        cols = []
+        for j in range(k):
+            sl = jax.lax.slice(
+                xp,
+                (0, i, j, 0),
+                (b, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            cols.append(sl)
+        rows.append(jnp.stack(cols, axis=3))  # [B,Ho,Wo,K,C]
+    return jnp.stack(rows, axis=3)  # [B,Ho,Wo,K,K,C]
+
+
+def dw_conv_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Depthwise convolution (multiplication-based), SAME padding."""
+    patches = _dw_patches(x, w.shape[0], stride)  # [B,Ho,Wo,K,K,C]
+    return jnp.einsum("bhwijc,ijc->bhwc", patches, w)
+
+
+def dw_shift_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Depthwise DeepShift-Q layer: depthwise conv with pow2 weights."""
+    return dw_conv_ref(x, pow2_quant(w), stride)
+
+
+def dw_adder_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Depthwise adder layer: Y[b,h,w,c] = -sum_ij |patch[i,j,c] - w[i,j,c]|."""
+    patches = _dw_patches(x, w.shape[0], stride)  # [B,Ho,Wo,K,K,C]
+    return -jnp.sum(jnp.abs(patches - w[None, None, None]), axis=(3, 4))
+
+
+# ---------------------------------------------------------------------------
+# Misc shared pieces (used by model.py and tested against known values)
+# ---------------------------------------------------------------------------
+
+
+def batch_norm_ref(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    """Batch-statistics BN over all axes except the last (channel) axis.
+
+    The supernet uses batch-stats normalization in both train and eval (no
+    running averages) — deterministic for the fixed-batch synthetic
+    workloads used in this reproduction; see DESIGN.md substitutions.
+    """
+    axes = tuple(range(x.ndim - 1))
+    mu = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    return gamma * (x - mu) * jax.lax.rsqrt(var + eps) + beta
+
+
+def fake_quant_ref(x: jnp.ndarray, bits: int, scale: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric uniform fake-quantization to `bits` (Banner et al. style).
+
+    q = clip(round(x / s_q), -qmax, qmax) * s_q with s_q = scale / qmax.
+    """
+    qmax = 2.0 ** (bits - 1) - 1.0
+    s = jnp.maximum(scale, 1e-12) / qmax
+    return jnp.clip(jnp.round(x / s), -qmax, qmax) * s

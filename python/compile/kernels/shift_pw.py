@@ -1,0 +1,63 @@
+"""Pallas kernel: DeepShift-Q pointwise layer (fused pow2-quant + matmul).
+
+The SLP chunk's workload: every weight is sign*2^p (Eq. 3), so on shift
+hardware each "product" is a bitwise shift. The kernel fuses the
+quantization into the tile load so the latent float weight w* never leaves
+VMEM unquantized — mirroring how the paper's SLP reads 6-bit (sign, p)
+codes from its RFs rather than full-precision weights.
+
+Kernel-roofline:
+  * Same tiling as conv_pw ([bm,K]x[K,bn] output-stationary tiles); the
+    quantization adds 4 VPU ops per weight element, amortized across the bm
+    rows that reuse the quantized tile (weight-stationary within a block).
+  * On TPU the quantized matmul still uses the MXU; the paper's point is an
+    ASIC one (shifters are ~5x cheaper than multipliers at 45nm) — that
+    economics lives in the L3 accelerator model (accel/pe.rs), while this
+    kernel preserves the exact arithmetic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import P_MAX, P_MIN
+from .tiling import LANE, cdiv, pad_to, pick_block
+
+
+def _shift_matmul_kernel(x_ref, w_ref, o_ref):
+    w = w_ref[...]
+    # DeepShift-Q (Eq. 3), fused at the tile level.
+    eps = 1e-12
+    s = jnp.sign(w)
+    p = jnp.clip(jnp.round(jnp.log2(jnp.abs(w) + eps)), P_MIN, P_MAX)
+    wq = jnp.where(jnp.abs(w) < 2.0 ** (P_MIN - 1), 0.0, s * 2.0**p)
+    o_ref[...] = jnp.dot(x_ref[...], wq, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def shift_pw(x2d: jnp.ndarray, w: jnp.ndarray, bm: int = 128, bn: int = LANE):
+    """DeepShift-Q pointwise layer: x2d [M, Cin], w [Cin, Cout] (latent)."""
+    m, k = x2d.shape
+    k2, n = w.shape
+    assert k == k2
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    xp = pad_to(x2d, 0, bm)
+    wp = pad_to(w, 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _shift_matmul_kernel,
+        grid=(cdiv(mp, bm), cdiv(np_, bn)),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,42 @@
+"""Shared tiling utilities for the Pallas kernels.
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation): blocks are chosen
+MXU/VPU-shaped — multiples of 8 in the sublane dim and 128 in the lane dim
+when the problem is big enough — and shrunk for the small CIFAR-scale
+problems in this reproduction so that interpret=True stays fast. The
+BlockSpec index maps below express the HBM->VMEM schedule the paper's
+accelerator expresses with per-chunk dataflows.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Lane/sublane quanta of the TPU vector unit; full-size MXU tiles are
+# 128x128. We tile to these when dims allow, else to the dim itself.
+SUBLANE = 8
+LANE = 128
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor-friendly block <= target for `dim` (>=1)."""
+    if dim <= target:
+        return dim
+    # prefer an exact divisor of the padded dim; we pad to multiples anyway,
+    # so just use the target.
+    return target
+
+
+def pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    """Zero-pad `axis` of x up to a multiple of `mult`."""
+    d = x.shape[axis]
+    rem = (-d) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

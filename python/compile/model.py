@@ -1,0 +1,540 @@
+"""L2: NASA hybrid supernet — forward/backward as pure JAX, AOT-lowered.
+
+Implements Sec. 3 of the paper:
+  * FBNet-style macro-architecture (Fig. 3): fixed stem, N searchable
+    candidate-block layers, fixed head.
+  * Candidate blocks PW -> DW -> PW parameterized by (E, K, T) with
+    T in {Conv, Shift, Adder} + a parameter-free Skip (Table 1).
+  * Weight sharing across the E dimension for candidates with equal (T, K)
+    (Sec. 3.1 "shared weights ... among the channel dimension E").
+  * Gumbel-Softmax candidate mixing with external noise/mask/temperature
+    (Eqs. 6-7) — the mask carries both the top-k path masking and the PGP
+    stage gating, both computed by the rust coordinator.
+  * Loss = CE + lambda * sum_l sum_i gs_li * cost_li (Eq. 5), with the
+    per-candidate hardware cost table computed in rust (scaled FLOPs,
+    Sec. 3.3) and passed in as an input.
+
+Channel-masked E dimension (FBNetV2 [18], which the paper cites): the
+three E variants of a (T, K) block share ONE block evaluation at maximum
+width; the E choice enters as a gs-weighted channel mask. This is both
+the memory-saving trick of [18] and — crucially here — a ~3x reduction of
+the AOT graph that the xla_extension 0.5.1 CPU compiler must chew
+through. With a one-hot alpha the masked block is EXACTLY the E-sliced
+block (adder layers use a masked l1 contraction to preserve this, see
+kernels/ref.py::adder_pw_masked_ref), so derived-child training/eval
+through the supernet artifact is exact.
+
+Everything here is traced ONCE by aot.py into HLO text; at run time the
+rust coordinator owns alphas, masks, optimizers and schedules, and feeds
+this graph through PJRT.
+
+Two operator backends with identical semantics:
+  * use_pallas=False — pure jnp (used for the supernet train/eval
+    artifacts),
+  * use_pallas=True  — the L1 Pallas kernels (interpret mode; used for the
+    fixed-child inference artifacts so the kernels sit on the executed
+    rust hot path).
+pytest asserts the two backends agree to float tolerance.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adder_pw, conv_pw, dw_apply, shift_pw
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Search-space definition (Table 1) — MUST stay in sync with rust via the
+# manifest emitted by aot.py (rust never re-derives this independently).
+# ---------------------------------------------------------------------------
+
+EK_CHOICES: List[Tuple[int, int]] = [(1, 3), (3, 3), (6, 3), (1, 5), (3, 5), (6, 5)]
+E_CHOICES: List[int] = [1, 3, 6]
+K_CHOICES: List[int] = [3, 5]
+E_MAX = 6
+
+SPACE_TYPES: Dict[str, List[str]] = {
+    "conv_only": ["conv"],  # FBNet baseline space
+    "hybrid_shift": ["conv", "shift"],
+    "hybrid_adder": ["conv", "adder"],
+    "hybrid_all": ["conv", "shift", "adder"],
+}
+
+
+def candidates(space: str) -> List[Dict[str, Any]]:
+    """Ordered candidate list for one searchable layer of `space`.
+
+    conv_only: 7, hybrid_shift/adder: 13, hybrid_all: 19 (matches the
+    paper's 6 * |T| + 1 count).
+    """
+    cands: List[Dict[str, Any]] = []
+    for t in SPACE_TYPES[space]:
+        for e, k in EK_CHOICES:
+            cands.append({"t": t, "e": e, "k": k})
+    cands.append({"t": "skip"})
+    return cands
+
+
+@dataclass
+class SupernetConfig:
+    """Macro-architecture (Fig. 3 left). `plan` lists (cout, stride) per
+    searchable layer."""
+
+    space: str = "hybrid_all"
+    input_hw: int = 16
+    input_ch: int = 3
+    num_classes: int = 10
+    batch: int = 16
+    stem_ch: int = 16
+    # Stem stride 2 keeps every searchable layer at <=8x8 spatial —
+    # the adder layers' broadcast l1 contraction is the CPU cost driver
+    # and scales with M = B*H*W (see DESIGN.md §Perf).
+    stem_stride: int = 2
+    head_ch: int = 128
+    plan: List[Tuple[int, int]] = field(
+        default_factory=lambda: [(16, 1), (24, 2), (24, 1), (32, 2), (32, 1), (64, 1)]
+    )
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.plan)
+
+    @property
+    def n_cand(self) -> int:
+        return len(candidates(self.space))
+
+
+def paper_plan() -> List[Tuple[int, int]]:
+    """The 22-searchable-layer CIFAR plan mirroring FBNet's macro-arch
+    (used by the `paper` config; not built by default — see DESIGN.md)."""
+    plan = []
+    stages = [(16, 1, 4), (24, 2, 4), (32, 2, 4), (64, 2, 4), (96, 1, 4), (160, 1, 2)]
+    for cout, stride, reps in stages:
+        for r in range(reps):
+            plan.append((cout, stride if r == 0 else 1))
+    return plan  # 22 layers
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout. Rust reads this from manifest.json and owns
+# initialization + optimization; python only defines names/shapes/offsets.
+# Weights AND batch-norms are shared per (T, K) across the E dimension
+# (channel masking); E only selects how many channels are alive.
+# ---------------------------------------------------------------------------
+
+
+def _he(fan_in: int) -> Dict[str, Any]:
+    return {"kind": "he_normal", "fan_in": fan_in}
+
+
+def _const(v: float) -> Dict[str, Any]:
+    return {"kind": "const", "value": v}
+
+
+def build_layout(cfg: SupernetConfig) -> List[Dict[str, Any]]:
+    """Enumerate every parameter tensor: name, shape, offset, init, ltype,
+    layer index (-1 for stem/head). ltype drives PGP gating in rust."""
+    entries: List[Dict[str, Any]] = []
+    off = 0
+
+    def add(name, shape, init, ltype, layer):
+        nonlocal off
+        size = 1
+        for d in shape:
+            size *= d
+        entries.append(
+            {
+                "name": name,
+                "shape": list(shape),
+                "offset": off,
+                "size": size,
+                "init": init,
+                "ltype": ltype,
+                "layer": layer,
+            }
+        )
+        off += size
+
+    # Stem: 3x3 conv stride 1 + BN
+    add("stem/w", (3, 3, cfg.input_ch, cfg.stem_ch), _he(9 * cfg.input_ch), "common", -1)
+    add("stem/bn/g", (cfg.stem_ch,), _const(1.0), "common", -1)
+    add("stem/bn/b", (cfg.stem_ch,), _const(0.0), "common", -1)
+
+    cin = cfg.stem_ch
+    for l, (cout, stride) in enumerate(cfg.plan):
+        mid_max = cin * E_MAX
+        # The paper's customized recipe (Sec. 3.2, following BigNAS [27])
+        # zero-inits the LAST BN gamma of each block — but only residual
+        # blocks: a gamma_zero output on a non-residual (stride/channel-
+        # changing) block would zero the whole signal path at init.
+        residual = stride == 1 and cin == cout
+        bn3_init = {"kind": "gamma_zero"} if residual else _const(1.0)
+        for t in SPACE_TYPES[cfg.space]:
+            for k in K_CHOICES:
+                pre = f"L{l}/{t}/k{k}"
+                add(f"{pre}/pw1", (cin, mid_max), _he(cin), t, l)
+                add(f"{pre}/dw", (k, k, mid_max), _he(k * k), t, l)
+                add(f"{pre}/pw2", (mid_max, cout), _he(mid_max), t, l)
+                add(f"{pre}/bn1/g", (mid_max,), _const(1.0), t, l)
+                add(f"{pre}/bn1/b", (mid_max,), _const(0.0), t, l)
+                add(f"{pre}/bn2/g", (mid_max,), _const(1.0), t, l)
+                add(f"{pre}/bn2/b", (mid_max,), _const(0.0), t, l)
+                add(f"{pre}/bn3/g", (cout,), bn3_init, t, l)
+                add(f"{pre}/bn3/b", (cout,), _const(0.0), t, l)
+        cin = cout
+
+    # Head: PW conv + BN + GAP + FC
+    add("head/w", (cin, cfg.head_ch), _he(cin), "common", -1)
+    add("head/bn/g", (cfg.head_ch,), _const(1.0), "common", -1)
+    add("head/bn/b", (cfg.head_ch,), _const(0.0), "common", -1)
+    add("fc/w", (cfg.head_ch, cfg.num_classes), _he(cfg.head_ch), "common", -1)
+    add("fc/b", (cfg.num_classes,), _const(0.0), "common", -1)
+    return entries
+
+
+def n_params(layout: List[Dict[str, Any]]) -> int:
+    last = layout[-1]
+    return last["offset"] + last["size"]
+
+
+class ParamView:
+    """Slices tensors out of the flat parameter vector by layout name."""
+
+    def __init__(self, layout: List[Dict[str, Any]], flat: jnp.ndarray):
+        self._idx = {e["name"]: e for e in layout}
+        self._flat = flat
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        e = self._idx[name]
+        return self._flat[e["offset"] : e["offset"] + e["size"]].reshape(e["shape"])
+
+
+# ---------------------------------------------------------------------------
+# Layer math
+# ---------------------------------------------------------------------------
+
+
+def _bn(x, g, b):
+    return ref.batch_norm_ref(x, g, b)
+
+
+def _pw(x2d: jnp.ndarray, w: jnp.ndarray, t: str, use_pallas: bool) -> jnp.ndarray:
+    if use_pallas:
+        return {"conv": conv_pw, "shift": shift_pw, "adder": adder_pw}[t](x2d, w)
+    return {
+        "conv": ref.conv_pw_ref,
+        "shift": ref.shift_pw_ref,
+        "adder": ref.adder_pw_ref,
+    }[t](x2d, w)
+
+
+def _pw_masked(x2d: jnp.ndarray, w: jnp.ndarray, t: str, kmask: jnp.ndarray):
+    """Contraction with a soft channel mask on the reduction axis.
+
+    conv/shift: masking the input is exact (0 * w == 0). adder: the mask
+    must weight the |x - w| terms (see adder_pw_masked_ref).
+    """
+    if t == "adder":
+        return ref.adder_pw_masked_ref(x2d, w, kmask)
+    return _pw(x2d * kmask[None, :], w, t, use_pallas=False)
+
+
+def _dw(x: jnp.ndarray, w: jnp.ndarray, stride: int, t: str, use_pallas: bool):
+    if use_pallas:
+        return dw_apply(x, w, stride=stride, mode=t)
+    return {
+        "conv": ref.dw_conv_ref,
+        "shift": ref.dw_shift_ref,
+        "adder": ref.dw_adder_ref,
+    }[t](x, w, stride)
+
+
+def _stem(x, pv: ParamView, stride: int = 2):
+    w = pv["stem/w"]
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return jax.nn.relu(_bn(y, pv["stem/bn/g"], pv["stem/bn/b"]))
+
+
+def _skip_path(x, stride: int, cout: int):
+    """Parameter-free skip: avg-pool for stride, zero-pad/slice channels."""
+    if stride > 1:
+        x = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, stride, stride, 1), (1, stride, stride, 1), "SAME"
+        ) / float(stride * stride)
+    cin = x.shape[-1]
+    if cout > cin:
+        x = jnp.pad(x, ((0, 0),) * 3 + ((0, cout - cin),))
+    elif cout < cin:
+        x = x[..., :cout]
+    return x
+
+
+def _quant_w(w, t, quant_bits):
+    if quant_bits is None:
+        return w
+    bits = quant_bits.get(t, 8)
+    return ref.fake_quant_ref(w, bits, jnp.max(jnp.abs(w)))
+
+
+def _quant_a(a, quant_bits):
+    if quant_bits is None:
+        return a
+    return ref.fake_quant_ref(a, quant_bits.get("act", 8), jnp.max(jnp.abs(a)))
+
+
+def masked_block_apply(
+    x: jnp.ndarray,
+    pv: ParamView,
+    l: int,
+    t: str,
+    k: int,
+    kmask: jnp.ndarray,
+    stride: int,
+    cout: int,
+    quant_bits: Optional[Dict[str, int]] = None,
+) -> jnp.ndarray:
+    """One (T, K) block at full width with a soft E channel mask
+    (Fig. 3 right: PW -> BN/ReLU -> DW -> BN/ReLU -> PW -> BN, + residual
+    when shape-preserving). kmask has mid_max entries in [0, 1]."""
+    b, h, w_dim, cin = x.shape
+    pre = f"L{l}/{t}/k{k}"
+    w1 = _quant_w(pv[f"{pre}/pw1"], t, quant_bits)
+    wd = _quant_w(pv[f"{pre}/dw"], t, quant_bits)
+    w2 = _quant_w(pv[f"{pre}/pw2"], t, quant_bits)
+
+    h1 = _pw(x.reshape(-1, cin), w1, t, use_pallas=False)
+    mid = h1.shape[-1]
+    h1 = h1.reshape(b, h, w_dim, mid)
+    h1 = jax.nn.relu(_bn(h1, pv[f"{pre}/bn1/g"], pv[f"{pre}/bn1/b"])) * kmask
+    h1 = _quant_a(h1, quant_bits)
+    # DW is per-channel; masking the output kills dead channels exactly
+    # (including adder-mode's nonzero response to zero input).
+    h2 = _dw(h1, wd, stride, t, use_pallas=False) * kmask
+    h2 = jax.nn.relu(_bn(h2, pv[f"{pre}/bn2/g"], pv[f"{pre}/bn2/b"])) * kmask
+    h2 = _quant_a(h2, quant_bits)
+    ho, wo = h2.shape[1], h2.shape[2]
+    h3 = _pw_masked(h2.reshape(-1, mid), w2, t, kmask).reshape(b, ho, wo, cout)
+    h3 = _bn(h3, pv[f"{pre}/bn3/g"], pv[f"{pre}/bn3/b"])
+    if stride == 1 and cin == cout:
+        h3 = h3 + x
+    return _quant_a(h3, quant_bits)
+
+
+def block_apply_exact(
+    x: jnp.ndarray,
+    pv: ParamView,
+    l: int,
+    cand: Dict[str, Any],
+    stride: int,
+    cout: int,
+    use_pallas: bool,
+) -> jnp.ndarray:
+    """Exact E-sliced candidate block (the fixed-child path): weights and
+    shared (T,K) BN params sliced to the first cin*E channels. Equal to
+    masked_block_apply with a one-hot mask; pytest asserts this."""
+    if cand["t"] == "skip":
+        return _skip_path(x, stride, cout)
+    t, e, k = cand["t"], cand["e"], cand["k"]
+    b, h, w_dim, cin = x.shape
+    mid = cin * e
+    pre = f"L{l}/{t}/k{k}"
+    w1 = pv[f"{pre}/pw1"][:, :mid]
+    wd = pv[f"{pre}/dw"][:, :, :mid]
+    w2 = pv[f"{pre}/pw2"][:mid, :]
+
+    h1 = _pw(x.reshape(-1, cin), w1, t, use_pallas).reshape(b, h, w_dim, mid)
+    h1 = jax.nn.relu(_bn(h1, pv[f"{pre}/bn1/g"][:mid], pv[f"{pre}/bn1/b"][:mid]))
+    h2 = _dw(h1, wd, stride, t, use_pallas)
+    h2 = jax.nn.relu(_bn(h2, pv[f"{pre}/bn2/g"][:mid], pv[f"{pre}/bn2/b"][:mid]))
+    ho, wo = h2.shape[1], h2.shape[2]
+    h3 = _pw(h2.reshape(-1, mid), w2, t, use_pallas).reshape(b, ho, wo, cout)
+    h3 = _bn(h3, pv[f"{pre}/bn3/g"], pv[f"{pre}/bn3/b"])
+    if stride == 1 and cin == cout:
+        h3 = h3 + x
+    return h3
+
+
+def _head(x, pv: ParamView):
+    b = x.shape[0]
+    cin = x.shape[-1]
+    y = ref.conv_pw_ref(x.reshape(-1, cin), pv["head/w"]).reshape(
+        b, x.shape[1], x.shape[2], -1
+    )
+    y = jax.nn.relu(_bn(y, pv["head/bn/g"], pv["head/bn/b"]))
+    y = jnp.mean(y, axis=(1, 2))  # GAP
+    return y @ pv["fc/w"] + pv["fc/b"]
+
+
+# ---------------------------------------------------------------------------
+# Supernet forward with Gumbel-Softmax mixing (Eqs. 6-7)
+# ---------------------------------------------------------------------------
+
+NEG_BIG = -1e9
+EPS = 1e-8
+
+
+def gumbel_softmax_weights(alpha, gumbel, mask, tau):
+    """gs_li = softmax_i((masked alpha + gumbel) / tau) per layer (Eq. 7).
+
+    mask in {0,1}: 0 kills a candidate (top-k masking of Eq. 6 and/or a PGP
+    stage gate). Masked logits go to -inf so their weight is exactly 0.
+    """
+    keep = mask > 0.5
+    logits = jnp.where(keep, alpha + gumbel, NEG_BIG)
+    return jax.nn.softmax(logits / tau, axis=-1)
+
+
+def _e_mask(cin: int, e: int) -> jnp.ndarray:
+    """Channel indicator for expansion e at base width cin."""
+    m = jnp.zeros((cin * E_MAX,), jnp.float32)
+    return m.at[: cin * e].set(1.0)
+
+
+def supernet_forward(
+    cfg: SupernetConfig,
+    flat: jnp.ndarray,
+    alpha: jnp.ndarray,
+    gumbel: jnp.ndarray,
+    mask: jnp.ndarray,
+    tau: jnp.ndarray,
+    x: jnp.ndarray,
+    quant_bits: Optional[Dict[str, int]] = None,
+):
+    """Returns (logits [B, classes], gs [L, n_cand]).
+
+    Per layer, candidates sharing (T, K) are computed as ONE full-width
+    block whose E choice enters as the gs-weighted channel mask
+    (FBNetV2-style); Skip is mixed in with its own gs weight.
+    """
+    layout = build_layout(cfg)
+    pv = ParamView(layout, flat)
+    cands = candidates(cfg.space)
+    gs = gumbel_softmax_weights(alpha, gumbel, mask, tau)
+    h = _stem(x, pv, cfg.stem_stride)
+    cin = cfg.stem_ch
+    for l, (cout, stride) in enumerate(cfg.plan):
+        outs = []
+        for t in SPACE_TYPES[cfg.space]:
+            for k in K_CHOICES:
+                idxs = [
+                    (ci, c["e"])
+                    for ci, c in enumerate(cands)
+                    if c.get("t") == t and c.get("k") == k
+                ]
+                g_sum = sum(gs[l, ci] for ci, _ in idxs)
+                kmask = sum(
+                    (gs[l, ci] / (g_sum + EPS)) * _e_mask(cin, e) for ci, e in idxs
+                )
+                y = masked_block_apply(
+                    h, pv, l, t, k, kmask, stride, cout, quant_bits
+                )
+                outs.append(g_sum * y)
+        skip_ci = len(cands) - 1
+        outs.append(gs[l, skip_ci] * _skip_path(h, stride, cout))
+        h = jax.nn.relu(sum(outs[1:], outs[0]))
+        cin = cout
+    return _head(h, pv), gs
+
+
+def _ce_and_acc(logits, labels, num_classes):
+    onehot = jax.nn.one_hot(labels, num_classes)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    ncorrect = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == labels.astype(jnp.int32)).astype(jnp.float32)
+    )
+    return ce, ncorrect
+
+
+def supernet_loss(cfg, flat, alpha, gumbel, mask, tau, lam, cost, x, labels):
+    """Eq. 5: CE + lambda * E_gs[hardware cost]. Returns aux scalars too."""
+    logits, gs = supernet_forward(cfg, flat, alpha, gumbel, mask, tau, x)
+    ce, ncorrect = _ce_and_acc(logits, labels, cfg.num_classes)
+    hw = jnp.sum(gs * cost)
+    return ce + lam * hw, (ce, hw, ncorrect)
+
+
+def make_step_fn(cfg: SupernetConfig):
+    """The AOT training-step entry point: returns loss scalars + grads
+    w.r.t. (flat params, alpha). The rust coordinator applies the
+    optimizers (SGDM for w, Adam for alpha) and all masking."""
+
+    def step(flat, alpha, gumbel, mask, tau, lam, cost, x, labels):
+        (loss, (ce, hw, ncorrect)), (dflat, dalpha) = jax.value_and_grad(
+            lambda f, a: supernet_loss(
+                cfg, f, a, gumbel, mask, tau, lam, cost, x, labels
+            ),
+            argnums=(0, 1),
+            has_aux=True,
+        )(flat, alpha)
+        return loss, ce, hw, ncorrect, dflat, dalpha
+
+    return step
+
+
+def make_eval_fn(cfg: SupernetConfig, quant: bool = False):
+    """AOT eval entry point (deterministic: no gumbel noise). With
+    quant=True applies the paper's FXP8 (FXP6 for shift/adder) setting."""
+    qb = {"conv": 8, "shift": 6, "adder": 6, "act": 8} if quant else None
+
+    def evalf(flat, alpha, mask, tau, x, labels):
+        zeros = jnp.zeros_like(alpha)
+        logits, _ = supernet_forward(
+            cfg, flat, alpha, zeros, mask, tau, x, quant_bits=qb
+        )
+        ce, ncorrect = _ce_and_acc(logits, labels, cfg.num_classes)
+        return ce, ncorrect, logits
+
+    return evalf
+
+
+# ---------------------------------------------------------------------------
+# Fixed representative child (L1 Pallas kernels on the executed path)
+# ---------------------------------------------------------------------------
+
+# A hand-picked hybrid-all architecture exercising all three operator types
+# and both kernel sizes; used by the rust serving-style benches and the
+# pallas-vs-jnp cross-check through PJRT.
+FIXED_CHILD: List[Dict[str, Any]] = [
+    {"t": "conv", "e": 3, "k": 3},
+    {"t": "shift", "e": 3, "k": 3},
+    {"t": "adder", "e": 3, "k": 5},
+    {"t": "conv", "e": 6, "k": 5},
+    {"t": "shift", "e": 1, "k": 3},
+    {"t": "adder", "e": 6, "k": 3},
+]
+
+
+def child_cand_indices(cfg: SupernetConfig, arch: List[Dict[str, Any]]) -> List[int]:
+    cands = candidates(cfg.space)
+    idx = []
+    for a in arch:
+        match = [i for i, c in enumerate(cands) if c == a]
+        assert match, f"arch entry {a} not in space {cfg.space}"
+        idx.append(match[0])
+    return idx
+
+
+def make_child_infer_fn(
+    cfg: SupernetConfig, arch: List[Dict[str, Any]], use_pallas: bool
+):
+    """Standalone child forward: computes ONLY the chosen candidate per
+    layer (unlike one-hot supernet eval, which computes all blocks)."""
+
+    def infer(flat, x):
+        layout = build_layout(cfg)
+        pv = ParamView(layout, flat)
+        h = _stem(x, pv, cfg.stem_stride)
+        for l, (cout, stride) in enumerate(cfg.plan):
+            h = block_apply_exact(h, pv, l, arch[l], stride, cout, use_pallas)
+            h = jax.nn.relu(h)
+        return _head(h, pv)
+
+    return infer

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes; fixed cases pin the paper-relevant properties
+(power-of-two weights, l1 distance, multiplication-free semantics).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adder_pw, conv_pw, dw_apply, shift_pw
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Pointwise kernels vs refs — hypothesis shape sweeps
+# ---------------------------------------------------------------------------
+
+pw_dims = st.tuples(
+    st.integers(1, 70),  # M
+    st.integers(1, 40),  # K
+    st.integers(1, 50),  # N
+)
+
+
+@given(pw_dims, st.integers(0, 2**31 - 1))
+def test_conv_pw_matches_ref(dims, seed):
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(conv_pw(x, w), ref.conv_pw_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@given(pw_dims, st.integers(0, 2**31 - 1))
+def test_shift_pw_matches_ref(dims, seed):
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(shift_pw(x, w), ref.shift_pw_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@given(pw_dims, st.integers(0, 2**31 - 1))
+def test_adder_pw_matches_ref(dims, seed):
+    m, k, n = dims
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(adder_pw(x, w), ref.adder_pw_ref(x, w), rtol=1e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise kernel, all modes/strides/kernel sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,rf", [
+    ("conv", ref.dw_conv_ref),
+    ("shift", ref.dw_shift_ref),
+    ("adder", ref.dw_adder_ref),
+])
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("k", [3, 5])
+def test_dw_matches_ref(mode, rf, stride, k):
+    rng = np.random.default_rng(k * 10 + stride)
+    x = rand(rng, 2, 11, 11, 9)
+    w = rand(rng, k, k, 9)
+    got = dw_apply(x, w, stride=stride, mode=mode)
+    want = rf(x, w, stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    st.integers(1, 3),   # batch
+    st.integers(4, 13),  # hw
+    st.integers(1, 12),  # channels
+    st.integers(0, 2**31 - 1),
+)
+def test_dw_adder_shapes_hypothesis(b, hw, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, hw, hw, c)
+    w = rand(rng, 3, 3, c)
+    got = dw_apply(x, w, stride=1, mode="adder")
+    np.testing.assert_allclose(got, ref.dw_adder_ref(x, w, 1), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Operator-family semantics (the paper's algorithmic properties)
+# ---------------------------------------------------------------------------
+
+def test_pow2_quant_is_powers_of_two():
+    rng = np.random.default_rng(0)
+    w = rand(rng, 64, 64)
+    wq = np.asarray(ref.pow2_quant(w))
+    nz = wq[np.abs(wq) > 0]
+    exps = np.log2(np.abs(nz))
+    np.testing.assert_allclose(exps, np.round(exps), atol=1e-6)
+    # Eq. 3: sign preserved
+    assert (np.sign(nz) == np.sign(np.asarray(w)[np.abs(wq) > 0])).all()
+
+
+def test_pow2_quant_relative_error_bounded():
+    # round(log2|w|) has at most sqrt(2)x relative error on magnitudes,
+    # within the representable exponent range [2^P_MIN, 2^P_MAX] (values
+    # outside clip to the range edge, like any fixed-point format).
+    rng = np.random.default_rng(1)
+    w = np.clip(np.abs(rng.normal(size=1000).astype(np.float32)), 2.0**ref.P_MIN, 2.0**ref.P_MAX)
+    wq = np.abs(np.asarray(ref.pow2_quant(jnp.asarray(w))))
+    ratio = wq / w
+    assert (ratio >= 1 / np.sqrt(2) - 1e-3).all() and (ratio <= np.sqrt(2) + 1e-3).all()
+
+
+def test_ps_construct_ternary_sign():
+    s = jnp.asarray(np.linspace(-2, 2, 41).astype(np.float32))
+    p = jnp.zeros_like(s) - 2.0
+    w = np.asarray(ref.ps_construct(s, p))
+    assert set(np.unique(np.sign(w))) <= {-1.0, 0.0, 1.0}
+    nz = w[w != 0]
+    np.testing.assert_allclose(np.abs(nz), 0.25)
+
+
+def test_adder_pw_is_negative_l1():
+    # identical x and w rows -> distance 0; else strictly negative
+    x = jnp.asarray(np.eye(4, dtype=np.float32))
+    w = x.T
+    y = np.asarray(ref.adder_pw_ref(x, w))
+    np.testing.assert_allclose(np.diag(y), 0.0, atol=1e-6)
+    off = y[~np.eye(4, dtype=bool)]
+    assert (off < 0).all()
+
+
+def test_adder_masked_equals_sliced():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 10, 12)
+    w = rand(rng, 12, 7)
+    kmask = jnp.asarray(([1.0] * 8 + [0.0] * 4), jnp.float32)
+    got = ref.adder_pw_masked_ref(x, w, kmask)
+    want = ref.adder_pw_ref(x[:, :8], w[:8, :])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fake_quant_levels():
+    x = jnp.asarray(np.linspace(-1, 1, 101).astype(np.float32))
+    q = np.asarray(ref.fake_quant_ref(x, 8, jnp.asarray(1.0)))
+    # at most 255 distinct levels, symmetric range
+    assert len(np.unique(q)) <= 255
+    assert q.max() <= 1.0 + 1e-6 and q.min() >= -1.0 - 1e-6
+
+
+def test_fake_quant_6bit_coarser_than_8bit():
+    rng = np.random.default_rng(4)
+    x = rand(rng, 1000)
+    e8 = np.abs(np.asarray(ref.fake_quant_ref(x, 8, jnp.max(jnp.abs(x)))) - np.asarray(x)).mean()
+    e6 = np.abs(np.asarray(ref.fake_quant_ref(x, 6, jnp.max(jnp.abs(x)))) - np.asarray(x)).mean()
+    assert e6 > e8
+
+
+def test_batch_norm_normalizes():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 64, 8) * 5.0 + 3.0
+    y = np.asarray(ref.batch_norm_ref(x, jnp.ones(8), jnp.zeros(8)))
+    np.testing.assert_allclose(y.mean(axis=0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(axis=0), 1.0, atol=1e-2)

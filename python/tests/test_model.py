@@ -1,0 +1,218 @@
+"""L2 correctness: supernet semantics, layout consistency, child paths."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def tiny_cfg(space="hybrid_all", classes=10):
+    return M.SupernetConfig(
+        space=space,
+        num_classes=classes,
+        batch=4,
+        input_hw=8,
+        stem_ch=8,
+        head_ch=16,
+        plan=[(8, 1), (12, 2)],
+    )
+
+
+def init(cfg, seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    P = M.n_params(M.build_layout(cfg))
+    return jnp.asarray(rng.normal(size=(P,)).astype(np.float32) * scale), rng
+
+
+# ---------------------------------------------------------------------------
+# Search-space enumeration (Table 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("space,n", [
+    ("conv_only", 7),
+    ("hybrid_shift", 13),
+    ("hybrid_adder", 13),
+    ("hybrid_all", 19),
+])
+def test_candidate_counts_match_paper(space, n):
+    assert len(M.candidates(space)) == n
+    assert M.candidates(space)[-1]["t"] == "skip"
+
+
+def test_paper_plan_is_22_layers():
+    assert len(M.paper_plan()) == 22
+
+
+def test_layout_contiguous_and_typed():
+    cfg = tiny_cfg()
+    layout = M.build_layout(cfg)
+    off = 0
+    for e in layout:
+        assert e["offset"] == off
+        off += e["size"]
+        assert e["ltype"] in ("conv", "shift", "adder", "common")
+    assert off == M.n_params(layout)
+
+
+def test_layout_gamma_zero_only_on_bn3():
+    for e in M.build_layout(tiny_cfg()):
+        if e["init"]["kind"] == "gamma_zero":
+            assert "bn3/g" in e["name"]
+
+
+# ---------------------------------------------------------------------------
+# Gumbel-Softmax mixing (Eqs. 6-7)
+# ---------------------------------------------------------------------------
+
+def test_gs_weights_sum_to_one_over_enabled():
+    alpha = jnp.zeros((2, 5))
+    gumbel = jnp.zeros((2, 5))
+    mask = jnp.asarray([[1, 1, 0, 0, 1], [1, 1, 1, 1, 1]], jnp.float32)
+    gs = M.gumbel_softmax_weights(alpha, gumbel, mask, jnp.asarray(1.0))
+    np.testing.assert_allclose(gs.sum(-1), 1.0, rtol=1e-6)
+    assert gs[0, 2] == 0.0 and gs[0, 3] == 0.0
+
+
+def test_gs_low_tau_approaches_onehot():
+    alpha = jnp.asarray([[1.0, 0.5, 0.0]])
+    gs = M.gumbel_softmax_weights(alpha, jnp.zeros((1, 3)), jnp.ones((1, 3)),
+                                  jnp.asarray(0.05))
+    assert gs[0, 0] > 0.99
+
+
+# ---------------------------------------------------------------------------
+# Masked supernet == exact sliced child at one-hot alpha
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [
+    [{"t": "conv", "e": 1, "k": 3}, {"t": "conv", "e": 6, "k": 5}],
+    [{"t": "adder", "e": 3, "k": 3}, {"t": "shift", "e": 6, "k": 5}],
+    [{"t": "shift", "e": 1, "k": 5}, {"t": "adder", "e": 6, "k": 3}],
+    [{"t": "skip"}, {"t": "adder", "e": 3, "k": 3}],
+])
+def test_onehot_supernet_equals_child(arch):
+    cfg = tiny_cfg()
+    flat, rng = init(cfg)
+    x = jnp.asarray(rng.normal(size=(4, 8, 8, 3)).astype(np.float32))
+    idx = M.child_cand_indices(cfg, arch)
+    L, NC = cfg.n_layers, cfg.n_cand
+    alpha = np.zeros((L, NC), "f")
+    mask = np.zeros((L, NC), "f")
+    for l, c in enumerate(idx):
+        mask[l, c] = 1.0
+    logits_sup, gs = M.supernet_forward(
+        cfg, flat, jnp.asarray(alpha), jnp.zeros((L, NC)), jnp.asarray(mask),
+        jnp.asarray(1.0), x,
+    )
+    np.testing.assert_allclose(np.asarray(gs).sum(-1), 1.0, rtol=1e-5)
+    child = M.make_child_infer_fn(cfg, arch, use_pallas=False)(flat, x)
+    np.testing.assert_allclose(logits_sup, child, rtol=5e-3, atol=5e-3)
+
+
+def test_child_pallas_equals_jnp():
+    cfg = tiny_cfg()
+    flat, rng = init(cfg, seed=1)
+    x = jnp.asarray(rng.normal(size=(4, 8, 8, 3)).astype(np.float32))
+    arch = [{"t": "adder", "e": 3, "k": 3}, {"t": "shift", "e": 1, "k": 5}]
+    a = M.make_child_infer_fn(cfg, arch, use_pallas=False)(flat, x)
+    b = M.make_child_infer_fn(cfg, arch, use_pallas=True)(flat, x)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Step function: loss decomposition + gradients
+# ---------------------------------------------------------------------------
+
+def run_step(cfg, flat, alpha, mask, lam=0.01, seed=2):
+    rng = np.random.default_rng(seed)
+    L, NC = cfg.n_layers, cfg.n_cand
+    x = jnp.asarray(rng.normal(size=(cfg.batch, cfg.input_hw, cfg.input_hw, 3)).astype(np.float32))
+    labels = jnp.asarray(np.arange(cfg.batch) % cfg.num_classes, jnp.int32)
+    cost = jnp.ones((L, NC)) * 0.5
+    step = M.make_step_fn(cfg)
+    return step(flat, alpha, jnp.zeros((L, NC)), mask, jnp.asarray(2.0),
+                jnp.asarray(lam), cost, x, labels)
+
+
+def test_step_loss_decomposition_and_grads():
+    cfg = tiny_cfg()
+    flat, _ = init(cfg)
+    L, NC = cfg.n_layers, cfg.n_cand
+    alpha = jnp.zeros((L, NC))
+    mask = jnp.ones((L, NC))
+    loss, ce, hw, ncorrect, dflat, dalpha = run_step(cfg, flat, alpha, mask)
+    np.testing.assert_allclose(loss, ce + 0.01 * hw, rtol=1e-5)
+    assert 0 <= float(ncorrect) <= cfg.batch
+    assert np.isfinite(np.asarray(dflat)).all()
+    assert np.isfinite(np.asarray(dalpha)).all()
+    assert float(jnp.abs(dflat).sum()) > 0
+    assert float(jnp.abs(dalpha).sum()) > 0
+
+
+def test_masked_candidates_get_zero_alpha_grad():
+    cfg = tiny_cfg()
+    flat, _ = init(cfg)
+    L, NC = cfg.n_layers, cfg.n_cand
+    alpha = jnp.zeros((L, NC))
+    mask_np = np.ones((L, NC), "f")
+    mask_np[0, 3] = 0.0
+    *_, dalpha = run_step(cfg, flat, alpha, jnp.asarray(mask_np))
+    assert abs(float(dalpha[0, 3])) < 1e-12
+
+
+def test_hw_loss_scales_with_lambda():
+    cfg = tiny_cfg()
+    flat, _ = init(cfg)
+    L, NC = cfg.n_layers, cfg.n_cand
+    alpha, mask = jnp.zeros((L, NC)), jnp.ones((L, NC))
+    l0, ce0, *_ = run_step(cfg, flat, alpha, mask, lam=0.0)
+    l1, ce1, hw1, *_ = run_step(cfg, flat, alpha, mask, lam=1.0)
+    np.testing.assert_allclose(float(ce0), float(ce1), rtol=1e-6)
+    assert float(l1) > float(l0)
+
+
+# ---------------------------------------------------------------------------
+# Quantized eval path
+# ---------------------------------------------------------------------------
+
+def test_quant_eval_close_but_not_identical():
+    cfg = tiny_cfg()
+    flat, rng = init(cfg, seed=3)
+    L, NC = cfg.n_layers, cfg.n_cand
+    arch = [{"t": "conv", "e": 3, "k": 3}, {"t": "shift", "e": 3, "k": 3}]
+    idx = M.child_cand_indices(cfg, arch)
+    alpha = np.zeros((L, NC), "f")
+    mask = np.zeros((L, NC), "f")
+    for l, c in enumerate(idx):
+        mask[l, c] = 1.0
+    x = jnp.asarray(rng.normal(size=(4, 8, 8, 3)).astype(np.float32))
+    labels = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    fp = M.make_eval_fn(cfg, quant=False)(flat, jnp.asarray(alpha), jnp.asarray(mask),
+                                          jnp.asarray(1.0), x, labels)
+    q = M.make_eval_fn(cfg, quant=True)(flat, jnp.asarray(alpha), jnp.asarray(mask),
+                                        jnp.asarray(1.0), x, labels)
+    lf, lq = np.asarray(fp[2]), np.asarray(q[2])
+    assert not np.allclose(lf, lq)  # quantization must do something
+    # but not destroy the representation
+    corr = np.corrcoef(lf.ravel(), lq.ravel())[0, 1]
+    assert corr > 0.7, f"quant destroyed logits, corr={corr}"
+
+
+# ---------------------------------------------------------------------------
+# All four spaces lower + run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("space", list(M.SPACE_TYPES))
+def test_all_spaces_forward(space):
+    cfg = tiny_cfg(space)
+    flat, rng = init(cfg, seed=4)
+    L, NC = cfg.n_layers, cfg.n_cand
+    x = jnp.asarray(rng.normal(size=(4, 8, 8, 3)).astype(np.float32))
+    logits, gs = M.supernet_forward(
+        cfg, flat, jnp.zeros((L, NC)), jnp.zeros((L, NC)), jnp.ones((L, NC)),
+        jnp.asarray(5.0), x,
+    )
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits)).all()

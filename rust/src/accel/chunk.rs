@@ -1,0 +1,256 @@
+//! One sub-processor ("chunk", Fig. 4): a PE array of a single unit kind
+//! (CLP=MAC, SLP=Shift, ALP=Adder) executing the layers of its operator
+//! family under a chosen dataflow + tiling.
+//!
+//! The per-layer analytical model produces cycles + energy, or a typed
+//! infeasibility when the mapping violates RF / global-buffer capacity —
+//! the effect behind Fig. 8's "fixed RS fails to map" cases.
+
+use super::dataflow::{layer_traffic, loop_dims, rf_per_pe, Dataflow, Tiling};
+use super::memory::MemoryConfig;
+use super::pe::{PeKind, UnitCosts};
+use crate::model::arch::LayerDesc;
+use crate::model::quant::QuantSpec;
+
+/// Why a mapping cannot run (Fig. 8 green-dotted-line cases).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Infeasible {
+    /// The tile needs more PEs than the chunk has.
+    TileExceedsPes { need: usize, have: usize },
+    /// Per-PE register file cannot hold the stationary set.
+    RfOverflow { need_bytes: f64, have_bytes: f64 },
+    /// The chunk's global-buffer share cannot hold the working set.
+    GbOverflow { need_bytes: f64, have_bytes: f64 },
+    /// Chunk has no PEs but was assigned work.
+    NoPes,
+}
+
+impl std::fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Infeasible::TileExceedsPes { need, have } => {
+                write!(f, "tile needs {need} PEs > {have}")
+            }
+            Infeasible::RfOverflow { need_bytes, have_bytes } => {
+                write!(f, "RF overflow: {need_bytes:.0}B > {have_bytes}B")
+            }
+            Infeasible::GbOverflow { need_bytes, have_bytes } => {
+                write!(f, "GB overflow: {need_bytes:.0}B > {have_bytes:.0}B")
+            }
+            Infeasible::NoPes => write!(f, "chunk has no PEs"),
+        }
+    }
+}
+
+/// Per-layer simulation result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerStats {
+    pub cycles: f64,
+    pub energy_pj: f64,
+    pub compute_cycles: f64,
+    pub noc_cycles: f64,
+    pub dram_cycles: f64,
+    pub utilization: f64,
+}
+
+/// A chunk: `n_pes` units of `kind` running one dataflow configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Chunk {
+    pub pe_kind: PeKind,
+    pub n_pes: usize,
+    pub dataflow: Dataflow,
+    /// Fraction of the shared global buffer allocated to this chunk.
+    pub gb_share: f64,
+    /// Fraction of NoC bandwidth allocated to this chunk.
+    pub noc_share: f64,
+}
+
+impl Chunk {
+    /// Choose the largest feasible square-ish tiling for a layer: fill the
+    /// PE array without exceeding the layer dims.
+    pub fn default_tiling(&self, l: &LayerDesc) -> Tiling {
+        let d = loop_dims(l);
+        let p = self.n_pes.max(1);
+        // Start from a square tile, clamp to dims.
+        let side = (p as f64).sqrt() as usize;
+        let tn = side.clamp(1, d.n.max(1));
+        let tm = (p / tn.max(1)).clamp(1, d.m.max(1));
+        Tiling { tm, tn }
+    }
+
+    /// Simulate one layer pass under an explicit tiling.
+    pub fn simulate_layer_tiled(
+        &self,
+        l: &LayerDesc,
+        t: Tiling,
+        q: &QuantSpec,
+        mem: &MemoryConfig,
+        costs: &UnitCosts,
+    ) -> Result<LayerStats, Infeasible> {
+        if self.n_pes == 0 {
+            return Err(Infeasible::NoPes);
+        }
+        let need_pes = t.tm * t.tn;
+        if need_pes > self.n_pes {
+            return Err(Infeasible::TileExceedsPes { need: need_pes, have: self.n_pes });
+        }
+        let d = loop_dims(l);
+        let rf_need = rf_per_pe(self.dataflow, &d, q, l.kind);
+        if rf_need > mem.rf_bytes_per_pe as f64 {
+            return Err(Infeasible::RfOverflow {
+                need_bytes: rf_need,
+                have_bytes: mem.rf_bytes_per_pe as f64,
+            });
+        }
+        let gb_share_bytes = mem.gb_bytes as f64 * self.gb_share;
+        let f = super::dataflow::footprints(l, q);
+        let ws = super::dataflow::gb_working_set(self.dataflow, &f, &d, &t, q.act_bytes());
+        if ws > gb_share_bytes {
+            return Err(Infeasible::GbOverflow { need_bytes: ws, have_bytes: gb_share_bytes });
+        }
+
+        let traffic = layer_traffic(self.dataflow, l, &t, q, gb_share_bytes);
+        let macs = l.macs() as f64;
+
+        // Compute: active PEs = tile size; edge tiles lower utilization.
+        let (nm, nn) = (
+            (d.m as f64 / t.tm as f64).ceil(),
+            (d.n as f64 / t.tn as f64).ceil(),
+        );
+        let tile_passes = nm * nn;
+        let cycles_per_pass = d.k as f64; // K accumulations per output elem
+        let compute_cycles = tile_passes * cycles_per_pass
+            / self.pe_kind.throughput_per_cycle();
+        let utilization = macs / (compute_cycles * need_pes as f64).max(1.0);
+
+        let noc_bw = mem.noc_bytes_per_cycle * self.noc_share;
+        let noc_cycles = traffic.noc_bytes / noc_bw.max(1e-9);
+        let dram_cycles = traffic.dram_bytes / mem.dram_bytes_per_cycle;
+        // Double-buffered overlap: the layer is bound by its slowest of
+        // compute / NoC / DRAM streams.
+        let cycles = compute_cycles.max(noc_cycles).max(dram_cycles);
+
+        let compute_pj = macs * self.pe_kind.energy_per_op_pj(costs);
+        let mem_pj = traffic.rf_bytes * costs.rf_pj_byte
+            + traffic.noc_bytes * costs.noc_pj_byte
+            + traffic.gb_bytes * costs.gb_pj_byte
+            + traffic.dram_bytes * costs.dram_pj_byte;
+        Ok(LayerStats {
+            cycles,
+            energy_pj: compute_pj + mem_pj,
+            compute_cycles,
+            noc_cycles,
+            dram_cycles,
+            utilization,
+        })
+    }
+
+    /// Simulate with the default (greedy) tiling — the non-auto-mapped
+    /// baseline behaviour.
+    pub fn simulate_layer(
+        &self,
+        l: &LayerDesc,
+        q: &QuantSpec,
+        mem: &MemoryConfig,
+        costs: &UnitCosts,
+    ) -> Result<LayerStats, Infeasible> {
+        self.simulate_layer_tiled(l, self.default_tiling(l), q, mem, costs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::pe::UNIT_ENERGY_45NM;
+    use crate::model::arch::OpKind;
+
+    fn layer(kind: OpKind) -> LayerDesc {
+        LayerDesc {
+            name: "t".into(),
+            kind,
+            cin: 32,
+            cout: 64,
+            h_out: 8,
+            w_out: 8,
+            k: 1,
+            stride: 1,
+            groups: 1,
+        }
+    }
+
+    fn chunk(kind: PeKind, n: usize) -> Chunk {
+        Chunk { pe_kind: kind, n_pes: n, dataflow: Dataflow::Os, gb_share: 1.0, noc_share: 1.0 }
+    }
+
+    #[test]
+    fn more_pes_fewer_cycles() {
+        let l = layer(OpKind::Conv);
+        let q = QuantSpec::default();
+        let mem = MemoryConfig::default();
+        let s64 = chunk(PeKind::Mac, 64).simulate_layer(&l, &q, &mem, &UNIT_ENERGY_45NM).unwrap();
+        let s256 = chunk(PeKind::Mac, 256).simulate_layer(&l, &q, &mem, &UNIT_ENERGY_45NM).unwrap();
+        assert!(s256.compute_cycles < s64.compute_cycles);
+    }
+
+    #[test]
+    fn adder_layer_cheaper_energy_than_conv_on_matching_units() {
+        let q = QuantSpec::default();
+        let mem = MemoryConfig::default();
+        let conv = chunk(PeKind::Mac, 64)
+            .simulate_layer(&layer(OpKind::Conv), &q, &mem, &UNIT_ENERGY_45NM)
+            .unwrap();
+        let adder = chunk(PeKind::AdderUnit, 64)
+            .simulate_layer(&layer(OpKind::Adder), &q, &mem, &UNIT_ENERGY_45NM)
+            .unwrap();
+        assert!(adder.energy_pj < conv.energy_pj);
+    }
+
+    #[test]
+    fn zero_pes_infeasible() {
+        let q = QuantSpec::default();
+        let mem = MemoryConfig::default();
+        let err = chunk(PeKind::Mac, 0)
+            .simulate_layer(&layer(OpKind::Conv), &q, &mem, &UNIT_ENERGY_45NM)
+            .unwrap_err();
+        assert_eq!(err, Infeasible::NoPes);
+    }
+
+    #[test]
+    fn oversized_tile_infeasible() {
+        let l = layer(OpKind::Conv);
+        let q = QuantSpec::default();
+        let mem = MemoryConfig::default();
+        let c = chunk(PeKind::Mac, 16);
+        let err = c
+            .simulate_layer_tiled(&l, Tiling { tm: 8, tn: 8 }, &q, &mem, &UNIT_ENERGY_45NM)
+            .unwrap_err();
+        assert!(matches!(err, Infeasible::TileExceedsPes { .. }));
+    }
+
+    #[test]
+    fn tiny_gb_share_infeasible_for_ws() {
+        let l = layer(OpKind::Conv);
+        let q = QuantSpec::default();
+        let mem = MemoryConfig { gb_bytes: 1024, ..Default::default() };
+        let c = Chunk {
+            pe_kind: PeKind::Mac,
+            n_pes: 64,
+            dataflow: Dataflow::Ws,
+            gb_share: 0.01,
+            noc_share: 1.0,
+        };
+        let err = c.simulate_layer(&l, &q, &mem, &UNIT_ENERGY_45NM).unwrap_err();
+        assert!(matches!(err, Infeasible::GbOverflow { .. }));
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let l = layer(OpKind::Conv);
+        let q = QuantSpec::default();
+        let mem = MemoryConfig::default();
+        let s = chunk(PeKind::Mac, 100)
+            .simulate_layer(&l, &q, &mem, &UNIT_ENERGY_45NM)
+            .unwrap();
+        assert!(s.utilization > 0.0 && s.utilization <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,268 @@
+//! Dataflow abstraction (Sec. 4.2): loop ORDERING factors (which operand
+//! stays stationary in the PE array — RS/IS/WS/OS) and loop TILING factors
+//! (how the layer's M x N x K iteration space is blocked onto the PE
+//! array and through the memory hierarchy).
+//!
+//! Analytical traffic model (DNN-Chip Predictor [30] style). A conv-like
+//! layer is viewed as the triple loop
+//!     M = h_out*w_out (outputs positions)
+//!     N = cout        (output channels)
+//!     K = k*k*cin/groups (reduction)
+//! tiled as (Tm, Tn) across PEs. Tile iteration counts Nm=ceil(M/Tm),
+//! Nn=ceil(N/Tn). Per-operand NoC traffic multipliers by stationarity:
+//!
+//!   WS  (weight stationary): weights once; inputs stream Nn times;
+//!       outputs once (K accumulated in RF).
+//!   IS  (input stationary):  inputs once; weights stream Nm times;
+//!       outputs once.
+//!   OS  (output stationary): psums pinned; weights Nm times, inputs Nn.
+//!   RS  (row stationary):    Eyeriss's compromise — weights and inputs
+//!       each stream ~sqrt of their worst-case factor; outputs once.
+//!
+//! DRAM traffic: one compulsory fetch per operand, times a refetch factor
+//! when the operand's working set exceeds its share of the global buffer.
+
+use crate::model::arch::LayerDesc;
+use crate::model::quant::QuantSpec;
+
+/// Loop-ordering factor: which operand is stationary (the paper's four
+/// reuse patterns, Sec. 4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    Rs,
+    Is,
+    Ws,
+    Os,
+}
+
+pub const ALL_DATAFLOWS: [Dataflow; 4] = [Dataflow::Rs, Dataflow::Is, Dataflow::Ws, Dataflow::Os];
+
+impl Dataflow {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::Rs => "RS",
+            Dataflow::Is => "IS",
+            Dataflow::Ws => "WS",
+            Dataflow::Os => "OS",
+        }
+    }
+}
+
+/// Loop-tiling factors: PE-array tile of the (M, N) iteration space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Tiling {
+    pub tm: usize,
+    pub tn: usize,
+}
+
+/// The layer's iteration-space view.
+#[derive(Clone, Copy, Debug)]
+pub struct LoopDims {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+pub fn loop_dims(l: &LayerDesc) -> LoopDims {
+    LoopDims {
+        m: l.h_out * l.w_out,
+        n: l.cout,
+        k: l.k * l.k * l.cin / l.groups,
+    }
+}
+
+/// Per-operand tensor footprints in bytes under quantization.
+#[derive(Clone, Copy, Debug)]
+pub struct Footprints {
+    pub w_bytes: f64,
+    pub i_bytes: f64,
+    pub o_bytes: f64,
+}
+
+pub fn footprints(l: &LayerDesc, q: &QuantSpec) -> Footprints {
+    Footprints {
+        w_bytes: l.n_weights() as f64 * q.weight_bytes(l.kind),
+        i_bytes: l.n_inputs() as f64 * q.act_bytes(),
+        o_bytes: l.n_outputs() as f64 * q.act_bytes(),
+    }
+}
+
+/// NoC traffic (bytes) for one layer pass under (dataflow, tiling).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Traffic {
+    pub noc_bytes: f64,
+    pub dram_bytes: f64,
+    pub gb_bytes: f64,
+    pub rf_bytes: f64,
+}
+
+/// Number of (M, N) tile iterations.
+fn tile_iters(d: &LoopDims, t: &Tiling) -> (f64, f64) {
+    (
+        (d.m as f64 / t.tm as f64).ceil(),
+        (d.n as f64 / t.tn as f64).ceil(),
+    )
+}
+
+/// Per-operand NoC stream multipliers for a dataflow.
+pub fn stream_factors(df: Dataflow, d: &LoopDims, t: &Tiling) -> (f64, f64, f64) {
+    let (nm, nn) = tile_iters(d, t);
+    match df {
+        Dataflow::Ws => (1.0, nn, 1.0),
+        Dataflow::Is => (nm, 1.0, 1.0),
+        Dataflow::Os => (nm, nn, 1.0),
+        // RS: geometric compromise between the worst-case streams.
+        Dataflow::Rs => (nm.sqrt().ceil(), nn.sqrt().ceil(), 1.0),
+    }
+}
+
+/// The working set that must be resident in the chunk's share of the
+/// global buffer for this (dataflow, tiling): the stationary operand's
+/// current tile (double-buffered) plus one streaming tile of each other
+/// operand. RS is the exception — Eyeriss-style row stationarity banks
+/// row slices of BOTH weights and inputs in the buffer, which is the
+/// coarse residency requirement that makes fixed-RS infeasible on some
+/// hybrid models under the shared-buffer budget (Fig. 8 green line).
+pub fn gb_working_set(df: Dataflow, f: &Footprints, d: &LoopDims, t: &Tiling, q_act: f64) -> f64 {
+    let w_tile = f.w_bytes * (t.tn as f64 / d.n as f64).min(1.0);
+    let i_tile = f.i_bytes * (t.tm as f64 / d.m as f64).min(1.0);
+    let o_tile = (t.tm * t.tn) as f64 * 4.0; // fp32 psums
+    let _ = q_act;
+    match df {
+        Dataflow::Ws => 2.0 * w_tile + i_tile + o_tile,
+        Dataflow::Is => 2.0 * i_tile + w_tile + o_tile,
+        Dataflow::Os => w_tile + i_tile + 2.0 * o_tile,
+        Dataflow::Rs => 0.5 * (f.w_bytes + f.i_bytes) + o_tile,
+    }
+}
+
+/// RF bytes needed per PE: the stationary element set per PE plus
+/// double-buffered streaming operands (2 elems) and one psum.
+pub fn rf_per_pe(df: Dataflow, d: &LoopDims, q: &QuantSpec, kind: crate::model::arch::OpKind) -> f64 {
+    let wb = q.weight_bytes(kind);
+    let ab = q.act_bytes();
+    match df {
+        // WS pins a K-deep weight column per PE.
+        Dataflow::Ws => d.k as f64 * wb + 2.0 * ab + 4.0,
+        // IS pins a K-deep input row per PE.
+        Dataflow::Is => d.k as f64 * ab + 2.0 * wb + 4.0,
+        // OS pins only the psum (4B accumulator).
+        Dataflow::Os => 2.0 * (wb + ab) + 4.0,
+        // RS pins a kernel row + input row (1D conv primitive, Eyeriss).
+        Dataflow::Rs => (d.k as f64).sqrt() * (wb + ab) + 4.0,
+    }
+}
+
+/// Full traffic accounting for one layer pass.
+pub fn layer_traffic(
+    df: Dataflow,
+    l: &LayerDesc,
+    t: &Tiling,
+    q: &QuantSpec,
+    gb_share_bytes: f64,
+) -> Traffic {
+    let d = loop_dims(l);
+    let f = footprints(l, q);
+    let (sw, si, so) = stream_factors(df, &d, t);
+    let noc = f.w_bytes * sw + f.i_bytes * si + f.o_bytes * so;
+    // DRAM: one compulsory fetch per operand; a streaming operand that
+    // does not fit in the chunk's GB share must be refetched on every
+    // pass (its stream factor), while the stationary operand and any
+    // GB-cacheable operand are fetched once.
+    let dram_w = f.w_bytes
+        * if df == Dataflow::Ws || f.w_bytes <= gb_share_bytes { 1.0 } else { sw };
+    let dram_i = f.i_bytes
+        * if df == Dataflow::Is || f.i_bytes <= gb_share_bytes { 1.0 } else { si };
+    let dram = dram_w + dram_i + f.o_bytes;
+    // GB is read for every NoC transfer; RF absorbs per-op operand reads
+    // (2 reads + 1 write per MAC position, at ~1 byte each).
+    let rf = (l.macs() as f64) * 3.0;
+    Traffic { noc_bytes: noc, dram_bytes: dram, gb_bytes: noc, rf_bytes: rf }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::{LayerDesc, OpKind};
+
+    fn pw_layer() -> LayerDesc {
+        LayerDesc {
+            name: "t".into(),
+            kind: OpKind::Conv,
+            cin: 32,
+            cout: 64,
+            h_out: 8,
+            w_out: 8,
+            k: 1,
+            stride: 1,
+            groups: 1,
+        }
+    }
+
+    #[test]
+    fn loop_dims_pw() {
+        let d = loop_dims(&pw_layer());
+        assert_eq!((d.m, d.n, d.k), (64, 64, 32));
+    }
+
+    #[test]
+    fn ws_minimizes_weight_traffic() {
+        let l = pw_layer();
+        let d = loop_dims(&l);
+        let t = Tiling { tm: 8, tn: 8 };
+        let (w_ws, _, _) = stream_factors(Dataflow::Ws, &d, &t);
+        let (w_os, _, _) = stream_factors(Dataflow::Os, &d, &t);
+        assert_eq!(w_ws, 1.0);
+        assert!(w_os > 1.0);
+    }
+
+    #[test]
+    fn is_minimizes_input_traffic() {
+        let l = pw_layer();
+        let d = loop_dims(&l);
+        let t = Tiling { tm: 8, tn: 8 };
+        let (_, i_is, _) = stream_factors(Dataflow::Is, &d, &t);
+        let (_, i_ws, _) = stream_factors(Dataflow::Ws, &d, &t);
+        assert_eq!(i_is, 1.0);
+        assert!(i_ws > 1.0);
+    }
+
+    #[test]
+    fn rs_is_between_extremes() {
+        let l = pw_layer();
+        let d = loop_dims(&l);
+        let t = Tiling { tm: 4, tn: 4 };
+        let (w_rs, i_rs, _) = stream_factors(Dataflow::Rs, &d, &t);
+        let (w_os, i_os, _) = stream_factors(Dataflow::Os, &d, &t);
+        assert!(w_rs <= w_os && w_rs >= 1.0);
+        assert!(i_rs <= i_os && i_rs >= 1.0);
+    }
+
+    #[test]
+    fn bigger_tiles_less_traffic() {
+        let l = pw_layer();
+        let q = QuantSpec::default();
+        let small = layer_traffic(Dataflow::Os, &l, &Tiling { tm: 4, tn: 4 }, &q, 1e9);
+        let big = layer_traffic(Dataflow::Os, &l, &Tiling { tm: 16, tn: 16 }, &q, 1e9);
+        assert!(big.noc_bytes < small.noc_bytes);
+    }
+
+    #[test]
+    fn tight_gb_spills_to_dram() {
+        let l = pw_layer();
+        let q = QuantSpec::default();
+        let t = Tiling { tm: 8, tn: 8 };
+        let roomy = layer_traffic(Dataflow::Ws, &l, &t, &q, 1e9);
+        let tight = layer_traffic(Dataflow::Ws, &l, &t, &q, 64.0);
+        assert!(tight.dram_bytes > roomy.dram_bytes);
+    }
+
+    #[test]
+    fn quant_reduces_footprint() {
+        let mut l = pw_layer();
+        l.kind = OpKind::Shift; // 6-bit weights
+        let q = QuantSpec::default();
+        let f = footprints(&l, &q);
+        assert!((f.w_bytes - l.n_weights() as f64 * 0.75).abs() < 1e-9);
+    }
+}

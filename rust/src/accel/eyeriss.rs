@@ -1,0 +1,141 @@
+//! Baseline accelerators (Sec. 5.1):
+//!
+//! * `EyerissSim` — an Eyeriss-class single-array accelerator [5]: one PE
+//!   array, row-stationary dataflow, layers executed sequentially (no
+//!   chunk pipelining). The paper's baselines swap the PE datapath: MACs
+//!   for FBNet, Shift Units for DeepShift, Adder Units for AdderNet; the
+//!   array size is re-derived from the same area budget (smaller units ->
+//!   more PEs).
+//! * `AdderNetAccel` — the dedicated AdderNet accelerator [21]: adder PE
+//!   array with a weight-stationary dataflow (its "minimalist" design),
+//!   sequential execution.
+//!
+//! Both share the chunk-level per-layer analytical model so comparisons
+//! against the NASA chunk accelerator isolate architecture (pipelining,
+//! allocation, mapping) rather than modeling differences.
+
+use super::chunk::{Chunk, Infeasible};
+use super::dataflow::Dataflow;
+use super::memory::MemoryConfig;
+use super::pe::{PeKind, UnitCosts};
+use super::schedule::NetStats;
+use crate::model::arch::{Arch, OpKind};
+use crate::model::quant::QuantSpec;
+
+/// Area-derived PE count for a single-kind array under the same budget
+/// the NASA accelerator gets.
+pub fn pes_for_budget(kind: PeKind, budget_um2: f64, costs: &UnitCosts) -> usize {
+    ((budget_um2 / kind.area_um2(costs)).floor() as usize).max(1)
+}
+
+/// A single-array sequential accelerator.
+#[derive(Clone, Debug)]
+pub struct EyerissSim {
+    pub pe_kind: PeKind,
+    pub n_pes: usize,
+    pub dataflow: Dataflow,
+    pub mem: MemoryConfig,
+    pub costs: UnitCosts,
+    pub clock_hz: f64,
+}
+
+impl EyerissSim {
+    /// Eyeriss with the PE datapath matched to `kind`, sized to `budget`.
+    pub fn with_budget(kind: PeKind, budget_um2: f64, mem: MemoryConfig, costs: UnitCosts) -> Self {
+        EyerissSim {
+            pe_kind: kind,
+            n_pes: pes_for_budget(kind, budget_um2, &costs),
+            dataflow: Dataflow::Rs,
+            mem,
+            costs,
+            clock_hz: 250e6,
+        }
+    }
+
+    /// Execute every layer sequentially on the single array. Layers whose
+    /// operator family does not match the PE kind run at the MAC-unit
+    /// energy (the stem/head of multiplication-free baselines keep a
+    /// small MAC capability, as in [6]/[20]'s deployments).
+    pub fn simulate(&self, arch: &Arch, q: &QuantSpec) -> Result<NetStats, (usize, Infeasible)> {
+        let mut stats = NetStats { per_layer: Vec::with_capacity(arch.layers.len()), ..Default::default() };
+        for (i, l) in arch.layers.iter().enumerate() {
+            let native = PeKind::for_op(l.kind);
+            // Mismatched layers (e.g. conv stem on the Shift-array chip)
+            // execute on MAC-equivalent units at MAC energy.
+            let pe = if native == self.pe_kind { self.pe_kind } else { PeKind::Mac };
+            let chunk = Chunk {
+                pe_kind: pe,
+                n_pes: self.n_pes,
+                dataflow: self.dataflow,
+                gb_share: 1.0,
+                noc_share: 1.0,
+            };
+            let s = chunk
+                .simulate_layer(l, q, &self.mem, &self.costs)
+                .map_err(|e| (i, e))?;
+            stats.latency_cycles += s.cycles;
+            stats.energy_pj += s.energy_pj;
+            let idx = match l.kind {
+                OpKind::Conv => 0,
+                OpKind::Shift => 1,
+                OpKind::Adder => 2,
+            };
+            stats.chunk_cycles[idx] += s.cycles;
+            stats.per_layer.push(s);
+        }
+        // Sequential accelerator: period == full latency (no pipelining).
+        stats.period_cycles = stats.latency_cycles.max(1.0);
+        Ok(stats)
+    }
+}
+
+/// The dedicated AdderNet accelerator [21]: adder array, WS dataflow.
+pub fn addernet_accel(budget_um2: f64, mem: MemoryConfig, costs: UnitCosts) -> EyerissSim {
+    EyerissSim {
+        dataflow: Dataflow::Ws,
+        ..EyerissSim::with_budget(PeKind::AdderUnit, budget_um2, mem, costs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::pe::UNIT_ENERGY_45NM;
+    use crate::model::zoo::mobilenet_v2_like;
+
+    fn budget() -> f64 {
+        168.0 * PeKind::Mac.area_um2(&UNIT_ENERGY_45NM)
+    }
+
+    #[test]
+    fn shift_array_has_more_pes_than_mac_array() {
+        let c = UNIT_ENERGY_45NM;
+        let mac = pes_for_budget(PeKind::Mac, budget(), &c);
+        let shift = pes_for_budget(PeKind::ShiftUnit, budget(), &c);
+        assert_eq!(mac, 168);
+        assert!(shift > 3 * mac, "shift={shift} mac={mac}");
+    }
+
+    #[test]
+    fn sequential_period_equals_latency() {
+        let c = UNIT_ENERGY_45NM;
+        let sim = EyerissSim::with_budget(PeKind::Mac, budget(), MemoryConfig::default(), c);
+        let arch = mobilenet_v2_like(OpKind::Conv, 16, 10, 500);
+        let s = sim.simulate(&arch, &QuantSpec::default()).unwrap();
+        assert_eq!(s.period_cycles, s.latency_cycles);
+    }
+
+    #[test]
+    fn deepshift_on_shift_eyeriss_cheaper_energy_than_conv_on_mac_eyeriss() {
+        let c = UNIT_ENERGY_45NM;
+        let q = QuantSpec::default();
+        let conv_net = mobilenet_v2_like(OpKind::Conv, 16, 10, 500);
+        let shift_net = mobilenet_v2_like(OpKind::Shift, 16, 10, 500);
+        let mac_sim = EyerissSim::with_budget(PeKind::Mac, budget(), MemoryConfig::default(), c);
+        let shift_sim =
+            EyerissSim::with_budget(PeKind::ShiftUnit, budget(), MemoryConfig::default(), c);
+        let e_conv = mac_sim.simulate(&conv_net, &q).unwrap().energy_pj;
+        let e_shift = shift_sim.simulate(&shift_net, &q).unwrap().energy_pj;
+        assert!(e_shift < e_conv, "shift {e_shift} vs conv {e_conv}");
+    }
+}

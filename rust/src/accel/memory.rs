@@ -1,0 +1,52 @@
+//! Four-level memory hierarchy (Fig. 4): DRAM -> global buffer -> NoC ->
+//! per-PE register files. Capacities/bandwidths define the feasibility
+//! constraints the auto-mapper searches under; access energies feed the
+//! per-layer energy model.
+
+/// Accelerator-wide memory resources. The global buffer and NoC are
+/// SHARED between the three chunks (Sec. 4.2 notes this competition is
+/// what makes fixed-RS mappings infeasible in some cases).
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryConfig {
+    /// Global buffer capacity in bytes (shared across chunks).
+    pub gb_bytes: usize,
+    /// Register-file bytes per PE.
+    pub rf_bytes_per_pe: usize,
+    /// NoC bandwidth, bytes per cycle (shared).
+    pub noc_bytes_per_cycle: f64,
+    /// DRAM bandwidth, bytes per cycle.
+    pub dram_bytes_per_cycle: f64,
+}
+
+impl Default for MemoryConfig {
+    /// Eyeriss-class resource budget: 108KB global buffer, 512B RF/PE,
+    /// modest NoC and DRAM bandwidth at 250MHz.
+    fn default() -> Self {
+        MemoryConfig {
+            gb_bytes: 108 * 1024,
+            rf_bytes_per_pe: 512,
+            noc_bytes_per_cycle: 16.0,
+            dram_bytes_per_cycle: 4.0,
+        }
+    }
+}
+
+impl MemoryConfig {
+    /// A deliberately tight buffer variant used to exhibit the Fig. 8
+    /// "fixed RS fails to map" cases.
+    pub fn tight() -> Self {
+        MemoryConfig { gb_bytes: 32 * 1024, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let m = MemoryConfig::default();
+        assert!(m.gb_bytes > 64 * 1024);
+        assert!(MemoryConfig::tight().gb_bytes < m.gb_bytes);
+    }
+}

@@ -1,0 +1,23 @@
+//! NASA-Accelerator engine (Sec. 4): the chunk-based multi-sub-processor
+//! accelerator, its PE allocation strategy, the temporal pipeline
+//! schedule, baseline accelerators and the EDP metric.
+//!
+//! Everything here is an analytical cycle/energy model in the style of
+//! DNN-Chip Predictor [30] (the substrate the paper's own simulator is
+//! built on), at CMOS 45nm / 250MHz.
+
+pub mod alloc;
+pub mod chunk;
+pub mod dataflow;
+pub mod eyeriss;
+pub mod memory;
+pub mod pe;
+pub mod schedule;
+
+pub use alloc::{allocate, allocate_equal, AreaBudget, PeAllocation};
+pub use chunk::{Chunk, Infeasible, LayerStats};
+pub use dataflow::{Dataflow, Tiling, ALL_DATAFLOWS};
+pub use eyeriss::{addernet_accel, EyerissSim};
+pub use memory::MemoryConfig;
+pub use pe::{PeKind, UnitCosts, UNIT_ENERGY_45NM};
+pub use schedule::{ChunkAccelerator, Mapping, NetStats};

@@ -1,0 +1,131 @@
+//! Processing-element unit library: energy/area of the MAC, Shift and
+//! Adder units at CMOS 45nm / 250MHz (Sec. 4.1, Sec. 5.1).
+//!
+//! Unit costs follow the published 45nm numbers the paper's line of work
+//! builds on (Horowitz ISSCC'14; ShiftAddNet [26] Table 1; AdderNet
+//! hardware [21]):
+//!   8-bit multiply  0.2 pJ / 282 um^2      8-bit add   0.03 pJ / 36 um^2
+//!   8-bit shift     0.024 pJ / 34 um^2
+//! Memory-access energies use the Eyeriss-normalized hierarchy ratios
+//! (RF : NoC : GB : DRAM = 1 : 2 : 6 : 200, relative to one MAC).
+
+use crate::model::arch::OpKind;
+
+/// 45nm unit energies (pJ) and areas (um^2).
+#[derive(Clone, Copy, Debug)]
+pub struct UnitCosts {
+    pub mult8_pj: f64,
+    pub add8_pj: f64,
+    pub shift8_pj: f64,
+    pub mult8_um2: f64,
+    pub add8_um2: f64,
+    pub shift8_um2: f64,
+    /// Memory access energy per byte at each hierarchy level.
+    pub rf_pj_byte: f64,
+    pub noc_pj_byte: f64,
+    pub gb_pj_byte: f64,
+    pub dram_pj_byte: f64,
+}
+
+pub const UNIT_ENERGY_45NM: UnitCosts = UnitCosts {
+    mult8_pj: 0.2,
+    add8_pj: 0.03,
+    shift8_pj: 0.024,
+    mult8_um2: 282.0,
+    add8_um2: 36.0,
+    shift8_um2: 34.0,
+    // MAC = 0.23 pJ; ratios 1:2:6:200 scaled to per-byte accesses.
+    rf_pj_byte: 0.23,
+    noc_pj_byte: 0.46,
+    gb_pj_byte: 1.38,
+    dram_pj_byte: 46.0,
+};
+
+/// The three PE flavours of the chunk-based accelerator (Fig. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PeKind {
+    /// Multiply-and-accumulate (CLP).
+    Mac,
+    /// Bitwise-shift-and-accumulate (SLP).
+    ShiftUnit,
+    /// Add-and-accumulate with absolute difference (ALP).
+    AdderUnit,
+}
+
+impl PeKind {
+    pub fn for_op(kind: OpKind) -> PeKind {
+        match kind {
+            OpKind::Conv => PeKind::Mac,
+            OpKind::Shift => PeKind::ShiftUnit,
+            OpKind::Adder => PeKind::AdderUnit,
+        }
+    }
+
+    /// Energy per MAC-position (one contraction element) in pJ.
+    /// MAC: mult+add. Shift Unit: shift+add. Adder Unit: two adds
+    /// (subtract-abs + accumulate), matching the 2x addition op count.
+    pub fn energy_per_op_pj(&self, c: &UnitCosts) -> f64 {
+        match self {
+            PeKind::Mac => c.mult8_pj + c.add8_pj,
+            PeKind::ShiftUnit => c.shift8_pj + c.add8_pj,
+            PeKind::AdderUnit => 2.0 * c.add8_pj,
+        }
+    }
+
+    /// Area per PE in um^2 (compute datapath only; RF accounted by the
+    /// memory model). Each PE also carries a small accumulator register
+    /// counted as one adder-equivalent of area.
+    pub fn area_um2(&self, c: &UnitCosts) -> f64 {
+        match self {
+            PeKind::Mac => c.mult8_um2 + c.add8_um2,
+            PeKind::ShiftUnit => c.shift8_um2 + c.add8_um2,
+            PeKind::AdderUnit => 2.0 * c.add8_um2,
+        }
+    }
+
+    /// Ops per cycle per PE (all units are single-cycle at 250MHz).
+    pub fn throughput_per_cycle(&self) -> f64 {
+        1.0
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeKind::Mac => "MAC",
+            PeKind::ShiftUnit => "Shift",
+            PeKind::AdderUnit => "Adder",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiplication_free_units_are_cheaper() {
+        let c = &UNIT_ENERGY_45NM;
+        let mac = PeKind::Mac.energy_per_op_pj(c);
+        let shift = PeKind::ShiftUnit.energy_per_op_pj(c);
+        let adder = PeKind::AdderUnit.energy_per_op_pj(c);
+        assert!(shift < mac / 3.0, "shift {shift} vs mac {mac}");
+        assert!(adder < mac / 3.0, "adder {adder} vs mac {mac}");
+        // Area: the trade the paper exploits in Eq. 8's allocation.
+        assert!(PeKind::ShiftUnit.area_um2(c) < PeKind::Mac.area_um2(c) / 3.0);
+        assert!(PeKind::AdderUnit.area_um2(c) < PeKind::Mac.area_um2(c) / 3.0);
+    }
+
+    #[test]
+    fn hierarchy_energies_are_monotone() {
+        let c = &UNIT_ENERGY_45NM;
+        assert!(c.rf_pj_byte < c.noc_pj_byte);
+        assert!(c.noc_pj_byte < c.gb_pj_byte);
+        assert!(c.gb_pj_byte < c.dram_pj_byte);
+    }
+
+    #[test]
+    fn pe_for_op_mapping() {
+        assert_eq!(PeKind::for_op(OpKind::Conv), PeKind::Mac);
+        assert_eq!(PeKind::for_op(OpKind::Shift), PeKind::ShiftUnit);
+        assert_eq!(PeKind::for_op(OpKind::Adder), PeKind::AdderUnit);
+    }
+}

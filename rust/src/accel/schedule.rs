@@ -1,0 +1,243 @@
+//! Temporal processing schedule (Fig. 5) + whole-network simulation.
+//!
+//! Each chunk sequentially processes the layers of its operator family;
+//! the three chunks run concurrently on *independent inputs* (layer
+//! pipelining across samples). Steady-state throughput is set by the
+//! slowest chunk's total latency per sample; per-sample energy is the sum
+//! over all layers. EDP = energy_per_sample x steady_state_period
+//! (both per sample), the metric of Fig. 6 / Fig. 8.
+
+use super::alloc::PeAllocation;
+use super::chunk::{Chunk, Infeasible, LayerStats};
+use super::dataflow::{Dataflow, Tiling};
+use super::memory::MemoryConfig;
+use super::pe::{PeKind, UnitCosts};
+use crate::model::arch::{Arch, OpKind};
+use crate::model::quant::QuantSpec;
+
+/// Per-chunk dataflow configuration (the auto-mapper's decision variable:
+/// one ordering per chunk + per-layer tilings).
+#[derive(Clone, Debug)]
+pub struct Mapping {
+    pub clp_df: Dataflow,
+    pub slp_df: Dataflow,
+    pub alp_df: Dataflow,
+    /// Optional per-layer tiling override (layer index -> tiling); layers
+    /// absent fall back to the chunk's greedy default tiling.
+    pub tilings: Vec<Option<Tiling>>,
+    /// Global-buffer split across (CLP, SLP, ALP); must sum to <= 1.
+    pub gb_split: [f64; 3],
+    /// NoC bandwidth split.
+    pub noc_split: [f64; 3],
+}
+
+impl Mapping {
+    /// The expert baseline of Fig. 8: RS everywhere, resource split
+    /// proportional to nothing in particular — even thirds.
+    pub fn all_rs(n_layers: usize) -> Mapping {
+        Mapping {
+            clp_df: Dataflow::Rs,
+            slp_df: Dataflow::Rs,
+            alp_df: Dataflow::Rs,
+            tilings: vec![None; n_layers],
+            gb_split: [1.0 / 3.0; 3],
+            noc_split: [1.0 / 3.0; 3],
+        }
+    }
+
+    pub fn df_for(&self, kind: OpKind) -> Dataflow {
+        match kind {
+            OpKind::Conv => self.clp_df,
+            OpKind::Shift => self.slp_df,
+            OpKind::Adder => self.alp_df,
+        }
+    }
+}
+
+/// Whole-network simulation result.
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    /// Steady-state pipeline period per sample (cycles) = max chunk time.
+    pub period_cycles: f64,
+    /// End-to-end single-sample latency (cycles) = sum of all layers.
+    pub latency_cycles: f64,
+    /// Energy per sample (pJ).
+    pub energy_pj: f64,
+    /// Per-chunk busy cycles (CLP, SLP, ALP).
+    pub chunk_cycles: [f64; 3],
+    /// Per-layer stats for reporting.
+    pub per_layer: Vec<LayerStats>,
+}
+
+impl NetStats {
+    /// EDP in pJ x seconds at the given clock (the Fig. 6/8 metric).
+    pub fn edp(&self, clock_hz: f64) -> f64 {
+        self.energy_pj * (self.period_cycles / clock_hz)
+    }
+
+    /// Energy in uJ (reporting convenience).
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_pj / 1e6
+    }
+
+    /// Pipeline utilization balance: min/max chunk time (1.0 = perfect,
+    /// what Eq. 8 optimizes for).
+    pub fn balance(&self) -> f64 {
+        let busy: Vec<f64> = self.chunk_cycles.iter().cloned().filter(|&c| c > 0.0).collect();
+        if busy.is_empty() {
+            return 1.0;
+        }
+        let max = busy.iter().cloned().fold(0.0, f64::max);
+        let min = busy.iter().cloned().fold(f64::INFINITY, f64::min);
+        min / max
+    }
+}
+
+/// The chunk-based NASA accelerator: allocation + shared memory.
+#[derive(Clone, Debug)]
+pub struct ChunkAccelerator {
+    pub alloc: PeAllocation,
+    pub mem: MemoryConfig,
+    pub costs: UnitCosts,
+    pub clock_hz: f64,
+}
+
+impl ChunkAccelerator {
+    pub fn new(alloc: PeAllocation, mem: MemoryConfig, costs: UnitCosts) -> Self {
+        ChunkAccelerator { alloc, mem, costs, clock_hz: 250e6 }
+    }
+
+    fn chunk_for(&self, kind: OpKind, m: &Mapping) -> Chunk {
+        let (pe_kind, n_pes, idx) = match kind {
+            OpKind::Conv => (PeKind::Mac, self.alloc.clp, 0),
+            OpKind::Shift => (PeKind::ShiftUnit, self.alloc.slp, 1),
+            OpKind::Adder => (PeKind::AdderUnit, self.alloc.alp, 2),
+        };
+        Chunk {
+            pe_kind,
+            n_pes,
+            dataflow: m.df_for(kind),
+            gb_share: m.gb_split[idx],
+            noc_share: m.noc_split[idx],
+        }
+    }
+
+    /// Simulate the whole network under a mapping (Fig. 5 schedule).
+    pub fn simulate(
+        &self,
+        arch: &Arch,
+        mapping: &Mapping,
+        q: &QuantSpec,
+    ) -> Result<NetStats, (usize, Infeasible)> {
+        let mut stats = NetStats { per_layer: Vec::with_capacity(arch.layers.len()), ..Default::default() };
+        for (i, l) in arch.layers.iter().enumerate() {
+            let chunk = self.chunk_for(l.kind, mapping);
+            let tiling = mapping
+                .tilings
+                .get(i)
+                .copied()
+                .flatten()
+                .unwrap_or_else(|| chunk.default_tiling(l));
+            let s = chunk
+                .simulate_layer_tiled(l, tiling, q, &self.mem, &self.costs)
+                .map_err(|e| (i, e))?;
+            let idx = match l.kind {
+                OpKind::Conv => 0,
+                OpKind::Shift => 1,
+                OpKind::Adder => 2,
+            };
+            stats.chunk_cycles[idx] += s.cycles;
+            stats.latency_cycles += s.cycles;
+            stats.energy_pj += s.energy_pj;
+            stats.per_layer.push(s);
+        }
+        stats.period_cycles = stats
+            .chunk_cycles
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max)
+            .max(1.0);
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::alloc::{allocate, AreaBudget};
+    use crate::accel::pe::UNIT_ENERGY_45NM;
+    use crate::model::arch::LayerDesc;
+
+    fn hybrid_arch() -> Arch {
+        let mk = |kind, name: &str| LayerDesc {
+            name: name.into(),
+            kind,
+            cin: 16,
+            cout: 16,
+            h_out: 8,
+            w_out: 8,
+            k: 3,
+            stride: 1,
+            groups: 1,
+        };
+        Arch {
+            name: "hybrid".into(),
+            layers: vec![
+                mk(OpKind::Conv, "c1"),
+                mk(OpKind::Shift, "s2"),
+                mk(OpKind::Adder, "a3"),
+                mk(OpKind::Shift, "s4"),
+                mk(OpKind::Conv, "c5"),
+            ],
+            choices: vec![],
+        }
+    }
+
+    fn accel_for(a: &Arch) -> ChunkAccelerator {
+        let costs = UNIT_ENERGY_45NM;
+        let alloc = allocate(a, AreaBudget::macs_equivalent(168, &costs), &costs);
+        ChunkAccelerator::new(alloc, MemoryConfig::default(), costs)
+    }
+
+    #[test]
+    fn pipeline_period_is_max_chunk() {
+        let a = hybrid_arch();
+        let acc = accel_for(&a);
+        let m = Mapping::all_rs(a.layers.len());
+        let s = acc.simulate(&a, &m, &QuantSpec::default()).unwrap();
+        let max = s.chunk_cycles.iter().cloned().fold(0.0, f64::max);
+        assert_eq!(s.period_cycles, max);
+        assert!(s.latency_cycles >= s.period_cycles);
+    }
+
+    #[test]
+    fn eq8_allocation_balances_chunks() {
+        let a = hybrid_arch();
+        let acc = accel_for(&a);
+        let m = Mapping::all_rs(a.layers.len());
+        let s = acc.simulate(&a, &m, &QuantSpec::default()).unwrap();
+        // Eq. 8 balances compute; with shared-memory effects tolerate 35%+.
+        assert!(s.balance() > 0.35, "balance={}", s.balance());
+    }
+
+    #[test]
+    fn edp_positive_and_scales_with_clock() {
+        let a = hybrid_arch();
+        let acc = accel_for(&a);
+        let m = Mapping::all_rs(a.layers.len());
+        let s = acc.simulate(&a, &m, &QuantSpec::default()).unwrap();
+        assert!(s.edp(250e6) > 0.0);
+        assert!(s.edp(500e6) < s.edp(250e6));
+    }
+
+    #[test]
+    fn infeasible_reports_layer() {
+        let a = hybrid_arch();
+        let mut acc = accel_for(&a);
+        acc.alloc.slp = 0; // break the shift chunk
+        let m = Mapping::all_rs(a.layers.len());
+        let err = acc.simulate(&a, &m, &QuantSpec::default()).unwrap_err();
+        assert_eq!(err.0, 1); // first shift layer
+        assert_eq!(err.1, Infeasible::NoPes);
+    }
+}

@@ -1,0 +1,295 @@
+//! Synthetic CIFAR-shaped dataset (DESIGN.md substitution: the repro
+//! environment has no dataset downloads, and the claims under test are
+//! orderings/trends, not absolute accuracies).
+//!
+//! Class-conditional generative model, fully deterministic from a seed:
+//! each class gets a smooth random prototype (low-frequency pattern,
+//! bilinear-upsampled from a coarse grid) plus a class-specific color
+//! bias; samples are prototype + pixel noise + a small random translation.
+//! Linear models top out well below 100% (translation + noise) while the
+//! small hybrid CNNs reach high accuracy — enough headroom to rank
+//! architectures and exhibit convergence behaviour (Fig. 7).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct DatasetConfig {
+    pub hw: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    pub noise: f32,
+    pub max_shift: usize,
+    pub seed: u64,
+}
+
+impl DatasetConfig {
+    pub fn cifar10_like(hw: usize) -> Self {
+        DatasetConfig {
+            hw,
+            channels: 3,
+            num_classes: 10,
+            n_train: 4096,
+            n_val: 1024,
+            n_test: 1024,
+            noise: 0.35,
+            max_shift: 2,
+            seed: 1234,
+        }
+    }
+
+    pub fn cifar100_like(hw: usize) -> Self {
+        DatasetConfig {
+            num_classes: 100,
+            n_train: 8192,
+            seed: 5678,
+            ..Self::cifar10_like(hw)
+        }
+    }
+}
+
+/// An in-memory split: images [n, hw, hw, c] flattened row-major + labels.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub sample_len: usize,
+}
+
+impl Split {
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.images[i * self.sample_len..(i + 1) * self.sample_len]
+    }
+}
+
+pub struct Dataset {
+    pub cfg: DatasetConfig,
+    pub train: Split,
+    pub val: Split,
+    pub test: Split,
+    /// Class prototypes (for inspection/tests).
+    pub prototypes: Vec<Vec<f32>>,
+}
+
+/// Bilinear upsample a coarse [g, g, c] grid to [hw, hw, c].
+fn upsample(coarse: &[f32], g: usize, hw: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; hw * hw * c];
+    for y in 0..hw {
+        for x in 0..hw {
+            let fy = y as f32 * (g - 1) as f32 / (hw - 1).max(1) as f32;
+            let fx = x as f32 * (g - 1) as f32 / (hw - 1).max(1) as f32;
+            let (y0, x0) = (fy as usize, fx as usize);
+            let (y1, x1) = ((y0 + 1).min(g - 1), (x0 + 1).min(g - 1));
+            let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+            for ch in 0..c {
+                let v00 = coarse[(y0 * g + x0) * c + ch];
+                let v01 = coarse[(y0 * g + x1) * c + ch];
+                let v10 = coarse[(y1 * g + x0) * c + ch];
+                let v11 = coarse[(y1 * g + x1) * c + ch];
+                let v0 = v00 * (1.0 - dx) + v01 * dx;
+                let v1 = v10 * (1.0 - dx) + v11 * dx;
+                out[(y * hw + x) * c + ch] = v0 * (1.0 - dy) + v1 * dy;
+            }
+        }
+    }
+    out
+}
+
+fn gen_split(cfg: &DatasetConfig, prototypes: &[Vec<f32>], n: usize, rng: &mut Rng) -> Split {
+    let (hw, c) = (cfg.hw, cfg.channels);
+    let sample_len = hw * hw * c;
+    let mut images = vec![0.0f32; n * sample_len];
+    let mut labels = vec![0i32; n];
+    for i in 0..n {
+        let class = rng.below(cfg.num_classes);
+        labels[i] = class as i32;
+        let proto = &prototypes[class];
+        let sy = rng.below(2 * cfg.max_shift + 1) as isize - cfg.max_shift as isize;
+        let sx = rng.below(2 * cfg.max_shift + 1) as isize - cfg.max_shift as isize;
+        let img = &mut images[i * sample_len..(i + 1) * sample_len];
+        for y in 0..hw {
+            for x in 0..hw {
+                // Shifted read with clamping (translation augmentation).
+                let yy = (y as isize + sy).clamp(0, hw as isize - 1) as usize;
+                let xx = (x as isize + sx).clamp(0, hw as isize - 1) as usize;
+                for ch in 0..c {
+                    img[(y * hw + x) * c + ch] = proto[(yy * hw + xx) * c + ch]
+                        + cfg.noise * rng.normal() as f32;
+                }
+            }
+        }
+    }
+    Split { images, labels, n, sample_len }
+}
+
+impl Dataset {
+    pub fn generate(cfg: DatasetConfig) -> Dataset {
+        let mut rng = Rng::new(cfg.seed);
+        let g = 4; // coarse grid — low-frequency class structure
+        let c = cfg.channels;
+        let prototypes: Vec<Vec<f32>> = (0..cfg.num_classes)
+            .map(|_| {
+                let coarse: Vec<f32> =
+                    (0..g * g * c).map(|_| rng.normal() as f32 * 1.8).collect();
+                upsample(&coarse, g, cfg.hw, c)
+            })
+            .collect();
+        let mut train_rng = rng.fork(1);
+        let mut val_rng = rng.fork(2);
+        let mut test_rng = rng.fork(3);
+        Dataset {
+            train: gen_split(&cfg, &prototypes, cfg.n_train, &mut train_rng),
+            val: gen_split(&cfg, &prototypes, cfg.n_val, &mut val_rng),
+            test: gen_split(&cfg, &prototypes, cfg.n_test, &mut test_rng),
+            prototypes,
+            cfg,
+        }
+    }
+}
+
+/// Batch iterator over a split: epoch-shuffled, deterministic, wraps the
+/// 50/50 w-vs-alpha split of the search recipe via disjoint index ranges.
+pub struct Batcher {
+    indices: Vec<usize>,
+    pos: usize,
+    pub batch: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Batcher {
+        Batcher { indices: (0..n).collect(), pos: 0, batch, rng: Rng::new(seed) }
+    }
+
+    /// First/second half of a split (the paper trains w on 50% of train
+    /// and alpha on the other 50%).
+    pub fn half(n: usize, batch: usize, seed: u64, second: bool) -> Batcher {
+        let half = n / 2;
+        let indices: Vec<usize> = if second { (half..n).collect() } else { (0..half).collect() };
+        Batcher { indices, pos: 0, batch, rng: Rng::new(seed) }
+    }
+
+    /// Next batch of sample indices (reshuffles each wrap).
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        if self.pos + self.batch > self.indices.len() {
+            self.rng.shuffle(&mut self.indices);
+            self.pos = 0;
+        }
+        let out = self.indices[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        out
+    }
+
+    /// Materialize a batch (images, labels) from a split.
+    pub fn next_batch(&mut self, split: &Split) -> (Vec<f32>, Vec<i32>) {
+        let idx = self.next_indices();
+        let mut images = Vec::with_capacity(idx.len() * split.sample_len);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in &idx {
+            images.extend_from_slice(split.sample(i));
+            labels.push(split.labels[i]);
+        }
+        (images, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> DatasetConfig {
+        DatasetConfig {
+            n_train: 64,
+            n_val: 32,
+            n_test: 32,
+            ..DatasetConfig::cifar10_like(8)
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Dataset::generate(tiny_cfg());
+        let b = Dataset::generate(tiny_cfg());
+        assert_eq!(a.train.images, b.train.images);
+        assert_eq!(a.train.labels, b.train.labels);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let d = Dataset::generate(tiny_cfg());
+        assert_ne!(d.train.images[..100], d.val.images[..100]);
+    }
+
+    #[test]
+    fn labels_in_range_and_all_classes_present() {
+        let d = Dataset::generate(tiny_cfg());
+        let mut seen = vec![false; 10];
+        for &l in &d.train.labels {
+            assert!((0..10).contains(&l));
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8);
+    }
+
+    #[test]
+    fn class_signal_exceeds_noise() {
+        // Same-class samples must be closer than cross-class on average.
+        let d = Dataset::generate(tiny_cfg());
+        let t = &d.train;
+        let (mut same, mut cross, mut ns, mut nc) = (0.0f64, 0.0f64, 0, 0);
+        for i in 0..t.n.min(40) {
+            for j in (i + 1)..t.n.min(40) {
+                let dist: f64 = t
+                    .sample(i)
+                    .iter()
+                    .zip(t.sample(j))
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum();
+                if t.labels[i] == t.labels[j] {
+                    same += dist;
+                    ns += 1;
+                } else {
+                    cross += dist;
+                    nc += 1;
+                }
+            }
+        }
+        let (same, cross) = (same / ns.max(1) as f64, cross / nc.max(1) as f64);
+        assert!(same < cross * 0.7, "same={same} cross={cross}");
+    }
+
+    #[test]
+    fn batcher_covers_all_and_wraps() {
+        // With n divisible by batch, one epoch covers every index exactly.
+        let mut b = Batcher::new(12, 4, 7);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            for i in b.next_indices() {
+                seen.insert(i);
+            }
+        }
+        assert_eq!(seen.len(), 12);
+        // And it keeps serving after the wrap.
+        assert_eq!(b.next_indices().len(), 4);
+    }
+
+    #[test]
+    fn half_batchers_disjoint() {
+        let a = Batcher::half(100, 10, 1, false);
+        let b = Batcher::half(100, 10, 1, true);
+        assert!(a.indices.iter().all(|i| *i < 50));
+        assert!(b.indices.iter().all(|i| *i >= 50));
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = Dataset::generate(tiny_cfg());
+        let mut b = Batcher::new(d.train.n, 8, 3);
+        let (x, y) = b.next_batch(&d.train);
+        assert_eq!(x.len(), 8 * d.train.sample_len);
+        assert_eq!(y.len(), 8);
+    }
+}

@@ -1,0 +1,232 @@
+//! Run metrics: per-step/per-epoch records, curve accumulation, and
+//! JSON emission for EXPERIMENTS.md provenance and the figure reports.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One scalar time series (e.g. train loss per epoch).
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub name: String,
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+}
+
+impl Curve {
+    pub fn new(name: &str) -> Curve {
+        Curve { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.ys.last().copied()
+    }
+
+    /// Mean of the final `k` points (stable "converged value" readout).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.ys.is_empty() {
+            return f64::NAN;
+        }
+        let k = k.min(self.ys.len());
+        self.ys[self.ys.len() - k..].iter().sum::<f64>() / k as f64
+    }
+
+    /// Whether the curve ever became non-finite (divergence detection for
+    /// the Fig. 7 PGP ablation).
+    pub fn diverged(&self) -> bool {
+        self.ys.iter().any(|y| !y.is_finite())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("x", Json::arr_f64(&self.xs)),
+            ("y", Json::arr_f64(&self.ys)),
+        ])
+    }
+}
+
+/// A run log: named curves + scalar results, serializable to one JSON.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub curves: Vec<Curve>,
+    pub scalars: Vec<(String, f64)>,
+    pub notes: Vec<(String, String)>,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> RunLog {
+        RunLog { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn curve_mut(&mut self, name: &str) -> &mut Curve {
+        if let Some(i) = self.curves.iter().position(|c| c.name == name) {
+            &mut self.curves[i]
+        } else {
+            self.curves.push(Curve::new(name));
+            self.curves.last_mut().unwrap()
+        }
+    }
+
+    pub fn curve(&self, name: &str) -> Option<&Curve> {
+        self.curves.iter().find(|c| c.name == name)
+    }
+
+    pub fn set_scalar(&mut self, name: &str, v: f64) {
+        if let Some(s) = self.scalars.iter_mut().find(|(n, _)| n == name) {
+            s.1 = v;
+        } else {
+            self.scalars.push((name.to_string(), v));
+        }
+    }
+
+    pub fn scalar(&self, name: &str) -> Option<f64> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn note(&mut self, key: &str, val: &str) {
+        self.notes.push((key.to_string(), val.to_string()));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "curves",
+                Json::Arr(self.curves.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "scalars",
+                Json::Obj(
+                    self.scalars
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Json::Obj(
+                    self.notes
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    pub fn load(path: &Path) -> Result<RunLog> {
+        let j = Json::parse_file(path)?;
+        let mut log = RunLog::new(j.req("name")?.as_str()?);
+        // Non-finite values are serialized as JSON null (no NaN in JSON);
+        // map them back to NaN on load.
+        let num = |v: &Json| v.as_f64().unwrap_or(f64::NAN);
+        for cj in j.req("curves")?.as_arr()? {
+            let mut c = Curve::new(cj.req("name")?.as_str()?);
+            c.xs = cj.req("x")?.as_arr()?.iter().map(num).collect();
+            c.ys = cj.req("y")?.as_arr()?.iter().map(num).collect();
+            log.curves.push(c);
+        }
+        for (k, v) in j.req("scalars")?.as_obj()? {
+            log.scalars.push((k.clone(), v.as_f64()?));
+        }
+        for (k, v) in j.req("notes")?.as_obj()? {
+            log.notes.push((k.clone(), v.as_str()?.to_string()));
+        }
+        Ok(log)
+    }
+}
+
+/// Render a small ASCII sparkline of a curve (terminal figure output).
+pub fn sparkline(ys: &[f64], width: usize) -> String {
+    if ys.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let finite: Vec<f64> = ys.iter().cloned().filter(|y| y.is_finite()).collect();
+    if finite.is_empty() {
+        return "×".repeat(width.min(ys.len()));
+    }
+    let (lo, hi) = finite
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &y| (l.min(y), h.max(y)));
+    let span = (hi - lo).max(1e-12);
+    let stride = (ys.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < ys.len() && out.chars().count() < width {
+        let y = ys[i as usize];
+        if y.is_finite() {
+            let lvl = (((y - lo) / span) * 7.0).round() as usize;
+            out.push(BARS[lvl.min(7)]);
+        } else {
+            out.push('×');
+        }
+        i += stride;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_tail_mean_and_divergence() {
+        let mut c = Curve::new("t");
+        for i in 0..10 {
+            c.push(i as f64, i as f64);
+        }
+        assert_eq!(c.tail_mean(2), 8.5);
+        assert!(!c.diverged());
+        c.push(10.0, f64::NAN);
+        assert!(c.diverged());
+    }
+
+    #[test]
+    fn runlog_roundtrip() {
+        let tmp = std::env::temp_dir().join("nasa_test_metrics");
+        let mut log = RunLog::new("unit");
+        log.curve_mut("loss").push(0.0, 2.5);
+        log.curve_mut("loss").push(1.0, 1.5);
+        log.set_scalar("acc", 0.93);
+        log.note("space", "hybrid_all");
+        let path = log.save(&tmp).unwrap();
+        let loaded = RunLog::load(&path).unwrap();
+        assert_eq!(loaded.curve("loss").unwrap().ys, vec![2.5, 1.5]);
+        assert_eq!(loaded.scalar("acc"), Some(0.93));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn scalar_overwrite() {
+        let mut log = RunLog::new("t");
+        log.set_scalar("x", 1.0);
+        log.set_scalar("x", 2.0);
+        assert_eq!(log.scalar("x"), Some(2.0));
+        assert_eq!(log.scalars.len(), 1);
+    }
+
+    #[test]
+    fn sparkline_handles_nan_and_width() {
+        let s = sparkline(&[1.0, f64::NAN, 3.0], 3);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.contains('×'));
+        assert_eq!(sparkline(&[], 5), "");
+    }
+}

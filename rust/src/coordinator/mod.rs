@@ -1,0 +1,13 @@
+//! L3 coordinator: data pipeline, NAS search loop (PGP + DNAS), child
+//! train-from-scratch loop, and run metrics. Everything here drives the
+//! AOT HLO artifacts through runtime::Engine — python is never invoked.
+
+pub mod data;
+pub mod metrics;
+pub mod search_loop;
+pub mod train_loop;
+
+pub use data::{Batcher, Dataset, DatasetConfig, Split};
+pub use metrics::{sparkline, Curve, RunLog};
+pub use search_loop::{run_search, SearchConfig, SearchOutcome};
+pub use train_loop::{eval_choices, train_child, TrainConfig, TrainOutcome};

@@ -1,0 +1,316 @@
+//! The NASA-NAS search loop (Sec. 3.3 + Sec. 5.1 recipes), fully owned by
+//! rust: PGP stage machine -> alternating weight/alpha optimization with
+//! Gumbel-Softmax sampling and top-k masking, all through the single AOT
+//! `supernet_step` artifact. Python never runs here.
+
+use crate::coordinator::data::{Batcher, Dataset};
+use crate::coordinator::metrics::RunLog;
+use crate::nas::{
+    cost_table, derive_arch, init_params, ArchParams, PgpSchedule, PgpStage, TauSchedule,
+};
+use crate::nas::optimizer::{Adam, CosineLr, LrSchedule, Sgdm};
+use crate::nas::pgp::stage_grad_gate;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, Engine, Manifest, SupernetManifest};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Manifest supernet key, e.g. "hybrid_all_c10".
+    pub space_key: String,
+    pub seed: u64,
+    /// PGP (or vanilla) stage plan, in epochs.
+    pub schedule: PgpSchedule,
+    pub steps_per_epoch: usize,
+    /// Top-k path masking during search (Eq. 6).
+    pub top_k: usize,
+    /// Weight lr. The paper's "bigger lr" recipe for hybrid-adder/all.
+    pub lr_w: f32,
+    pub lr_alpha: f32,
+    pub momentum: f32,
+    pub weight_decay_w: f32,
+    pub weight_decay_alpha: f32,
+    /// Hardware-loss coefficient lambda (Eq. 5).
+    pub lambda_hw: f32,
+    pub tau: TauSchedule,
+    /// gamma_zero last-BN init (the customized recipe; Fig. 7 ablates).
+    pub gamma_zero_recipe: bool,
+    /// Evaluate on the val split every `eval_every` epochs (0 = never).
+    pub eval_every: usize,
+}
+
+impl SearchConfig {
+    /// Paper-mapped defaults for a space (Sec. 5.1): hybrid-shift uses the
+    /// vanilla pretrain and lr 0.05; hybrid-adder/all use PGP and the
+    /// bigger lr 0.1.
+    pub fn for_space(space_key: &str, pretrain_epochs: usize, search_epochs: usize) -> Self {
+        let has_adder = space_key.contains("adder") || space_key.contains("all");
+        SearchConfig {
+            space_key: space_key.to_string(),
+            seed: 42,
+            schedule: if has_adder {
+                PgpSchedule::pgp(pretrain_epochs, search_epochs)
+            } else {
+                PgpSchedule::vanilla(pretrain_epochs, search_epochs)
+            },
+            steps_per_epoch: 16,
+            top_k: 4,
+            lr_w: if has_adder { 0.1 } else { 0.05 },
+            lr_alpha: 3e-4,
+            momentum: 0.9,
+            weight_decay_w: 1e-4,
+            weight_decay_alpha: 5e-4,
+            lambda_hw: 0.05,
+            tau: TauSchedule::default(),
+            gamma_zero_recipe: true,
+            eval_every: 0,
+        }
+    }
+}
+
+/// Everything a finished search produces.
+pub struct SearchOutcome {
+    pub arch: crate::model::Arch,
+    pub choices: Vec<usize>,
+    pub params: Vec<f32>,
+    pub alpha: ArchParams,
+    pub log: RunLog,
+}
+
+/// Run one DNAS search. `engine` caches the compiled artifact across
+/// calls, so ablation sweeps in one process compile once.
+pub fn run_search(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    dataset: &Dataset,
+    cfg: &SearchConfig,
+) -> Result<SearchOutcome> {
+    let sn = manifest.supernet(&cfg.space_key)?;
+    validate(sn, dataset)?;
+    let step_exe = engine.load(&manifest.dir, &sn.step)?;
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut params = init_params(sn, &mut rng, cfg.gamma_zero_recipe)?;
+    let mut alpha = ArchParams::zeros(sn.n_layers, sn.n_cand);
+    let mut opt_w = Sgdm::new(sn.n_params, cfg.momentum, cfg.weight_decay_w);
+    let mut opt_a = Adam::new(alpha.alpha.len(), cfg.weight_decay_alpha);
+    let cost = cost_table(sn);
+    let total_epochs = cfg.schedule.total_epochs();
+    let lr_sched = CosineLr { lr0: cfg.lr_w, total: total_epochs * cfg.steps_per_epoch };
+
+    // 50/50 train split: weights on the first half, alphas on the second.
+    let mut w_batches = Batcher::half(dataset.train.n, sn.batch, cfg.seed ^ 0xA5, false);
+    let mut a_batches = Batcher::half(dataset.train.n, sn.batch, cfg.seed ^ 0x5A, true);
+
+    let mut log = RunLog::new(&format!("search_{}", cfg.space_key));
+    log.note("space", &sn.space);
+    log.note("schedule", &format!("{:?}", cfg.schedule.stages));
+
+    let mut global_step = 0usize;
+    for epoch in 0..total_epochs {
+        let stage = cfg.schedule.stage_at(epoch);
+        let enabled = stage.cand_enabled(&sn.cands);
+        let gate = stage_grad_gate(sn, stage);
+        let tau = match cfg.schedule.search_epoch(epoch) {
+            Some(se) => cfg.tau.at_epoch(se),
+            None => cfg.tau.tau0 as f32,
+        };
+        let lambda = if stage == PgpStage::Search { cfg.lambda_hw } else { 0.0 };
+
+        let mut epoch_loss = 0.0f64;
+        let mut epoch_ce = 0.0f64;
+        let mut epoch_correct = 0.0f64;
+        for _ in 0..cfg.steps_per_epoch {
+            // ---- weight update ----
+            let mask = if stage == PgpStage::Search {
+                alpha.topk_mask(cfg.top_k, &enabled)
+            } else {
+                stage_mask(&enabled, sn.n_layers)
+            };
+            let gumbel = alpha.sample_gumbel(&mut rng);
+            let (x, y) = w_batches.next_batch(&dataset.train);
+            let out = run_step(
+                &step_exe, sn, &params, &alpha.alpha, &gumbel, &mask, tau, lambda, &cost, &x, &y,
+            )?;
+            let lr = lr_sched.lr_at(global_step);
+            opt_w.step(&mut params, &out.dparams, lr, Some(&gate));
+            epoch_loss += out.loss as f64;
+            epoch_ce += out.ce as f64;
+            epoch_correct += out.ncorrect as f64;
+
+            // ---- alpha update (search stage only) ----
+            if stage.updates_alpha() {
+                let mask = alpha.topk_mask(cfg.top_k, &enabled);
+                let gumbel = alpha.sample_gumbel(&mut rng);
+                let (x, y) = a_batches.next_batch(&dataset.train);
+                let out = run_step(
+                    &step_exe, sn, &params, &alpha.alpha, &gumbel, &mask, tau, lambda, &cost,
+                    &x, &y,
+                )?;
+                // Only masked-in entries receive gradient (others are 0 by
+                // construction in the graph, but keep alphas of disabled
+                // candidates pinned anyway).
+                let mut da = out.dalpha;
+                for (g, m) in da.iter_mut().zip(&mask) {
+                    if *m == 0.0 {
+                        *g = 0.0;
+                    }
+                }
+                opt_a.step(&mut alpha.alpha, &da, cfg.lr_alpha);
+            }
+            global_step += 1;
+        }
+
+        let n_seen = (cfg.steps_per_epoch * sn.batch) as f64;
+        log.curve_mut("train_loss")
+            .push(epoch as f64, epoch_loss / cfg.steps_per_epoch as f64);
+        log.curve_mut("train_ce")
+            .push(epoch as f64, epoch_ce / cfg.steps_per_epoch as f64);
+        log.curve_mut("train_acc").push(epoch as f64, epoch_correct / n_seen);
+        log.curve_mut("tau").push(epoch as f64, tau as f64);
+        log.curve_mut("alpha_entropy")
+            .push(epoch as f64, alpha.mean_entropy(&enabled));
+        log.curve_mut("stage").push(epoch as f64, stage_code(stage));
+
+        if cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0 {
+            let acc = eval_supernet(engine, manifest, sn, dataset, &params, &alpha, &enabled, tau)?;
+            log.curve_mut("val_acc").push(epoch as f64, acc);
+        }
+        eprintln!(
+            "[search {}] epoch {:>3}/{} stage={:?} loss={:.3} acc={:.3} tau={:.2}",
+            cfg.space_key,
+            epoch + 1,
+            total_epochs,
+            stage,
+            epoch_loss / cfg.steps_per_epoch as f64,
+            epoch_correct / n_seen,
+            tau
+        );
+    }
+
+    let choices = alpha.argmax(&vec![true; sn.n_cand]);
+    let arch = derive_arch(sn, &alpha, &format!("searched_{}", cfg.space_key))?;
+    log.set_scalar("final_train_acc", log.curve("train_acc").unwrap().tail_mean(3));
+    Ok(SearchOutcome { arch, choices, params, alpha, log })
+}
+
+fn stage_code(s: PgpStage) -> f64 {
+    match s {
+        PgpStage::ConvPretrain => 1.0,
+        PgpStage::AdderPretrain => 2.0,
+        PgpStage::Mixture => 3.0,
+        PgpStage::Search => 4.0,
+    }
+}
+
+/// Uniform mask over enabled candidates, tiled across layers.
+fn stage_mask(enabled: &[bool], n_layers: usize) -> Vec<f32> {
+    let row: Vec<f32> = enabled.iter().map(|&e| if e { 1.0 } else { 0.0 }).collect();
+    let mut m = Vec::with_capacity(n_layers * row.len());
+    for _ in 0..n_layers {
+        m.extend_from_slice(&row);
+    }
+    m
+}
+
+fn validate(sn: &SupernetManifest, dataset: &Dataset) -> Result<()> {
+    let want = sn.input_hw * sn.input_hw * sn.input_ch;
+    if dataset.train.sample_len != want {
+        bail!(
+            "dataset sample_len {} != supernet input {} ({}x{}x{})",
+            dataset.train.sample_len,
+            want,
+            sn.input_hw,
+            sn.input_hw,
+            sn.input_ch
+        );
+    }
+    if dataset.cfg.num_classes != sn.num_classes {
+        bail!("dataset classes {} != supernet {}", dataset.cfg.num_classes, sn.num_classes);
+    }
+    Ok(())
+}
+
+/// Raw step-artifact outputs.
+pub struct StepOut {
+    pub loss: f32,
+    pub ce: f32,
+    pub hw: f32,
+    pub ncorrect: f32,
+    pub dparams: Vec<f32>,
+    pub dalpha: Vec<f32>,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn run_step(
+    exe: &crate::runtime::Executable,
+    sn: &SupernetManifest,
+    params: &[f32],
+    alpha: &[f32],
+    gumbel: &[f32],
+    mask: &[f32],
+    tau: f32,
+    lambda: f32,
+    cost: &[f32],
+    x: &[f32],
+    labels: &[i32],
+) -> Result<StepOut> {
+    let ln = [sn.n_layers, sn.n_cand];
+    let inputs = vec![
+        lit_f32(&[sn.n_params], params)?,
+        lit_f32(&ln, alpha)?,
+        lit_f32(&ln, gumbel)?,
+        lit_f32(&ln, mask)?,
+        lit_scalar_f32(tau),
+        lit_scalar_f32(lambda),
+        lit_f32(&ln, cost)?,
+        lit_f32(&[sn.batch, sn.input_hw, sn.input_hw, sn.input_ch], x)?,
+        lit_i32(&[sn.batch], labels)?,
+    ];
+    let out = exe.run(&inputs)?;
+    if out.len() != 6 {
+        bail!("step artifact returned {} outputs, want 6", out.len());
+    }
+    Ok(StepOut {
+        loss: out[0].to_vec::<f32>()?[0],
+        ce: out[1].to_vec::<f32>()?[0],
+        hw: out[2].to_vec::<f32>()?[0],
+        ncorrect: out[3].to_vec::<f32>()?[0],
+        dparams: out[4].to_vec::<f32>()?,
+        dalpha: out[5].to_vec::<f32>()?,
+    })
+}
+
+/// Evaluate current (params, alpha) on the val split via the eval
+/// artifact (deterministic, no gumbel). Returns accuracy.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_supernet(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    sn: &SupernetManifest,
+    dataset: &Dataset,
+    params: &[f32],
+    alpha: &ArchParams,
+    enabled: &[bool],
+    tau: f32,
+) -> Result<f64> {
+    let exe = engine.load(&manifest.dir, &sn.eval)?;
+    let mask = stage_mask(enabled, sn.n_layers);
+    let mut batcher = Batcher::new(dataset.val.n, sn.batch, 0);
+    let n_batches = (dataset.val.n / sn.batch).max(1);
+    let mut correct = 0.0f64;
+    for _ in 0..n_batches {
+        let (x, y) = batcher.next_batch(&dataset.val);
+        let inputs = vec![
+            lit_f32(&[sn.n_params], params)?,
+            lit_f32(&[sn.n_layers, sn.n_cand], &alpha.alpha)?,
+            lit_f32(&[sn.n_layers, sn.n_cand], &mask)?,
+            lit_scalar_f32(tau),
+            lit_f32(&[sn.batch, sn.input_hw, sn.input_hw, sn.input_ch], &x)?,
+            lit_i32(&[sn.batch], &y)?,
+        ];
+        let out = exe.run(&inputs)?;
+        correct += out[1].to_vec::<f32>()?[0] as f64;
+    }
+    Ok(correct / (n_batches * sn.batch) as f64)
+}

@@ -1,0 +1,24 @@
+//! # NASA — Neural Architecture Search and Acceleration for Hardware
+//! # Inspired Hybrid Networks (ICCAD '22) — full-stack reproduction
+//!
+//! Three-layer architecture:
+//! * **L3 (this crate)** — the coordinator: NAS outer loop (PGP +
+//!   Gumbel-Softmax DNAS), optimizers, data pipeline, and the entire
+//!   hardware side (chunk-based accelerator simulator, Eyeriss /
+//!   AdderNet-accelerator baselines, auto-mapper dataflow search).
+//! * **L2** — the hybrid supernet fwd/bwd in JAX (python/compile/model.py),
+//!   AOT-lowered once to HLO text.
+//! * **L1** — Pallas kernels for the conv/shift/adder operators
+//!   (python/compile/kernels/), on the executed path via the fixed-child
+//!   artifacts.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod accel;
+pub mod coordinator;
+pub mod mapper;
+pub mod model;
+pub mod nas;
+pub mod report;
+pub mod runtime;
+pub mod util;

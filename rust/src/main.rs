@@ -1,0 +1,290 @@
+//! `nasa` — leader entrypoint for the NASA reproduction.
+//!
+//! Subcommands (run `nasa help`):
+//!   search    run NASA-NAS (PGP + DNAS) on a search space
+//!   train     train a derived choice vector from scratch + eval FP32/FXP
+//!   simulate  run an arch through the chunk accelerator / baselines
+//!   map       run the auto-mapper on an arch (Fig. 8 machinery)
+//!   check     verify artifacts + engine round-trip
+//!   report    print paper-style tables/figures from saved runs
+
+use anyhow::{bail, Result};
+use nasa::accel::{
+    allocate, AreaBudget, ChunkAccelerator, EyerissSim, Mapping, MemoryConfig, PeKind,
+    UNIT_ENERGY_45NM,
+};
+use nasa::coordinator::{
+    run_search, train_child, Dataset, DatasetConfig, SearchConfig, TrainConfig,
+};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::{arch_op_counts, Arch, QuantSpec};
+use nasa::nas::PgpSchedule;
+use nasa::runtime::{Engine, Manifest};
+use nasa::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+fn main() -> Result<()> {
+    let args = Args::parse_env()?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let r = match sub.as_str() {
+        "search" => cmd_search(&args),
+        "train" => cmd_train(&args),
+        "derive" => cmd_derive(&args),
+        "simulate" => cmd_simulate(&args),
+        "map" => cmd_map(&args),
+        "check" => cmd_check(&args),
+        "report" => cmd_report(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    let unknown = args.unknown();
+    if !unknown.is_empty() {
+        eprintln!("warning: unrecognized options: {unknown:?}");
+    }
+    r
+}
+
+fn print_help() {
+    println!(
+        "nasa — NASA: Neural Architecture Search and Acceleration (ICCAD'22) reproduction
+
+USAGE: nasa <subcommand> [--options]
+
+  search   --space hybrid_all_c10 [--pretrain 9] [--epochs 12] [--steps 16]
+           [--seed 42] [--lambda 0.05] [--vanilla] [--no-recipe] [--out runs]
+  train    --space hybrid_all_c10 --choices 1,7,13,2,8,18 [--epochs 20] [--out runs]
+  derive   --space hybrid_all_c10 --choices 1,7,13,2,8,18 --name my_arch
+  simulate --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
+  map      --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
+  check    [--artifacts artifacts]
+  report   table2|fig2|fig6|fig7|fig8 [--out runs]
+"
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn runs_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("out", "runs"))
+}
+
+fn dataset_for(key: &str, hw: usize) -> Dataset {
+    if key.ends_with("c100") {
+        Dataset::generate(DatasetConfig::cifar100_like(hw))
+    } else {
+        Dataset::generate(DatasetConfig::cifar10_like(hw))
+    }
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let space = args.str_or("space", "hybrid_all_c10");
+    let pretrain = args.usize_or("pretrain", 9)?;
+    let epochs = args.usize_or("epochs", 12)?;
+    let mut cfg = SearchConfig::for_space(&space, pretrain, epochs);
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.steps_per_epoch = args.usize_or("steps", cfg.steps_per_epoch)?;
+    cfg.lambda_hw = args.f64_or("lambda", cfg.lambda_hw as f64)? as f32;
+    cfg.lr_w = args.f64_or("lr", cfg.lr_w as f64)? as f32;
+    if args.flag("vanilla") {
+        cfg.schedule = PgpSchedule::vanilla(pretrain, epochs);
+    }
+    if args.flag("no-recipe") {
+        cfg.gamma_zero_recipe = false;
+    }
+    cfg.eval_every = args.usize_or("eval-every", 0)?;
+
+    let manifest = Manifest::load(&artifacts_dir(args))?;
+    let sn = manifest.supernet(&space)?;
+    let dataset = dataset_for(&space, sn.input_hw);
+    let mut engine = Engine::cpu()?;
+    let t0 = std::time::Instant::now();
+    let outcome = run_search(&mut engine, &manifest, &dataset, &cfg)?;
+    println!("search done in {:.1}s", t0.elapsed().as_secs_f64());
+    println!("choices: {:?}", outcome.choices);
+    let counts = arch_op_counts(&outcome.arch);
+    let (m, s, a) = counts.in_millions();
+    println!("ops: mult={m:.2}M shift={s:.2}M add={a:.2}M");
+
+    let dir = runs_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    outcome.log.save(&dir)?;
+    let arch_path = dir.join(format!("arch_{space}_seed{}.json", cfg.seed));
+    outcome.arch.save(&arch_path)?;
+    println!("arch -> {}", arch_path.display());
+    Ok(())
+}
+
+/// Write the concrete Arch JSON for a choice vector (no PJRT needed).
+fn cmd_derive(args: &Args) -> Result<()> {
+    let space = args.str_or("space", "hybrid_all_c10");
+    let choices = parse_choices(args.require("choices")?)?;
+    let name = args.str_or("name", &format!("derived_{space}"));
+    let manifest = Manifest::load(&artifacts_dir(args))?;
+    let sn = manifest.supernet(&space)?;
+    let arch = Arch::from_choices(sn, &choices, &name)?;
+    let dir = runs_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("arch_{name}.json"));
+    arch.save(&path)?;
+    let counts = arch_op_counts(&arch);
+    let (m, s, a) = counts.in_millions();
+    println!("arch '{name}' -> {} (mult={m:.2}M shift={s:.2}M add={a:.2}M)", path.display());
+    Ok(())
+}
+
+fn parse_choices(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| t.trim().parse::<usize>().map_err(Into::into))
+        .collect()
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let space = args.str_or("space", "hybrid_all_c10");
+    let choices = parse_choices(args.require("choices")?)?;
+    let mut cfg = TrainConfig::for_space(&space, args.usize_or("epochs", 20)?);
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.steps_per_epoch = args.usize_or("steps", cfg.steps_per_epoch)?;
+
+    let manifest = Manifest::load(&artifacts_dir(args))?;
+    let sn = manifest.supernet(&space)?;
+    let dataset = dataset_for(&space, sn.input_hw);
+    let mut engine = Engine::cpu()?;
+    let out = train_child(&mut engine, &manifest, &dataset, &choices, &cfg)?;
+    println!(
+        "test acc: FP32={:.4} FXP8/6={:.4}",
+        out.test_acc_fp32, out.test_acc_quant
+    );
+    out.log.save(&runs_dir(args))?;
+    Ok(())
+}
+
+fn load_arch(args: &Args) -> Result<Arch> {
+    let path = args.require("arch")?;
+    Arch::load(Path::new(path))
+}
+
+fn accel_setup(args: &Args, arch: &Arch) -> Result<ChunkAccelerator> {
+    let costs = UNIT_ENERGY_45NM;
+    let budget = AreaBudget::macs_equivalent(args.usize_or("budget-pes", 168)?, &costs);
+    let mem = if args.flag("tight-mem") {
+        MemoryConfig::tight()
+    } else {
+        MemoryConfig::default()
+    };
+    let alloc = allocate(arch, budget, &costs);
+    Ok(ChunkAccelerator::new(alloc, mem, costs))
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let arch = load_arch(args)?;
+    let accel = accel_setup(args, &arch)?;
+    let q = QuantSpec::default();
+    println!(
+        "arch '{}': {} layers, alloc CLP={} SLP={} ALP={}",
+        arch.name,
+        arch.layers.len(),
+        accel.alloc.clp,
+        accel.alloc.slp,
+        accel.alloc.alp
+    );
+    let mapping = Mapping::all_rs(arch.layers.len());
+    match accel.simulate(&arch, &mapping, &q) {
+        Ok(s) => println!(
+            "NASA chunk accel (all-RS): period={:.0}cyc energy={:.2}uJ EDP={:.3e} pJ*s balance={:.2}",
+            s.period_cycles,
+            s.energy_uj(),
+            s.edp(accel.clock_hz),
+            s.balance()
+        ),
+        Err((i, e)) => println!("NASA chunk accel (all-RS): INFEASIBLE at layer {i}: {e}"),
+    }
+    let costs = UNIT_ENERGY_45NM;
+    let budget = AreaBudget::macs_equivalent(args.usize_or("budget-pes", 168)?, &costs);
+    let eyeriss = EyerissSim::with_budget(PeKind::Mac, budget.total_um2, accel.mem, costs);
+    match eyeriss.simulate(&arch, &q) {
+        Ok(s) => println!(
+            "Eyeriss-MAC (sequential RS): latency={:.0}cyc energy={:.2}uJ EDP={:.3e} pJ*s",
+            s.latency_cycles,
+            s.energy_uj(),
+            s.edp(eyeriss.clock_hz)
+        ),
+        Err((i, e)) => println!("Eyeriss-MAC: INFEASIBLE at layer {i}: {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let arch = load_arch(args)?;
+    let accel = accel_setup(args, &arch)?;
+    let q = QuantSpec::default();
+    let cfg = MapperConfig::default();
+    let t0 = std::time::Instant::now();
+    let r = auto_map(&accel, &arch, &q, &cfg);
+    println!(
+        "auto-mapper: {} combos ({} infeasible) in {:.2}s",
+        r.combos_tried,
+        r.combos_infeasible,
+        t0.elapsed().as_secs_f64()
+    );
+    match &r.best {
+        Some((m, s)) => println!(
+            "best: CLP={} SLP={} ALP={} gb_split=[{:.2},{:.2},{:.2}] EDP={:.3e} pJ*s",
+            m.clp_df.name(),
+            m.slp_df.name(),
+            m.alp_df.name(),
+            m.gb_split[0],
+            m.gb_split[1],
+            m.gb_split[2],
+            s.edp(accel.clock_hz)
+        ),
+        None => println!("best: NONE FEASIBLE"),
+    }
+    match &r.rs_baseline {
+        Ok(s) => println!("all-RS baseline: EDP={:.3e} pJ*s", s.edp(accel.clock_hz)),
+        Err((i, e)) => println!("all-RS baseline: INFEASIBLE at layer {i}: {e}"),
+    }
+    if let Some(saving) = r.edp_saving_vs_rs(accel.clock_hz) {
+        println!("auto-mapper EDP saving vs RS: {:.1}%", saving * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "manifest OK: {} supernets, {} kernels, fixed_child={}",
+        manifest.supernets.len(),
+        manifest.kernels.len(),
+        manifest.fixed_child.is_some()
+    );
+    let mut engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    if let Some(fc) = &manifest.fixed_child {
+        let exe = engine.load(&manifest.dir, &fc.jnp)?;
+        println!("compiled fixed-child jnp artifact ({} inputs)", exe.n_inputs());
+    }
+    println!("check OK");
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("table2");
+    let runs = runs_dir(args);
+    match what {
+        "table2" => nasa::report::table2::print_from_dir(&runs),
+        "fig2" => nasa::report::fig2::print_from_dir(&runs, &artifacts_dir(args)),
+        "fig6" => nasa::report::fig6::print_from_dir(&runs),
+        "fig7" => nasa::report::fig7::print_from_dir(&runs),
+        "fig8" => nasa::report::fig8::print_from_dir(&runs),
+        other => bail!("unknown report '{other}'"),
+    }
+}

@@ -1,0 +1,8 @@
+//! NASA's auto-mapper (Sec. 4.2): automated dataflow search for hybrid
+//! models on the chunk-based accelerator.
+
+pub mod search;
+pub mod space;
+
+pub use search::{auto_map, MapperConfig, MapperResult};
+pub use space::{dataflow_combos, gb_splits, tiling_candidates};

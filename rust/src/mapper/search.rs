@@ -1,0 +1,237 @@
+//! Auto-mapper search (Sec. 4.2): over the 64 per-chunk dataflow
+//! combinations x resource splits x per-layer tilings, find the mapping
+//! with minimum EDP; report RS-everywhere as the expert baseline
+//! (Fig. 8), including the cases where fixed-RS is infeasible under the
+//! shared-buffer budget.
+//!
+//! Structure: for a fixed (dataflow combo, resource split) the layers are
+//! independent, so the optimal tiling decomposes per layer — a greedy
+//! exact inner loop. The outer 64 x |splits| loop fans out across
+//! threads (util::par).
+
+use crate::accel::chunk::Infeasible;
+use crate::accel::schedule::{ChunkAccelerator, Mapping, NetStats};
+use crate::accel::Tiling;
+use crate::model::arch::{Arch, OpKind};
+use crate::model::quant::QuantSpec;
+use crate::util::par::par_map;
+
+#[derive(Clone, Debug)]
+pub struct MapperConfig {
+    /// Evaluate tilings per layer (otherwise chunk-default tiling only).
+    pub search_tilings: bool,
+    /// Clock for the EDP objective.
+    pub clock_hz: f64,
+}
+
+impl Default for MapperConfig {
+    fn default() -> Self {
+        MapperConfig { search_tilings: true, clock_hz: 250e6 }
+    }
+}
+
+#[derive(Debug)]
+pub struct MapperResult {
+    /// Best mapping found, with its stats (None if nothing feasible).
+    pub best: Option<(Mapping, NetStats)>,
+    /// The expert all-RS baseline (Err = infeasible, the green dotted
+    /// line of Fig. 8).
+    pub rs_baseline: Result<NetStats, (usize, Infeasible)>,
+    /// Search-space accounting.
+    pub combos_tried: usize,
+    pub combos_infeasible: usize,
+}
+
+impl MapperResult {
+    /// EDP saving of auto-mapper over all-RS (Fig. 8's headline), if both
+    /// exist.
+    pub fn edp_saving_vs_rs(&self, clock_hz: f64) -> Option<f64> {
+        let best = self.best.as_ref()?;
+        let rs = self.rs_baseline.as_ref().ok()?;
+        Some(1.0 - best.1.edp(clock_hz) / rs.edp(clock_hz))
+    }
+}
+
+/// Per-layer optimal tiling under a fixed chunk configuration: pick the
+/// feasible tiling minimizing layer cycles (ties: lower energy).
+fn best_tilings(
+    accel: &ChunkAccelerator,
+    arch: &Arch,
+    mapping: &Mapping,
+    q: &QuantSpec,
+) -> Vec<Option<Tiling>> {
+    arch.layers
+        .iter()
+        .map(|l| {
+            let n_pes = match l.kind {
+                OpKind::Conv => accel.alloc.clp,
+                OpKind::Shift => accel.alloc.slp,
+                OpKind::Adder => accel.alloc.alp,
+            };
+            let chunk = chunk_of(accel, mapping, l.kind);
+            let mut best: Option<(f64, f64, Tiling)> = None;
+            for t in super::space::tiling_candidates(n_pes, l) {
+                if let Ok(s) = chunk.simulate_layer_tiled(l, t, q, &accel.mem, &accel.costs) {
+                    let key = (s.cycles, s.energy_pj);
+                    if best.as_ref().is_none_or(|(c, e, _)| key < (*c, *e)) {
+                        best = Some((s.cycles, s.energy_pj, t));
+                    }
+                }
+            }
+            best.map(|(_, _, t)| t)
+        })
+        .collect()
+}
+
+fn chunk_of(
+    accel: &ChunkAccelerator,
+    mapping: &Mapping,
+    kind: OpKind,
+) -> crate::accel::chunk::Chunk {
+    use crate::accel::pe::PeKind;
+    let (pe_kind, n_pes, idx) = match kind {
+        OpKind::Conv => (PeKind::Mac, accel.alloc.clp, 0),
+        OpKind::Shift => (PeKind::ShiftUnit, accel.alloc.slp, 1),
+        OpKind::Adder => (PeKind::AdderUnit, accel.alloc.alp, 2),
+    };
+    crate::accel::chunk::Chunk {
+        pe_kind,
+        n_pes,
+        dataflow: mapping.df_for(kind),
+        gb_share: mapping.gb_split[idx],
+        noc_share: mapping.noc_split[idx],
+    }
+}
+
+/// Run the auto-mapper for `arch` on `accel`.
+pub fn auto_map(
+    accel: &ChunkAccelerator,
+    arch: &Arch,
+    q: &QuantSpec,
+    cfg: &MapperConfig,
+) -> MapperResult {
+    let op_loads = crate::accel::alloc::op_loads(arch);
+    let splits = super::space::gb_splits(&accel.alloc, &op_loads);
+    let combos = super::space::dataflow_combos();
+
+    // Candidate (dataflow combo, split) pairs.
+    let mut cands = Vec::with_capacity(combos.len() * splits.len());
+    for dfs in &combos {
+        for split in &splits {
+            cands.push((*dfs, *split));
+        }
+    }
+
+    let results: Vec<Option<(Mapping, NetStats)>> = par_map(&cands, |(dfs, split)| {
+        let mut mapping = Mapping {
+            clp_df: dfs[0],
+            slp_df: dfs[1],
+            alp_df: dfs[2],
+            tilings: vec![None; arch.layers.len()],
+            gb_split: *split,
+            noc_split: *split,
+        };
+        if cfg.search_tilings {
+            mapping.tilings = best_tilings(accel, arch, &mapping, q);
+        }
+        accel.simulate(arch, &mapping, q).ok().map(|s| (mapping, s))
+    });
+
+    let combos_tried = results.len();
+    let feasible: Vec<&(Mapping, NetStats)> = results.iter().flatten().collect();
+    let combos_infeasible = combos_tried - feasible.len();
+    let best = feasible
+        .iter()
+        .min_by(|a, b| {
+            a.1.edp(cfg.clock_hz)
+                .partial_cmp(&b.1.edp(cfg.clock_hz))
+                .unwrap()
+        })
+        .map(|&r| r.clone());
+
+    // Expert baseline: RS for every chunk, default tilings, even split.
+    let rs_baseline = accel.simulate(arch, &Mapping::all_rs(arch.layers.len()), q);
+
+    MapperResult { best, rs_baseline, combos_tried, combos_infeasible }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::alloc::{allocate, AreaBudget};
+    use crate::accel::{MemoryConfig, UNIT_ENERGY_45NM};
+    use crate::model::arch::LayerDesc;
+
+    fn hybrid_arch() -> Arch {
+        let mk = |kind, hw: usize, cin: usize, cout: usize| LayerDesc {
+            name: "t".into(),
+            kind,
+            cin,
+            cout,
+            h_out: hw,
+            w_out: hw,
+            k: 1,
+            stride: 1,
+            groups: 1,
+        };
+        Arch {
+            name: "h".into(),
+            layers: vec![
+                mk(OpKind::Conv, 16, 16, 48),
+                mk(OpKind::Shift, 16, 48, 48),
+                mk(OpKind::Adder, 8, 48, 96),
+                mk(OpKind::Conv, 8, 96, 96),
+            ],
+            choices: vec![],
+        }
+    }
+
+    fn accel(mem: MemoryConfig) -> ChunkAccelerator {
+        let costs = UNIT_ENERGY_45NM;
+        let arch = hybrid_arch();
+        let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
+        ChunkAccelerator::new(alloc, mem, costs)
+    }
+
+    #[test]
+    fn auto_map_at_least_matches_rs() {
+        let acc = accel(MemoryConfig::default());
+        let arch = hybrid_arch();
+        let r = auto_map(&acc, &arch, &QuantSpec::default(), &MapperConfig::default());
+        let (_, best) = r.best.as_ref().expect("something feasible");
+        if let Ok(rs) = &r.rs_baseline {
+            assert!(
+                best.edp(250e6) <= rs.edp(250e6) * 1.0001,
+                "auto {} vs rs {}",
+                best.edp(250e6),
+                rs.edp(250e6)
+            );
+        }
+    }
+
+    #[test]
+    fn search_covers_full_combo_space() {
+        let acc = accel(MemoryConfig::default());
+        let arch = hybrid_arch();
+        let r = auto_map(&acc, &arch, &QuantSpec::default(), &MapperConfig::default());
+        assert!(r.combos_tried >= 64);
+    }
+
+    #[test]
+    fn tight_memory_creates_infeasible_combos() {
+        let acc = accel(MemoryConfig { gb_bytes: 2 * 1024, ..Default::default() });
+        let arch = hybrid_arch();
+        let r = auto_map(&acc, &arch, &QuantSpec::default(), &MapperConfig::default());
+        assert!(r.combos_infeasible > 0, "expected some infeasible combos");
+    }
+
+    #[test]
+    fn saving_metric_is_fractional() {
+        let acc = accel(MemoryConfig::default());
+        let arch = hybrid_arch();
+        let r = auto_map(&acc, &arch, &QuantSpec::default(), &MapperConfig::default());
+        if let Some(s) = r.edp_saving_vs_rs(250e6) {
+            assert!((0.0..1.0).contains(&s), "saving={s}");
+        }
+    }
+}

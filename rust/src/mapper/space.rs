@@ -1,0 +1,151 @@
+//! The auto-mapper's search space (Sec. 4.2):
+//!
+//! * Loop ORDERING factors — one reuse pattern per chunk from
+//!   {RS, IS, WS, OS}: 4 x 4 x 4 = 64 combinations.
+//! * Loop TILING factors — per-layer (Tm, Tn) PE-array tiles drawn from
+//!   the divisor lattice of the chunk's PE count, clamped to layer dims.
+//! * Shared-resource splits — global-buffer / NoC fractions per chunk
+//!   (the cross-chunk competition Sec. 4.2 highlights).
+
+use crate::accel::dataflow::{Dataflow, Tiling, ALL_DATAFLOWS};
+use crate::accel::PeAllocation;
+use crate::model::arch::LayerDesc;
+
+/// All 64 per-chunk dataflow assignments (CLP, SLP, ALP).
+pub fn dataflow_combos() -> Vec<[Dataflow; 3]> {
+    let mut v = Vec::with_capacity(64);
+    for &c in &ALL_DATAFLOWS {
+        for &s in &ALL_DATAFLOWS {
+            for &a in &ALL_DATAFLOWS {
+                v.push([c, s, a]);
+            }
+        }
+    }
+    v
+}
+
+/// Candidate PE-array tilings for a layer on a chunk with `n_pes` PEs:
+/// power-of-two splits of the array plus the dim-clamped extremes.
+pub fn tiling_candidates(n_pes: usize, l: &LayerDesc) -> Vec<Tiling> {
+    let d = crate::accel::dataflow::loop_dims(l);
+    let mut out = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    let mut push = |tm: usize, tn: usize| {
+        let tm = tm.clamp(1, d.m.max(1));
+        let tn = tn.clamp(1, d.n.max(1));
+        if tm * tn <= n_pes && seen.insert((tm, tn)) {
+            out.push(Tiling { tm, tn });
+        }
+    };
+    let mut tm = 1usize;
+    while tm <= n_pes {
+        push(tm, n_pes / tm);
+        tm *= 2;
+    }
+    // Dim-matched extremes: full-M column, full-N row, and square.
+    push(d.m, n_pes / d.m.max(1));
+    push(n_pes / d.n.max(1), d.n);
+    let side = (n_pes as f64).sqrt() as usize;
+    push(side, side);
+    out
+}
+
+/// Global-buffer / NoC split candidates across (CLP, SLP, ALP). Besides
+/// the uniform third, include splits proportional to each chunk's op
+/// load and a couple of skewed variants (searchable, small, effective).
+pub fn gb_splits(alloc: &PeAllocation, op_loads: &[u64; 3]) -> Vec<[f64; 3]> {
+    let mut v = vec![[1.0 / 3.0; 3]];
+    let total: f64 = op_loads.iter().map(|&o| o as f64).sum();
+    if total > 0.0 {
+        // Proportional to op loads, floored at 5% for active chunks.
+        let mut prop = [0.0; 3];
+        let active = [alloc.clp > 0, alloc.slp > 0, alloc.alp > 0];
+        for i in 0..3 {
+            prop[i] = if active[i] {
+                (op_loads[i] as f64 / total).max(0.05)
+            } else {
+                0.0
+            };
+        }
+        let z: f64 = prop.iter().sum();
+        if z > 0.0 {
+            for p in prop.iter_mut() {
+                *p /= z;
+            }
+            v.push(prop);
+            // Skews emphasizing the dominant chunk.
+            let mut skew = prop;
+            let imax = (0..3).max_by(|&a, &b| prop[a].partial_cmp(&prop[b]).unwrap()).unwrap();
+            skew[imax] = (skew[imax] + 0.3).min(0.9);
+            let z2: f64 = skew.iter().sum();
+            for p in skew.iter_mut() {
+                *p /= z2;
+            }
+            v.push(skew);
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::OpKind;
+
+    fn layer() -> LayerDesc {
+        LayerDesc {
+            name: "t".into(),
+            kind: OpKind::Conv,
+            cin: 32,
+            cout: 48,
+            h_out: 8,
+            w_out: 8,
+            k: 1,
+            stride: 1,
+            groups: 1,
+        }
+    }
+
+    #[test]
+    fn combos_are_64_unique() {
+        let c = dataflow_combos();
+        assert_eq!(c.len(), 64);
+        let set: std::collections::BTreeSet<_> =
+            c.iter().map(|d| format!("{d:?}")).collect();
+        assert_eq!(set.len(), 64);
+    }
+
+    #[test]
+    fn tilings_fit_pes_and_dims() {
+        let l = layer();
+        for t in tiling_candidates(128, &l) {
+            assert!(t.tm * t.tn <= 128);
+            assert!(t.tm <= 64); // M = 64
+            assert!(t.tn <= 48); // N = 48
+            assert!(t.tm >= 1 && t.tn >= 1);
+        }
+    }
+
+    #[test]
+    fn tilings_nonempty_even_tiny() {
+        assert!(!tiling_candidates(1, &layer()).is_empty());
+    }
+
+    #[test]
+    fn gb_splits_sum_to_one() {
+        let alloc = PeAllocation { clp: 10, slp: 10, alp: 10 };
+        for s in gb_splits(&alloc, &[100, 50, 25]) {
+            let z: f64 = s.iter().sum();
+            assert!((z - 1.0).abs() < 1e-9, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn gb_splits_zero_for_inactive() {
+        let alloc = PeAllocation { clp: 10, slp: 0, alp: 10 };
+        let splits = gb_splits(&alloc, &[100, 0, 50]);
+        for s in &splits[1..] {
+            assert_eq!(s[1], 0.0);
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! The concrete network IR: a flat list of conv-like layers, each tagged
+//! with its operator family (conv / shift / adder).
+
+use crate::runtime::{CandSpec, LayerGeom, SupernetManifest};
+use anyhow::{bail, Result};
+
+/// Operator family of a layer (the paper's layer type T, Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Multiplication-based convolution (CLP workload).
+    Conv,
+    /// DeepShift-Q bitwise-shift layer (SLP workload).
+    Shift,
+    /// AdderNet l1-distance layer (ALP workload).
+    Adder,
+}
+
+impl OpKind {
+    pub fn parse(s: &str) -> Result<OpKind> {
+        Ok(match s {
+            "conv" => OpKind::Conv,
+            "shift" => OpKind::Shift,
+            "adder" => OpKind::Adder,
+            _ => bail!("unknown op kind '{s}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Conv => "conv",
+            OpKind::Shift => "shift",
+            OpKind::Adder => "adder",
+        }
+    }
+}
+
+/// One conv-like layer: output spatial size `h_out x w_out`, kernel `k`,
+/// `groups` = cin for depthwise.
+#[derive(Clone, Debug)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: OpKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub groups: usize,
+}
+
+impl LayerDesc {
+    /// Multiply-accumulate positions (the paper's "operation number" unit):
+    /// every output element contracts k*k*cin/groups inputs.
+    pub fn macs(&self) -> u64 {
+        let per_out = (self.k * self.k * self.cin / self.groups) as u64;
+        (self.h_out * self.w_out * self.cout) as u64 * per_out
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        self.groups == self.cin && self.groups > 1
+    }
+
+    /// Weight tensor element count.
+    pub fn n_weights(&self) -> u64 {
+        (self.k * self.k * self.cin / self.groups * self.cout) as u64
+    }
+
+    /// Input activation element count consumed (before stride).
+    pub fn n_inputs(&self) -> u64 {
+        (self.h_out * self.stride * self.w_out * self.stride * self.cin) as u64
+    }
+
+    /// Output activation element count.
+    pub fn n_outputs(&self) -> u64 {
+        (self.h_out * self.w_out * self.cout) as u64
+    }
+}
+
+/// A complete network: ordered layers (data dependencies follow order).
+#[derive(Clone, Debug, Default)]
+pub struct Arch {
+    pub name: String,
+    pub layers: Vec<LayerDesc>,
+    /// Searchable-layer candidate choices that produced this arch (empty
+    /// for handcrafted baselines) — kept for provenance/reporting.
+    pub choices: Vec<usize>,
+}
+
+impl Arch {
+    /// Expand a candidate choice per searchable layer into the concrete
+    /// layer list (stem + PW1/DW/PW2 triples + head + fc), using the
+    /// geometry recorded in the manifest.
+    pub fn from_choices(sn: &SupernetManifest, choices: &[usize], name: &str) -> Result<Arch> {
+        if choices.len() != sn.n_layers {
+            bail!("need {} choices, got {}", sn.n_layers, choices.len());
+        }
+        let mut layers = Vec::new();
+        // Stem: conv stem_k x stem_k, stride 1, input_hw spatial.
+        layers.push(LayerDesc {
+            name: "stem".into(),
+            kind: OpKind::Conv,
+            cin: sn.input_ch,
+            cout: sn.stem_ch,
+            h_out: sn.input_hw,
+            w_out: sn.input_hw,
+            k: sn.stem_k,
+            stride: 1,
+            groups: 1,
+        });
+        for (l, (&ci, geom)) in choices.iter().zip(&sn.layers).enumerate() {
+            if ci >= sn.cands.len() {
+                bail!("layer {l}: choice {ci} out of range");
+            }
+            let cand = &sn.cands[ci];
+            if cand.is_skip() {
+                continue; // parameter-free skip: no compute layers
+            }
+            push_block(&mut layers, l, cand, geom);
+        }
+        // Head PW + FC (1x1 "conv" over the pooled vector).
+        let last = sn.layers.last().expect("nonempty plan");
+        layers.push(LayerDesc {
+            name: "head".into(),
+            kind: OpKind::Conv,
+            cin: last.cout,
+            cout: sn.head_ch,
+            h_out: last.h_out,
+            w_out: last.w_out,
+            k: 1,
+            stride: 1,
+            groups: 1,
+        });
+        layers.push(LayerDesc {
+            name: "fc".into(),
+            kind: OpKind::Conv,
+            cin: sn.head_ch,
+            cout: sn.num_classes,
+            h_out: 1,
+            w_out: 1,
+            k: 1,
+            stride: 1,
+            groups: 1,
+        });
+        Ok(Arch {
+            name: name.into(),
+            layers,
+            choices: choices.to_vec(),
+        })
+    }
+
+    /// Total MACs across layers (proxy used by the hw-aware loss).
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Fraction of MAC positions per operator family.
+    pub fn kind_fractions(&self) -> [f64; 3] {
+        let total = self.total_macs().max(1) as f64;
+        let mut f = [0.0; 3];
+        for l in &self.layers {
+            let idx = match l.kind {
+                OpKind::Conv => 0,
+                OpKind::Shift => 1,
+                OpKind::Adder => 2,
+            };
+            f[idx] += l.macs() as f64 / total;
+        }
+        f
+    }
+}
+
+/// Expand one candidate block (PW1 -> DW -> PW2) into layer descs.
+pub fn push_block(layers: &mut Vec<LayerDesc>, l: usize, cand: &CandSpec, geom: &LayerGeom) {
+    let kind = OpKind::parse(&cand.t).expect("non-skip cand");
+    let mid = geom.cin * cand.e;
+    layers.push(LayerDesc {
+        name: format!("L{l}/pw1"),
+        kind,
+        cin: geom.cin,
+        cout: mid,
+        h_out: geom.h_in,
+        w_out: geom.w_in,
+        k: 1,
+        stride: 1,
+        groups: 1,
+    });
+    layers.push(LayerDesc {
+        name: format!("L{l}/dw"),
+        kind,
+        cin: mid,
+        cout: mid,
+        h_out: geom.h_out,
+        w_out: geom.w_out,
+        k: cand.k,
+        stride: geom.stride,
+        groups: mid,
+    });
+    layers.push(LayerDesc {
+        name: format!("L{l}/pw2"),
+        kind,
+        cin: mid,
+        cout: geom.cout,
+        h_out: geom.h_out,
+        w_out: geom.w_out,
+        k: 1,
+        stride: 1,
+        groups: 1,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(kind: OpKind, cin: usize, cout: usize, hw: usize, k: usize, groups: usize) -> LayerDesc {
+        LayerDesc {
+            name: "t".into(),
+            kind,
+            cin,
+            cout,
+            h_out: hw,
+            w_out: hw,
+            k,
+            stride: 1,
+            groups,
+        }
+    }
+
+    #[test]
+    fn macs_pointwise() {
+        let l = layer(OpKind::Conv, 16, 32, 8, 1, 1);
+        assert_eq!(l.macs(), 8 * 8 * 32 * 16);
+    }
+
+    #[test]
+    fn macs_depthwise() {
+        let l = layer(OpKind::Conv, 16, 16, 8, 3, 16);
+        assert_eq!(l.macs(), 8 * 8 * 16 * 9);
+        assert!(l.is_depthwise());
+    }
+
+    #[test]
+    fn kind_fractions_sum_to_one() {
+        let a = Arch {
+            name: "t".into(),
+            layers: vec![
+                layer(OpKind::Conv, 8, 8, 4, 1, 1),
+                layer(OpKind::Shift, 8, 8, 4, 1, 1),
+                layer(OpKind::Adder, 8, 8, 4, 1, 1),
+            ],
+            choices: vec![],
+        };
+        let f = a.kind_fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((f[0] - f[1]).abs() < 1e-12);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialization: archs travel between subcommands as files.
+// ---------------------------------------------------------------------------
+
+impl Arch {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "choices",
+                Json::Arr(self.choices.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("name", Json::Str(l.name.clone())),
+                                ("kind", Json::Str(l.kind.name().to_string())),
+                                ("cin", Json::Num(l.cin as f64)),
+                                ("cout", Json::Num(l.cout as f64)),
+                                ("h_out", Json::Num(l.h_out as f64)),
+                                ("w_out", Json::Num(l.w_out as f64)),
+                                ("k", Json::Num(l.k as f64)),
+                                ("stride", Json::Num(l.stride as f64)),
+                                ("groups", Json::Num(l.groups as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Arch> {
+        let mut layers = Vec::new();
+        for lj in j.req("layers")?.as_arr()? {
+            layers.push(LayerDesc {
+                name: lj.req("name")?.as_str()?.to_string(),
+                kind: OpKind::parse(lj.req("kind")?.as_str()?)?,
+                cin: lj.req("cin")?.as_usize()?,
+                cout: lj.req("cout")?.as_usize()?,
+                h_out: lj.req("h_out")?.as_usize()?,
+                w_out: lj.req("w_out")?.as_usize()?,
+                k: lj.req("k")?.as_usize()?,
+                stride: lj.req("stride")?.as_usize()?,
+                groups: lj.req("groups")?.as_usize()?,
+            });
+        }
+        Ok(Arch {
+            name: j.req("name")?.as_str()?.to_string(),
+            choices: j
+                .req("choices")?
+                .as_arr()?
+                .iter()
+                .map(|c| c.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            layers,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Arch> {
+        Arch::from_json(&crate::util::json::Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod json_tests {
+    use super::*;
+
+    #[test]
+    fn arch_json_roundtrip() {
+        let a = Arch {
+            name: "t".into(),
+            choices: vec![3, 1],
+            layers: vec![LayerDesc {
+                name: "l0".into(),
+                kind: OpKind::Adder,
+                cin: 3,
+                cout: 8,
+                h_out: 4,
+                w_out: 4,
+                k: 3,
+                stride: 2,
+                groups: 1,
+            }],
+        };
+        let b = Arch::from_json(&a.to_json()).unwrap();
+        assert_eq!(b.name, "t");
+        assert_eq!(b.choices, vec![3, 1]);
+        assert_eq!(b.layers[0].kind, OpKind::Adder);
+        assert_eq!(b.layers[0].stride, 2);
+    }
+}

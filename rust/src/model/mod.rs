@@ -1,0 +1,14 @@
+//! Concrete hybrid-network IR + operation accounting + quantization specs.
+//!
+//! `Arch` is the common currency between the NAS engine (which derives one
+//! from alphas), the op counter (Table 2 columns), and the accelerator
+//! simulator / auto-mapper (which schedule its layers onto chunks).
+
+pub mod arch;
+pub mod ops;
+pub mod quant;
+pub mod zoo;
+
+pub use arch::{Arch, LayerDesc, OpKind};
+pub use ops::{arch_op_counts, layer_op_counts, OpCounts};
+pub use quant::QuantSpec;

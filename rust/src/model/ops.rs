@@ -1,0 +1,112 @@
+//! Operation accounting — the Table 2 columns (Mult. / Shift / Addition).
+//!
+//! Counting convention (calibrated against the paper's Table 2 rows):
+//!   conv layer  : macs multiplications + macs additions (accumulate)
+//!   shift layer : macs bitwise shifts  + macs additions (accumulate)
+//!   adder layer : 2*macs additions (|x-w| subtract, then accumulate),
+//!                 zero multiplications — matching AdderNet-MobileNetV2's
+//!                 82.5M additions ~= 2x the 41M MAC backbone.
+
+use super::arch::{Arch, LayerDesc, OpKind};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub mult: u64,
+    pub shift: u64,
+    pub add: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.mult + self.shift + self.add
+    }
+
+    pub fn accumulate(&mut self, o: OpCounts) {
+        self.mult += o.mult;
+        self.shift += o.shift;
+        self.add += o.add;
+    }
+
+    /// Millions, for Table 2 style reporting.
+    pub fn in_millions(&self) -> (f64, f64, f64) {
+        (
+            self.mult as f64 / 1e6,
+            self.shift as f64 / 1e6,
+            self.add as f64 / 1e6,
+        )
+    }
+}
+
+pub fn layer_op_counts(l: &LayerDesc) -> OpCounts {
+    let macs = l.macs();
+    match l.kind {
+        OpKind::Conv => OpCounts { mult: macs, shift: 0, add: macs },
+        OpKind::Shift => OpCounts { mult: 0, shift: macs, add: macs },
+        OpKind::Adder => OpCounts { mult: 0, shift: 0, add: 2 * macs },
+    }
+}
+
+pub fn arch_op_counts(a: &Arch) -> OpCounts {
+    let mut total = OpCounts::default();
+    for l in &a.layers {
+        total.accumulate(layer_op_counts(l));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::OpKind;
+
+    fn l(kind: OpKind) -> LayerDesc {
+        LayerDesc {
+            name: "t".into(),
+            kind,
+            cin: 4,
+            cout: 8,
+            h_out: 2,
+            w_out: 2,
+            k: 1,
+            stride: 1,
+            groups: 1,
+        }
+    }
+
+    #[test]
+    fn conv_counts() {
+        let c = layer_op_counts(&l(OpKind::Conv));
+        assert_eq!(c.mult, 128);
+        assert_eq!(c.add, 128);
+        assert_eq!(c.shift, 0);
+    }
+
+    #[test]
+    fn shift_counts() {
+        let c = layer_op_counts(&l(OpKind::Shift));
+        assert_eq!(c.mult, 0);
+        assert_eq!(c.shift, 128);
+        assert_eq!(c.add, 128);
+    }
+
+    #[test]
+    fn adder_counts_no_mult_double_add() {
+        let c = layer_op_counts(&l(OpKind::Adder));
+        assert_eq!(c.mult, 0);
+        assert_eq!(c.shift, 0);
+        assert_eq!(c.add, 256);
+    }
+
+    #[test]
+    fn arch_accumulates() {
+        let a = Arch {
+            name: "t".into(),
+            layers: vec![l(OpKind::Conv), l(OpKind::Adder)],
+            choices: vec![],
+        };
+        let c = arch_op_counts(&a);
+        assert_eq!(c.mult, 128);
+        assert_eq!(c.add, 128 + 256);
+        assert_eq!(c.total(), 512);
+    }
+}

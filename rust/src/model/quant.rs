@@ -1,0 +1,62 @@
+//! Quantization specification (Sec. 5.1): weights/activations in 8-bit
+//! fixed point, except shift/adder layer weights which use 6 bits. The
+//! numeric effect is exercised through the `supernet_eval_quant` artifact;
+//! this module carries the bit-widths into the accelerator energy/area
+//! model (narrower operands -> cheaper PEs and less RF/NoC traffic).
+
+use crate::model::arch::OpKind;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantSpec {
+    pub act_bits: u32,
+    pub conv_w_bits: u32,
+    pub shift_w_bits: u32,
+    pub adder_w_bits: u32,
+}
+
+impl Default for QuantSpec {
+    /// The paper's deployment setting: FXP8 acts/weights, FXP6 for the
+    /// weights of shift and adder layers.
+    fn default() -> Self {
+        QuantSpec {
+            act_bits: 8,
+            conv_w_bits: 8,
+            shift_w_bits: 6,
+            adder_w_bits: 6,
+        }
+    }
+}
+
+impl QuantSpec {
+    pub fn weight_bits(&self, kind: OpKind) -> u32 {
+        match kind {
+            OpKind::Conv => self.conv_w_bits,
+            OpKind::Shift => self.shift_w_bits,
+            OpKind::Adder => self.adder_w_bits,
+        }
+    }
+
+    /// Bytes per weight element (ceil to byte for storage accounting).
+    pub fn weight_bytes(&self, kind: OpKind) -> f64 {
+        self.weight_bits(kind) as f64 / 8.0
+    }
+
+    pub fn act_bytes(&self) -> f64 {
+        self.act_bits as f64 / 8.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let q = QuantSpec::default();
+        assert_eq!(q.act_bits, 8);
+        assert_eq!(q.weight_bits(OpKind::Conv), 8);
+        assert_eq!(q.weight_bits(OpKind::Shift), 6);
+        assert_eq!(q.weight_bits(OpKind::Adder), 6);
+        assert_eq!(q.weight_bytes(OpKind::Shift), 0.75);
+    }
+}

@@ -1,0 +1,257 @@
+//! Handcrafted baseline architectures (the paper's comparison systems):
+//!
+//!   * `mobilenet_v2_like(kind)` — the MobileNetV2-style backbone used by
+//!     DeepShift-MobileNetV2 [6] (kind=Shift) and AdderNet-MobileNetV2
+//!     [20] (kind=Adder), at this reproduction's input scale. Following
+//!     both papers, the stem and the final classifier stay
+//!     multiplication-based; every inverted-residual block is converted
+//!     to the multiplication-free operator.
+//!   * `resnet32_adder_like()` — the AdderNet-ResNet32 model served by the
+//!     dedicated accelerator [21] in Fig. 6's third baseline.
+//!
+//! These provide the baseline rows of Table 2 and baseline points of
+//! Fig. 6. (The FBNet baseline is not handcrafted — it is the conv_only
+//! search space run through the same NAS engine.)
+
+use super::arch::{Arch, LayerDesc, OpKind};
+
+fn conv(name: &str, kind: OpKind, cin: usize, cout: usize, hw: usize, k: usize, stride: usize, groups: usize) -> LayerDesc {
+    LayerDesc {
+        name: name.into(),
+        kind,
+        cin,
+        cout,
+        h_out: hw,
+        w_out: hw,
+        k,
+        stride,
+        groups,
+    }
+}
+
+/// Inverted residual block (expansion t): PW expand -> DW 3x3 -> PW project.
+fn inverted_residual(
+    layers: &mut Vec<LayerDesc>,
+    idx: usize,
+    kind: OpKind,
+    cin: usize,
+    cout: usize,
+    hw_in: usize,
+    stride: usize,
+    t: usize,
+) -> usize {
+    let mid = cin * t;
+    let hw_out = hw_in.div_ceil(stride);
+    if t != 1 {
+        layers.push(conv(&format!("b{idx}/pw1"), kind, cin, mid, hw_in, 1, 1, 1));
+    }
+    layers.push(conv(&format!("b{idx}/dw"), kind, mid, mid, hw_out, 3, stride, mid));
+    layers.push(conv(&format!("b{idx}/pw2"), kind, mid, cout, hw_out, 1, 1, 1));
+    hw_out
+}
+
+/// MobileNetV2 backbone at `input_hw` (16 for the fast config, 32 for
+/// CIFAR scale), channel width scaled by `width` per-mille (1000 = 1.0x).
+pub fn mobilenet_v2_like(kind: OpKind, input_hw: usize, num_classes: usize, width_permille: usize) -> Arch {
+    let w = |c: usize| (c * width_permille).div_ceil(1000).max(4);
+    let mut layers = Vec::new();
+    let mut hw = input_hw;
+    // Stem stays multiplication-based in both DeepShift and AdderNet.
+    layers.push(conv("stem", OpKind::Conv, 3, w(32), hw, 3, 1, 1));
+    let mut cin = w(32);
+    // (t, c, n, s) table from MobileNetV2, strides adapted to small inputs.
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 1), // stride 1 at CIFAR scale (no early downsample)
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut bi = 0;
+    for &(t, c, n, s) in cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            hw = inverted_residual(&mut layers, bi, kind, cin, w(c), hw, stride, t);
+            cin = w(c);
+            bi += 1;
+        }
+    }
+    // Head 1x1 conv + classifier stay multiplication-based.
+    layers.push(conv("head", OpKind::Conv, cin, w(1280), hw, 1, 1, 1));
+    layers.push(LayerDesc {
+        name: "fc".into(),
+        kind: OpKind::Conv,
+        cin: w(1280),
+        cout: num_classes,
+        h_out: 1,
+        w_out: 1,
+        k: 1,
+        stride: 1,
+        groups: 1,
+    });
+    let kname = kind.name();
+    Arch {
+        name: format!("{}-mobilenet_v2", kname),
+        layers,
+        choices: vec![],
+    }
+}
+
+/// ResNet-32 with adder layers (the workload of the AdderNet dedicated
+/// accelerator [21]): 3 stages x 5 basic blocks of 3x3 convs; stem and
+/// classifier multiplication-based, everything else adder.
+pub fn resnet32_adder_like(input_hw: usize, num_classes: usize) -> Arch {
+    let mut layers = Vec::new();
+    let mut hw = input_hw;
+    layers.push(conv("stem", OpKind::Conv, 3, 16, hw, 3, 1, 1));
+    let mut cin = 16;
+    for (stage, cout) in [16usize, 32, 64].iter().enumerate() {
+        for block in 0..5 {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            hw = hw.div_ceil(stride);
+            layers.push(conv(
+                &format!("s{stage}b{block}/c1"),
+                OpKind::Adder,
+                cin,
+                *cout,
+                hw,
+                3,
+                stride,
+                1,
+            ));
+            layers.push(conv(
+                &format!("s{stage}b{block}/c2"),
+                OpKind::Adder,
+                *cout,
+                *cout,
+                hw,
+                3,
+                1,
+                1,
+            ));
+            cin = *cout;
+        }
+    }
+    layers.push(LayerDesc {
+        name: "fc".into(),
+        kind: OpKind::Conv,
+        cin: 64,
+        cout: num_classes,
+        h_out: 1,
+        w_out: 1,
+        k: 1,
+        stride: 1,
+        groups: 1,
+    });
+    Arch {
+        name: "addernet-resnet32".into(),
+        layers,
+        choices: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ops::arch_op_counts;
+
+    #[test]
+    fn deepshift_mbv2_is_mostly_shift() {
+        let a = mobilenet_v2_like(OpKind::Shift, 32, 10, 1000);
+        let c = arch_op_counts(&a);
+        assert!(c.shift > 0);
+        assert!(c.mult > 0, "stem/head stay mult-based");
+        assert!(
+            c.shift as f64 > 5.0 * c.mult as f64,
+            "shift {} should dominate mult {}",
+            c.shift,
+            c.mult
+        );
+    }
+
+    #[test]
+    fn addernet_mbv2_add_to_mult_ratio_matches_paper_shape() {
+        // Paper Table 2: AdderNet-MBv2 has 3.3M mult, 82.5M add (ratio ~25x)
+        let a = mobilenet_v2_like(OpKind::Adder, 32, 10, 1000);
+        let c = arch_op_counts(&a);
+        let ratio = c.add as f64 / c.mult.max(1) as f64;
+        assert!(ratio > 8.0, "add/mult ratio {ratio} too small");
+        assert_eq!(c.shift, 0);
+    }
+
+    #[test]
+    fn conv_mbv2_mult_equals_add() {
+        let a = mobilenet_v2_like(OpKind::Conv, 32, 10, 1000);
+        let c = arch_op_counts(&a);
+        assert_eq!(c.mult, c.add);
+    }
+
+    #[test]
+    fn resnet32_shape() {
+        let a = resnet32_adder_like(32, 100);
+        // stem + 30 adder convs + fc
+        assert_eq!(a.layers.len(), 32);
+        let c = arch_op_counts(&a);
+        assert!(c.add > 2 * c.mult);
+    }
+
+    #[test]
+    fn width_scaling_reduces_ops() {
+        let full = arch_op_counts(&mobilenet_v2_like(OpKind::Conv, 32, 10, 1000));
+        let half = arch_op_counts(&mobilenet_v2_like(OpKind::Conv, 32, 10, 500));
+        assert!(half.total() < full.total() / 2);
+    }
+}
+
+/// ShiftAddNet-style network [26]: every block uses a shift layer
+/// followed by an adder layer (the paper's closest all-multiplication-
+/// free hybrid ancestor) on a VGG-small-like backbone.
+pub fn shiftaddnet_like(input_hw: usize, num_classes: usize) -> Arch {
+    let mut layers = Vec::new();
+    let mut hw = input_hw;
+    let mut cin = 3;
+    for (i, &cout) in [32usize, 64, 128].iter().enumerate() {
+        layers.push(conv(&format!("b{i}/shift"), OpKind::Shift, cin, cout, hw, 3, 1, 1));
+        hw = hw.div_ceil(2);
+        layers.push(conv(&format!("b{i}/adder"), OpKind::Adder, cout, cout, hw, 3, 2, 1));
+        cin = cout;
+    }
+    layers.push(LayerDesc {
+        name: "fc".into(),
+        kind: OpKind::Conv,
+        cin,
+        cout: num_classes,
+        h_out: 1,
+        w_out: 1,
+        k: 1,
+        stride: 1,
+        groups: 1,
+    });
+    Arch { name: "shiftaddnet-vgg".into(), layers, choices: vec![] }
+}
+
+#[cfg(test)]
+mod shiftadd_tests {
+    use super::*;
+    use crate::model::ops::arch_op_counts;
+
+    #[test]
+    fn shiftaddnet_is_multiplication_free_except_fc() {
+        let a = shiftaddnet_like(16, 10);
+        let c = arch_op_counts(&a);
+        assert!(c.shift > 0 && c.add > 0);
+        // Only the classifier multiplies.
+        let fc_macs = a.layers.last().unwrap().macs();
+        assert_eq!(c.mult, fc_macs);
+    }
+
+    #[test]
+    fn shiftaddnet_downsamples() {
+        let a = shiftaddnet_like(16, 10);
+        assert_eq!(a.layers[1].h_out, 8);
+        assert_eq!(a.layers[3].h_out, 4);
+        assert_eq!(a.layers[5].h_out, 2);
+    }
+}

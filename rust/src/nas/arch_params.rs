@@ -1,0 +1,155 @@
+//! Architecture parameters alpha [n_layers x n_cand] + the top-k path
+//! masking of Eq. 6 (ProxylessNAS-style memory/compute gating: only the
+//! k highest-alpha candidates stay active per layer).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ArchParams {
+    pub n_layers: usize,
+    pub n_cand: usize,
+    /// Row-major [n_layers * n_cand].
+    pub alpha: Vec<f32>,
+}
+
+impl ArchParams {
+    pub fn zeros(n_layers: usize, n_cand: usize) -> Self {
+        ArchParams { n_layers, n_cand, alpha: vec![0.0; n_layers * n_cand] }
+    }
+
+    pub fn row(&self, l: usize) -> &[f32] {
+        &self.alpha[l * self.n_cand..(l + 1) * self.n_cand]
+    }
+
+    /// Eq. 6 masking: per layer, 1.0 for the top-k alphas intersected with
+    /// `enabled`, 0.0 elsewhere. Ties break toward lower index
+    /// (deterministic). k >= enabled count keeps everything enabled.
+    pub fn topk_mask(&self, k: usize, enabled: &[bool]) -> Vec<f32> {
+        assert_eq!(enabled.len(), self.n_cand);
+        let mut mask = vec![0.0f32; self.alpha.len()];
+        for l in 0..self.n_layers {
+            let row = self.row(l);
+            let mut idx: Vec<usize> = (0..self.n_cand).filter(|&i| enabled[i]).collect();
+            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+            for &i in idx.iter().take(k) {
+                mask[l * self.n_cand + i] = 1.0;
+            }
+        }
+        mask
+    }
+
+    /// Softmax probabilities per layer over `enabled` candidates.
+    pub fn probs(&self, enabled: &[bool]) -> Vec<Vec<f64>> {
+        (0..self.n_layers)
+            .map(|l| {
+                let row = self.row(l);
+                let max = row
+                    .iter()
+                    .zip(enabled)
+                    .filter(|(_, &e)| e)
+                    .map(|(&a, _)| a)
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f64> = row
+                    .iter()
+                    .zip(enabled)
+                    .map(|(&a, &e)| if e { ((a - max) as f64).exp() } else { 0.0 })
+                    .collect();
+                let z: f64 = exps.iter().sum();
+                exps.iter().map(|&x| x / z.max(1e-300)).collect()
+            })
+            .collect()
+    }
+
+    /// Argmax over enabled candidates per layer (architecture derivation).
+    pub fn argmax(&self, enabled: &[bool]) -> Vec<usize> {
+        (0..self.n_layers)
+            .map(|l| {
+                let row = self.row(l);
+                (0..self.n_cand)
+                    .filter(|&i| enabled[i])
+                    .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap().then(b.cmp(&a)))
+                    .expect("at least one enabled candidate")
+            })
+            .collect()
+    }
+
+    /// Entropy of the per-layer distributions (search convergence metric).
+    pub fn mean_entropy(&self, enabled: &[bool]) -> f64 {
+        let probs = self.probs(enabled);
+        let mut h = 0.0;
+        for p in &probs {
+            for &pi in p {
+                if pi > 1e-12 {
+                    h -= pi * pi.ln();
+                }
+            }
+        }
+        h / self.n_layers as f64
+    }
+
+    /// Fresh Gumbel(0,1) noise for one step, masked entries zeroed.
+    pub fn sample_gumbel(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.alpha.len()];
+        rng.fill_gumbel(&mut g);
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_selects_highest() {
+        let mut ap = ArchParams::zeros(1, 4);
+        ap.alpha = vec![0.1, 3.0, 2.0, -1.0];
+        let enabled = vec![true; 4];
+        let m = ap.topk_mask(2, &enabled);
+        assert_eq!(m, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_respects_enabled() {
+        let mut ap = ArchParams::zeros(1, 4);
+        ap.alpha = vec![0.1, 3.0, 2.0, -1.0];
+        let enabled = vec![true, false, true, true];
+        let m = ap.topk_mask(2, &enabled);
+        assert_eq!(m, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_k_larger_than_enabled() {
+        let ap = ArchParams::zeros(2, 3);
+        let enabled = vec![true, true, false];
+        let m = ap.topk_mask(10, &enabled);
+        assert_eq!(m, vec![1.0, 1.0, 0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn probs_sum_to_one_and_argmax_matches() {
+        let mut ap = ArchParams::zeros(2, 3);
+        ap.alpha = vec![0.0, 1.0, 2.0, 5.0, 1.0, 0.0];
+        let enabled = vec![true; 3];
+        let p = ap.probs(&enabled);
+        for row in &p {
+            assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        assert_eq!(ap.argmax(&enabled), vec![2, 0]);
+    }
+
+    #[test]
+    fn entropy_decreases_as_distribution_sharpens() {
+        let mut flat = ArchParams::zeros(1, 4);
+        flat.alpha = vec![0.0; 4];
+        let mut sharp = ArchParams::zeros(1, 4);
+        sharp.alpha = vec![10.0, 0.0, 0.0, 0.0];
+        let enabled = vec![true; 4];
+        assert!(sharp.mean_entropy(&enabled) < flat.mean_entropy(&enabled));
+    }
+
+    #[test]
+    fn argmax_ties_break_low_index() {
+        let ap = ArchParams::zeros(1, 3);
+        assert_eq!(ap.argmax(&vec![true; 3]), vec![0]);
+    }
+}

@@ -1,0 +1,33 @@
+//! Architecture derivation: collapse the searched alphas into a discrete
+//! hybrid network (argmax per layer), ready for train-from-scratch and
+//! for the accelerator pipeline.
+
+use super::arch_params::ArchParams;
+use crate::model::Arch;
+use crate::runtime::SupernetManifest;
+use anyhow::Result;
+
+pub fn derive_arch(sn: &SupernetManifest, ap: &ArchParams, name: &str) -> Result<Arch> {
+    let enabled = vec![true; sn.n_cand];
+    let choices = ap.argmax(&enabled);
+    Arch::from_choices(sn, &choices, name)
+}
+
+/// One-hot alpha/mask pair for training or evaluating a fixed choice
+/// vector through the supernet artifacts: masked softmax over a single
+/// enabled candidate is exactly 1.0 regardless of tau/gumbel.
+pub fn onehot_alpha_mask(sn: &SupernetManifest, choices: &[usize]) -> (Vec<f32>, Vec<f32>) {
+    let n = sn.n_layers * sn.n_cand;
+    let mut alpha = vec![0.0f32; n];
+    let mut mask = vec![0.0f32; n];
+    for (l, &c) in choices.iter().enumerate() {
+        alpha[l * sn.n_cand + c] = 0.0;
+        mask[l * sn.n_cand + c] = 1.0;
+    }
+    (alpha, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised against the real manifest in rust/tests/nas_integration.rs.
+}

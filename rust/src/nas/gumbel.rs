@@ -1,0 +1,41 @@
+//! Gumbel-Softmax temperature schedule (Sec. 5.1): tau starts at 5.0 and
+//! decays by 0.956 per epoch, annealing Eq. 7 from near-uniform mixing to
+//! near-discrete sampling.
+
+#[derive(Clone, Copy, Debug)]
+pub struct TauSchedule {
+    pub tau0: f64,
+    pub decay_per_epoch: f64,
+    pub tau_min: f64,
+}
+
+impl Default for TauSchedule {
+    fn default() -> Self {
+        TauSchedule { tau0: 5.0, decay_per_epoch: 0.956, tau_min: 1e-2 }
+    }
+}
+
+impl TauSchedule {
+    pub fn at_epoch(&self, epoch: usize) -> f32 {
+        (self.tau0 * self.decay_per_epoch.powi(epoch as i32)).max(self.tau_min) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_five_and_decays() {
+        let s = TauSchedule::default();
+        assert_eq!(s.at_epoch(0), 5.0);
+        assert!((s.at_epoch(1) - 4.78).abs() < 0.01);
+        assert!(s.at_epoch(50) < s.at_epoch(10));
+    }
+
+    #[test]
+    fn floors_at_min() {
+        let s = TauSchedule::default();
+        assert!(s.at_epoch(100_000) >= 1e-2 - 1e-9);
+    }
+}

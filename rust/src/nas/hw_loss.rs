@@ -1,0 +1,67 @@
+//! Hardware-aware loss cost table (Sec. 3.3, Eq. 5).
+//!
+//! The paper uses FLOPs as the proxy metric, and for shift/adder layers
+//! "first treats them as normal convolutional layers, and then scales the
+//! measured FLOPs down based on the computational cost of shift and adder
+//! layers normalized to that of corresponding multiplications". The
+//! normalization ratios come from the 45nm unit-energy table in accel::pe
+//! (shift and add units vs the 8-bit multiplier).
+//!
+//! cost[l][i] = scaled-FLOPs of candidate i at layer l, normalized by the
+//! largest entry so lambda is scale-free across configs.
+
+use crate::accel::pe::UNIT_ENERGY_45NM;
+use crate::model::arch::push_block;
+use crate::model::ops::layer_op_counts;
+use crate::runtime::SupernetManifest;
+
+/// Energy-normalized op cost ratios vs an 8-bit multiply.
+pub fn op_ratios() -> (f64, f64, f64) {
+    let e = &UNIT_ENERGY_45NM;
+    let mult = e.mult8_pj;
+    (
+        1.0,                     // conv multiply
+        e.shift8_pj / mult,      // bitwise shift
+        e.add8_pj / mult,        // addition
+    )
+}
+
+/// Build the [n_layers x n_cand] hardware cost table (row-major).
+pub fn cost_table(sn: &SupernetManifest) -> Vec<f32> {
+    let (r_mult, r_shift, r_add) = op_ratios();
+    let mut table = vec![0.0f64; sn.n_layers * sn.n_cand];
+    for (l, geom) in sn.layers.iter().enumerate() {
+        for (i, cand) in sn.cands.iter().enumerate() {
+            if cand.is_skip() {
+                continue; // free
+            }
+            let mut layers = Vec::new();
+            push_block(&mut layers, l, cand, geom);
+            let mut cost = 0.0;
+            for ld in &layers {
+                let c = layer_op_counts(ld);
+                cost += c.mult as f64 * r_mult + c.shift as f64 * r_shift + c.add as f64 * r_add;
+            }
+            table[l * sn.n_cand + i] = cost;
+        }
+    }
+    let max = table.iter().cloned().fold(1e-12, f64::max);
+    table.iter().map(|&c| (c / max) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_favor_multiplication_free() {
+        let (m, s, a) = op_ratios();
+        assert_eq!(m, 1.0);
+        assert!(s < 0.5, "shift ratio {s}");
+        assert!(a < 0.5, "add ratio {a}");
+        assert!(s < a, "shift should be cheaper than add at 45nm");
+    }
+    // cost_table itself is exercised against the real manifest in
+    // rust/tests/nas_integration.rs (bigger E/K must cost more; shift
+    // cheaper than conv at equal (E,K); skip free).
+}

@@ -1,0 +1,25 @@
+//! NASA-NAS engine (Sec. 3): the differentiable-NAS outer loop state.
+//!
+//! The L2 graph (AOT HLO) computes loss + gradients; everything stateful
+//! lives here in rust: parameter init, Gumbel-Softmax sampling and
+//! temperature schedule, top-k path masking, the PGP stage machine,
+//! optimizers and lr schedules, the hardware-aware cost table, and final
+//! architecture derivation.
+
+pub mod arch_params;
+pub mod derive;
+pub mod gumbel;
+pub mod hw_loss;
+pub mod optimizer;
+pub mod params;
+pub mod pgp;
+pub mod search_space;
+
+pub use arch_params::ArchParams;
+pub use derive::derive_arch;
+pub use gumbel::TauSchedule;
+pub use hw_loss::cost_table;
+pub use optimizer::{Adam, CosineLr, LrSchedule, MultiStepLr, Sgdm};
+pub use params::{grad_gate, init_params};
+pub use pgp::{PgpSchedule, PgpStage};
+pub use search_space::Space;

@@ -1,0 +1,188 @@
+//! Optimizers + lr schedules for the NAS outer loop (Sec. 5.1 recipes):
+//! SGD-momentum (0.9) for supernet weights, Adam (lr 3e-4, wd 5e-4) for
+//! architecture parameters; cosine decay for hybrid-shift / search, and
+//! the multi-step schedule used when training hybrid-adder/all children.
+//!
+//! All state lives host-side over the flat vectors the AOT step returns
+//! gradients for; a per-parameter `gate` (from the PGP stage machine)
+//! freezes parameter groups by zeroing both update and momentum.
+
+/// SGD with momentum and (coupled) weight decay.
+#[derive(Clone, Debug)]
+pub struct Sgdm {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    v: Vec<f32>,
+}
+
+impl Sgdm {
+    pub fn new(n: usize, momentum: f32, weight_decay: f32) -> Self {
+        Sgdm { momentum, weight_decay, v: vec![0.0; n] }
+    }
+
+    /// w -= lr * v where v = mu*v + (g + wd*w); entries with gate 0 are
+    /// fully frozen (no momentum accumulation either).
+    pub fn step(&mut self, w: &mut [f32], g: &[f32], lr: f32, gate: Option<&[f32]>) {
+        assert_eq!(w.len(), self.v.len());
+        assert_eq!(w.len(), g.len());
+        for i in 0..w.len() {
+            let gt = gate.map_or(1.0, |m| m[i]);
+            if gt == 0.0 {
+                continue;
+            }
+            let grad = g[i] + self.weight_decay * w[i];
+            self.v[i] = self.momentum * self.v[i] + grad;
+            w[i] -= lr * self.v[i];
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.v.fill(0.0);
+    }
+}
+
+/// Adam with bias correction and additive weight decay (paper setting for
+/// architecture parameters).
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(n: usize, weight_decay: f32) -> Self {
+        Adam {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(w.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for i in 0..w.len() {
+            let grad = g[i] + self.weight_decay * w[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad * grad;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            w[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Learning-rate schedules.
+pub trait LrSchedule {
+    fn lr_at(&self, step: usize) -> f32;
+}
+
+/// Cosine decay from lr0 to ~0 over `total` steps.
+#[derive(Clone, Copy, Debug)]
+pub struct CosineLr {
+    pub lr0: f32,
+    pub total: usize,
+}
+
+impl LrSchedule for CosineLr {
+    fn lr_at(&self, step: usize) -> f32 {
+        let t = (step.min(self.total)) as f32 / self.total.max(1) as f32;
+        self.lr0 * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+/// Multi-step decay: x0.1 at each milestone fraction (default 50%, 75%).
+#[derive(Clone, Debug)]
+pub struct MultiStepLr {
+    pub lr0: f32,
+    pub total: usize,
+    pub milestones: Vec<f32>,
+    pub gamma: f32,
+}
+
+impl MultiStepLr {
+    pub fn standard(lr0: f32, total: usize) -> Self {
+        MultiStepLr { lr0, total, milestones: vec![0.5, 0.75], gamma: 0.1 }
+    }
+}
+
+impl LrSchedule for MultiStepLr {
+    fn lr_at(&self, step: usize) -> f32 {
+        let t = step as f32 / self.total.max(1) as f32;
+        let drops = self.milestones.iter().filter(|&&m| t >= m).count() as i32;
+        self.lr0 * self.gamma.powi(drops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgdm_descends_quadratic() {
+        // minimize 0.5*w^2 => grad = w
+        let mut w = vec![10.0f32];
+        let mut opt = Sgdm::new(1, 0.9, 0.0);
+        for _ in 0..200 {
+            let g = vec![w[0]];
+            opt.step(&mut w, &g, 0.05, None);
+        }
+        assert!(w[0].abs() < 0.1, "w={}", w[0]);
+    }
+
+    #[test]
+    fn sgdm_gate_freezes() {
+        let mut w = vec![1.0f32, 1.0];
+        let mut opt = Sgdm::new(2, 0.9, 0.0);
+        let gate = vec![0.0f32, 1.0];
+        opt.step(&mut w, &[1.0, 1.0], 0.1, Some(&gate));
+        assert_eq!(w[0], 1.0);
+        assert!(w[1] < 1.0);
+    }
+
+    #[test]
+    fn sgdm_weight_decay_shrinks() {
+        let mut w = vec![1.0f32];
+        let mut opt = Sgdm::new(1, 0.0, 0.1);
+        opt.step(&mut w, &[0.0], 0.1, None);
+        assert!(w[0] < 1.0);
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut w = vec![5.0f32];
+        let mut opt = Adam::new(1, 0.0);
+        for _ in 0..2000 {
+            let g = vec![w[0]];
+            opt.step(&mut w, &g, 0.01);
+        }
+        assert!(w[0].abs() < 0.1, "w={}", w[0]);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = CosineLr { lr0: 1.0, total: 100 };
+        assert!((s.lr_at(0) - 1.0).abs() < 1e-6);
+        assert!((s.lr_at(50) - 0.5).abs() < 1e-6);
+        assert!(s.lr_at(100) < 1e-6);
+    }
+
+    #[test]
+    fn multistep_drops() {
+        let s = MultiStepLr::standard(1.0, 100);
+        assert_eq!(s.lr_at(10), 1.0);
+        assert!((s.lr_at(60) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(80) - 0.01).abs() < 1e-6);
+    }
+}

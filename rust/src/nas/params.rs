@@ -1,0 +1,50 @@
+//! Flat parameter-vector initialization from the manifest layout.
+//!
+//! The layout (names/shapes/offsets/init specs) is authored by the python
+//! compile path; rust only materializes it. The `gamma_zero` init kind
+//! implements the paper's customized training recipe (Sec. 3.2): the last
+//! BN of every candidate block starts at gamma=0 (BigNAS-style) when the
+//! recipe is enabled, or 1.0 when ablating it (Fig. 7's "w/o recipe").
+
+use crate::runtime::SupernetManifest;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+pub fn init_params(sn: &SupernetManifest, rng: &mut Rng, gamma_zero_recipe: bool) -> Result<Vec<f32>> {
+    let mut flat = vec![0.0f32; sn.n_params];
+    for e in &sn.layout {
+        let dst = &mut flat[e.offset..e.offset + e.size];
+        match e.init_kind.as_str() {
+            "he_normal" => {
+                for v in dst.iter_mut() {
+                    *v = rng.he_normal(e.init_fan_in);
+                }
+            }
+            "const" => dst.fill(e.init_value),
+            "gamma_zero" => dst.fill(if gamma_zero_recipe { 0.0 } else { 1.0 }),
+            other => bail!("unknown init kind '{other}' for {}", e.name),
+        }
+    }
+    Ok(flat)
+}
+
+/// Per-parameter gradient gate from a predicate over layout entries
+/// (1.0 = train, 0.0 = frozen). Used by the PGP stage machine.
+pub fn grad_gate<F: Fn(&crate::runtime::ParamEntry) -> bool>(
+    sn: &SupernetManifest,
+    pred: F,
+) -> Vec<f32> {
+    let mut gate = vec![0.0f32; sn.n_params];
+    for e in &sn.layout {
+        if pred(e) {
+            gate[e.offset..e.offset + e.size].fill(1.0);
+        }
+    }
+    gate
+}
+
+#[cfg(test)]
+mod tests {
+    // init_params is integration-tested against the real manifest in
+    // rust/tests/nas_integration.rs (needs artifacts/).
+}

@@ -1,0 +1,203 @@
+//! The Progressive Pretrain strategy (PGP, Sec. 3.2) as a stage machine.
+//!
+//! PGP pretrains hybrid supernets in three stages to bridge the
+//! Gaussian-vs-Laplacian weight-distribution mismatch between conv and
+//! adder layers (Fig. 2):
+//!   1. conv pretraining            — only conv-family candidate blocks
+//!      forward/backward (plus the shared stem/head),
+//!   2. adder pretraining           — all candidates forward, but only the
+//!      adder-family parameters receive gradients (conv frozen),
+//!   3. mixture pretraining         — everything trains jointly.
+//! After pretraining, the Search stage runs alternating w / alpha updates
+//! with top-k masking.
+//!
+//! The stage machine emits, per step: which candidates are enabled (the
+//! mask multiplied into Eq. 6's masking) and which parameter ltypes get
+//! gradients (the grad gate for the SGDM update). Vanilla pretraining
+//! (the Fig. 7 ablation baseline) is a PgpSchedule with a single Mixture
+//! stage of the full length.
+
+use crate::runtime::{CandSpec, SupernetManifest};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PgpStage {
+    /// Stage 1: conv candidates only; conv + shift + common params train.
+    ConvPretrain,
+    /// Stage 2: all candidates forward; ONLY adder params train.
+    AdderPretrain,
+    /// Stage 3 / vanilla: all candidates, all params train.
+    Mixture,
+    /// DNAS phase: top-k masking active, alternating w/alpha updates.
+    Search,
+}
+
+impl PgpStage {
+    /// Candidate enable mask for this stage (skip stays off during
+    /// focused pretraining so gradients go through compute blocks).
+    pub fn cand_enabled(&self, cands: &[CandSpec]) -> Vec<bool> {
+        cands
+            .iter()
+            .map(|c| match self {
+                // Shift layers are pow2-quantized convs (DeepShift-Q) and
+                // convergence-compatible with conv training (the paper's
+                // hybrid-shift space needs no PGP), so stage 1 trains both.
+                PgpStage::ConvPretrain => c.t == "conv" || c.t == "shift",
+                PgpStage::AdderPretrain | PgpStage::Mixture | PgpStage::Search => true,
+            })
+            .collect()
+    }
+
+    /// Which parameter ltypes receive gradients in this stage.
+    pub fn ltype_trains(&self, ltype: &str) -> bool {
+        match self {
+            PgpStage::ConvPretrain => matches!(ltype, "conv" | "shift" | "common"),
+            PgpStage::AdderPretrain => ltype == "adder",
+            PgpStage::Mixture | PgpStage::Search => true,
+        }
+    }
+
+    /// Alphas only update during Search.
+    pub fn updates_alpha(&self) -> bool {
+        matches!(self, PgpStage::Search)
+    }
+}
+
+/// Epoch-indexed stage plan.
+#[derive(Clone, Debug)]
+pub struct PgpSchedule {
+    /// (stage, epochs) in order.
+    pub stages: Vec<(PgpStage, usize)>,
+}
+
+impl PgpSchedule {
+    /// The paper's PGP pretrain split followed by search. The pretrain
+    /// epochs are split 1/3 conv, 1/3 adder, 1/3 mixture (the paper's 120
+    /// epochs for hybrid-adder ~ 40/40/40).
+    pub fn pgp(pretrain_epochs: usize, search_epochs: usize) -> Self {
+        let third = pretrain_epochs / 3;
+        let last = pretrain_epochs - 2 * third;
+        PgpSchedule {
+            stages: vec![
+                (PgpStage::ConvPretrain, third),
+                (PgpStage::AdderPretrain, third),
+                (PgpStage::Mixture, last),
+                (PgpStage::Search, search_epochs),
+            ],
+        }
+    }
+
+    /// Vanilla FBNet pretraining (the Fig. 7 ablation baseline and the
+    /// sufficient recipe for hybrid-shift): joint pretrain, then search.
+    pub fn vanilla(pretrain_epochs: usize, search_epochs: usize) -> Self {
+        PgpSchedule {
+            stages: vec![
+                (PgpStage::Mixture, pretrain_epochs),
+                (PgpStage::Search, search_epochs),
+            ],
+        }
+    }
+
+    pub fn total_epochs(&self) -> usize {
+        self.stages.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn stage_at(&self, epoch: usize) -> PgpStage {
+        let mut acc = 0;
+        for &(stage, n) in &self.stages {
+            acc += n;
+            if epoch < acc {
+                return stage;
+            }
+        }
+        PgpStage::Search
+    }
+
+    /// Epoch index relative to the start of the Search stage (for the tau
+    /// schedule, which the paper anneals over the search epochs).
+    pub fn search_epoch(&self, epoch: usize) -> Option<usize> {
+        let pre: usize = self
+            .stages
+            .iter()
+            .take_while(|(s, _)| *s != PgpStage::Search)
+            .map(|(_, n)| n)
+            .sum();
+        (epoch >= pre).then(|| epoch - pre)
+    }
+}
+
+/// Build the per-parameter gradient gate for a stage.
+pub fn stage_grad_gate(sn: &SupernetManifest, stage: PgpStage) -> Vec<f32> {
+    super::params::grad_gate(sn, |e| stage.ltype_trains(&e.ltype))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands() -> Vec<CandSpec> {
+        vec![
+            CandSpec { t: "conv".into(), e: 1, k: 3 },
+            CandSpec { t: "shift".into(), e: 1, k: 3 },
+            CandSpec { t: "adder".into(), e: 1, k: 3 },
+            CandSpec { t: "skip".into(), e: 0, k: 0 },
+        ]
+    }
+
+    #[test]
+    fn stage1_enables_conv_shift_only() {
+        let en = PgpStage::ConvPretrain.cand_enabled(&cands());
+        assert_eq!(en, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn stage2_enables_all_but_trains_adder_only() {
+        let en = PgpStage::AdderPretrain.cand_enabled(&cands());
+        assert_eq!(en, vec![true, true, true, true]);
+        assert!(PgpStage::AdderPretrain.ltype_trains("adder"));
+        assert!(!PgpStage::AdderPretrain.ltype_trains("conv"));
+        assert!(!PgpStage::AdderPretrain.ltype_trains("common"));
+    }
+
+    #[test]
+    fn mixture_trains_everything() {
+        for lt in ["conv", "shift", "adder", "common"] {
+            assert!(PgpStage::Mixture.ltype_trains(lt));
+        }
+    }
+
+    #[test]
+    fn schedule_stage_boundaries() {
+        let s = PgpSchedule::pgp(9, 6);
+        assert_eq!(s.total_epochs(), 15);
+        assert_eq!(s.stage_at(0), PgpStage::ConvPretrain);
+        assert_eq!(s.stage_at(2), PgpStage::ConvPretrain);
+        assert_eq!(s.stage_at(3), PgpStage::AdderPretrain);
+        assert_eq!(s.stage_at(6), PgpStage::Mixture);
+        assert_eq!(s.stage_at(9), PgpStage::Search);
+        assert_eq!(s.stage_at(999), PgpStage::Search);
+    }
+
+    #[test]
+    fn search_epoch_offsets() {
+        let s = PgpSchedule::pgp(9, 6);
+        assert_eq!(s.search_epoch(8), None);
+        assert_eq!(s.search_epoch(9), Some(0));
+        assert_eq!(s.search_epoch(12), Some(3));
+    }
+
+    #[test]
+    fn vanilla_is_single_mixture() {
+        let s = PgpSchedule::vanilla(5, 5);
+        assert_eq!(s.stage_at(0), PgpStage::Mixture);
+        assert_eq!(s.stage_at(4), PgpStage::Mixture);
+        assert_eq!(s.stage_at(5), PgpStage::Search);
+    }
+
+    #[test]
+    fn only_search_updates_alpha() {
+        assert!(!PgpStage::ConvPretrain.updates_alpha());
+        assert!(!PgpStage::AdderPretrain.updates_alpha());
+        assert!(!PgpStage::Mixture.updates_alpha());
+        assert!(PgpStage::Search.updates_alpha());
+    }
+}

@@ -1,0 +1,120 @@
+//! Rust-side mirror of the Table 1 search-space enumeration.
+//!
+//! The python compile path is the source of truth (the manifest records
+//! its enumeration), but the coordinator needs to *reason* about spaces —
+//! candidate counts, type membership, space sizes (13^22 / 19^22 in the
+//! paper) — and this module lets integration tests cross-verify that the
+//! two sides never drift.
+
+use crate::runtime::{CandSpec, SupernetManifest};
+use anyhow::{bail, Result};
+
+/// The (E, K) grid of Table 1.
+pub const EK_CHOICES: [(usize, usize); 6] = [(1, 3), (3, 3), (6, 3), (1, 5), (3, 5), (6, 5)];
+
+/// The four search spaces of the reproduction (conv_only = FBNet baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Space {
+    ConvOnly,
+    HybridShift,
+    HybridAdder,
+    HybridAll,
+}
+
+impl Space {
+    pub fn parse(s: &str) -> Result<Space> {
+        Ok(match s {
+            "conv_only" => Space::ConvOnly,
+            "hybrid_shift" => Space::HybridShift,
+            "hybrid_adder" => Space::HybridAdder,
+            "hybrid_all" => Space::HybridAll,
+            _ => bail!("unknown space '{s}'"),
+        })
+    }
+
+    pub fn types(&self) -> &'static [&'static str] {
+        match self {
+            Space::ConvOnly => &["conv"],
+            Space::HybridShift => &["conv", "shift"],
+            Space::HybridAdder => &["conv", "adder"],
+            Space::HybridAll => &["conv", "shift", "adder"],
+        }
+    }
+
+    /// Candidates per searchable layer: |EK| * |T| + 1 skip (Sec. 3.1).
+    pub fn n_cand(&self) -> usize {
+        EK_CHOICES.len() * self.types().len() + 1
+    }
+
+    /// The full ordered enumeration (must match python's `candidates()`).
+    pub fn candidates(&self) -> Vec<CandSpec> {
+        let mut v = Vec::with_capacity(self.n_cand());
+        for t in self.types() {
+            for (e, k) in EK_CHOICES {
+                v.push(CandSpec { t: t.to_string(), e, k });
+            }
+        }
+        v.push(CandSpec { t: "skip".into(), e: 0, k: 0 });
+        v
+    }
+
+    /// log10 of the architecture-space size n_cand^n_layers (the paper
+    /// quotes 13^22 and 19^22; exact values overflow u64 comfortably).
+    pub fn log10_size(&self, n_layers: usize) -> f64 {
+        n_layers as f64 * (self.n_cand() as f64).log10()
+    }
+
+    /// Verify a manifest's enumeration matches this space exactly.
+    pub fn verify_manifest(&self, sn: &SupernetManifest) -> Result<()> {
+        let want = self.candidates();
+        if sn.cands.len() != want.len() {
+            bail!("manifest has {} candidates, space wants {}", sn.cands.len(), want.len());
+        }
+        for (i, (a, b)) in sn.cands.iter().zip(&want).enumerate() {
+            if a != b {
+                bail!("candidate {i} mismatch: manifest {a:?} vs space {b:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_counts_match_paper() {
+        assert_eq!(Space::ConvOnly.n_cand(), 7);
+        assert_eq!(Space::HybridShift.n_cand(), 13);
+        assert_eq!(Space::HybridAdder.n_cand(), 13);
+        assert_eq!(Space::HybridAll.n_cand(), 19);
+    }
+
+    #[test]
+    fn paper_space_sizes() {
+        // Paper: 13^22 and 19^22 potential architectures.
+        let s13 = Space::HybridShift.log10_size(22);
+        let s19 = Space::HybridAll.log10_size(22);
+        assert!((s13 - 22.0 * 13f64.log10()).abs() < 1e-12);
+        assert!(s19 > s13);
+        // 19^22 ~ 1.4e28
+        assert!((s19 - 28.15).abs() < 0.1, "log10(19^22)={s19}");
+    }
+
+    #[test]
+    fn enumeration_order_types_then_ek_then_skip() {
+        let c = Space::HybridAll.candidates();
+        assert_eq!(c[0].t, "conv");
+        assert_eq!((c[0].e, c[0].k), (1, 3));
+        assert_eq!(c[6].t, "shift");
+        assert_eq!(c[12].t, "adder");
+        assert!(c[18].is_skip());
+    }
+
+    #[test]
+    fn parse_rejects_unknown() {
+        assert!(Space::parse("hybrid_all").is_ok());
+        assert!(Space::parse("mystery").is_err());
+    }
+}

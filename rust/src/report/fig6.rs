@@ -1,0 +1,74 @@
+//! Fig. 6: accuracy-vs-EDP comparison of NASA (searched hybrid on the
+//! chunk accelerator with auto-mapper) against SOTA baselines:
+//! FBNet-on-Eyeriss(MAC), DeepShift-on-Eyeriss(Shift),
+//! AdderNet-on-Eyeriss(Adder) and AdderNet-on-[21].
+
+use crate::coordinator::RunLog;
+use anyhow::Result;
+use std::path::Path;
+
+/// One scatter point of Fig. 6.
+#[derive(Clone, Debug)]
+pub struct Fig6Point {
+    pub system: String,
+    pub acc: f64,
+    pub edp_pj_s: f64,
+}
+
+pub fn print_points(points: &[Fig6Point]) {
+    let mut t = super::Table::new(&["System", "Accuracy", "EDP (pJ*s)", "vs FBNet EDP"]);
+    let fbnet_edp = points
+        .iter()
+        .find(|p| p.system.to_lowercase().contains("fbnet"))
+        .map(|p| p.edp_pj_s);
+    for p in points {
+        let rel = fbnet_edp
+            .map(|f| format!("{:+.1}%", (p.edp_pj_s / f - 1.0) * 100.0))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            p.system.clone(),
+            format!("{:.2}%", p.acc * 100.0),
+            format!("{:.3e}", p.edp_pj_s),
+            rel,
+        ]);
+    }
+    println!("\n== Fig. 6 (reproduction): accuracy vs EDP ==");
+    println!("(paper shape: NASA matches/exceeds FBNet accuracy at 50-60% lower EDP,");
+    println!(" and dominates multiplication-free baselines on accuracy at similar EDP)\n");
+    t.print();
+}
+
+pub fn points_to_log(points: &[Fig6Point], name: &str) -> RunLog {
+    let mut log = RunLog::new(name);
+    for p in points {
+        log.curve_mut(&format!("{}__acc_edp", p.system)).push(p.edp_pj_s, p.acc);
+    }
+    log
+}
+
+pub fn print_from_dir(runs: &Path) -> Result<()> {
+    let logs = super::load_runs(runs)?;
+    let mut points = Vec::new();
+    for log in &logs {
+        if !log.name.starts_with("fig6") {
+            continue;
+        }
+        for c in &log.curves {
+            if let Some(system) = c.name.strip_suffix("__acc_edp") {
+                for (x, y) in c.xs.iter().zip(&c.ys) {
+                    points.push(Fig6Point {
+                        system: system.to_string(),
+                        acc: *y,
+                        edp_pj_s: *x,
+                    });
+                }
+            }
+        }
+    }
+    if points.is_empty() {
+        println!("(no fig6_* runs yet — run `cargo bench --bench fig6_nasa_vs_sota`)");
+        return Ok(());
+    }
+    print_points(&points);
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Fig. 7: PGP ablation — training trajectories of hybrid-adder and
+//! hybrid-all supernets under vanilla pretraining vs PGP (with the
+//! customized recipe). The paper's shape: vanilla stalls/diverges, PGP
+//! converges; the big lr + gamma-zero recipe accelerates convergence.
+
+use crate::coordinator::{sparkline, RunLog};
+use anyhow::Result;
+use std::path::Path;
+
+pub fn print_runs(runs: &[&RunLog]) {
+    println!("\n== Fig. 7 (reproduction): PGP ablation trajectories ==");
+    println!("(paper shape: vanilla pretrain fails to converge on adder-bearing");
+    println!(" spaces; PGP converges and reaches higher accuracy)\n");
+    let mut t = super::Table::new(&[
+        "Run", "final loss", "final acc", "diverged?", "loss curve",
+    ]);
+    for log in runs {
+        let loss = log.curve("train_loss");
+        let acc = log.curve("train_acc");
+        t.row(vec![
+            log.name.clone(),
+            loss.map(|c| format!("{:.3}", c.tail_mean(3))).unwrap_or_else(|| "-".into()),
+            acc.map(|c| format!("{:.3}", c.tail_mean(3))).unwrap_or_else(|| "-".into()),
+            loss.map(|c| if c.diverged() { "YES".into() } else { "no".to_string() })
+                .unwrap_or_else(|| "-".into()),
+            loss.map(|c| sparkline(&c.ys, 32)).unwrap_or_default(),
+        ]);
+    }
+    t.print();
+}
+
+pub fn print_from_dir(runs_dir: &Path) -> Result<()> {
+    let logs = super::load_runs(runs_dir)?;
+    let picked: Vec<&RunLog> = logs
+        .iter()
+        .filter(|l| l.name.starts_with("fig7") || l.name.starts_with("search_"))
+        .collect();
+    if picked.is_empty() {
+        println!("(no fig7_*/search_* runs yet — run `cargo bench --bench fig7_pgp_ablation`)");
+        return Ok(());
+    }
+    print_runs(&picked);
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Fig. 8: auto-mapper vs expert all-RS mapping — EDP per searched model,
+//! including the "fixed RS fails to map" cases (green dotted line in the
+//! paper).
+
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Fig8Row {
+    pub model: String,
+    pub rs_edp: Option<f64>,
+    pub auto_edp: f64,
+    pub auto_df: String,
+    pub infeasible_combos: usize,
+}
+
+pub fn print_rows(rows: &[Fig8Row]) {
+    println!("\n== Fig. 8 (reproduction): auto-mapper vs expert RS dataflow ==");
+    println!("(paper shape: auto-mapper always <= RS, up to 25-42% EDP saving;");
+    println!(" some models: RS infeasible under the shared-buffer budget)\n");
+    let mut t = super::Table::new(&[
+        "Model", "RS EDP", "Auto EDP", "Saving", "Best dataflows", "#infeasible",
+    ]);
+    for r in rows {
+        let (rs, saving) = match r.rs_edp {
+            Some(rs) => (
+                format!("{rs:.3e}"),
+                format!("{:.1}%", (1.0 - r.auto_edp / rs) * 100.0),
+            ),
+            None => ("INFEASIBLE".into(), "-".into()),
+        };
+        t.row(vec![
+            r.model.clone(),
+            rs,
+            format!("{:.3e}", r.auto_edp),
+            saving,
+            r.auto_df.clone(),
+            r.infeasible_combos.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+pub fn rows_to_log(rows: &[Fig8Row], name: &str) -> crate::coordinator::RunLog {
+    let mut log = crate::coordinator::RunLog::new(name);
+    for (i, r) in rows.iter().enumerate() {
+        log.curve_mut("auto_edp").push(i as f64, r.auto_edp);
+        log.curve_mut("rs_edp")
+            .push(i as f64, r.rs_edp.unwrap_or(f64::NAN));
+        log.note(&format!("model_{i}"), &r.model);
+        log.note(&format!("auto_df_{i}"), &r.auto_df);
+    }
+    log
+}
+
+pub fn print_from_dir(runs: &Path) -> Result<()> {
+    let logs = super::load_runs(runs)?;
+    let mut rows = Vec::new();
+    for log in &logs {
+        if !log.name.starts_with("fig8") {
+            continue;
+        }
+        let auto = log.curve("auto_edp");
+        let rs = log.curve("rs_edp");
+        if let (Some(auto), Some(rs)) = (auto, rs) {
+            for i in 0..auto.ys.len() {
+                let model = log
+                    .notes
+                    .iter()
+                    .find(|(k, _)| k == &format!("model_{i}"))
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_else(|| format!("model {i}"));
+                let auto_df = log
+                    .notes
+                    .iter()
+                    .find(|(k, _)| k == &format!("auto_df_{i}"))
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_default();
+                rows.push(Fig8Row {
+                    model,
+                    rs_edp: rs.ys.get(i).copied().filter(|v| v.is_finite()),
+                    auto_edp: auto.ys[i],
+                    auto_df,
+                    infeasible_combos: 0,
+                });
+            }
+        }
+    }
+    if rows.is_empty() {
+        println!("(no fig8_* runs yet — run `cargo bench --bench fig8_automapper`)");
+        return Ok(());
+    }
+    print_rows(&rows);
+    Ok(())
+}

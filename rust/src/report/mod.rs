@@ -1,0 +1,98 @@
+//! Paper-style table/figure printers. Each submodule regenerates the
+//! rows/series of one exhibit from the paper's evaluation (Sec. 5),
+//! reading the JSON run logs the coordinator/benches save under runs/.
+
+pub mod fig2;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table2;
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::Path;
+
+/// Load every RunLog JSON in a directory (sorted by name).
+pub fn load_runs(dir: &Path) -> Result<Vec<crate::coordinator::RunLog>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    let mut paths: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "json"))
+        .collect();
+    paths.sort();
+    for p in paths {
+        // Skip non-RunLog JSONs (e.g. arch files) quietly.
+        if let Ok(log) = crate::coordinator::RunLog::load(&p) {
+            out.push(log);
+        }
+    }
+    Ok(out)
+}
+
+/// Load every Arch JSON in a directory.
+pub fn load_archs(dir: &Path) -> Result<Vec<crate::model::Arch>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    let mut paths: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .is_some_and(|n| n.to_string_lossy().starts_with("arch_"))
+        })
+        .collect();
+    paths.sort();
+    for p in paths {
+        if let Ok(j) = Json::parse_file(&p) {
+            if let Ok(a) = crate::model::Arch::from_json(&j) {
+                out.push(a);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute many
+//! times from the coordinator hot loop.
+
+use super::manifest::ArtifactIo;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A compiled artifact plus its expected input signature (shape checking
+/// on every call — a mismatched literal aborts deep inside PJRT otherwise).
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    input_shapes: Vec<(Vec<usize>, String)>,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "{}: got {} inputs, artifact wants {}",
+                self.name,
+                inputs.len(),
+                self.input_shapes.len()
+            );
+        }
+        for (i, (lit, (shape, _dty))) in inputs.iter().zip(&self.input_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            let got = lit.element_count();
+            if want != got {
+                bail!("{}: input {i} has {got} elements, artifact wants {want} {shape:?}",
+                    self.name);
+            }
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("{}: fetching result", self.name))?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.input_shapes.len()
+    }
+
+    pub fn input_shape(&self, i: usize) -> &[usize] {
+        &self.input_shapes[i].0
+    }
+}
+
+/// The PJRT engine: one CPU client, a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, std::sync::Arc<Executable>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        // The xla_extension 0.5.1 CPU backend compiles our multi-MB AOT
+        // graphs through ONE huge LLVM module; at the default LLVM -O2 the
+        // supernet step takes >5 minutes to compile vs ~16s at -O0 with a
+        // modest execution-speed hit. Default to -O0 (override by
+        // exporting NASA_XLA_OPT=1|2 before the process starts; XLA reads
+        // the flag once at client creation).
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            let lvl = std::env::var("NASA_XLA_OPT").unwrap_or_else(|_| "0".into());
+            std::env::set_var(
+                "XLA_FLAGS",
+                format!("--xla_backend_optimization_level={lvl}"),
+            );
+        }
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, dir: &Path, io: &ArtifactIo) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.get(&io.path) {
+            return Ok(e.clone());
+        }
+        let full = dir.join(&io.path);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            full.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", full.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", full.display()))?;
+        let e = std::sync::Arc::new(Executable {
+            name: io.path.clone(),
+            exe,
+            input_shapes: io.input_shapes.clone(),
+        });
+        eprintln!(
+            "[engine] compiled {} in {:.1}s",
+            io.path,
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache.insert(io.path.clone(), e.clone());
+        Ok(e)
+    }
+}

@@ -1,0 +1,271 @@
+//! The artifact manifest: the single source of truth, written by
+//! python/compile/aot.py, that tells the rust side every parameter
+//! tensor's layout, the candidate enumeration per search space, per-layer
+//! geometry (for op counting / hw-cost tables) and artifact I/O shapes.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor inside the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// "he_normal" (with fan_in), "const" (with value) or "gamma_zero".
+    pub init_kind: String,
+    pub init_fan_in: usize,
+    pub init_value: f32,
+    /// "conv" | "shift" | "adder" | "common" — drives PGP gating.
+    pub ltype: String,
+    /// Searchable layer index, -1 for stem/head.
+    pub layer: i64,
+}
+
+/// One candidate block spec (Table 1 row).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CandSpec {
+    /// "conv" | "shift" | "adder" | "skip"
+    pub t: String,
+    pub e: usize,
+    pub k: usize,
+}
+
+impl CandSpec {
+    pub fn is_skip(&self) -> bool {
+        self.t == "skip"
+    }
+}
+
+/// Geometry of one searchable layer (drives op counting).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerGeom {
+    pub cin: usize,
+    pub cout: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub h_out: usize,
+    pub w_out: usize,
+    pub stride: usize,
+}
+
+/// I/O spec of one HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactIo {
+    pub path: String,
+    pub input_shapes: Vec<(Vec<usize>, String)>,
+}
+
+/// Everything rust needs about one lowered supernet (one space × dataset).
+#[derive(Clone, Debug)]
+pub struct SupernetManifest {
+    pub key: String,
+    pub space: String,
+    pub n_layers: usize,
+    pub n_cand: usize,
+    pub cands: Vec<CandSpec>,
+    pub layers: Vec<LayerGeom>,
+    pub n_params: usize,
+    pub layout: Vec<ParamEntry>,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub stem_ch: usize,
+    pub stem_k: usize,
+    pub head_ch: usize,
+    pub step: ArtifactIo,
+    pub eval: ArtifactIo,
+    pub eval_quant: ArtifactIo,
+}
+
+impl SupernetManifest {
+    pub fn entry(&self, name: &str) -> Result<&ParamEntry> {
+        self.layout
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no param entry '{name}'"))
+    }
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub supernets: BTreeMap<String, SupernetManifest>,
+    pub fixed_child: Option<FixedChild>,
+    pub kernels: BTreeMap<String, ArtifactIo>,
+}
+
+#[derive(Clone, Debug)]
+pub struct FixedChild {
+    pub arch: Vec<CandSpec>,
+    pub space_key: String,
+    pub cand_indices: Vec<usize>,
+    pub pallas: ArtifactIo,
+    pub jnp: ArtifactIo,
+}
+
+fn parse_io(j: &Json) -> Result<ArtifactIo> {
+    let mut shapes = Vec::new();
+    for inp in j.req("inputs")?.as_arr()? {
+        let shape = inp
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        shapes.push((shape, inp.req("dtype")?.as_str()?.to_string()));
+    }
+    Ok(ArtifactIo {
+        path: j.req("path")?.as_str()?.to_string(),
+        input_shapes: shapes,
+    })
+}
+
+fn parse_cand(j: &Json) -> Result<CandSpec> {
+    let t = j.req("t")?.as_str()?.to_string();
+    if t == "skip" {
+        return Ok(CandSpec { t, e: 0, k: 0 });
+    }
+    Ok(CandSpec {
+        t,
+        e: j.req("e")?.as_usize()?,
+        k: j.req("k")?.as_usize()?,
+    })
+}
+
+fn parse_layout_entry(j: &Json) -> Result<ParamEntry> {
+    let init = j.req("init")?;
+    let kind = init.req("kind")?.as_str()?.to_string();
+    Ok(ParamEntry {
+        name: j.req("name")?.as_str()?.to_string(),
+        shape: j
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        offset: j.req("offset")?.as_usize()?,
+        size: j.req("size")?.as_usize()?,
+        init_fan_in: init.get("fan_in").map(|v| v.as_usize()).transpose()?.unwrap_or(0),
+        init_value: init.get("value").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0) as f32,
+        init_kind: kind,
+        ltype: j.req("ltype")?.as_str()?.to_string(),
+        layer: j.req("layer")?.as_i64()?,
+    })
+}
+
+fn parse_supernet(key: &str, j: &Json) -> Result<SupernetManifest> {
+    let lay = j.req("layout")?;
+    let mut layers = Vec::new();
+    for lj in lay.req("layers")?.as_arr()? {
+        layers.push(LayerGeom {
+            cin: lj.req("cin")?.as_usize()?,
+            cout: lj.req("cout")?.as_usize()?,
+            h_in: lj.req("h_in")?.as_usize()?,
+            w_in: lj.req("w_in")?.as_usize()?,
+            h_out: lj.req("h_out")?.as_usize()?,
+            w_out: lj.req("w_out")?.as_usize()?,
+            stride: lj.req("stride")?.as_usize()?,
+        });
+    }
+    let cands = lay
+        .req("cands")?
+        .as_arr()?
+        .iter()
+        .map(parse_cand)
+        .collect::<Result<Vec<_>>>()?;
+    let layout = lay
+        .req("param_layout")?
+        .as_arr()?
+        .iter()
+        .map(parse_layout_entry)
+        .collect::<Result<Vec<_>>>()?;
+    // Sanity: offsets must tile the flat vector contiguously.
+    let mut expect = 0usize;
+    for e in &layout {
+        if e.offset != expect {
+            bail!("layout hole at '{}': offset {} != {}", e.name, e.offset, expect);
+        }
+        expect += e.size;
+    }
+    let n_params = lay.req("n_params")?.as_usize()?;
+    if expect != n_params {
+        bail!("layout total {expect} != n_params {n_params}");
+    }
+    Ok(SupernetManifest {
+        key: key.to_string(),
+        space: lay.req("space")?.as_str()?.to_string(),
+        n_layers: lay.req("n_layers")?.as_usize()?,
+        n_cand: lay.req("n_cand")?.as_usize()?,
+        cands,
+        layers,
+        n_params,
+        layout,
+        num_classes: lay.req("num_classes")?.as_usize()?,
+        batch: lay.req("batch")?.as_usize()?,
+        input_hw: lay.req("input_hw")?.as_usize()?,
+        input_ch: lay.req("input_ch")?.as_usize()?,
+        stem_ch: lay.req("stem")?.req("ch")?.as_usize()?,
+        stem_k: lay.req("stem")?.req("k")?.as_usize()?,
+        head_ch: lay.req("head")?.req("ch")?.as_usize()?,
+        step: parse_io(j.req("step")?)?,
+        eval: parse_io(j.req("eval")?)?,
+        eval_quant: parse_io(j.req("eval_quant")?)?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let mut supernets = BTreeMap::new();
+        for (key, sj) in j.req("supernets")?.as_obj()? {
+            supernets.insert(key.clone(), parse_supernet(key, sj)?);
+        }
+        let fixed_child = match j.get("fixed_child") {
+            Some(fc) if fc.get("arch").is_some() => Some(FixedChild {
+                arch: fc
+                    .req("arch")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_cand)
+                    .collect::<Result<Vec<_>>>()?,
+                space_key: fc.req("space_key")?.as_str()?.to_string(),
+                cand_indices: fc
+                    .req("cand_indices")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+                pallas: parse_io(fc.req("pallas")?)?,
+                jnp: parse_io(fc.req("jnp")?)?,
+            }),
+            _ => None,
+        };
+        let mut kernels = BTreeMap::new();
+        if let Some(k) = j.get("kernels") {
+            for (name, kj) in k.as_obj()? {
+                if kj.get("path").is_some() {
+                    kernels.insert(name.clone(), parse_io(kj)?);
+                }
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), supernets, fixed_child, kernels })
+    }
+
+    pub fn supernet(&self, key: &str) -> Result<&SupernetManifest> {
+        self.supernets
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest has no supernet '{key}' (have: {:?})",
+                self.supernets.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, io: &ArtifactIo) -> PathBuf {
+        self.dir.join(&io.path)
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 runtime: load AOT-compiled HLO artifacts and execute them via PJRT.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards this
+//! module is the only bridge to the compute graphs. Interchange is HLO
+//! *text* (see python/compile/aot.py for why not serialized protos).
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactIo, CandSpec, LayerGeom, Manifest, ParamEntry, SupernetManifest};
+pub use tensor::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, HostTensor};

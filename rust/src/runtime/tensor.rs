@@ -1,0 +1,91 @@
+//! Host-side tensor helpers: flat `Vec<f32>` + shape, and conversions to
+//! and from `xla::Literal`.
+
+use anyhow::{bail, Result};
+
+/// A host tensor: flat row-major f32 data + shape. The NAS coordinator
+/// keeps every model/optimizer state in this form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(HostTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        lit_f32(&self.shape, &self.data)
+    }
+}
+
+/// Build an f32 literal of the given shape from flat data.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: shape {:?} wants {} elems, got {}", shape, n, data.len());
+    }
+    let l = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if shape.is_empty() {
+        // rank-0 scalar
+        return Ok(l.reshape(&[])?);
+    }
+    Ok(l.reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: shape {:?} wants {} elems, got {}", shape, n, data.len());
+    }
+    let l = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    if shape.is_empty() {
+        return Ok(l.reshape(&[])?);
+    }
+    Ok(l.reshape(&dims)?)
+}
+
+/// Rank-0 f32 scalar literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read an f32 literal back into a flat Vec.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        assert!(HostTensor::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(HostTensor::zeros(&[4, 5]).numel(), 20);
+        assert_eq!(HostTensor::scalar(2.5).data, vec![2.5]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Micro-benchmark substrate (criterion is unavailable offline).
+//!
+//! `Bench` runs warmup + timed iterations, reports mean/median/p95/stddev,
+//! and emits both a human table row and a machine-readable JSON line so
+//! bench output can be diffed across the EXPERIMENTS.md §Perf iterations.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            target_time: Duration::from_secs(2),
+        }
+    }
+
+    pub fn quick(name: &str) -> Self {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 100,
+            target_time: Duration::from_millis(500),
+            ..Bench::new(name)
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.target_time && samples.len() < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats::from_samples(&self.name, &samples);
+        println!("{}", stats.human_row());
+        println!("{}", stats.json_line());
+        stats
+    }
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, samples: &[f64]) -> Stats {
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| sorted[((n as f64 * p) as usize).min(n - 1)];
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            stddev_ns: var.sqrt(),
+        }
+    }
+
+    pub fn human_row(&self) -> String {
+        format!(
+            "{:<48} {:>12} {:>12} {:>12} {:>8}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"bench\":\"{}\",\"mean_ns\":{:.1},\"median_ns\":{:.1},\"p95_ns\":{:.1},\"stddev_ns\":{:.1},\"iters\":{}}}",
+            self.name, self.mean_ns, self.median_ns, self.p95_ns, self.stddev_ns, self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<48} {:>12} {:>12} {:>12} {:>8}",
+        "benchmark", "mean", "median", "p95", "iters"
+    );
+    println!("{}", "-".repeat(96));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let s = Stats::from_samples("t", &[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean_ns - 22.0).abs() < 1e-9);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.p95_ns, 100.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut hits = 0usize;
+        let b = Bench {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            target_time: Duration::from_millis(1),
+            name: "noop".into(),
+        };
+        let s = b.run(|| hits += 1);
+        assert_eq!(s.iters, 5);
+        assert_eq!(hits, 6); // warmup + 5
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny CLI argument substrate (clap is unavailable offline).
+//!
+//! Grammar: `nasa <subcommand> [--key value]... [--flag]...`. Unknown keys
+//! are collected and reported, typed getters parse on demand.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Keys read by the program; used to report unknown options.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut a = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if iter.peek().is_some_and(|n| !n.starts_with("--")) {
+                    a.opts.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    a.flags.push(key.to_string());
+                }
+            } else if a.subcommand.is_none() {
+                a.subcommand = Some(tok);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    /// Options/flags never read by any getter — catches typos.
+    pub fn unknown(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse("search --space hybrid_all --steps 100 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.get("space"), Some("hybrid_all"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --lr=0.05");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.05);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("run");
+        assert_eq!(a.str_or("x", "d"), "d");
+        assert!(a.require("x").is_err());
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = parse("run --known 1 --typo 2");
+        let _ = a.get("known");
+        assert_eq!(a.unknown(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("run --delta -3.5");
+        // "-3.5" doesn't start with "--" so it is consumed as a value
+        assert_eq!(a.f64_or("delta", 0.0).unwrap(), -3.5);
+    }
+}

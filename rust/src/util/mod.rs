@@ -1,0 +1,9 @@
+//! From-scratch substrates: the offline environment only ships the `xla`
+//! crate's dependency closure, so RNG, JSON, CLI parsing, thread-pool
+//! parallelism and the bench harness are all implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod rng;

@@ -1,0 +1,105 @@
+//! Scoped-thread parallelism substrate (rayon is unavailable offline).
+//!
+//! `par_map` fans a work list across `available_parallelism()` OS threads
+//! with striped assignment (good load balance for heterogeneous items like
+//! mapper tiling candidates) and returns results in input order.
+
+/// Parallel map preserving input order. Falls back to sequential for tiny
+/// inputs where thread spawn overhead would dominate.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n.max(1));
+    if n < 2 || threads < 2 {
+        return items.iter().map(&f).collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let f = &f;
+            let out_ptr = &out_ptr;
+            s.spawn(move || {
+                let mut i = t;
+                while i < n {
+                    let r = f(&items[i]);
+                    // SAFETY: each index i is written by exactly one thread
+                    // (striped by t), and `out` outlives the scope.
+                    unsafe { *out_ptr.0.add(i) = Some(r) };
+                    i += threads;
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("par_map slot")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: raw pointer shipped across scoped threads; disjoint writes only.
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Parallel fold: map each item then reduce with `combine` (associative).
+pub fn par_fold<T, A, F, C>(items: &[T], init: A, f: F, combine: C) -> A
+where
+    T: Sync,
+    A: Send + Clone,
+    F: Fn(A, &T) -> A + Sync,
+    C: Fn(A, A) -> A,
+{
+    let n = items.len();
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n.max(1));
+    if n < 2 || threads < 2 {
+        return items.iter().fold(init, f);
+    }
+    let chunk = n.div_ceil(threads);
+    let mut partials: Vec<A> = std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| {
+                let f = &f;
+                let init = init.clone();
+                s.spawn(move || c.iter().fold(init, f))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("par_fold")).collect()
+    });
+    let first = partials.remove(0);
+    partials.into_iter().fold(first, combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_sequential() {
+        let items: Vec<u64> = (0..1000).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x * x).collect();
+        assert_eq!(par_map(&items, |x| x * x), seq);
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert_eq!(par_map::<u32, u32, _>(&[], |x| *x), Vec::<u32>::new());
+        assert_eq!(par_map(&[7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_fold_sums() {
+        let items: Vec<u64> = (1..=10_000).collect();
+        let total = par_fold(&items, 0u64, |a, x| a + x, |a, b| a + b);
+        assert_eq!(total, 10_000 * 10_001 / 2);
+    }
+}

@@ -1,0 +1,190 @@
+//! Integration: the accelerator + mapper stack on realistic archs —
+//! the qualitative claims of Sec. 5.2/5.4 as assertions.
+
+use nasa::accel::{
+    addernet_accel, allocate, allocate_equal, AreaBudget, ChunkAccelerator, EyerissSim,
+    Mapping, MemoryConfig, PeKind, UNIT_ENERGY_45NM,
+};
+use nasa::mapper::{auto_map, MapperConfig};
+use nasa::model::zoo::{mobilenet_v2_like, resnet32_adder_like};
+use nasa::model::{Arch, OpKind, QuantSpec};
+
+fn budget() -> AreaBudget {
+    AreaBudget::macs_equivalent(168, &UNIT_ENERGY_45NM)
+}
+
+/// A representative NASA-searched hybrid at the reproduction scale.
+fn hybrid_arch() -> Arch {
+    use nasa::model::LayerDesc;
+    let mk = |name: &str, kind, cin: usize, cout: usize, hw: usize, k: usize, stride, groups| LayerDesc {
+        name: name.into(),
+        kind,
+        cin,
+        cout,
+        h_out: hw,
+        w_out: hw,
+        k,
+        stride,
+        groups,
+    };
+    let mut layers = vec![mk("stem", OpKind::Conv, 3, 16, 16, 3, 1, 1)];
+    let plan: [(OpKind, usize, usize, usize, usize); 6] = [
+        (OpKind::Conv, 16, 16, 16, 3),
+        (OpKind::Shift, 16, 24, 8, 3),
+        (OpKind::Adder, 24, 24, 8, 5),
+        (OpKind::Conv, 24, 32, 4, 5),
+        (OpKind::Shift, 32, 32, 4, 3),
+        (OpKind::Adder, 32, 64, 4, 3),
+    ];
+    for (i, (kind, cin, cout, hw, k)) in plan.iter().enumerate() {
+        let mid = cin * 3;
+        layers.push(mk(&format!("L{i}/pw1"), *kind, *cin, mid, *hw, 1, 1, 1));
+        layers.push(mk(&format!("L{i}/dw"), *kind, mid, mid, *hw, *k, 1, mid));
+        layers.push(mk(&format!("L{i}/pw2"), *kind, mid, *cout, *hw, 1, 1, 1));
+    }
+    layers.push(mk("head", OpKind::Conv, 64, 128, 4, 1, 1, 1));
+    layers.push(mk("fc", OpKind::Conv, 128, 10, 1, 1, 1, 1));
+    Arch { name: "hybrid_repr".into(), layers, choices: vec![] }
+}
+
+fn nasa_accel(arch: &Arch, mem: MemoryConfig) -> ChunkAccelerator {
+    let costs = UNIT_ENERGY_45NM;
+    ChunkAccelerator::new(allocate(arch, budget(), &costs), mem, costs)
+}
+
+#[test]
+fn hybrid_on_nasa_beats_hybrid_on_eyeriss_mac() {
+    // The core co-design claim: the chunk accelerator + auto-mapper beat a
+    // monolithic MAC array running the same hybrid model.
+    let arch = hybrid_arch();
+    let q = QuantSpec::default();
+    let accel = nasa_accel(&arch, MemoryConfig::default());
+    let best = auto_map(&accel, &arch, &q, &MapperConfig::default())
+        .best
+        .expect("feasible mapping")
+        .1;
+    let eyeriss = EyerissSim::with_budget(
+        PeKind::Mac,
+        budget().total_um2,
+        MemoryConfig::default(),
+        UNIT_ENERGY_45NM,
+    );
+    let base = eyeriss.simulate(&arch, &q).unwrap();
+    let nasa_edp = best.edp(250e6);
+    let eyeriss_edp = base.edp(250e6);
+    // Fig. 6 shape: NASA gets a large EDP reduction (the paper reports
+    // 51.5-59.7% vs FBNet-on-Eyeriss; we accept >=30% as the qualitative
+    // ordering at this reproduction scale).
+    assert!(
+        nasa_edp < eyeriss_edp * 0.7,
+        "NASA {nasa_edp:.3e} should be well below Eyeriss {eyeriss_edp:.3e}"
+    );
+}
+
+#[test]
+fn eq8_allocation_beats_equal_split() {
+    // Ablation of the PE allocation strategy (Eq. 8).
+    let arch = hybrid_arch();
+    let q = QuantSpec::default();
+    let costs = UNIT_ENERGY_45NM;
+    let prop = ChunkAccelerator::new(allocate(&arch, budget(), &costs), MemoryConfig::default(), costs);
+    let eq = ChunkAccelerator::new(
+        allocate_equal(&arch, budget(), &costs),
+        MemoryConfig::default(),
+        costs,
+    );
+    let m = Mapping::all_rs(arch.layers.len());
+    let sp = prop.simulate(&arch, &m, &q).unwrap();
+    let se = eq.simulate(&arch, &m, &q).unwrap();
+    // Eq. 8 balances chunk latencies -> shorter pipeline period.
+    assert!(
+        sp.period_cycles <= se.period_cycles * 1.05,
+        "prop {} vs equal {}",
+        sp.period_cycles,
+        se.period_cycles
+    );
+    assert!(sp.balance() > se.balance() * 0.9);
+}
+
+#[test]
+fn multiplication_free_baselines_on_matching_eyeriss() {
+    // DeepShift on Shift-Eyeriss must beat conv-MBv2 on MAC-Eyeriss in
+    // energy; AdderNet likewise (Sec. 5.2's baseline setup).
+    let q = QuantSpec::default();
+    let mem = MemoryConfig::default();
+    let c = UNIT_ENERGY_45NM;
+    let conv = mobilenet_v2_like(OpKind::Conv, 16, 10, 500);
+    let shift = mobilenet_v2_like(OpKind::Shift, 16, 10, 500);
+    let adder = mobilenet_v2_like(OpKind::Adder, 16, 10, 500);
+    let e_conv = EyerissSim::with_budget(PeKind::Mac, budget().total_um2, mem, c)
+        .simulate(&conv, &q)
+        .unwrap();
+    let e_shift = EyerissSim::with_budget(PeKind::ShiftUnit, budget().total_um2, mem, c)
+        .simulate(&shift, &q)
+        .unwrap();
+    let e_adder = EyerissSim::with_budget(PeKind::AdderUnit, budget().total_um2, mem, c)
+        .simulate(&adder, &q)
+        .unwrap();
+    assert!(e_shift.energy_pj < e_conv.energy_pj);
+    assert!(e_adder.energy_pj < e_conv.energy_pj);
+}
+
+#[test]
+fn addernet_dedicated_accel_runs_resnet32() {
+    let q = QuantSpec::default();
+    let accel = addernet_accel(budget().total_um2, MemoryConfig::default(), UNIT_ENERGY_45NM);
+    let arch = resnet32_adder_like(16, 100);
+    let s = accel.simulate(&arch, &q).unwrap();
+    assert!(s.energy_pj > 0.0 && s.latency_cycles > 0.0);
+}
+
+#[test]
+fn automapper_beats_rs_on_hybrid(){
+    let arch = hybrid_arch();
+    let q = QuantSpec::default();
+    let accel = nasa_accel(&arch, MemoryConfig::default());
+    let r = auto_map(&accel, &arch, &q, &MapperConfig::default());
+    let best = r.best.as_ref().expect("feasible").1.edp(250e6);
+    if let Ok(rs) = &r.rs_baseline {
+        let rs_edp = rs.edp(250e6);
+        assert!(best <= rs_edp, "auto {best:.3e} vs rs {rs_edp:.3e}");
+        // Fig. 8 shape: double-digit percentage saving on hybrids.
+        assert!(
+            best < rs_edp * 0.95,
+            "expected >5% saving, got auto {best:.3e} vs rs {rs_edp:.3e}"
+        );
+    }
+}
+
+#[test]
+fn tight_memory_makes_rs_infeasible_but_automapper_survives() {
+    // Fig. 8's green-dotted-line cases: fixed RS fails to map under the
+    // tight shared-buffer budget while the auto-mapper still finds a
+    // feasible dataflow.
+    let arch = hybrid_arch();
+    let q = QuantSpec::default();
+    let mut mem = MemoryConfig::tight();
+    mem.gb_bytes = 6 * 1024; // very tight
+    let accel = nasa_accel(&arch, mem);
+    let r = auto_map(&accel, &arch, &q, &MapperConfig::default());
+    match (&r.best, &r.rs_baseline) {
+        (Some(_), Err(_)) => {} // the paper's exact scenario
+        (Some((_, b)), Ok(rs)) => {
+            // If RS squeaks through, auto-mapper must still not lose.
+            assert!(b.edp(250e6) <= rs.edp(250e6) * 1.0001);
+        }
+        (None, _) => panic!("auto-mapper found nothing feasible"),
+    }
+}
+
+#[test]
+fn quantization_narrows_traffic_and_energy() {
+    let arch = hybrid_arch();
+    let accel = nasa_accel(&arch, MemoryConfig::default());
+    let m = Mapping::all_rs(arch.layers.len());
+    let q6 = QuantSpec::default(); // 6-bit shift/adder weights
+    let q8 = QuantSpec { shift_w_bits: 8, adder_w_bits: 8, ..QuantSpec::default() };
+    let s6 = accel.simulate(&arch, &m, &q6).unwrap();
+    let s8 = accel.simulate(&arch, &m, &q8).unwrap();
+    assert!(s6.energy_pj < s8.energy_pj);
+}

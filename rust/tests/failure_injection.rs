@@ -1,0 +1,151 @@
+//! Failure-injection tests: corrupted manifests, malformed artifacts,
+//! shape mismatches — the runtime must fail loudly and precisely, never
+//! deep inside PJRT.
+
+use nasa::runtime::Manifest;
+use nasa::util::json::Json;
+use std::io::Write;
+
+fn write_manifest(dir: &std::path::Path, body: &str) {
+    std::fs::create_dir_all(dir).unwrap();
+    let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+    f.write_all(body.as_bytes()).unwrap();
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("nasa_failinj_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+const GOOD_SUPERNET: &str = r#"{
+ "supernets": {
+  "tiny": {
+   "layout": {
+    "space": "hybrid_all", "n_layers": 1, "n_cand": 2,
+    "cands": [{"t": "conv", "e": 1, "k": 3}, {"t": "skip"}],
+    "layers": [{"cin": 4, "cout": 4, "h_in": 4, "w_in": 4, "h_out": 4, "w_out": 4, "stride": 1}],
+    "n_params": 8,
+    "param_layout": [
+      {"name": "a", "shape": [4], "offset": 0, "size": 4,
+       "init": {"kind": "const", "value": 1.0}, "ltype": "common", "layer": -1},
+      {"name": "b", "shape": [4], "offset": 4, "size": 4,
+       "init": {"kind": "he_normal", "fan_in": 4}, "ltype": "conv", "layer": 0}
+    ],
+    "stem": {"ch": 4, "k": 3}, "head": {"ch": 8},
+    "num_classes": 2, "batch": 2, "input_hw": 4, "input_ch": 3
+   },
+   "step": {"path": "step.hlo.txt", "inputs": [{"shape": [8], "dtype": "float32"}]},
+   "eval": {"path": "eval.hlo.txt", "inputs": []},
+   "eval_quant": {"path": "evalq.hlo.txt", "inputs": []}
+  }
+ },
+ "kernels": {},
+ "fixed_child": {}
+}"#;
+
+#[test]
+fn good_minimal_manifest_parses() {
+    let d = tmpdir("good");
+    write_manifest(&d, GOOD_SUPERNET);
+    let m = Manifest::load(&d).unwrap();
+    let sn = m.supernet("tiny").unwrap();
+    assert_eq!(sn.n_params, 8);
+    assert!(m.supernet("nope").is_err());
+}
+
+#[test]
+fn layout_hole_rejected() {
+    let d = tmpdir("hole");
+    // second entry starts at 5 instead of 4 -> hole
+    write_manifest(&d, &GOOD_SUPERNET.replace("\"offset\": 4", "\"offset\": 5"));
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("hole"), "{err}");
+}
+
+#[test]
+fn layout_total_mismatch_rejected() {
+    let d = tmpdir("total");
+    write_manifest(&d, &GOOD_SUPERNET.replace("\"n_params\": 8", "\"n_params\": 9"));
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("n_params"), "{err}");
+}
+
+#[test]
+fn missing_key_names_the_key() {
+    let d = tmpdir("missing");
+    write_manifest(&d, &GOOD_SUPERNET.replace("\"batch\": 2,", ""));
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("batch"), "{err}");
+}
+
+#[test]
+fn truncated_json_rejected() {
+    let d = tmpdir("trunc");
+    write_manifest(&d, &GOOD_SUPERNET[..GOOD_SUPERNET.len() / 2]);
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn absent_manifest_is_clean_error() {
+    let d = tmpdir("absent");
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("manifest"), "{err}");
+}
+
+#[test]
+fn unknown_init_kind_fails_at_init_time() {
+    let d = tmpdir("badinit");
+    write_manifest(
+        &d,
+        &GOOD_SUPERNET.replace("\"kind\": \"he_normal\", \"fan_in\": 4", "\"kind\": \"mystery\""),
+    );
+    let m = Manifest::load(&d).unwrap();
+    let sn = m.supernet("tiny").unwrap();
+    let err = nasa::nas::init_params(sn, &mut nasa::util::rng::Rng::new(0), true)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mystery"), "{err}");
+}
+
+#[test]
+fn arch_from_bad_choices_rejected() {
+    let d = tmpdir("badchoice");
+    write_manifest(&d, GOOD_SUPERNET);
+    let m = Manifest::load(&d).unwrap();
+    let sn = m.supernet("tiny").unwrap();
+    // choice index out of range
+    assert!(nasa::model::Arch::from_choices(sn, &[7], "t").is_err());
+    // wrong length
+    assert!(nasa::model::Arch::from_choices(sn, &[0, 0], "t").is_err());
+}
+
+#[test]
+fn arch_load_bad_file_rejected() {
+    let d = tmpdir("badarch");
+    let p = d.join("arch.json");
+    std::fs::write(&p, "{\"name\": \"x\"}").unwrap();
+    assert!(nasa::model::Arch::load(&p).is_err());
+    std::fs::write(&p, "not json").unwrap();
+    assert!(nasa::model::Arch::load(&p).is_err());
+}
+
+#[test]
+fn runlog_load_tolerates_nonfinite_curves() {
+    let d = tmpdir("runlog");
+    let mut log = nasa::coordinator::RunLog::new("diverged");
+    log.curve_mut("loss").push(0.0, 1.0);
+    log.curve_mut("loss").push(1.0, f64::NAN); // serializes as null
+    let p = log.save(&d).unwrap();
+    let back = nasa::coordinator::RunLog::load(&p).unwrap();
+    assert!(back.curve("loss").unwrap().diverged());
+}
+
+#[test]
+fn json_writer_never_emits_nan_tokens() {
+    let j = Json::Arr(vec![Json::Num(f64::NAN), Json::Num(f64::INFINITY), Json::Num(1.5)]);
+    let s = j.to_string();
+    assert!(!s.contains("NaN") && !s.contains("inf"), "{s}");
+    assert!(Json::parse(&s).is_ok());
+}

@@ -1,0 +1,147 @@
+//! Integration: NAS engine against the real manifest (layout init, cost
+//! table, derivation) and arch expansion consistency.
+//!
+//! Tests auto-skip when artifacts/ is absent so `cargo test` passes
+//! pre-`make artifacts`.
+
+use nasa::coordinator::{Dataset, DatasetConfig};
+use nasa::model::{arch_op_counts, Arch, OpKind};
+use nasa::nas::{cost_table, init_params, ArchParams};
+use nasa::runtime::Manifest;
+use nasa::util::rng::Rng;
+use std::path::Path;
+
+fn manifest() -> Option<Manifest> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !p.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
+        return None;
+    }
+    Some(Manifest::load(&p).expect("manifest"))
+}
+
+#[test]
+fn init_params_respects_layout() {
+    let Some(m) = manifest() else { return };
+    let sn = m.supernet("hybrid_all_c10").unwrap();
+    let mut rng = Rng::new(0);
+    let flat = init_params(sn, &mut rng, true).unwrap();
+    assert_eq!(flat.len(), sn.n_params);
+
+    // gamma_zero: every bn3 gamma is exactly 0 under the recipe.
+    for e in &sn.layout {
+        let vals = &flat[e.offset..e.offset + e.size];
+        match e.init_kind.as_str() {
+            "gamma_zero" => assert!(vals.iter().all(|&v| v == 0.0), "{}", e.name),
+            "const" => assert!(vals.iter().all(|&v| v == e.init_value), "{}", e.name),
+            "he_normal" => {
+                let std: f64 = (vals.iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+                    / vals.len() as f64)
+                    .sqrt();
+                let want = (2.0 / e.init_fan_in as f64).sqrt();
+                if vals.len() > 200 {
+                    assert!(
+                        (std / want - 1.0).abs() < 0.35,
+                        "{}: std {std} vs he {want}",
+                        e.name
+                    );
+                }
+            }
+            other => panic!("unknown init {other}"),
+        }
+    }
+
+    // Without the recipe, bn3 gammas start at 1.
+    let flat2 = init_params(sn, &mut Rng::new(0), false).unwrap();
+    let bn3 = sn.layout.iter().find(|e| e.init_kind == "gamma_zero").unwrap();
+    assert!(flat2[bn3.offset..bn3.offset + bn3.size].iter().all(|&v| v == 1.0));
+}
+
+#[test]
+fn cost_table_orders_candidates_sensibly() {
+    let Some(m) = manifest() else { return };
+    let sn = m.supernet("hybrid_all_c10").unwrap();
+    let cost = cost_table(sn);
+    assert_eq!(cost.len(), sn.n_layers * sn.n_cand);
+    let at = |l: usize, i: usize| cost[l * sn.n_cand + i] as f64;
+    let find = |t: &str, e: usize, k: usize| {
+        sn.cands
+            .iter()
+            .position(|c| c.t == t && c.e == e && c.k == k)
+            .unwrap()
+    };
+    for l in 0..sn.n_layers {
+        // Skip is free; everything else costs.
+        assert_eq!(at(l, sn.n_cand - 1), 0.0);
+        // Bigger E costs more at fixed (T, K).
+        assert!(at(l, find("conv", 6, 3)) > at(l, find("conv", 1, 3)));
+        // Multiplication-free types cost less at equal (E, K).
+        assert!(at(l, find("shift", 3, 3)) < at(l, find("conv", 3, 3)));
+        assert!(at(l, find("adder", 3, 3)) < at(l, find("conv", 3, 3)));
+        // Shift cheaper than adder (45nm unit energies).
+        assert!(at(l, find("shift", 3, 3)) < at(l, find("adder", 3, 3)));
+    }
+    // Normalized to max 1.
+    let max = cost.iter().cloned().fold(0.0f32, f32::max);
+    assert!((max - 1.0).abs() < 1e-6);
+}
+
+#[test]
+fn derive_arch_from_alpha_matches_choices() {
+    let Some(m) = manifest() else { return };
+    let sn = m.supernet("hybrid_all_c10").unwrap();
+    let mut ap = ArchParams::zeros(sn.n_layers, sn.n_cand);
+    for l in 0..sn.n_layers {
+        ap.alpha[l * sn.n_cand + (l % sn.n_cand)] = 5.0;
+    }
+    let arch = nasa::nas::derive_arch(sn, &ap, "t").unwrap();
+    assert_eq!(
+        arch.choices,
+        (0..sn.n_layers).map(|l| l % sn.n_cand).collect::<Vec<_>>()
+    );
+    let n_blocks = arch
+        .choices
+        .iter()
+        .filter(|&&c| !sn.cands[c].is_skip())
+        .count();
+    assert_eq!(arch.layers.len(), 3 + 3 * n_blocks);
+}
+
+#[test]
+fn arch_from_choices_kinds_follow_cands() {
+    let Some(m) = manifest() else { return };
+    let sn = m.supernet("hybrid_all_c10").unwrap();
+    let adder_ci = sn
+        .cands
+        .iter()
+        .position(|c| c.t == "adder" && c.e == 3 && c.k == 3)
+        .unwrap();
+    let arch = Arch::from_choices(sn, &vec![adder_ci; sn.n_layers], "all_adder").unwrap();
+    let counts = arch_op_counts(&arch);
+    assert!(counts.add > 0);
+    assert_eq!(counts.mult > 0, true); // stem/head stay conv
+    let adder_layers = arch.layers.iter().filter(|l| l.kind == OpKind::Adder).count();
+    assert_eq!(adder_layers, 3 * sn.n_layers);
+}
+
+#[test]
+fn dataset_matches_supernet_shapes() {
+    let Some(m) = manifest() else { return };
+    let sn = m.supernet("hybrid_all_c10").unwrap();
+    let d = Dataset::generate(DatasetConfig::cifar10_like(sn.input_hw));
+    assert_eq!(d.train.sample_len, sn.input_hw * sn.input_hw * sn.input_ch);
+    assert_eq!(d.cfg.num_classes, sn.num_classes);
+}
+
+#[test]
+fn onehot_alpha_mask_is_exact_onehot() {
+    let Some(m) = manifest() else { return };
+    let sn = m.supernet("hybrid_all_c10").unwrap();
+    let choices: Vec<usize> = (0..sn.n_layers).map(|l| (l * 3) % sn.n_cand).collect();
+    let (_, mask) = nasa::nas::derive::onehot_alpha_mask(sn, &choices);
+    for l in 0..sn.n_layers {
+        let row = &mask[l * sn.n_cand..(l + 1) * sn.n_cand];
+        assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+        assert_eq!(row[choices[l]], 1.0);
+    }
+}

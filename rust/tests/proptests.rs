@@ -1,0 +1,300 @@
+//! Property-based tests over coordinator/NAS/accelerator invariants.
+//!
+//! proptest is unavailable offline, so this uses a small seeded-fuzz
+//! harness: N random cases per property, failures print the seed for
+//! exact reproduction.
+
+use nasa::accel::{
+    allocate, AreaBudget, Chunk, ChunkAccelerator, Dataflow, MemoryConfig, PeKind, Tiling,
+    UNIT_ENERGY_45NM, ALL_DATAFLOWS,
+};
+use nasa::model::{arch_op_counts, Arch, LayerDesc, OpKind, QuantSpec};
+use nasa::nas::ArchParams;
+use nasa::util::json::Json;
+use nasa::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+fn for_cases(name: &str, f: impl Fn(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xBADC0DE);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_layer(rng: &mut Rng) -> LayerDesc {
+    let kinds = [OpKind::Conv, OpKind::Shift, OpKind::Adder];
+    let kind = kinds[rng.below(3)];
+    let cin = 1 + rng.below(64);
+    let depthwise = rng.below(3) == 0;
+    let (groups, cout) = if depthwise { (cin, cin) } else { (1, 1 + rng.below(64)) };
+    let k = [1, 3, 5][rng.below(3)];
+    let stride = 1 + rng.below(2);
+    let hw = 1 + rng.below(16);
+    LayerDesc {
+        name: "p".into(),
+        kind,
+        cin,
+        cout,
+        h_out: hw,
+        w_out: hw,
+        k,
+        stride,
+        groups,
+    }
+}
+
+fn random_arch(rng: &mut Rng, n: usize) -> Arch {
+    Arch {
+        name: "prop".into(),
+        layers: (0..n).map(|_| random_layer(rng)).collect(),
+        choices: vec![],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// model invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_op_counts_conservation() {
+    // total ops = mult + shift + add and each layer's ops reflect macs.
+    for_cases("op_counts", |rng| {
+        let l = random_layer(rng);
+        let c = nasa::model::layer_op_counts(&l);
+        let macs = l.macs();
+        match l.kind {
+            OpKind::Conv => {
+                assert_eq!(c.mult, macs);
+                assert_eq!(c.add, macs);
+                assert_eq!(c.shift, 0);
+            }
+            OpKind::Shift => {
+                assert_eq!(c.shift, macs);
+                assert_eq!(c.add, macs);
+                assert_eq!(c.mult, 0);
+            }
+            OpKind::Adder => {
+                assert_eq!(c.add, 2 * macs);
+                assert_eq!(c.mult + c.shift, 0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_arch_json_roundtrip() {
+    for_cases("arch_json_roundtrip", |rng| {
+        let n = 1 + rng.below(12);
+        let a = random_arch(rng, n);
+        let b = Arch::from_json(&a.to_json()).unwrap();
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.cin, y.cin);
+            assert_eq!(x.cout, y.cout);
+            assert_eq!(x.k, y.k);
+            assert_eq!(x.stride, y.stride);
+            assert_eq!(x.groups, y.groups);
+        }
+        assert_eq!(arch_op_counts(&a), arch_op_counts(&b));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// NAS invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_topk_mask_selects_k_enabled() {
+    for_cases("topk_mask", |rng| {
+        let n_layers = 1 + rng.below(8);
+        let n_cand = 2 + rng.below(18);
+        let mut ap = ArchParams::zeros(n_layers, n_cand);
+        for a in ap.alpha.iter_mut() {
+            *a = rng.normal() as f32;
+        }
+        let enabled: Vec<bool> = (0..n_cand).map(|_| rng.below(4) != 0).collect();
+        let n_enabled = enabled.iter().filter(|&&e| e).count();
+        if n_enabled == 0 {
+            return;
+        }
+        let k = 1 + rng.below(n_cand);
+        let mask = ap.topk_mask(k, &enabled);
+        for l in 0..n_layers {
+            let row = &mask[l * n_cand..(l + 1) * n_cand];
+            let on = row.iter().filter(|&&m| m > 0.0).count();
+            assert_eq!(on, k.min(n_enabled));
+            // masked-in implies enabled
+            for (i, &m) in row.iter().enumerate() {
+                if m > 0.0 {
+                    assert!(enabled[i]);
+                }
+                // every selected alpha >= every unselected enabled alpha
+            }
+            let min_sel = row
+                .iter()
+                .enumerate()
+                .filter(|(_, &m)| m > 0.0)
+                .map(|(i, _)| ap.row(l)[i])
+                .fold(f32::INFINITY, f32::min);
+            let max_unsel = row
+                .iter()
+                .enumerate()
+                .filter(|(i, &m)| m == 0.0 && enabled[*i])
+                .map(|(i, _)| ap.row(l)[i])
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert!(min_sel >= max_unsel - 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_probs_normalized_argmax_consistent() {
+    for_cases("probs", |rng| {
+        let n_cand = 2 + rng.below(18);
+        let mut ap = ArchParams::zeros(1 + rng.below(6), n_cand);
+        for a in ap.alpha.iter_mut() {
+            *a = (rng.normal() * 3.0) as f32;
+        }
+        let enabled = vec![true; n_cand];
+        let probs = ap.probs(&enabled);
+        let am = ap.argmax(&enabled);
+        for (l, p) in probs.iter().enumerate() {
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-6);
+            let pmax = p.iter().cloned().fold(0.0, f64::max);
+            assert!((p[am[l]] - pmax).abs() < 1e-12);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// accelerator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocation_within_budget_and_proportional() {
+    for_cases("allocation", |rng| {
+        let n = 2 + rng.below(12);
+        let arch = random_arch(rng, n);
+        let costs = UNIT_ENERGY_45NM;
+        let budget = AreaBudget::macs_equivalent(32 + rng.below(512), &costs);
+        let alloc = allocate(&arch, budget, &costs);
+        assert!(alloc.area_um2(&costs) <= budget.total_um2 * 1.01);
+        let loads = nasa::accel::alloc::op_loads(&arch);
+        for (n, o) in [(alloc.clp, loads[0]), (alloc.slp, loads[1]), (alloc.alp, loads[2])] {
+            assert_eq!(n == 0, o == 0, "PEs iff ops");
+        }
+    });
+}
+
+#[test]
+fn prop_layer_sim_monotonic_in_pes() {
+    // More PEs never increases compute cycles (same dataflow, default tiling).
+    for_cases("monotonic_pes", |rng| {
+        let l = random_layer(rng);
+        let q = QuantSpec::default();
+        let mem = MemoryConfig::default();
+        let df = ALL_DATAFLOWS[rng.below(4)];
+        let kind = PeKind::for_op(l.kind);
+        let mk = |n| Chunk { pe_kind: kind, n_pes: n, dataflow: df, gb_share: 1.0, noc_share: 1.0 };
+        let small = mk(16).simulate_layer(&l, &q, &mem, &UNIT_ENERGY_45NM);
+        let big = mk(256).simulate_layer(&l, &q, &mem, &UNIT_ENERGY_45NM);
+        if let (Ok(s), Ok(b)) = (small, big) {
+            assert!(
+                b.compute_cycles <= s.compute_cycles * 1.001,
+                "{l:?}: {} vs {}",
+                b.compute_cycles,
+                s.compute_cycles
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_energy_positive_and_edp_consistent() {
+    for_cases("energy_edp", |rng| {
+        let n = 1 + rng.below(10);
+        let arch = random_arch(rng, n);
+        let costs = UNIT_ENERGY_45NM;
+        let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
+        let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+        let m = nasa::accel::Mapping::all_rs(arch.layers.len());
+        if let Ok(s) = accel.simulate(&arch, &m, &QuantSpec::default()) {
+            assert!(s.energy_pj > 0.0);
+            assert!(s.period_cycles > 0.0);
+            assert!(s.latency_cycles >= s.period_cycles - 1e-9);
+            let edp = s.edp(250e6);
+            assert!((edp - s.energy_pj * s.period_cycles / 250e6).abs() <= edp * 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_tiling_candidates_always_feasible_shape() {
+    for_cases("tilings", |rng| {
+        let l = random_layer(rng);
+        let n_pes = 1 + rng.below(512);
+        for t in nasa::mapper::tiling_candidates(n_pes, &l) {
+            assert!(t.tm >= 1 && t.tn >= 1);
+            assert!(t.tm * t.tn <= n_pes);
+        }
+    });
+}
+
+#[test]
+fn prop_ws_weight_traffic_never_above_os() {
+    for_cases("ws_vs_os", |rng| {
+        let l = random_layer(rng);
+        let d = nasa::accel::dataflow::loop_dims(&l);
+        let t = Tiling { tm: 1 + rng.below(16), tn: 1 + rng.below(16) };
+        let (w_ws, ..) = nasa::accel::dataflow::stream_factors(Dataflow::Ws, &d, &t);
+        let (w_os, ..) = nasa::accel::dataflow::stream_factors(Dataflow::Os, &d, &t);
+        assert!(w_ws <= w_os);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// substrate invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 100.0).round()),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| "ab\"\\\nπ日".chars().nth(rng.below(7)).unwrap()).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases("json_roundtrip", |rng| {
+        let v = random_json(rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("parse {s:?}: {e}"));
+        assert_eq!(back, v, "roundtrip of {s}");
+    });
+}
+
+#[test]
+fn prop_par_map_equals_sequential() {
+    for_cases("par_map", |rng| {
+        let n = rng.below(300);
+        let items: Vec<u64> = (0..n as u64).map(|_| rng.next_u64() % 1000).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x.wrapping_mul(37) ^ 5).collect();
+        let par = nasa::util::par::par_map(&items, |x| x.wrapping_mul(37) ^ 5);
+        assert_eq!(seq, par);
+    });
+}

@@ -1,0 +1,111 @@
+//! Report-layer tests: exhibit printers run against synthetic runs
+//! directories, Fig. 2 statistics behave like the distributions they
+//! are supposed to discriminate, and zoo baselines land in the paper's
+//! magnitude range at paper scale.
+
+use nasa::coordinator::RunLog;
+use nasa::model::{arch_op_counts, zoo, OpKind};
+use nasa::report::fig2::{ascii_hist, weight_stats};
+use nasa::util::rng::Rng;
+
+#[test]
+fn kurtosis_separates_gaussian_from_laplacian() {
+    let mut rng = Rng::new(42);
+    let gauss: Vec<f32> = (0..20_000).map(|_| rng.normal() as f32).collect();
+    // Laplace via difference of exponentials: -sign(u)*ln(1-|2u-1|)
+    let laplace: Vec<f32> = (0..20_000)
+        .map(|_| {
+            let u = rng.uniform();
+            let s = if u < 0.5 { -1.0 } else { 1.0 };
+            (s * (1.0 - (2.0 * u - 1.0).abs()).ln() * -1.0) as f32 * if s < 0.0 { -1.0 } else { 1.0 }
+        })
+        .collect();
+    let g = weight_stats(&gauss);
+    let l = weight_stats(&laplace);
+    assert!(g.excess_kurtosis.abs() < 0.35, "gaussian ek={}", g.excess_kurtosis);
+    assert!(l.excess_kurtosis > 1.5, "laplace ek={}", l.excess_kurtosis);
+}
+
+#[test]
+fn weight_stats_zero_fraction() {
+    let w = vec![0.0f32, 0.0, 1.0, -1.0];
+    let s = weight_stats(&w);
+    assert_eq!(s.frac_zero, 0.5);
+    assert_eq!(s.n, 4);
+}
+
+#[test]
+fn ascii_hist_shape() {
+    let w: Vec<f32> = (-20..=20).map(|i| i as f32 / 10.0).collect();
+    let lines = ascii_hist(&w, 10, 2.0);
+    assert_eq!(lines.len(), 10);
+    assert!(lines.iter().all(|l| l.contains('|')));
+}
+
+#[test]
+fn fig6_points_roundtrip_through_runlog() {
+    use nasa::report::fig6::{points_to_log, Fig6Point};
+    let d = std::env::temp_dir().join(format!("nasa_report_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    let points = vec![
+        Fig6Point { system: "NASA".into(), acc: 0.9, edp_pj_s: 100.0 },
+        Fig6Point { system: "FBNet baseline".into(), acc: 0.89, edp_pj_s: 220.0 },
+    ];
+    points_to_log(&points, "fig6_test").save(&d).unwrap();
+    // print_from_dir must find and render them without panicking.
+    nasa::report::fig6::print_from_dir(&d).unwrap();
+    let logs = nasa::report::load_runs(&d).unwrap();
+    assert_eq!(logs.len(), 1);
+    assert_eq!(logs[0].curves.len(), 2);
+}
+
+#[test]
+fn fig7_print_handles_divergence() {
+    let mut ok = RunLog::new("fig7_pgp");
+    for i in 0..10 {
+        ok.curve_mut("train_loss").push(i as f64, 2.3 - 0.1 * i as f64);
+        ok.curve_mut("train_acc").push(i as f64, 0.1 + 0.05 * i as f64);
+    }
+    let mut bad = RunLog::new("fig7_vanilla");
+    bad.curve_mut("train_loss").push(0.0, 2.3);
+    bad.curve_mut("train_loss").push(1.0, f64::NAN);
+    bad.curve_mut("train_acc").push(0.0, 0.1);
+    nasa::report::fig7::print_runs(&[&ok, &bad]); // must not panic
+    assert!(bad.curve("train_loss").unwrap().diverged());
+    assert!(!ok.curve("train_loss").unwrap().diverged());
+}
+
+#[test]
+fn report_dirs_empty_are_graceful() {
+    let d = std::env::temp_dir().join(format!("nasa_empty_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    nasa::report::table2::print_from_dir(&d).unwrap();
+    nasa::report::fig6::print_from_dir(&d).unwrap();
+    nasa::report::fig7::print_from_dir(&d).unwrap();
+    nasa::report::fig8::print_from_dir(&d).unwrap();
+    nasa::report::fig2::print_from_dir(&d, &d).unwrap();
+}
+
+#[test]
+fn zoo_paper_scale_magnitudes() {
+    // At CIFAR scale (32x32, width 1.0) the baselines should land in the
+    // paper's Table 2 magnitude band (tens of millions of ops).
+    let ds = zoo::mobilenet_v2_like(OpKind::Shift, 32, 100, 1000);
+    let c = arch_op_counts(&ds);
+    let shift_m = c.shift as f64 / 1e6;
+    assert!(
+        (10.0..120.0).contains(&shift_m),
+        "DeepShift-MBv2 shift ops {shift_m}M outside paper band (39.6M)"
+    );
+    let an = zoo::mobilenet_v2_like(OpKind::Adder, 32, 100, 1000);
+    let ca = arch_op_counts(&an);
+    let add_m = ca.add as f64 / 1e6;
+    assert!(
+        (20.0..240.0).contains(&add_m),
+        "AdderNet-MBv2 additions {add_m}M outside paper band (82.5M)"
+    );
+    // ratio add:mult stays ~paper (82.5/3.35 ~ 25x)
+    assert!(ca.add as f64 / ca.mult as f64 > 8.0);
+}

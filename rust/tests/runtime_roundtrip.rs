@@ -1,0 +1,151 @@
+//! Integration: the python-AOT -> rust-PJRT bridge end to end.
+//!
+//! Requires `make artifacts` to have produced artifacts/ (skipped with a
+//! clear message otherwise, so `cargo test` stays green pre-build).
+
+use nasa::runtime::{lit_f32, lit_i32, lit_scalar_f32, Engine, Manifest};
+use nasa::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(Box::leak(p.into_boxed_path()))
+    } else {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_parses_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(dir).expect("manifest");
+    for (key, sn) in &m.supernets {
+        assert_eq!(sn.n_cand, sn.cands.len(), "{key}");
+        assert_eq!(sn.n_layers, sn.layers.len(), "{key}");
+        // step inputs: params, alpha, gumbel, mask, tau, lam, cost, x, labels
+        assert_eq!(sn.step.input_shapes.len(), 9, "{key}");
+        assert_eq!(sn.step.input_shapes[0].0, vec![sn.n_params], "{key}");
+        let ln = vec![sn.n_layers, sn.n_cand];
+        for i in [1, 2, 3, 6] {
+            assert_eq!(sn.step.input_shapes[i].0, ln, "{key} input {i}");
+        }
+        // skip candidate is last
+        assert!(sn.cands.last().unwrap().is_skip(), "{key}");
+    }
+}
+
+#[test]
+fn supernet_step_executes_and_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(dir).expect("manifest");
+    let Some(sn) = m.supernets.get("hybrid_all_c10") else {
+        eprintln!("SKIP: hybrid_all_c10 not built");
+        return;
+    };
+    let mut engine = Engine::cpu().expect("engine");
+    let exe = engine.load(&m.dir, &sn.step).expect("compile step");
+
+    let mut rng = Rng::new(7);
+    let mut params = vec![0.0f32; sn.n_params];
+    for p in params.iter_mut() {
+        *p = rng.he_normal(64);
+    }
+    let ln = sn.n_layers * sn.n_cand;
+    let alpha = vec![0.0f32; ln];
+    let mut gumbel = vec![0.0f32; ln];
+    rng.fill_gumbel(&mut gumbel);
+    let mask = vec![1.0f32; ln];
+    let cost = vec![0.5f32; ln];
+    let b = sn.batch;
+    let hw = sn.input_hw;
+    let mut x = vec![0.0f32; b * hw * hw * sn.input_ch];
+    for v in x.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    let labels: Vec<i32> = (0..b).map(|i| (i % sn.num_classes) as i32).collect();
+
+    let run = |engine_exe: &nasa::runtime::Executable| {
+        let inputs = vec![
+            lit_f32(&[sn.n_params], &params).unwrap(),
+            lit_f32(&[sn.n_layers, sn.n_cand], &alpha).unwrap(),
+            lit_f32(&[sn.n_layers, sn.n_cand], &gumbel).unwrap(),
+            lit_f32(&[sn.n_layers, sn.n_cand], &mask).unwrap(),
+            lit_scalar_f32(5.0),
+            lit_scalar_f32(0.01),
+            lit_f32(&[sn.n_layers, sn.n_cand], &cost).unwrap(),
+            lit_f32(&[b, hw, hw, sn.input_ch], &x).unwrap(),
+            lit_i32(&[b], &labels).unwrap(),
+        ];
+        engine_exe.run(&inputs).expect("execute step")
+    };
+
+    let out = run(&exe);
+    // (loss, ce, hw, ncorrect, dparams, dalpha)
+    assert_eq!(out.len(), 6);
+    let loss = out[0].to_vec::<f32>().unwrap()[0];
+    let ce = out[1].to_vec::<f32>().unwrap()[0];
+    let hwl = out[2].to_vec::<f32>().unwrap()[0];
+    let ncorrect = out[3].to_vec::<f32>().unwrap()[0];
+    let dparams = out[4].to_vec::<f32>().unwrap();
+    let dalpha = out[5].to_vec::<f32>().unwrap();
+
+    assert!(loss.is_finite(), "loss={loss}");
+    assert!(ce > 0.0, "ce={ce}");
+    assert!((loss - (ce + 0.01 * hwl)).abs() < 1e-3 * loss.abs().max(1.0));
+    assert!((0.0..=b as f32).contains(&ncorrect));
+    assert_eq!(dparams.len(), sn.n_params);
+    assert_eq!(dalpha.len(), ln);
+    assert!(dparams.iter().all(|g| g.is_finite()));
+    assert!(dalpha.iter().all(|g| g.is_finite()));
+    // gradient must be non-trivial
+    let gnorm: f32 = dparams.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(gnorm > 1e-6, "gnorm={gnorm}");
+
+    // Determinism: same inputs -> bitwise same loss.
+    let out2 = run(&exe);
+    assert_eq!(out2[0].to_vec::<f32>().unwrap()[0], loss);
+}
+
+#[test]
+fn child_pallas_matches_jnp_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(dir).expect("manifest");
+    let Some(fc) = &m.fixed_child else {
+        eprintln!("SKIP: fixed child not built");
+        return;
+    };
+    let sn = m.supernets.get(&fc.space_key).expect("space of fixed child");
+    let mut engine = Engine::cpu().expect("engine");
+    let pallas = engine.load(&m.dir, &fc.pallas).expect("pallas artifact");
+    let jnp = engine.load(&m.dir, &fc.jnp).expect("jnp artifact");
+
+    let mut rng = Rng::new(3);
+    let mut params = vec![0.0f32; sn.n_params];
+    for p in params.iter_mut() {
+        *p = rng.he_normal(64);
+    }
+    let b = sn.batch;
+    let hw = sn.input_hw;
+    let mut x = vec![0.0f32; b * hw * hw * sn.input_ch];
+    for v in x.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    let inputs = vec![
+        lit_f32(&[sn.n_params], &params).unwrap(),
+        lit_f32(&[b, hw, hw, sn.input_ch], &x).unwrap(),
+    ];
+    let lp = pallas.run(&inputs).expect("pallas run");
+    let lj = jnp.run(&inputs).expect("jnp run");
+    let vp = lp[0].to_vec::<f32>().unwrap();
+    let vj = lj[0].to_vec::<f32>().unwrap();
+    assert_eq!(vp.len(), vj.len());
+    assert_eq!(vp.len(), b * sn.num_classes);
+    for (i, (a, c)) in vp.iter().zip(&vj).enumerate() {
+        assert!(
+            (a - c).abs() <= 1e-3 + 1e-3 * c.abs().max(1.0),
+            "logit {i}: pallas={a} jnp={c}"
+        );
+    }
+}
