@@ -1,0 +1,43 @@
+#!/usr/bin/env sh
+# ci.sh — the repository's verification gate.
+#
+# Usage:
+#   ./ci.sh            tier-1 verify + type/doc hygiene (fmt advisory)
+#   ./ci.sh --strict   additionally fail on rustfmt diffs
+#
+# Tier-1 (the hard gate, mirrored by the project driver):
+#   cargo build --release && cargo test -q
+
+set -eu
+
+STRICT=0
+[ "${1:-}" = "--strict" ] && STRICT=1
+
+say() { printf '\n==> %s\n' "$*"; }
+
+say "tier-1: cargo build --release"
+cargo build --release
+
+say "tier-1: cargo test -q"
+cargo test -q
+
+say "pjrt path stays type-clean: cargo check --features pjrt"
+cargo check --features pjrt
+
+say "benches + examples compile: cargo build --release --all-targets"
+cargo build --release --all-targets
+
+say "docs are warning-free: cargo doc --no-deps"
+RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps --quiet
+
+say "formatting: cargo fmt --check"
+if cargo fmt --check; then
+    echo "fmt: clean"
+elif [ "$STRICT" = "1" ]; then
+    echo "fmt: FAILED (strict mode)" >&2
+    exit 1
+else
+    echo "fmt: diffs found (advisory — run 'cargo fmt'; use ./ci.sh --strict to enforce)"
+fi
+
+say "ci.sh OK"

@@ -12,7 +12,13 @@
 //!   (python/compile/kernels/), on the executed path via the fixed-child
 //!   artifacts.
 //!
-//! See DESIGN.md for the full system inventory and experiment index.
+//! Execution backends (see the `runtime` module): the default build uses
+//! a pure-Rust deterministic stub so everything compiles and runs with no
+//! native dependencies; enabling the non-default `pjrt` cargo feature
+//! selects the real XLA/PJRT path for the AOT HLO artifacts.
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! README.md for the quickstart.
 
 pub mod accel;
 pub mod coordinator;

@@ -225,6 +225,47 @@ mod tests {
         assert!(r.combos_infeasible > 0, "expected some infeasible combos");
     }
 
+    fn stats(energy_pj: f64, period_cycles: f64) -> NetStats {
+        NetStats { energy_pj, period_cycles, ..Default::default() }
+    }
+
+    #[test]
+    fn edp_saving_some_when_best_and_rs_exist() {
+        let r = MapperResult {
+            best: Some((Mapping::all_rs(1), stats(50.0, 100.0))),
+            rs_baseline: Ok(stats(100.0, 100.0)),
+            combos_tried: 1,
+            combos_infeasible: 0,
+        };
+        // Same period, half the energy -> 50% EDP saving, clock-invariant.
+        let s = r.edp_saving_vs_rs(250e6).expect("both sides exist");
+        assert!((s - 0.5).abs() < 1e-12, "saving={s}");
+        assert_eq!(r.edp_saving_vs_rs(500e6).unwrap(), s);
+    }
+
+    #[test]
+    fn edp_saving_none_without_best() {
+        let r = MapperResult {
+            best: None,
+            rs_baseline: Ok(stats(100.0, 100.0)),
+            combos_tried: 64,
+            combos_infeasible: 64,
+        };
+        assert_eq!(r.edp_saving_vs_rs(250e6), None);
+    }
+
+    #[test]
+    fn edp_saving_none_when_rs_infeasible() {
+        let r = MapperResult {
+            best: Some((Mapping::all_rs(1), stats(50.0, 100.0))),
+            rs_baseline: Err((2, Infeasible::NoPes)),
+            combos_tried: 64,
+            combos_infeasible: 3,
+        };
+        // The Fig. 8 green-dotted-line case: no RS reference to save against.
+        assert_eq!(r.edp_saving_vs_rs(250e6), None);
+    }
+
     #[test]
     fn saving_metric_is_fractional() {
         let acc = accel(MemoryConfig::default());

@@ -6,6 +6,13 @@
 //!   the divisor lattice of the chunk's PE count, clamped to layer dims.
 //! * Shared-resource splits — global-buffer / NoC fractions per chunk
 //!   (the cross-chunk competition Sec. 4.2 highlights).
+//!
+//! The cross product of the three axes is the candidate set `search.rs`
+//! fans across threads: 64 ordering combos x a handful of resource
+//! splits, with the per-layer tiling chosen greedily inside each combo
+//! (layers are independent once the chunk configuration is fixed, so the
+//! tiling choice decomposes exactly). Growing any axis here widens the
+//! auto-mapper search without touching the search loop.
 
 use crate::accel::dataflow::{Dataflow, Tiling, ALL_DATAFLOWS};
 use crate::accel::PeAllocation;

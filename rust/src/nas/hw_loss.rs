@@ -7,8 +7,8 @@
 //! normalization ratios come from the 45nm unit-energy table in accel::pe
 //! (shift and add units vs the 8-bit multiplier).
 //!
-//! cost[l][i] = scaled-FLOPs of candidate i at layer l, normalized by the
-//! largest entry so lambda is scale-free across configs.
+//! `cost[l][i]` = scaled-FLOPs of candidate `i` at layer `l`, normalized
+//! by the largest entry so lambda is scale-free across configs.
 
 use crate::accel::pe::UNIT_ENERGY_45NM;
 use crate::model::arch::push_block;

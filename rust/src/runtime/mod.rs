@@ -1,13 +1,35 @@
-//! L3 runtime: load AOT-compiled HLO artifacts and execute them via PJRT.
+//! L3 runtime: load AOT-compiled HLO artifacts and execute them.
 //!
 //! Python runs once at build time (`make artifacts`); afterwards this
 //! module is the only bridge to the compute graphs. Interchange is HLO
 //! *text* (see python/compile/aot.py for why not serialized protos).
+//!
+//! Two interchangeable backends provide the same `Engine` / `Executable`
+//! / `Literal` surface:
+//!
+//! * **`pjrt` feature enabled** — the real path (`engine.rs`): artifacts
+//!   are parsed and compiled through the `xla` (xla_extension) PJRT CPU
+//!   client and executed natively.
+//! * **default build** — the pure-Rust stub (`stub.rs`): no native
+//!   dependencies; shape-checked, deterministic synthetic outputs derived
+//!   from the input tensors via `util::rng`. Lets the whole stack —
+//!   coordinator loops, CLI, tests, exhibit benches — build and run
+//!   anywhere; numbers are synthetic (see `stub.rs` docs).
 
-mod engine;
 mod manifest;
 mod tensor;
 
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, Executable};
+#[cfg(feature = "pjrt")]
+pub use xla::Literal;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, Executable, Literal};
+
 pub use manifest::{ArtifactIo, CandSpec, LayerGeom, Manifest, ParamEntry, SupernetManifest};
 pub use tensor::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, HostTensor};

@@ -1,0 +1,442 @@
+//! Pure-Rust stub execution backend (the default, non-`pjrt` build).
+//!
+//! Presents the same `Engine` / `Executable` / `Literal` surface as the
+//! real PJRT backend in `engine.rs`, so the coordinator loops, the CLI,
+//! the integration tests and the exhibit benches compile and run without
+//! linking XLA. Instead of executing HLO, [`Executable::run`] performs the
+//! same input shape checking as the PJRT path and then synthesizes
+//! outputs that are:
+//!
+//! * **deterministic** — a run is a pure function of the input tensors:
+//!   the inputs are hashed (FNV-1a over shapes and raw element bits) and
+//!   the hash seeds a `util::rng::Rng`, so identical inputs give bitwise
+//!   identical outputs, and two artifacts fed the same inputs agree
+//!   (which keeps the pallas-vs-jnp cross-check meaningful as a plumbing
+//!   test);
+//! * **shape- and semantics-consistent** — output arity/shape follows the
+//!   artifact signature (see below), scalar losses satisfy
+//!   `loss = ce + lambda * hw` exactly, and `ncorrect` stays in
+//!   `[0, batch]`, so the invariants asserted by
+//!   `rust/tests/runtime_roundtrip.rs` hold.
+//!
+//! The artifact kind is inferred from the input signature recorded in the
+//! manifest (`ArtifactIo::input_shapes`):
+//!
+//! | inputs | kind          | outputs |
+//! |--------|---------------|---------|
+//! | 9      | supernet step | `loss, ce, hw, ncorrect` scalars + `dparams` (like input 0) + `dalpha` (like input 1) |
+//! | 5 or 6 | supernet eval | `loss` scalar + `ncorrect` scalar |
+//! | 2      | child infer   | rank-2 logits `[batch, classes]` (batch from input 1; classes defaults to 10, override with `NASA_STUB_NUM_CLASSES`) |
+//! | other  | generic       | one scalar |
+//!
+//! This is a *statistical smoke backend*, not a learner: gradients are
+//! random (seeded) values, so search/train loops exercise every code path
+//! and log plausible curves but do not converge. Numerical claims require
+//! the `pjrt` feature with the real `xla` bindings.
+
+use super::manifest::ArtifactIo;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Host literal of the stub backend: shape + typed flat data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    shape: Vec<usize>,
+    data: LitData,
+}
+
+/// Flat element storage of a [`Literal`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum LitData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Literal {
+    /// Build an f32 literal (shape is trusted; callers shape-check).
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Literal {
+        Literal { shape: shape.to_vec(), data: LitData::F32(data) }
+    }
+
+    /// Build an i32 literal.
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Literal {
+        Literal { shape: shape.to_vec(), data: LitData::I32(data) }
+    }
+
+    /// The literal's shape (empty for rank-0 scalars).
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LitData::F32(v) => v.len(),
+            LitData::I32(v) => v.len(),
+        }
+    }
+
+    /// Copy out as a host vector of `T` (f32 or i32, matching the stored
+    /// element type — mismatches error like a dtype error would).
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Fold the literal's shape and raw element bits into an FNV-1a hash
+    /// (the determinism substrate of the stub backend).
+    fn hash_into(&self, h: &mut u64) {
+        const P: u64 = 0x100000001b3;
+        let mut eat = |x: u64| {
+            *h ^= x;
+            *h = h.wrapping_mul(P);
+        };
+        for &d in &self.shape {
+            eat(d as u64);
+        }
+        match &self.data {
+            LitData::F32(v) => v.iter().for_each(|x| eat(x.to_bits() as u64)),
+            LitData::I32(v) => v.iter().for_each(|x| eat(*x as u32 as u64)),
+        }
+    }
+}
+
+/// Element types extractable from a stub [`Literal`].
+pub trait LiteralElem: Sized {
+    /// Copy the literal's elements out as `Self`.
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl LiteralElem for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            LitData::F32(v) => Ok(v.clone()),
+            LitData::I32(_) => bail!("literal holds i32, asked for f32"),
+        }
+    }
+}
+
+impl LiteralElem for i32 {
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            LitData::I32(v) => Ok(v.clone()),
+            LitData::F32(_) => bail!("literal holds f32, asked for i32"),
+        }
+    }
+}
+
+/// What a loaded artifact computes, inferred from its input signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ArtifactKind {
+    /// 9 inputs: params, alpha, gumbel, mask, tau, lambda, cost, x, labels.
+    SupernetStep,
+    /// 5–6 inputs: params, alpha, mask, tau, x, labels.
+    SupernetEval,
+    /// 2 inputs: params, x (the fixed-child pallas/jnp artifacts).
+    ChildInfer,
+    /// Anything else: one scalar out.
+    Generic,
+}
+
+impl ArtifactKind {
+    fn infer(io: &ArtifactIo) -> ArtifactKind {
+        match io.input_shapes.len() {
+            9 => ArtifactKind::SupernetStep,
+            5 | 6 => ArtifactKind::SupernetEval,
+            2 => ArtifactKind::ChildInfer,
+            _ => ArtifactKind::Generic,
+        }
+    }
+}
+
+/// A "loaded" artifact: its manifest signature plus the inferred kind.
+/// Mirrors `engine::Executable` (same public surface).
+pub struct Executable {
+    pub name: String,
+    input_shapes: Vec<(Vec<usize>, String)>,
+    kind: ArtifactKind,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    /// Shape checking matches the PJRT backend byte for byte.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "{}: got {} inputs, artifact wants {}",
+                self.name,
+                inputs.len(),
+                self.input_shapes.len()
+            );
+        }
+        for (i, (lit, (shape, _dty))) in inputs.iter().zip(&self.input_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            let got = lit.element_count();
+            if want != got {
+                bail!("{}: input {i} has {got} elements, artifact wants {want} {shape:?}",
+                    self.name);
+            }
+        }
+        // Seed from input content only (NOT the artifact name): identical
+        // inputs through different artifacts of the same kind agree, which
+        // is what the pallas-vs-jnp cross-check exercises.
+        let mut h = 0xcbf29ce484222325u64;
+        for lit in inputs {
+            lit.hash_into(&mut h);
+        }
+        let mut rng = Rng::new(h);
+        Ok(match self.kind {
+            ArtifactKind::SupernetStep => self.run_step(inputs, &mut rng),
+            ArtifactKind::SupernetEval => self.run_eval(inputs, &mut rng),
+            ArtifactKind::ChildInfer => self.run_infer(inputs, &mut rng),
+            ArtifactKind::Generic => vec![scalar(rng.uniform() as f32)],
+        })
+    }
+
+    /// Outputs: loss, ce, hw, ncorrect, dparams, dalpha.
+    fn run_step(&self, inputs: &[Literal], rng: &mut Rng) -> Vec<Literal> {
+        let n_params = inputs[0].element_count();
+        let n_alpha = inputs[1].element_count();
+        let lambda = first_f32(&inputs[5]);
+        let cost = match &inputs[6].data {
+            LitData::F32(v) => v.as_slice(),
+            LitData::I32(_) => &[],
+        };
+        let batch = inputs[8].element_count();
+        // ce in a plausible cross-entropy range; hw = mean candidate cost.
+        let ce = 0.5 + 3.0 * rng.uniform() as f32;
+        let hw = if cost.is_empty() {
+            0.0
+        } else {
+            cost.iter().sum::<f32>() / cost.len() as f32
+        };
+        let loss = ce + lambda * hw;
+        let ncorrect = rng.below(batch + 1) as f32;
+        let mut dparams = vec![0.0f32; n_params];
+        for g in dparams.iter_mut() {
+            *g = (rng.normal() * 0.01) as f32;
+        }
+        let mut dalpha = vec![0.0f32; n_alpha];
+        for g in dalpha.iter_mut() {
+            *g = (rng.normal() * 0.01) as f32;
+        }
+        vec![
+            scalar(loss),
+            scalar(ce),
+            scalar(hw),
+            scalar(ncorrect),
+            Literal::from_f32(&[n_params], dparams),
+            Literal::from_f32(inputs[1].shape(), dalpha),
+        ]
+    }
+
+    /// Outputs: loss, ncorrect (consumers read output 1).
+    fn run_eval(&self, inputs: &[Literal], rng: &mut Rng) -> Vec<Literal> {
+        let batch = inputs.last().map(Literal::element_count).unwrap_or(1);
+        let loss = 0.5 + 3.0 * rng.uniform() as f32;
+        let ncorrect = rng.below(batch + 1) as f32;
+        vec![scalar(loss), scalar(ncorrect)]
+    }
+
+    /// Output: rank-2 logits `[batch, classes]`, batch = leading dim of x.
+    /// The class count is not part of the artifact I/O signature the stub
+    /// sees, so it defaults to 10 (the CIFAR-10-like spaces); set
+    /// `NASA_STUB_NUM_CLASSES` when driving a manifest with a different
+    /// class count (e.g. the c100 spaces).
+    fn run_infer(&self, inputs: &[Literal], rng: &mut Rng) -> Vec<Literal> {
+        let classes = stub_num_classes();
+        let batch = inputs[1].shape().first().copied().unwrap_or(1).max(1);
+        let mut logits = vec![0.0f32; batch * classes];
+        for v in logits.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        vec![Literal::from_f32(&[batch, classes], logits)]
+    }
+
+    /// Number of inputs the artifact expects.
+    pub fn n_inputs(&self) -> usize {
+        self.input_shapes.len()
+    }
+
+    /// Declared shape of input `i`.
+    pub fn input_shape(&self, i: usize) -> &[usize] {
+        &self.input_shapes[i].0
+    }
+}
+
+fn scalar(v: f32) -> Literal {
+    Literal::from_f32(&[], vec![v])
+}
+
+/// Fixed-child logit width: 10 (the CIFAR-10-like spaces) unless
+/// overridden via `NASA_STUB_NUM_CLASSES` (e.g. for c100 manifests).
+fn stub_num_classes() -> usize {
+    std::env::var("NASA_STUB_NUM_CLASSES")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(10)
+}
+
+fn first_f32(l: &Literal) -> f32 {
+    match &l.data {
+        LitData::F32(v) => v.first().copied().unwrap_or(0.0),
+        LitData::I32(v) => v.first().copied().unwrap_or(0) as f32,
+    }
+}
+
+/// The stub engine: same surface as `engine::Engine`, but "loading" an
+/// artifact only records its manifest signature — the HLO text files need
+/// not exist, so the whole pipeline runs from a manifest alone.
+pub struct Engine {
+    cache: BTreeMap<String, Arc<Executable>>,
+}
+
+impl Engine {
+    /// Construct the stub backend (always succeeds; no native deps).
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { cache: BTreeMap::new() })
+    }
+
+    /// Backend identifier (the PJRT path reports e.g. "Host" / "cpu").
+    pub fn platform(&self) -> String {
+        "stub-cpu (deterministic synthetic outputs; build with --features pjrt for XLA)"
+            .to_string()
+    }
+
+    /// "Load" an artifact: record its I/O signature (cached by path).
+    pub fn load(&mut self, _dir: &Path, io: &ArtifactIo) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.get(&io.path) {
+            return Ok(e.clone());
+        }
+        let e = Arc::new(Executable {
+            name: io.path.clone(),
+            input_shapes: io.input_shapes.clone(),
+            kind: ArtifactKind::infer(io),
+        });
+        self.cache.insert(io.path.clone(), e.clone());
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step_io() -> ArtifactIo {
+        let f = |shape: &[usize]| (shape.to_vec(), "float32".to_string());
+        ArtifactIo {
+            path: "step.hlo.txt".into(),
+            input_shapes: vec![
+                f(&[8]),        // params
+                f(&[2, 3]),     // alpha
+                f(&[2, 3]),     // gumbel
+                f(&[2, 3]),     // mask
+                f(&[]),         // tau
+                f(&[]),         // lambda
+                f(&[2, 3]),     // cost
+                f(&[4, 2, 2, 3]), // x
+                (vec![4], "int32".to_string()), // labels
+            ],
+        }
+    }
+
+    fn step_inputs(seed: u64) -> Vec<Literal> {
+        let mut rng = Rng::new(seed);
+        let ln = 6;
+        let mut f32s = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+        vec![
+            Literal::from_f32(&[8], f32s(8)),
+            Literal::from_f32(&[2, 3], vec![0.0; ln]),
+            Literal::from_f32(&[2, 3], f32s(ln)),
+            Literal::from_f32(&[2, 3], vec![1.0; ln]),
+            Literal::from_f32(&[], vec![5.0]),
+            Literal::from_f32(&[], vec![0.01]),
+            Literal::from_f32(&[2, 3], vec![0.5; ln]),
+            Literal::from_f32(&[4, 2, 2, 3], f32s(48)),
+            Literal::from_i32(&[4], vec![0, 1, 2, 3]),
+        ]
+    }
+
+    fn load_step() -> Arc<Executable> {
+        Engine::cpu().unwrap().load(Path::new("artifacts"), &step_io()).unwrap()
+    }
+
+    #[test]
+    fn step_outputs_satisfy_contract() {
+        let exe = load_step();
+        assert_eq!(exe.n_inputs(), 9);
+        assert_eq!(exe.input_shape(7), &[4, 2, 2, 3]);
+        let out = exe.run(&step_inputs(7)).unwrap();
+        assert_eq!(out.len(), 6);
+        let loss = out[0].to_vec::<f32>().unwrap()[0];
+        let ce = out[1].to_vec::<f32>().unwrap()[0];
+        let hw = out[2].to_vec::<f32>().unwrap()[0];
+        let nc = out[3].to_vec::<f32>().unwrap()[0];
+        assert!(loss.is_finite() && ce > 0.0);
+        assert_eq!(loss, ce + 0.01 * hw); // exact by construction
+        assert!((0.0..=4.0).contains(&nc));
+        let dparams = out[4].to_vec::<f32>().unwrap();
+        let dalpha = out[5].to_vec::<f32>().unwrap();
+        assert_eq!(dparams.len(), 8);
+        assert_eq!(dalpha.len(), 6);
+        let gnorm: f32 = dparams.iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(gnorm > 1e-6);
+    }
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let exe = load_step();
+        let a = exe.run(&step_inputs(7)).unwrap();
+        let b = exe.run(&step_inputs(7)).unwrap();
+        assert_eq!(a, b); // bitwise identical on identical inputs
+        let c = exe.run(&step_inputs(8)).unwrap();
+        assert_ne!(
+            a[0].to_vec::<f32>().unwrap(),
+            c[0].to_vec::<f32>().unwrap(),
+            "different inputs should change the outputs"
+        );
+    }
+
+    #[test]
+    fn same_inputs_agree_across_artifacts() {
+        // The pallas-vs-jnp cross-check property: two artifacts with the
+        // same signature fed the same inputs produce identical outputs.
+        let mut engine = Engine::cpu().unwrap();
+        let f = |shape: &[usize]| (shape.to_vec(), "float32".to_string());
+        let io_a = ArtifactIo { path: "a.hlo.txt".into(), input_shapes: vec![f(&[8]), f(&[2, 4, 4, 3])] };
+        let io_b = ArtifactIo { path: "b.hlo.txt".into(), input_shapes: vec![f(&[8]), f(&[2, 4, 4, 3])] };
+        let a = engine.load(Path::new("x"), &io_a).unwrap();
+        let b = engine.load(Path::new("x"), &io_b).unwrap();
+        let inputs = vec![
+            Literal::from_f32(&[8], (0..8).map(|i| i as f32).collect()),
+            Literal::from_f32(&[2, 4, 4, 3], vec![0.25; 96]),
+        ];
+        let la = a.run(&inputs).unwrap();
+        let lb = b.run(&inputs).unwrap();
+        assert_eq!(la, lb);
+        // batch x classes, honoring the same env override run_infer reads
+        // so the test holds even with NASA_STUB_NUM_CLASSES exported.
+        assert_eq!(la[0].element_count(), 2 * stub_num_classes());
+    }
+
+    #[test]
+    fn shape_mismatch_fails_loudly() {
+        let exe = load_step();
+        let mut bad = step_inputs(1);
+        bad[0] = Literal::from_f32(&[7], vec![0.0; 7]);
+        let err = exe.run(&bad).unwrap_err().to_string();
+        assert!(err.contains("input 0"), "{err}");
+        let err2 = exe.run(&bad[..3]).unwrap_err().to_string();
+        assert!(err2.contains("got 3 inputs"), "{err2}");
+    }
+
+    #[test]
+    fn dtype_mismatch_on_extract() {
+        let l = Literal::from_i32(&[2], vec![1, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+}

@@ -1,6 +1,9 @@
 //! Host-side tensor helpers: flat `Vec<f32>` + shape, and conversions to
-//! and from `xla::Literal`.
+//! and from the backend [`Literal`] (either `xla::Literal` under the
+//! `pjrt` feature or the pure-Rust stub literal in the default build —
+//! the constructors below are the single seam between the two).
 
+use super::Literal;
 use anyhow::{bail, Result};
 
 /// A host tensor: flat row-major f32 data + shape. The NAS coordinator
@@ -12,11 +15,13 @@ pub struct HostTensor {
 }
 
 impl HostTensor {
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
         HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Wrap flat data, checking it matches the shape's element count.
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
         let n: usize = shape.iter().product();
         if n != data.len() {
@@ -25,26 +30,39 @@ impl HostTensor {
         Ok(HostTensor { shape: shape.to_vec(), data })
     }
 
+    /// Rank-0 scalar tensor.
     pub fn scalar(v: f32) -> Self {
         HostTensor { shape: vec![], data: vec![v] }
     }
 
+    /// Total number of elements.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
-    pub fn to_literal(&self) -> Result<xla::Literal> {
+    /// Convert to a backend literal.
+    pub fn to_literal(&self) -> Result<Literal> {
         lit_f32(&self.shape, &self.data)
     }
 }
 
-/// Build an f32 literal of the given shape from flat data.
-pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+fn check_len(what: &str, shape: &[usize], len: usize) -> Result<()> {
     let n: usize = shape.iter().product();
-    if n != data.len() {
-        bail!("lit_f32: shape {:?} wants {} elems, got {}", shape, n, data.len());
+    if n != len {
+        bail!("{what}: shape {:?} wants {} elems, got {}", shape, n, len);
     }
-    let l = xla::Literal::vec1(data);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend: build real xla::Literal values.
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from flat data.
+#[cfg(feature = "pjrt")]
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    check_len("lit_f32", shape, data.len())?;
+    let l = Literal::vec1(data);
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     if shape.is_empty() {
         // rank-0 scalar
@@ -54,12 +72,10 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
 }
 
 /// Build an i32 literal of the given shape.
-pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product();
-    if n != data.len() {
-        bail!("lit_i32: shape {:?} wants {} elems, got {}", shape, n, data.len());
-    }
-    let l = xla::Literal::vec1(data);
+#[cfg(feature = "pjrt")]
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    check_len("lit_i32", shape, data.len())?;
+    let l = Literal::vec1(data);
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     if shape.is_empty() {
         return Ok(l.reshape(&[])?);
@@ -68,12 +84,38 @@ pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
 }
 
 /// Rank-0 f32 scalar literal.
-pub fn lit_scalar_f32(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
+#[cfg(feature = "pjrt")]
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
 }
 
-/// Read an f32 literal back into a flat Vec.
-pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+// ---------------------------------------------------------------------------
+// Stub backend: build pure-Rust literals (same signatures).
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from flat data.
+#[cfg(not(feature = "pjrt"))]
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    check_len("lit_f32", shape, data.len())?;
+    Ok(Literal::from_f32(shape, data.to_vec()))
+}
+
+/// Build an i32 literal of the given shape.
+#[cfg(not(feature = "pjrt"))]
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    check_len("lit_i32", shape, data.len())?;
+    Ok(Literal::from_i32(shape, data.to_vec()))
+}
+
+/// Rank-0 f32 scalar literal.
+#[cfg(not(feature = "pjrt"))]
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::from_f32(&[], vec![v])
+}
+
+/// Read an f32 literal back into a flat Vec (backend-agnostic: both
+/// literal types expose `to_vec`).
+pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
     Ok(l.to_vec::<f32>()?)
 }
 
@@ -87,5 +129,23 @@ mod tests {
         assert!(HostTensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
         assert_eq!(HostTensor::zeros(&[4, 5]).numel(), 20);
         assert_eq!(HostTensor::scalar(2.5).data, vec![2.5]);
+    }
+
+    #[test]
+    fn lit_builders_shape_check() {
+        assert!(lit_f32(&[2, 2], &[0.0; 4]).is_ok());
+        assert!(lit_f32(&[2, 2], &[0.0; 3]).is_err());
+        assert!(lit_i32(&[3], &[1, 2, 3]).is_ok());
+        assert!(lit_i32(&[3], &[1, 2]).is_err());
+        assert_eq!(lit_scalar_f32(1.5).element_count(), 1);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_literal_roundtrips() {
+        let l = lit_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let t = HostTensor::from_vec(&[2], vec![5.0, 6.0]).unwrap();
+        assert_eq!(to_vec_f32(&t.to_literal().unwrap()).unwrap(), vec![5.0, 6.0]);
     }
 }

@@ -1,6 +1,8 @@
-//! From-scratch substrates: the offline environment only ships the `xla`
-//! crate's dependency closure, so RNG, JSON, CLI parsing, thread-pool
-//! parallelism and the bench harness are all implemented here.
+//! From-scratch substrates: the offline environment has no crates.io
+//! registry (only the vendored workspace shims under third_party/), so
+//! RNG, JSON, CLI parsing, thread-pool parallelism and the bench harness
+//! are all implemented here rather than pulled in as dependencies
+//! (rand / serde_json / clap / rayon / criterion respectively).
 
 pub mod bench;
 pub mod cli;

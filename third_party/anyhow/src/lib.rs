@@ -1,0 +1,213 @@
+//! Offline API-compatible subset of the `anyhow` error-handling crate.
+//!
+//! The reproduction's build environment ships no crates.io registry, so
+//! this workspace member provides the exact slice of the anyhow 1.x API
+//! the `nasa` crate uses:
+//!
+//! * [`Error`] — an opaque error value carrying a human-readable context
+//!   chain (outermost context first, root cause last),
+//! * [`Result`] — `std::result::Result` defaulted to [`Error`],
+//! * the [`Context`] extension trait (`.context(..)` / `.with_context(..)`)
+//!   on both `Result` and `Option`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Semantics mirror the real crate where this repository depends on them:
+//! `Display` prints only the outermost message (tests assert on it),
+//! `Debug` prints the full `Caused by:` chain (what `fn main() -> Result`
+//! shows on error), and any `std::error::Error + Send + Sync + 'static`
+//! converts via `?` / `Into`.
+
+use std::fmt::{self, Debug, Display};
+
+/// An error value: a chain of human-readable messages, outermost context
+/// first, root cause last. Deliberately not `std::error::Error` itself —
+/// exactly like the real `anyhow::Error` — so the blanket `From` impl
+/// below stays coherent.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msgs: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (the `Context` trait calls this).
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.msgs.first().map(|s| s.as_str()).unwrap_or("unknown error"))
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self)?;
+        if self.msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &self.msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any standard error converts into [`Error`], capturing its full
+/// `source()` chain. This is what makes `?` work in `anyhow::Result`
+/// functions. (Coherent because `Error` itself is not `std::error::Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `std::result::Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` (any error convertible into [`Error`], including [`Error`]
+/// itself) and to `Option` (where `None` becomes the context message).
+pub trait Context<T>: Sized {
+    /// Wrap the error (or `None`) with an outer context message.
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string: `anyhow!("bad {x}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`]: `bail!("bad {x}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_context_only() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "loading manifest from /tmp".to_string())
+            .unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest from /tmp");
+        assert_eq!(e.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by") && d.contains("file missing"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_on_option_and_anyhow_result() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("empty").unwrap_err().to_string(), "empty");
+        // .context must also chain on an already-anyhow Result.
+        let e: Result<u8> = Err(anyhow!("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(v: i32) -> Result<i32> {
+            ensure!(v >= 0, "negative: {v}");
+            if v > 100 {
+                bail!("too big: {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("negative"));
+        assert!(f(200).unwrap_err().to_string().contains("too big"));
+    }
+}

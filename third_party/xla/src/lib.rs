@@ -1,0 +1,193 @@
+//! Type-level stub of the `xla` (xla_extension 0.5.x) PJRT bindings.
+//!
+//! Purpose: keep the real PJRT execution path in
+//! `rust/src/runtime/engine.rs` *compiling* under `--features pjrt` in an
+//! environment that cannot link the native `libxla_extension` library.
+//! Only the API surface the `nasa` runtime uses is declared; every entry
+//! point that would require the native library returns [`Error`] with a
+//! "PJRT runtime unavailable" message at run time.
+//!
+//! Swapping in the real bindings is a one-line dependency change in
+//! `rust/Cargo.toml`; no call-site changes are needed because the
+//! signatures here mirror xla-rs 0.5.x.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error`. Implements `std::error::Error`
+/// so it converts into `anyhow::Error` via `?` exactly like the real one.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable in this offline build — \
+         replace third_party/xla with the real xla_extension bindings to execute"
+    ))
+}
+
+/// Element types a [`Literal`] can hold (subset: what the runtime uses).
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for f64 {}
+
+/// Host-side literal. The stub tracks only the element count so that
+/// shape checks upstream behave sensibly; it holds no real buffer.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    element_count: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { element_count: data.len() }
+    }
+
+    /// Rank-0 scalar literal.
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal { element_count: 1 }
+    }
+
+    /// Reshape to the given dimensions (element count preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let n = if dims.is_empty() { 1 } else { n.max(0) } as usize;
+        if n != self.element_count {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({n} elems) from {} elems",
+                self.element_count
+            )));
+        }
+        Ok(self.clone())
+    }
+
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        self.element_count
+    }
+
+    /// Copy out as a host vector — requires the real runtime.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// Destructure a tuple literal — requires the real runtime.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Types accepted by [`PjRtLoadedExecutable::execute`] (mirrors xla-rs).
+pub trait BorrowLiteral {}
+impl BorrowLiteral for Literal {}
+impl<'a, B: BorrowLiteral> BorrowLiteral for &'a B {}
+
+/// Device buffer handle returned by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer back to the host — requires the real runtime.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments — requires the real runtime.
+    pub fn execute<L: BorrowLiteral>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client — requires the real runtime, so the stub
+    /// errors here (the earliest point) with a clear message.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Backend platform name.
+    pub fn platform_name(&self) -> String {
+        "stub-unavailable".to_string()
+    }
+
+    /// Compile a computation — requires the real runtime.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module protobuf.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact — requires the real runtime.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO proto (pure bookkeeping; no runtime needed).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_bookkeeping_without_runtime() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_count(), 6);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(Literal::scalar(1.5f32).reshape(&[]).unwrap().element_count(), 1);
+    }
+
+    #[test]
+    fn runtime_entry_points_error_clearly() {
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("PJRT runtime unavailable"), "{msg}");
+        let l = Literal::vec1(&[0i32]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+}
