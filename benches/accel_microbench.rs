@@ -1,16 +1,20 @@
 //! Microbenchmarks of the L3 hot paths: per-layer accelerator simulation,
-//! whole-net simulation, auto-mapper search, PJRT step execution (when
-//! artifacts exist), and the substrate primitives (RNG, JSON, par_map).
+//! whole-net simulation, auto-mapper search (chunk-factorized vs the
+//! brute-force reference oracle), PJRT step execution (when artifacts
+//! exist), and the substrate primitives (RNG, JSON, par_map).
 //!
-//! These feed the EXPERIMENTS.md §Perf iteration log.
+//! These feed the EXPERIMENTS.md §Perf iteration log. Flags (after `--`):
+//! `--quick` shrinks iteration budgets, `--json <path>` writes the
+//! machine-readable records (ci.sh uses both to maintain
+//! BENCH_mapper.json).
 
 use nasa::accel::{
     allocate, AreaBudget, ChunkAccelerator, Mapping, MemoryConfig, UNIT_ENERGY_45NM,
 };
-use nasa::mapper::{auto_map, MapperConfig};
+use nasa::mapper::{auto_map, auto_map_reference, MapperConfig};
 use nasa::model::zoo::mobilenet_v2_like;
 use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
-use nasa::util::bench::{header, Bench};
+use nasa::util::bench::{header, Bench, Runner};
 use nasa::util::rng::Rng;
 
 fn hybrid_arch(n_blocks: usize) -> Arch {
@@ -40,6 +44,7 @@ fn hybrid_arch(n_blocks: usize) -> Arch {
 }
 
 fn main() {
+    let mut runner = Runner::from_args();
     header();
     let q = QuantSpec::default();
     let costs = UNIT_ENERGY_45NM;
@@ -48,7 +53,7 @@ fn main() {
     let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
     let mapping = Mapping::all_rs(arch.layers.len());
 
-    Bench::new("accel/simulate_net_19layers").run(|| {
+    runner.bench("accel/simulate_net_19layers", || {
         let s = accel.simulate(&arch, &mapping, &q).unwrap();
         std::hint::black_box(s.energy_pj);
     });
@@ -60,17 +65,30 @@ fn main() {
     let alloc2 = allocate(&mbv2, AreaBudget::macs_equivalent(168, &costs), &costs);
     let accel2 = ChunkAccelerator::new(alloc2, MemoryConfig::default(), costs);
     let mapping2 = Mapping::all_rs(mbv2.layers.len());
-    Bench::new("accel/simulate_net_mbv2_53layers").run(|| {
+    runner.bench("accel/simulate_net_mbv2_53layers", || {
         let r = accel2.simulate(&mbv2, &mapping2, &q);
         std::hint::black_box(r.map(|s| s.energy_pj).ok());
     });
 
-    Bench::new("mapper/auto_map_full_19layers").run(|| {
-        let r = auto_map(&accel, &arch, &q, &MapperConfig::default());
+    // The mapper before/after pair (same widened space, same result —
+    // see tests/mapper_equivalence.rs): chunk-factorized engine vs the
+    // retained brute-force oracle, on the 19-layer hybrid arch.
+    let cfg = MapperConfig::default();
+    let factored = runner.bench("mapper/auto_map_full_19layers", || {
+        let r = auto_map(&accel, &arch, &q, &cfg);
         std::hint::black_box(r.combos_tried);
     });
+    let reference = runner.bench("mapper/auto_map_reference_19layers", || {
+        let r = auto_map_reference(&accel, &arch, &q, &cfg);
+        std::hint::black_box(r.combos_tried);
+    });
+    runner.record_speedup(
+        "mapper/speedup_factored_vs_reference_19layers",
+        &reference,
+        &factored,
+    );
 
-    Bench::new("mapper/auto_map_orderings_only").run(|| {
+    runner.bench("mapper/auto_map_orderings_only", || {
         let r = auto_map(
             &accel,
             &arch,
@@ -80,23 +98,31 @@ fn main() {
         std::hint::black_box(r.combos_tried);
     });
 
+    // MBv2-scale zoo arch (single-family: only the dataflow/split axes
+    // of its one chunk are populated, the worst case for factoring —
+    // the memo still collapses the redundant 16x combo re-evaluations).
+    runner.bench("mapper/auto_map_mbv2_53layers", || {
+        let r = auto_map(&accel2, &mbv2, &q, &cfg);
+        std::hint::black_box(r.combos_tried);
+    });
+
     // Substrates.
     let mut rng = Rng::new(1);
-    Bench::new("util/rng_gumbel_1k").run(|| {
+    runner.bench("util/rng_gumbel_1k", || {
         let mut buf = vec![0.0f32; 1000];
         rng.fill_gumbel(&mut buf);
         std::hint::black_box(buf[999]);
     });
 
     if let Ok(src) = std::fs::read_to_string("artifacts/manifest.json") {
-        Bench::new("util/json_parse_manifest").run(|| {
+        runner.bench("util/json_parse_manifest", || {
             let v = nasa::util::json::Json::parse(&src).unwrap();
             std::hint::black_box(matches!(v, nasa::util::json::Json::Obj(_)));
         });
     }
 
     let items: Vec<u64> = (0..10_000).collect();
-    Bench::new("util/par_map_10k").run(|| {
+    runner.bench("util/par_map_10k", || {
         let v = nasa::util::par::par_map(&items, |x| x.wrapping_mul(2654435761));
         std::hint::black_box(v[9999]);
     });
@@ -105,6 +131,8 @@ fn main() {
     if std::path::Path::new("artifacts/manifest.json").exists() {
         bench_pjrt();
     }
+
+    runner.finish();
 }
 
 fn bench_pjrt() {

@@ -6,11 +6,11 @@
 //! Run: cargo bench --bench fig8_automapper
 
 use nasa::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, UNIT_ENERGY_45NM};
-use nasa::mapper::{auto_map, MapperConfig};
+use nasa::mapper::{auto_map, auto_map_reference, MapperConfig};
 use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
 use nasa::report::fig8::{print_rows, rows_to_log, Fig8Row};
 use nasa::runtime::Manifest;
-use nasa::util::bench::{header, Bench};
+use nasa::util::bench::{header, Runner};
 use std::path::Path;
 
 fn model_set() -> Vec<Arch> {
@@ -113,16 +113,26 @@ fn main() {
     let _ = std::fs::create_dir_all("runs");
     let _ = rows_to_log(&rows, "fig8_bench").save(Path::new("runs"));
 
-    // Timing: the mapper search itself (the L3 hot path of Sec. 4.2).
+    // Timing: the mapper search itself (the L3 hot path of Sec. 4.2) —
+    // the chunk-factorized engine against the retained brute-force
+    // oracle on the same widened space.
     println!();
     header();
+    let mut runner = Runner::from_args();
     let arch = &models[0];
     let costs = UNIT_ENERGY_45NM;
     let alloc = allocate(arch, AreaBudget::macs_equivalent(168, &costs), &costs);
     let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
     let q = QuantSpec::default();
-    Bench::new("fig8/auto_map_one_model").run(|| {
-        let r = auto_map(&accel, arch, &q, &MapperConfig::default());
+    let cfg = MapperConfig::default();
+    let factored = runner.bench("fig8/auto_map_one_model", || {
+        let r = auto_map(&accel, arch, &q, &cfg);
         std::hint::black_box(r.combos_tried);
     });
+    let reference = runner.bench("fig8/auto_map_one_model_reference", || {
+        let r = auto_map_reference(&accel, arch, &q, &cfg);
+        std::hint::black_box(r.combos_tried);
+    });
+    runner.record_speedup("fig8/speedup_factored_vs_reference", &reference, &factored);
+    runner.finish();
 }

@@ -27,6 +27,11 @@ cargo check --features pjrt
 say "benches + examples compile: cargo build --release --all-targets"
 cargo build --release --all-targets
 
+say "mapper perf smoke: accel_microbench --quick --json BENCH_mapper.json"
+# Keeps the perf trajectory accumulating (EXPERIMENTS.md §Perf reads this
+# file); --quick bounds the smoke to a few iterations per benchmark.
+cargo bench --bench accel_microbench -- --quick --json BENCH_mapper.json
+
 say "docs are warning-free: cargo doc --no-deps"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps --quiet
 

@@ -54,6 +54,38 @@ impl Mapping {
     }
 }
 
+/// Totals for ONE chunk across the layers of its operator family — the
+/// unit the auto-mapper memoizes: a chunk's stats depend only on its own
+/// `(dataflow, gb_share, noc_share, tilings)`, never on the other two
+/// chunks, so whole-net candidates can be assembled from per-chunk
+/// evaluations without re-simulating (Fig. 5's chunks run concurrently
+/// on independent inputs).
+#[derive(Clone, Debug, Default)]
+pub struct ChunkStats {
+    /// Which chunk (CLP=0, SLP=1, ALP=2), `OpKind::chunk_index` layout.
+    pub chunk_idx: usize,
+    /// Total busy cycles per sample (sum over this family's layers).
+    pub cycles: f64,
+    /// Total energy per sample (pJ).
+    pub energy_pj: f64,
+    /// `(global layer index, stats)` in ascending layer order.
+    pub per_layer: Vec<(usize, LayerStats)>,
+}
+
+impl ChunkStats {
+    pub fn new(chunk_idx: usize) -> ChunkStats {
+        ChunkStats { chunk_idx, ..Default::default() }
+    }
+
+    /// Append one layer's stats (layers must arrive in ascending global
+    /// order, as `simulate` would visit them).
+    pub fn push(&mut self, layer_idx: usize, s: LayerStats) {
+        self.cycles += s.cycles;
+        self.energy_pj += s.energy_pj;
+        self.per_layer.push((layer_idx, s));
+    }
+}
+
 /// Whole-network simulation result.
 #[derive(Clone, Debug, Default)]
 pub struct NetStats {
@@ -70,6 +102,32 @@ pub struct NetStats {
 }
 
 impl NetStats {
+    /// Assemble whole-net stats from independently evaluated chunks (the
+    /// Fig. 5 pipeline model): period = max chunk time, energy = sum.
+    ///
+    /// Per-layer energy/latency are accumulated in ascending global layer
+    /// order — the same order `simulate` walks — so a composed `NetStats`
+    /// is bit-identical to a monolithic simulation of the same mapping.
+    pub fn compose(chunks: &[ChunkStats]) -> NetStats {
+        let n: usize = chunks.iter().map(|c| c.per_layer.len()).sum();
+        let mut merged: Vec<(usize, LayerStats)> = Vec::with_capacity(n);
+        for c in chunks {
+            merged.extend(c.per_layer.iter().copied());
+        }
+        merged.sort_unstable_by_key(|&(i, _)| i);
+        let mut stats = NetStats { per_layer: Vec::with_capacity(n), ..Default::default() };
+        for c in chunks {
+            stats.chunk_cycles[c.chunk_idx] += c.cycles;
+        }
+        for (_, s) in merged {
+            stats.latency_cycles += s.cycles;
+            stats.energy_pj += s.energy_pj;
+            stats.per_layer.push(s);
+        }
+        stats.period_cycles = stats.chunk_cycles.iter().cloned().fold(0.0, f64::max).max(1.0);
+        stats
+    }
+
     /// EDP in pJ x seconds at the given clock (the Fig. 6/8 metric).
     pub fn edp(&self, clock_hz: f64) -> f64 {
         self.energy_pj * (self.period_cycles / clock_hz)
@@ -107,19 +165,28 @@ impl ChunkAccelerator {
         ChunkAccelerator { alloc, mem, costs, clock_hz: 250e6 }
     }
 
-    fn chunk_for(&self, kind: OpKind, m: &Mapping) -> Chunk {
-        let (pe_kind, n_pes, idx) = match kind {
-            OpKind::Conv => (PeKind::Mac, self.alloc.clp, 0),
-            OpKind::Shift => (PeKind::ShiftUnit, self.alloc.slp, 1),
-            OpKind::Adder => (PeKind::AdderUnit, self.alloc.alp, 2),
+    /// The chunk executing `kind` under an explicit per-chunk
+    /// configuration — public so the auto-mapper's memoized chunk
+    /// evaluation (`mapper::chunk_eval`) can probe one chunk at a time
+    /// without fabricating a whole-net `Mapping`.
+    pub fn chunk_with(
+        &self,
+        kind: OpKind,
+        dataflow: Dataflow,
+        gb_share: f64,
+        noc_share: f64,
+    ) -> Chunk {
+        let (pe_kind, n_pes) = match kind {
+            OpKind::Conv => (PeKind::Mac, self.alloc.clp),
+            OpKind::Shift => (PeKind::ShiftUnit, self.alloc.slp),
+            OpKind::Adder => (PeKind::AdderUnit, self.alloc.alp),
         };
-        Chunk {
-            pe_kind,
-            n_pes,
-            dataflow: m.df_for(kind),
-            gb_share: m.gb_split[idx],
-            noc_share: m.noc_split[idx],
-        }
+        Chunk { pe_kind, n_pes, dataflow, gb_share, noc_share }
+    }
+
+    fn chunk_for(&self, kind: OpKind, m: &Mapping) -> Chunk {
+        let idx = kind.chunk_index();
+        self.chunk_with(kind, m.df_for(kind), m.gb_split[idx], m.noc_split[idx])
     }
 
     /// Simulate the whole network under a mapping (Fig. 5 schedule).
@@ -141,12 +208,7 @@ impl ChunkAccelerator {
             let s = chunk
                 .simulate_layer_tiled(l, tiling, q, &self.mem, &self.costs)
                 .map_err(|e| (i, e))?;
-            let idx = match l.kind {
-                OpKind::Conv => 0,
-                OpKind::Shift => 1,
-                OpKind::Adder => 2,
-            };
-            stats.chunk_cycles[idx] += s.cycles;
+            stats.chunk_cycles[l.kind.chunk_index()] += s.cycles;
             stats.latency_cycles += s.cycles;
             stats.energy_pj += s.energy_pj;
             stats.per_layer.push(s);
@@ -228,6 +290,39 @@ mod tests {
         let s = acc.simulate(&a, &m, &QuantSpec::default()).unwrap();
         assert!(s.edp(250e6) > 0.0);
         assert!(s.edp(500e6) < s.edp(250e6));
+    }
+
+    #[test]
+    fn compose_matches_monolithic_simulate() {
+        // Re-derive per-chunk stats from a monolithic simulation, then
+        // check NetStats::compose reproduces it exactly.
+        let a = hybrid_arch();
+        let acc = accel_for(&a);
+        let m = Mapping::all_rs(a.layers.len());
+        let q = QuantSpec::default();
+        let s = acc.simulate(&a, &m, &q).unwrap();
+        let mut chunks = [ChunkStats::new(0), ChunkStats::new(1), ChunkStats::new(2)];
+        for (i, l) in a.layers.iter().enumerate() {
+            chunks[l.kind.chunk_index()].push(i, s.per_layer[i]);
+        }
+        let c = NetStats::compose(&chunks);
+        assert_eq!(c.energy_pj, s.energy_pj);
+        assert_eq!(c.period_cycles, s.period_cycles);
+        assert_eq!(c.latency_cycles, s.latency_cycles);
+        assert_eq!(c.chunk_cycles, s.chunk_cycles);
+        assert_eq!(c.per_layer.len(), s.per_layer.len());
+        for (cl, sl) in c.per_layer.iter().zip(&s.per_layer) {
+            assert_eq!(cl.cycles, sl.cycles);
+            assert_eq!(cl.energy_pj, sl.energy_pj);
+        }
+    }
+
+    #[test]
+    fn compose_empty_has_unit_period() {
+        let c = NetStats::compose(&[]);
+        assert_eq!(c.period_cycles, 1.0);
+        assert_eq!(c.energy_pj, 0.0);
+        assert!(c.per_layer.is_empty());
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Memoized per-chunk evaluation — the factored auto-mapper's inner
+//! engine.
+//!
+//! A layer's `LayerStats` depend only on its own chunk's configuration
+//! `(pe_kind, n_pes, dataflow, gb_share, noc_share, tiling)`; the other
+//! two chunks are invisible to it (Fig. 5's chunks run concurrently on
+//! independent inputs). The brute-force search therefore re-simulates
+//! each per-chunk configuration once per *combination* it appears in —
+//! ~16x per chunk for the 64 dataflow combos, worse once resource splits
+//! multiply. This module evaluates each distinct `ChunkKey` exactly once
+//! (including the per-layer tiling search) and lets `search::auto_map`
+//! assemble all whole-net candidates compositionally via
+//! `NetStats::compose`.
+
+use super::search::MapperConfig;
+use crate::accel::chunk::{Chunk, Infeasible, LayerStats};
+use crate::accel::memory::MemoryConfig;
+use crate::accel::pe::UnitCosts;
+use crate::accel::schedule::{ChunkAccelerator, ChunkStats};
+use crate::accel::{Dataflow, Tiling};
+use crate::model::arch::{Arch, LayerDesc, OpKind};
+use crate::model::quant::QuantSpec;
+
+/// Identity of one chunk configuration in the memo table. Shares are
+/// stored as f64 bit patterns: split candidates come from one generator,
+/// so equal shares are bit-equal and hashing is exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ChunkKey {
+    /// CLP=0, SLP=1, ALP=2 (`OpKind::chunk_index` layout).
+    pub chunk_idx: usize,
+    pub df: Dataflow,
+    pub gb_bits: u64,
+    pub noc_bits: u64,
+}
+
+impl ChunkKey {
+    pub fn new(chunk_idx: usize, df: Dataflow, gb_share: f64, noc_share: f64) -> ChunkKey {
+        ChunkKey { chunk_idx, df, gb_bits: gb_share.to_bits(), noc_bits: noc_share.to_bits() }
+    }
+
+    pub fn gb_share(&self) -> f64 {
+        f64::from_bits(self.gb_bits)
+    }
+
+    pub fn noc_share(&self) -> f64 {
+        f64::from_bits(self.noc_bits)
+    }
+}
+
+/// One memoized evaluation: per-chunk totals plus the chosen per-layer
+/// tilings (`None` = the chunk's default tiling, matching `Mapping`
+/// semantics), or the first infeasible layer (global index) — exactly
+/// what `ChunkAccelerator::simulate` would have reported for this
+/// chunk's layers.
+#[derive(Clone, Debug)]
+pub struct ChunkEval {
+    pub key: ChunkKey,
+    pub result: Result<(ChunkStats, Vec<(usize, Option<Tiling>)>), (usize, Infeasible)>,
+}
+
+impl ChunkEval {
+    pub fn is_feasible(&self) -> bool {
+        self.result.is_ok()
+    }
+}
+
+/// The greedy per-layer tiling rule: scan the cfg-selected candidate set
+/// and keep the feasible tiling minimizing `(cycles, energy)`
+/// lexicographically, first among exact ties. Returns `None` when tiling
+/// search is disabled or nothing is feasible (callers fall back to the
+/// chunk's default tiling). This is the ONE copy of the rule — both the
+/// factored engine (`eval_chunk`) and the brute-force oracle
+/// (`search::auto_map_reference`) call it, which is what keeps the two
+/// engines exhaustive-equivalent.
+pub(crate) fn best_layer_tiling(
+    chunk: &Chunk,
+    l: &LayerDesc,
+    q: &QuantSpec,
+    mem: &MemoryConfig,
+    costs: &UnitCosts,
+    cfg: &MapperConfig,
+) -> Option<(LayerStats, Tiling)> {
+    if !cfg.search_tilings {
+        return None;
+    }
+    let cands = if cfg.full_tiling_lattice {
+        super::space::tiling_candidates_full(chunk.n_pes, l)
+    } else {
+        super::space::tiling_candidates(chunk.n_pes, l)
+    };
+    let mut best: Option<(LayerStats, Tiling)> = None;
+    for t in cands {
+        if let Ok(s) = chunk.simulate_layer_tiled(l, t, q, mem, costs) {
+            if best
+                .as_ref()
+                .is_none_or(|(b, _)| (s.cycles, s.energy_pj) < (b.cycles, b.energy_pj))
+            {
+                best = Some((s, t));
+            }
+        }
+    }
+    best
+}
+
+/// Evaluate one chunk configuration over `layer_idxs` (the global indices
+/// of this family's layers, ascending). Per-layer decisions are the
+/// shared `best_layer_tiling` rule, with a default-tiling fallback when
+/// the search finds nothing feasible.
+pub fn eval_chunk(
+    accel: &ChunkAccelerator,
+    arch: &Arch,
+    layer_idxs: &[usize],
+    key: ChunkKey,
+    q: &QuantSpec,
+    cfg: &MapperConfig,
+) -> ChunkEval {
+    let kind = OpKind::ALL[key.chunk_idx];
+    let chunk = accel.chunk_with(kind, key.df, key.gb_share(), key.noc_share());
+    let mut stats = ChunkStats::new(key.chunk_idx);
+    let mut tilings = Vec::with_capacity(layer_idxs.len());
+    for &i in layer_idxs {
+        let l = &arch.layers[i];
+        match best_layer_tiling(&chunk, l, q, &accel.mem, &accel.costs, cfg) {
+            // The tiling search already simulated the winning point; its
+            // stats are the layer's stats — no second pass.
+            Some((s, t)) => {
+                stats.push(i, s);
+                tilings.push((i, Some(t)));
+            }
+            None => match chunk.simulate_layer(l, q, &accel.mem, &accel.costs) {
+                Ok(s) => {
+                    stats.push(i, s);
+                    tilings.push((i, None));
+                }
+                Err(e) => return ChunkEval { key, result: Err((i, e)) },
+            },
+        }
+    }
+    ChunkEval { key, result: Ok((stats, tilings)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::alloc::{allocate, AreaBudget};
+    use crate::accel::{MemoryConfig, NetStats, UNIT_ENERGY_45NM};
+    use crate::model::arch::LayerDesc;
+
+    fn arch() -> Arch {
+        let mk = |kind, cout: usize| LayerDesc {
+            name: "t".into(),
+            kind,
+            cin: 16,
+            cout,
+            h_out: 8,
+            w_out: 8,
+            k: 3,
+            stride: 1,
+            groups: 1,
+        };
+        Arch {
+            name: "t".into(),
+            layers: vec![
+                mk(OpKind::Conv, 16),
+                mk(OpKind::Shift, 32),
+                mk(OpKind::Conv, 32),
+                mk(OpKind::Adder, 32),
+            ],
+            choices: vec![],
+        }
+    }
+
+    fn accel(mem: MemoryConfig) -> ChunkAccelerator {
+        let costs = UNIT_ENERGY_45NM;
+        let a = arch();
+        let alloc = allocate(&a, AreaBudget::macs_equivalent(168, &costs), &costs);
+        ChunkAccelerator::new(alloc, mem, costs)
+    }
+
+    #[test]
+    fn key_roundtrips_shares() {
+        let k = ChunkKey::new(1, Dataflow::Ws, 1.0 / 3.0, 0.21);
+        assert_eq!(k.gb_share(), 1.0 / 3.0);
+        assert_eq!(k.noc_share(), 0.21);
+        assert_eq!(k, ChunkKey::new(1, Dataflow::Ws, 1.0 / 3.0, 0.21));
+    }
+
+    #[test]
+    fn chunk_evals_compose_to_simulate() {
+        // Evaluating the three chunks independently and composing must
+        // reproduce a monolithic all-RS simulation bit-for-bit.
+        let acc = accel(MemoryConfig::default());
+        let a = arch();
+        let q = QuantSpec::default();
+        let cfg = MapperConfig { search_tilings: false, ..Default::default() };
+        let mut chunks = Vec::new();
+        for ci in 0..3usize {
+            let idxs: Vec<usize> = a
+                .layers
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.kind.chunk_index() == ci)
+                .map(|(i, _)| i)
+                .collect();
+            let key = ChunkKey::new(ci, Dataflow::Rs, 1.0 / 3.0, 1.0 / 3.0);
+            let e = eval_chunk(&acc, &a, &idxs, key, &q, &cfg);
+            let (cs, tilings) = e.result.expect("feasible chunk");
+            assert!(tilings.iter().all(|(_, t)| t.is_none()));
+            chunks.push(cs);
+        }
+        let composed = NetStats::compose(&chunks);
+        let mono = acc
+            .simulate(&a, &crate::accel::Mapping::all_rs(a.layers.len()), &q)
+            .unwrap();
+        assert_eq!(composed.energy_pj, mono.energy_pj);
+        assert_eq!(composed.period_cycles, mono.period_cycles);
+        assert_eq!(composed.chunk_cycles, mono.chunk_cycles);
+    }
+
+    #[test]
+    fn infeasible_reports_first_layer_of_family() {
+        let mut acc = accel(MemoryConfig::default());
+        acc.alloc.clp = 0;
+        let a = arch();
+        let key = ChunkKey::new(0, Dataflow::Rs, 1.0 / 3.0, 1.0 / 3.0);
+        let e = eval_chunk(
+            &acc,
+            &a,
+            &[0, 2],
+            key,
+            &QuantSpec::default(),
+            &MapperConfig::default(),
+        );
+        assert!(!e.is_feasible());
+        let (i, err) = e.result.unwrap_err();
+        assert_eq!(i, 0);
+        assert_eq!(err, Infeasible::NoPes);
+    }
+}

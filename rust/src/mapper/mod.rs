@@ -1,8 +1,22 @@
 //! NASA's auto-mapper (Sec. 4.2): automated dataflow search for hybrid
 //! models on the chunk-based accelerator.
+//!
+//! The search is chunk-factorized: `chunk_eval` memoizes per-chunk
+//! evaluations (each distinct `(dataflow, gb_share, noc_share)` chunk
+//! configuration is simulated once, tiling search included), `space`
+//! enumerates the widened outer axes (64 dataflow combos x independent
+//! GB / NoC splits x divisor-lattice tilings), and `search` assembles
+//! whole-net candidates compositionally via `NetStats::compose`. The
+//! brute-force oracle `auto_map_reference` is retained for equivalence
+//! regressions and before/after benchmarks.
 
+pub mod chunk_eval;
 pub mod search;
 pub mod space;
 
-pub use search::{auto_map, MapperConfig, MapperResult};
-pub use space::{dataflow_combos, gb_splits, tiling_candidates};
+pub use chunk_eval::{eval_chunk, ChunkEval, ChunkKey};
+pub use search::{auto_map, auto_map_reference, MapperConfig, MapperResult};
+pub use space::{
+    candidates, dataflow_combos, gb_splits, noc_splits, tiling_candidates,
+    tiling_candidates_full, MapCandidate,
+};

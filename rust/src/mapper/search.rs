@@ -4,15 +4,24 @@
 //! (Fig. 8), including the cases where fixed-RS is infeasible under the
 //! shared-buffer budget.
 //!
-//! Structure: for a fixed (dataflow combo, resource split) the layers are
-//! independent, so the optimal tiling decomposes per layer — a greedy
-//! exact inner loop. The outer 64 x |splits| loop fans out across
-//! threads (util::par).
+//! Structure: the search is *chunk-factorized*. A layer's stats depend
+//! only on its own chunk's `(dataflow, gb_share, noc_share, tiling)`, so
+//! `auto_map` evaluates each distinct per-chunk configuration exactly
+//! once (`chunk_eval`, fanned across threads via util::par) and then
+//! assembles every whole-net candidate compositionally with
+//! `NetStats::compose` — candidates per chunk-evaluation instead of
+//! candidates x layers x tilings simulations. The pre-factorization
+//! exhaustive path survives as `auto_map_reference`, the equivalence
+//! oracle and before/after benchmark baseline.
 
+use std::collections::{HashMap, HashSet};
+
+use super::chunk_eval::{eval_chunk, ChunkEval, ChunkKey};
+use super::space::MapCandidate;
 use crate::accel::chunk::Infeasible;
-use crate::accel::schedule::{ChunkAccelerator, Mapping, NetStats};
+use crate::accel::schedule::{ChunkAccelerator, ChunkStats, Mapping, NetStats};
 use crate::accel::Tiling;
-use crate::model::arch::{Arch, OpKind};
+use crate::model::arch::Arch;
 use crate::model::quant::QuantSpec;
 use crate::util::par::par_map;
 
@@ -22,11 +31,30 @@ pub struct MapperConfig {
     pub search_tilings: bool,
     /// Clock for the EDP objective.
     pub clock_hz: f64,
+    /// Widened space: choose the NoC split independently of the GB split
+    /// (false = pre-widening behaviour, NoC tied to GB).
+    pub independent_noc: bool,
+    /// Widened space: per-layer tilings from the full divisor lattice of
+    /// the chunk's PE count (false = power-of-two splits + extremes).
+    /// Opt-in for now: the per-layer greedy rule picks min (cycles,
+    /// energy) lexicographically, so the lattice's skewed tilings can
+    /// trade a lot of energy for a few cycles; default-on once the
+    /// selection is EDP-aware (see ROADMAP).
+    pub full_tiling_lattice: bool,
+    /// Use the chunk-factorized engine (false = the brute-force
+    /// `auto_map_reference` oracle; same space, same result, no memoing).
+    pub factored: bool,
 }
 
 impl Default for MapperConfig {
     fn default() -> Self {
-        MapperConfig { search_tilings: true, clock_hz: 250e6 }
+        MapperConfig {
+            search_tilings: true,
+            clock_hz: 250e6,
+            independent_noc: true,
+            full_tiling_lattice: false,
+            factored: true,
+        }
     }
 }
 
@@ -52,55 +80,90 @@ impl MapperResult {
     }
 }
 
-/// Per-layer optimal tiling under a fixed chunk configuration: pick the
-/// feasible tiling minimizing layer cycles (ties: lower energy).
-fn best_tilings(
-    accel: &ChunkAccelerator,
-    arch: &Arch,
-    mapping: &Mapping,
-    q: &QuantSpec,
-) -> Vec<Option<Tiling>> {
-    arch.layers
-        .iter()
-        .map(|l| {
-            let n_pes = match l.kind {
-                OpKind::Conv => accel.alloc.clp,
-                OpKind::Shift => accel.alloc.slp,
-                OpKind::Adder => accel.alloc.alp,
-            };
-            let chunk = chunk_of(accel, mapping, l.kind);
-            let mut best: Option<(f64, f64, Tiling)> = None;
-            for t in super::space::tiling_candidates(n_pes, l) {
-                if let Ok(s) = chunk.simulate_layer_tiled(l, t, q, &accel.mem, &accel.costs) {
-                    let key = (s.cycles, s.energy_pj);
-                    if best.as_ref().is_none_or(|(c, e, _)| key < (*c, *e)) {
-                        best = Some((s.cycles, s.energy_pj, t));
-                    }
-                }
-            }
-            best.map(|(_, _, t)| t)
-        })
-        .collect()
+/// NaN-safe "does `edp` beat the incumbent"? A NaN EDP (either sign —
+/// x86 runtime NaNs carry the sign bit set, which `total_cmp` would
+/// order *below* every finite value) never displaces an incumbent, any
+/// non-NaN displaces a NaN incumbent, and otherwise strict `total_cmp`
+/// keeps the first among exact ties.
+fn improves(edp: f64, incumbent: Option<f64>) -> bool {
+    match incumbent {
+        None => true,
+        Some(_) if edp.is_nan() => false,
+        Some(b) if b.is_nan() => true,
+        Some(b) => edp.total_cmp(&b) == std::cmp::Ordering::Less,
+    }
 }
 
-fn chunk_of(
-    accel: &ChunkAccelerator,
-    mapping: &Mapping,
-    kind: OpKind,
-) -> crate::accel::chunk::Chunk {
-    use crate::accel::pe::PeKind;
-    let (pe_kind, n_pes, idx) = match kind {
-        OpKind::Conv => (PeKind::Mac, accel.alloc.clp, 0),
-        OpKind::Shift => (PeKind::ShiftUnit, accel.alloc.slp, 1),
-        OpKind::Adder => (PeKind::AdderUnit, accel.alloc.alp, 2),
-    };
-    crate::accel::chunk::Chunk {
-        pe_kind,
-        n_pes,
-        dataflow: mapping.df_for(kind),
-        gb_share: mapping.gb_split[idx],
-        noc_share: mapping.noc_split[idx],
+/// Select the minimum-EDP candidate, keeping the first among exact ties
+/// (matching `Iterator::min_by` on the candidate order).
+fn select_best(
+    feasible: impl IntoIterator<Item = (Mapping, NetStats)>,
+    clock_hz: f64,
+) -> Option<(Mapping, NetStats)> {
+    let mut best: Option<(f64, (Mapping, NetStats))> = None;
+    for cand in feasible {
+        let edp = cand.1.edp(clock_hz);
+        if improves(edp, best.as_ref().map(|(b, _)| *b)) {
+            best = Some((edp, cand));
+        }
     }
+    best.map(|(_, c)| c)
+}
+
+/// Global layer indices per chunk (CLP, SLP, ALP).
+fn family_layers(arch: &Arch) -> [Vec<usize>; 3] {
+    let mut fam: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for (i, l) in arch.layers.iter().enumerate() {
+        fam[l.kind.chunk_index()].push(i);
+    }
+    fam
+}
+
+/// Candidate totals from its chunks' memoized stats. Energy accumulates
+/// in global layer order (a 3-cursor merge) so the factored EDP is
+/// bit-identical to what `ChunkAccelerator::simulate` would produce.
+fn compose_totals(chunks: &[Option<&ChunkStats>; 3], n_layers: usize) -> (f64, f64) {
+    let mut cur = [0usize; 3];
+    let mut energy = 0.0;
+    for i in 0..n_layers {
+        for (fi, c) in chunks.iter().enumerate() {
+            if let Some(cs) = c {
+                if cur[fi] < cs.per_layer.len() && cs.per_layer[cur[fi]].0 == i {
+                    energy += cs.per_layer[cur[fi]].1.energy_pj;
+                    cur[fi] += 1;
+                }
+            }
+        }
+    }
+    let period = chunks
+        .iter()
+        .flatten()
+        .map(|c| c.cycles)
+        .fold(0.0, f64::max)
+        .max(1.0);
+    (energy, period)
+}
+
+/// Resolve a candidate's memoized chunk evaluations (index = chunk;
+/// `None` entries are families with no layers). Returns `None` when any
+/// required chunk is infeasible — the candidate cannot map.
+fn candidate_refs<'a>(
+    c: &MapCandidate,
+    fam: &[Vec<usize>; 3],
+    evals: &'a HashMap<ChunkKey, ChunkEval>,
+) -> Option<[Option<&'a ChunkEval>; 3]> {
+    let mut refs: [Option<&'a ChunkEval>; 3] = [None, None, None];
+    for fi in 0..3 {
+        if fam[fi].is_empty() {
+            continue;
+        }
+        let e = &evals[&ChunkKey::new(fi, c.dfs[fi], c.gb[fi], c.noc[fi])];
+        if !e.is_feasible() {
+            return None;
+        }
+        refs[fi] = Some(e);
+    }
+    Some(refs)
 }
 
 /// Run the auto-mapper for `arch` on `accel`.
@@ -110,46 +173,156 @@ pub fn auto_map(
     q: &QuantSpec,
     cfg: &MapperConfig,
 ) -> MapperResult {
+    if !cfg.factored {
+        return auto_map_reference(accel, arch, q, cfg);
+    }
     let op_loads = crate::accel::alloc::op_loads(arch);
-    let splits = super::space::gb_splits(&accel.alloc, &op_loads);
-    let combos = super::space::dataflow_combos();
+    let cands = super::space::candidates(&accel.alloc, &op_loads, cfg.independent_noc);
+    let fam = family_layers(arch);
 
-    // Candidate (dataflow combo, split) pairs.
-    let mut cands = Vec::with_capacity(combos.len() * splits.len());
-    for dfs in &combos {
-        for split in &splits {
-            cands.push((*dfs, *split));
+    // Distinct per-chunk configurations across all candidates; chunks
+    // whose family has no layers never constrain a candidate and are
+    // skipped entirely (matching the monolithic simulation, which only
+    // visits layers that exist).
+    let mut keys: Vec<ChunkKey> = Vec::new();
+    let mut seen: HashSet<ChunkKey> = HashSet::new();
+    for c in &cands {
+        for fi in 0..3 {
+            if fam[fi].is_empty() {
+                continue;
+            }
+            let k = ChunkKey::new(fi, c.dfs[fi], c.gb[fi], c.noc[fi]);
+            if seen.insert(k) {
+                keys.push(k);
+            }
         }
     }
 
-    let results: Vec<Option<(Mapping, NetStats)>> = par_map(&cands, |(dfs, split)| {
+    // The expensive part, done once per distinct configuration: per-layer
+    // tiling search + chunk totals, in parallel.
+    let evals: HashMap<ChunkKey, ChunkEval> =
+        par_map(&keys, |k| eval_chunk(accel, arch, &fam[k.chunk_idx], *k, q, cfg))
+            .into_iter()
+            .map(|e| (e.key, e))
+            .collect();
+
+    // Cheap compositional assembly of every candidate.
+    let mut combos_infeasible = 0usize;
+    let mut best: Option<(usize, f64)> = None;
+    for (ci, c) in cands.iter().enumerate() {
+        let Some(refs) = candidate_refs(c, &fam, &evals) else {
+            combos_infeasible += 1;
+            continue;
+        };
+        let stats = refs.map(|r| r.map(|e| &e.result.as_ref().unwrap().0));
+        let (energy, period) = compose_totals(&stats, arch.layers.len());
+        let edp = energy * (period / cfg.clock_hz);
+        if improves(edp, best.map(|(_, b)| b)) {
+            best = Some((ci, edp));
+        }
+    }
+
+    // Materialize only the winner: full NetStats + per-layer tilings.
+    let best = best.map(|(ci, best_edp)| {
+        let c = &cands[ci];
+        let refs = candidate_refs(c, &fam, &evals).expect("winner is feasible");
+        let mut tilings: Vec<Option<Tiling>> = vec![None; arch.layers.len()];
+        let mut chunk_stats: Vec<ChunkStats> = Vec::new();
+        for e in refs.iter().flatten() {
+            let (cs, ts) = e.result.as_ref().expect("winner chunk is feasible");
+            for &(i, t) in ts {
+                tilings[i] = t;
+            }
+            chunk_stats.push(cs.clone());
+        }
+        let mapping = Mapping {
+            clp_df: c.dfs[0],
+            slp_df: c.dfs[1],
+            alp_df: c.dfs[2],
+            tilings,
+            gb_split: c.gb,
+            noc_split: c.noc,
+        };
+        let stats = NetStats::compose(&chunk_stats);
+        // compose_totals (selection) and NetStats::compose (report) both
+        // accumulate in global layer order; keep them in lockstep.
+        debug_assert_eq!(stats.edp(cfg.clock_hz), best_edp, "selection/report EDP drift");
+        (mapping, stats)
+    });
+
+    // Expert baseline: RS for every chunk, default tilings, even split.
+    let rs_baseline = accel.simulate(arch, &Mapping::all_rs(arch.layers.len()), q);
+
+    MapperResult { best, rs_baseline, combos_tried: cands.len(), combos_infeasible }
+}
+
+/// Per-layer optimal tilings under a fixed whole-net mapping — the
+/// reference path's view of the shared `chunk_eval::best_layer_tiling`
+/// rule (the factored engine calls the same rule from `eval_chunk`).
+fn best_tilings(
+    accel: &ChunkAccelerator,
+    arch: &Arch,
+    mapping: &Mapping,
+    q: &QuantSpec,
+    cfg: &MapperConfig,
+) -> Vec<Option<Tiling>> {
+    arch.layers
+        .iter()
+        .map(|l| {
+            let idx = l.kind.chunk_index();
+            let chunk = accel.chunk_with(
+                l.kind,
+                mapping.df_for(l.kind),
+                mapping.gb_split[idx],
+                mapping.noc_split[idx],
+            );
+            super::chunk_eval::best_layer_tiling(&chunk, l, q, &accel.mem, &accel.costs, cfg)
+                .map(|(_, t)| t)
+        })
+        .collect()
+}
+
+/// The pre-factorization exhaustive search: one whole-net tiling search +
+/// simulation per candidate, no memoization. Retained as the equivalence
+/// oracle (`tests/mapper_equivalence.rs`) and the before/after baseline
+/// for the mapper benchmarks; same space and result as `auto_map`,
+/// asymptotically slower.
+pub fn auto_map_reference(
+    accel: &ChunkAccelerator,
+    arch: &Arch,
+    q: &QuantSpec,
+    cfg: &MapperConfig,
+) -> MapperResult {
+    let op_loads = crate::accel::alloc::op_loads(arch);
+    let cands = super::space::candidates(&accel.alloc, &op_loads, cfg.independent_noc);
+
+    let results: Vec<Option<(Mapping, NetStats)>> = par_map(&cands, |c| {
         let mut mapping = Mapping {
-            clp_df: dfs[0],
-            slp_df: dfs[1],
-            alp_df: dfs[2],
+            clp_df: c.dfs[0],
+            slp_df: c.dfs[1],
+            alp_df: c.dfs[2],
             tilings: vec![None; arch.layers.len()],
-            gb_split: *split,
-            noc_split: *split,
+            gb_split: c.gb,
+            noc_split: c.noc,
         };
         if cfg.search_tilings {
-            mapping.tilings = best_tilings(accel, arch, &mapping, q);
+            mapping.tilings = best_tilings(accel, arch, &mapping, q, cfg);
         }
         accel.simulate(arch, &mapping, q).ok().map(|s| (mapping, s))
     });
 
     let combos_tried = results.len();
-    let feasible: Vec<&(Mapping, NetStats)> = results.iter().flatten().collect();
-    let combos_infeasible = combos_tried - feasible.len();
-    let best = feasible
-        .iter()
-        .min_by(|a, b| {
-            a.1.edp(cfg.clock_hz)
-                .partial_cmp(&b.1.edp(cfg.clock_hz))
-                .unwrap()
-        })
-        .map(|&r| r.clone());
+    let mut combos_infeasible = 0usize;
+    let best = select_best(
+        results.into_iter().filter_map(|r| {
+            if r.is_none() {
+                combos_infeasible += 1;
+            }
+            r
+        }),
+        cfg.clock_hz,
+    );
 
-    // Expert baseline: RS for every chunk, default tilings, even split.
     let rs_baseline = accel.simulate(arch, &Mapping::all_rs(arch.layers.len()), q);
 
     MapperResult { best, rs_baseline, combos_tried, combos_infeasible }
@@ -160,7 +333,7 @@ mod tests {
     use super::*;
     use crate::accel::alloc::{allocate, AreaBudget};
     use crate::accel::{MemoryConfig, UNIT_ENERGY_45NM};
-    use crate::model::arch::LayerDesc;
+    use crate::model::arch::{LayerDesc, OpKind};
 
     fn hybrid_arch() -> Arch {
         let mk = |kind, hw: usize, cin: usize, cout: usize| LayerDesc {
@@ -218,6 +391,22 @@ mod tests {
     }
 
     #[test]
+    fn widened_space_multiplies_candidates() {
+        let acc = accel(MemoryConfig::default());
+        let arch = hybrid_arch();
+        let q = QuantSpec::default();
+        let wide = auto_map(&acc, &arch, &q, &MapperConfig::default());
+        let tied = auto_map(
+            &acc,
+            &arch,
+            &q,
+            &MapperConfig { independent_noc: false, ..Default::default() },
+        );
+        assert!(wide.combos_tried > tied.combos_tried);
+        assert_eq!(wide.combos_tried % 64, 0);
+    }
+
+    #[test]
     fn tight_memory_creates_infeasible_combos() {
         let acc = accel(MemoryConfig { gb_bytes: 2 * 1024, ..Default::default() });
         let arch = hybrid_arch();
@@ -227,6 +416,46 @@ mod tests {
 
     fn stats(energy_pj: f64, period_cycles: f64) -> NetStats {
         NetStats { energy_pj, period_cycles, ..Default::default() }
+    }
+
+    #[test]
+    fn select_best_handles_zero_energy_candidate() {
+        // A degenerate zero-energy candidate has EDP 0 and must win
+        // without panicking (the old partial_cmp().unwrap() selection was
+        // one NaN away from a panic here).
+        let cands = vec![
+            (Mapping::all_rs(1), stats(100.0, 100.0)),
+            (Mapping::all_rs(1), stats(0.0, 100.0)),
+            (Mapping::all_rs(1), stats(50.0, 100.0)),
+        ];
+        let best = select_best(cands, 250e6).expect("non-empty");
+        assert_eq!(best.1.energy_pj, 0.0);
+    }
+
+    #[test]
+    fn select_best_never_picks_nan_over_finite() {
+        let cands = vec![
+            (Mapping::all_rs(1), stats(f64::NAN, 100.0)),
+            (Mapping::all_rs(1), stats(50.0, 100.0)),
+        ];
+        let best = select_best(cands, 250e6).expect("non-empty");
+        assert_eq!(best.1.energy_pj, 50.0);
+        // All-NaN input still selects (total order), no panic.
+        let all_nan = vec![(Mapping::all_rs(1), stats(f64::NAN, 100.0))];
+        assert!(select_best(all_nan, 250e6).is_some());
+    }
+
+    #[test]
+    fn improves_is_nan_safe_and_strict() {
+        assert!(improves(0.0, None));
+        assert!(improves(0.0, Some(1.0)));
+        assert!(!improves(1.0, Some(1.0))); // strict: first tie wins
+        assert!(!improves(f64::NAN, Some(0.0)));
+        // x86 runtime NaNs are negative; they must not win either.
+        assert!(!improves(-f64::NAN, Some(0.0)));
+        assert!(improves(0.0, Some(f64::NAN)));
+        assert!(improves(0.0, Some(-f64::NAN)));
+        assert!(improves(f64::NAN, None)); // all-NaN input still selects
     }
 
     #[test]

@@ -34,6 +34,18 @@ pub fn dataflow_combos() -> Vec<[Dataflow; 3]> {
 /// Candidate PE-array tilings for a layer on a chunk with `n_pes` PEs:
 /// power-of-two splits of the array plus the dim-clamped extremes.
 pub fn tiling_candidates(n_pes: usize, l: &LayerDesc) -> Vec<Tiling> {
+    tilings_impl(n_pes, l, false)
+}
+
+/// The widened tiling axis: every divisor pair `(d, n_pes/d)` of the PE
+/// count (the full divisor lattice) on top of `tiling_candidates`'s
+/// power-of-two/extreme set. Affordable because the factored search
+/// evaluates each chunk configuration once instead of 64x.
+pub fn tiling_candidates_full(n_pes: usize, l: &LayerDesc) -> Vec<Tiling> {
+    tilings_impl(n_pes, l, true)
+}
+
+fn tilings_impl(n_pes: usize, l: &LayerDesc, lattice: bool) -> Vec<Tiling> {
     let d = crate::accel::dataflow::loop_dims(l);
     let mut out = Vec::new();
     let mut seen = std::collections::BTreeSet::new();
@@ -54,6 +66,16 @@ pub fn tiling_candidates(n_pes: usize, l: &LayerDesc) -> Vec<Tiling> {
     push(n_pes / d.n.max(1), d.n);
     let side = (n_pes as f64).sqrt() as usize;
     push(side, side);
+    if lattice {
+        let mut f = 1usize;
+        while f * f <= n_pes {
+            if n_pes % f == 0 {
+                push(f, n_pes / f);
+                push(n_pes / f, f);
+            }
+            f += 1;
+        }
+    }
     out
 }
 
@@ -82,7 +104,7 @@ pub fn gb_splits(alloc: &PeAllocation, op_loads: &[u64; 3]) -> Vec<[f64; 3]> {
             v.push(prop);
             // Skews emphasizing the dominant chunk.
             let mut skew = prop;
-            let imax = (0..3).max_by(|&a, &b| prop[a].partial_cmp(&prop[b]).unwrap()).unwrap();
+            let imax = (0..3).max_by(|&a, &b| prop[a].total_cmp(&prop[b])).unwrap();
             skew[imax] = (skew[imax] + 0.3).min(0.9);
             let z2: f64 = skew.iter().sum();
             for p in skew.iter_mut() {
@@ -92,6 +114,54 @@ pub fn gb_splits(alloc: &PeAllocation, op_loads: &[u64; 3]) -> Vec<[f64; 3]> {
         }
     }
     v
+}
+
+/// NoC bandwidth split candidates. Traffic pressure tracks op load the
+/// same way buffer pressure does, so the generator is shared with
+/// `gb_splits` — what the widened space adds is that the mapper now picks
+/// the two splits *independently* instead of tying NoC to GB.
+pub fn noc_splits(alloc: &PeAllocation, op_loads: &[u64; 3]) -> Vec<[f64; 3]> {
+    gb_splits(alloc, op_loads)
+}
+
+/// One point of the mapper's outer search space: per-chunk dataflows plus
+/// the two resource splits. The per-layer tiling axis is resolved inside
+/// the per-chunk evaluation (layers decompose once the chunk is fixed).
+#[derive(Clone, Copy, Debug)]
+pub struct MapCandidate {
+    /// Dataflow per chunk (CLP, SLP, ALP).
+    pub dfs: [Dataflow; 3],
+    /// Global-buffer split across chunks.
+    pub gb: [f64; 3],
+    /// NoC bandwidth split across chunks.
+    pub noc: [f64; 3],
+}
+
+/// The full outer candidate set: 64 dataflow combos x |gb splits| x
+/// (|noc splits| when `independent_noc`, else NoC tied to GB — the
+/// pre-widening space, kept for the reference oracle and regressions).
+pub fn candidates(
+    alloc: &PeAllocation,
+    op_loads: &[u64; 3],
+    independent_noc: bool,
+) -> Vec<MapCandidate> {
+    let combos = dataflow_combos();
+    let gbs = gb_splits(alloc, op_loads);
+    let nocs = noc_splits(alloc, op_loads);
+    let per_combo = if independent_noc { gbs.len() * nocs.len() } else { gbs.len() };
+    let mut out = Vec::with_capacity(combos.len() * per_combo);
+    for dfs in &combos {
+        for gb in &gbs {
+            if independent_noc {
+                for noc in &nocs {
+                    out.push(MapCandidate { dfs: *dfs, gb: *gb, noc: *noc });
+                }
+            } else {
+                out.push(MapCandidate { dfs: *dfs, gb: *gb, noc: *gb });
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -136,6 +206,38 @@ mod tests {
     #[test]
     fn tilings_nonempty_even_tiny() {
         assert!(!tiling_candidates(1, &layer()).is_empty());
+    }
+
+    #[test]
+    fn full_lattice_superset_and_bounded() {
+        let l = layer();
+        let base = tiling_candidates(168, &l);
+        let full = tiling_candidates_full(168, &l);
+        let fullset: std::collections::BTreeSet<_> =
+            full.iter().map(|t| (t.tm, t.tn)).collect();
+        for t in &base {
+            assert!(fullset.contains(&(t.tm, t.tn)), "missing {t:?}");
+        }
+        // 168 = 2^3*3*7 has non-power-of-two divisor pairs, e.g. (56, 3).
+        assert!(full.len() > base.len());
+        assert!(fullset.contains(&(56, 3)));
+        for t in &full {
+            assert!(t.tm * t.tn <= 168 && t.tm >= 1 && t.tn >= 1);
+            assert!(t.tm <= 64 && t.tn <= 48); // clamped to layer dims
+        }
+    }
+
+    #[test]
+    fn candidates_cover_both_spaces() {
+        let alloc = PeAllocation { clp: 10, slp: 10, alp: 10 };
+        let loads = [100u64, 50, 25];
+        let n_splits = gb_splits(&alloc, &loads).len();
+        let tied = candidates(&alloc, &loads, false);
+        let wide = candidates(&alloc, &loads, true);
+        assert_eq!(tied.len(), 64 * n_splits);
+        assert_eq!(wide.len(), 64 * n_splits * n_splits);
+        assert!(tied.iter().all(|c| c.gb == c.noc));
+        assert!(wide.iter().any(|c| c.gb != c.noc));
     }
 
     #[test]

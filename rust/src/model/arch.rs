@@ -32,6 +32,20 @@ impl OpKind {
             OpKind::Adder => "adder",
         }
     }
+
+    /// Index of the chunk executing this family (CLP=0, SLP=1, ALP=2) —
+    /// the layout of `PeAllocation`, `Mapping::gb_split`, and
+    /// `NetStats::chunk_cycles`.
+    pub fn chunk_index(&self) -> usize {
+        match self {
+            OpKind::Conv => 0,
+            OpKind::Shift => 1,
+            OpKind::Adder => 2,
+        }
+    }
+
+    /// Families in chunk order (CLP, SLP, ALP).
+    pub const ALL: [OpKind; 3] = [OpKind::Conv, OpKind::Shift, OpKind::Adder];
 }
 
 /// One conv-like layer: output spatial size `h_out x w_out`, kernel `k`,

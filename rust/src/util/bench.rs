@@ -3,6 +3,10 @@
 //! `Bench` runs warmup + timed iterations, reports mean/median/p95/stddev,
 //! and emits both a human table row and a machine-readable JSON line so
 //! bench output can be diffed across the EXPERIMENTS.md §Perf iterations.
+//! `Runner` wraps it with the bench-binary CLI contract (`--quick`,
+//! `--json <path>`) plus wall-time speedup reporting, so ci.sh can run
+//! `cargo bench --bench <x> -- --quick --json <file>` as a smoke step and
+//! accumulate the perf trajectory.
 
 use std::time::{Duration, Instant};
 
@@ -122,6 +126,85 @@ pub fn header() {
     println!("{}", "-".repeat(96));
 }
 
+/// Bench-binary runner: parses the common CLI flags, runs each benchmark
+/// in normal or `--quick` mode, collects every result, and on `finish()`
+/// writes them as a JSON array to the `--json <path>` file (name, iters,
+/// ns/iter statistics — one object per bench, ratios for speedups).
+pub struct Runner {
+    quick: bool,
+    json_path: Option<std::path::PathBuf>,
+    records: Vec<String>,
+}
+
+impl Runner {
+    /// Parse `--quick` / `--json <path>` from the process arguments
+    /// (cargo passes everything after `--` straight to the bench binary).
+    pub fn from_args() -> Runner {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        Runner::from_arg_list(&args)
+    }
+
+    pub fn from_arg_list(args: &[String]) -> Runner {
+        let mut quick = false;
+        let mut json_path = None;
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--json" => json_path = it.next().map(std::path::PathBuf::from),
+                _ => {}
+            }
+        }
+        Runner { quick, json_path, records: Vec::new() }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Run one benchmark under the runner's mode and record its stats.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> Stats {
+        let b = if self.quick { Bench::quick(name) } else { Bench::new(name) };
+        let s = b.run(f);
+        self.records.push(s.json_line());
+        s
+    }
+
+    /// Report the wall-time speedup of `new` over `baseline` (mean-based)
+    /// and record it in the JSON log as `{"bench":name,"ratio":x}`.
+    pub fn record_speedup(&mut self, name: &str, baseline: &Stats, new: &Stats) -> f64 {
+        let ratio = baseline.mean_ns / new.mean_ns;
+        println!(
+            "{:<48} {:>11.2}x  ({} -> {})",
+            name,
+            ratio,
+            fmt_ns(baseline.mean_ns),
+            fmt_ns(new.mean_ns)
+        );
+        // A sub-timer-resolution mean gives ratio inf/NaN, which is not
+        // valid JSON — record null so the file always parses.
+        let json_ratio = if ratio.is_finite() {
+            format!("{ratio:.3}")
+        } else {
+            "null".to_string()
+        };
+        self.records.push(format!("{{\"bench\":\"{name}\",\"ratio\":{json_ratio}}}"));
+        ratio
+    }
+
+    /// Write the accumulated records to the `--json` file, if requested.
+    /// Errors are reported but non-fatal (benches still printed stats).
+    pub fn finish(&self) {
+        let Some(path) = &self.json_path else { return };
+        let body = format!("[\n{}\n]\n", self.records.join(",\n"));
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("bench: failed to write {}: {e}", path.display());
+        } else {
+            println!("bench: wrote {} records to {}", self.records.len(), path.display());
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +224,52 @@ mod tests {
         assert!(fmt_ns(5_000.0).contains("µs"));
         assert!(fmt_ns(5_000_000.0).contains("ms"));
         assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn runner_parses_flags() {
+        let r = Runner::from_arg_list(&[
+            "--quick".to_string(),
+            "--json".to_string(),
+            "out.json".to_string(),
+        ]);
+        assert!(r.is_quick());
+        assert_eq!(r.json_path.as_deref(), Some(std::path::Path::new("out.json")));
+        let r2 = Runner::from_arg_list(&[]);
+        assert!(!r2.is_quick());
+        assert!(r2.json_path.is_none());
+    }
+
+    #[test]
+    fn runner_writes_json_records() {
+        let dir = std::env::temp_dir().join("nasa_bench_runner_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        let mut r = Runner::from_arg_list(&[
+            "--quick".to_string(),
+            "--json".to_string(),
+            path.to_string_lossy().into_owned(),
+        ]);
+        let a = r.bench("a", || {
+            std::hint::black_box(1 + 1);
+        });
+        let b = r.bench("b", || {
+            std::hint::black_box(2 + 2);
+        });
+        let ratio = r.record_speedup("a_vs_b", &a, &b);
+        assert!(ratio > 0.0);
+        r.finish();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.trim_start().starts_with('['));
+        assert!(body.contains("\"bench\":\"a\""));
+        assert!(body.contains("\"ratio\":"));
+        // Machine-readable: it must parse as JSON with one entry per record.
+        let parsed = crate::util::json::Json::parse(&body).unwrap();
+        match parsed {
+            crate::util::json::Json::Arr(v) => assert_eq!(v.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Scoped-thread parallelism substrate (rayon is unavailable offline).
 //!
 //! `par_map` fans a work list across `available_parallelism()` OS threads
-//! with striped assignment (good load balance for heterogeneous items like
-//! mapper tiling candidates) and returns results in input order.
+//! through an atomic-counter work queue — a thread that drew a cheap item
+//! immediately claims the next one, so heterogeneous items (mapper chunk
+//! evaluations range from a one-layer family to most of the net) load-
+//! balance instead of pinning the whole stripe's cost on one thread —
+//! and returns results in input order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Parallel map preserving input order. Falls back to sequential for tiny
 /// inputs where thread spawn overhead would dominate.
@@ -23,19 +28,21 @@ where
     let mut out: Vec<Option<R>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
     let out_ptr = SendPtr(out.as_mut_ptr());
+    let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
-        for t in 0..threads {
+        for _ in 0..threads {
             let f = &f;
             let out_ptr = &out_ptr;
-            s.spawn(move || {
-                let mut i = t;
-                while i < n {
-                    let r = f(&items[i]);
-                    // SAFETY: each index i is written by exactly one thread
-                    // (striped by t), and `out` outlives the scope.
-                    unsafe { *out_ptr.0.add(i) = Some(r) };
-                    i += threads;
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
                 }
+                let r = f(&items[i]);
+                // SAFETY: fetch_add hands each index to exactly one
+                // thread, and `out` outlives the scope.
+                unsafe { *out_ptr.0.add(i) = Some(r) };
             });
         }
     });
@@ -94,6 +101,23 @@ mod tests {
     fn par_map_empty_and_single() {
         assert_eq!(par_map::<u32, u32, _>(&[], |x| *x), Vec::<u32>::new());
         assert_eq!(par_map(&[7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_map_balances_heterogeneous_items() {
+        // Skewed costs (one item ~1000x the rest) must still produce
+        // ordered, complete output — the work-queue contract.
+        let items: Vec<u64> = (0..64).collect();
+        let out = par_map(&items, |&x| {
+            let spins = if x == 0 { 200_000 } else { 200 };
+            let mut acc = x;
+            for i in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
     }
 
     #[test]
