@@ -72,7 +72,9 @@ fn main() {
 
     // The mapper before/after pair (same widened space, same result —
     // see tests/mapper_equivalence.rs): chunk-factorized engine vs the
-    // retained brute-force oracle, on the 19-layer hybrid arch.
+    // retained brute-force oracle, on the 19-layer hybrid arch. The
+    // default config is now the EDP-aware frontier rule with the full
+    // divisor lattice, so this pair measures the new default end to end.
     let cfg = MapperConfig::default();
     let factored = runner.bench("mapper/auto_map_full_19layers", || {
         let r = auto_map(&accel, &arch, &q, &cfg);
@@ -88,6 +90,24 @@ fn main() {
         &factored,
     );
 
+    // Tiling-rule / lattice matrix: the PR-2 default (greedy rule,
+    // power-of-two tilings) against the frontier default (full lattice).
+    // The cost-ratio records are the acceptance gauge — frontier +
+    // lattice-on must stay within 2x of greedy + lattice-off wall-time,
+    // showing the dominance pruning pays for the wider axis.
+    let greedy_off =
+        MapperConfig { greedy_tiling: true, full_tiling_lattice: false, ..Default::default() };
+    let greedy_on = MapperConfig { greedy_tiling: true, ..Default::default() };
+    let g19 = runner.bench("mapper/auto_map_greedy_nolattice_19layers", || {
+        let r = auto_map(&accel, &arch, &q, &greedy_off);
+        std::hint::black_box(r.combos_tried);
+    });
+    runner.record_speedup(
+        "mapper/cost_ratio_frontier_lattice_vs_greedy_nolattice_19layers",
+        &factored,
+        &g19,
+    );
+
     runner.bench("mapper/auto_map_orderings_only", || {
         let r = auto_map(
             &accel,
@@ -101,10 +121,37 @@ fn main() {
     // MBv2-scale zoo arch (single-family: only the dataflow/split axes
     // of its one chunk are populated, the worst case for factoring —
     // the memo still collapses the redundant 16x combo re-evaluations).
-    runner.bench("mapper/auto_map_mbv2_53layers", || {
+    let f_mbv2 = runner.bench("mapper/auto_map_mbv2_53layers", || {
         let r = auto_map(&accel2, &mbv2, &q, &cfg);
         std::hint::black_box(r.combos_tried);
     });
+    let g_mbv2 = runner.bench("mapper/auto_map_greedy_nolattice_mbv2_53layers", || {
+        let r = auto_map(&accel2, &mbv2, &q, &greedy_off);
+        std::hint::black_box(r.combos_tried);
+    });
+    runner.record_speedup(
+        "mapper/cost_ratio_frontier_lattice_vs_greedy_nolattice_mbv2",
+        &f_mbv2,
+        &g_mbv2,
+    );
+
+    // Structural counters + the EDP-quality headline (frontier vs greedy
+    // on the same lattice-on space; <= 1.0 by construction, < 1.0 when
+    // slack-buying pays). The counters hard-gate ci.sh's baseline diff:
+    // they may grow, never shrink.
+    let r19 = auto_map(&accel, &arch, &q, &cfg);
+    runner.record_value("mapper/combos_tried_19layers", r19.combos_tried as f64);
+    let r_mbv2 = auto_map(&accel2, &mbv2, &q, &cfg);
+    runner.record_value("mapper/combos_tried_mbv2", r_mbv2.combos_tried as f64);
+    let g19_edp = auto_map(&accel, &arch, &q, &greedy_on)
+        .best
+        .map(|(_, s)| s.edp(250e6));
+    if let (Some((_, fs)), Some(ge)) = (&r19.best, g19_edp) {
+        runner.record_value(
+            "mapper/edp_ratio_frontier_vs_greedy_19layers",
+            fs.edp(250e6) / ge,
+        );
+    }
 
     // Substrates.
     let mut rng = Rng::new(1);

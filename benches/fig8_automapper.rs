@@ -115,7 +115,9 @@ fn main() {
 
     // Timing: the mapper search itself (the L3 hot path of Sec. 4.2) —
     // the chunk-factorized engine against the retained brute-force
-    // oracle on the same widened space.
+    // oracle on the same widened space (now the EDP-aware frontier rule
+    // with the full divisor lattice, the default), plus the PR-2-era
+    // greedy + lattice-off configuration for the before/after cost.
     println!();
     header();
     let mut runner = Runner::from_args();
@@ -134,5 +136,16 @@ fn main() {
         std::hint::black_box(r.combos_tried);
     });
     runner.record_speedup("fig8/speedup_factored_vs_reference", &reference, &factored);
+    let greedy_off =
+        MapperConfig { greedy_tiling: true, full_tiling_lattice: false, ..Default::default() };
+    let greedy = runner.bench("fig8/auto_map_one_model_greedy_nolattice", || {
+        let r = auto_map(&accel, arch, &q, &greedy_off);
+        std::hint::black_box(r.combos_tried);
+    });
+    runner.record_speedup(
+        "fig8/cost_ratio_frontier_lattice_vs_greedy_nolattice",
+        &factored,
+        &greedy,
+    );
     runner.finish();
 }

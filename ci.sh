@@ -32,6 +32,16 @@ say "mapper perf smoke: accel_microbench --quick --json BENCH_mapper.json"
 # file); --quick bounds the smoke to a few iterations per benchmark.
 cargo bench --bench accel_microbench -- --quick --json BENCH_mapper.json
 
+say "mapper bench baseline diff (advisory walltime, hard combos gate)"
+# Wall-time drift beyond +/-20% is reported but never fatal; a shrinking
+# mapper/combos_tried_* counter fails hard (the search space narrowed).
+if [ -f BENCH_baseline_mapper.json ]; then
+    python3 scripts/bench_diff.py BENCH_baseline_mapper.json BENCH_mapper.json
+else
+    cp BENCH_mapper.json BENCH_baseline_mapper.json
+    echo "no baseline found -- seeded BENCH_baseline_mapper.json from this run (commit it)"
+fi
+
 say "docs are warning-free: cargo doc --no-deps"
 RUSTDOCFLAGS="${RUSTDOCFLAGS:--D warnings}" cargo doc --no-deps --quiet
 

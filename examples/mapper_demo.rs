@@ -51,7 +51,7 @@ fn main() {
     );
 
     // Exhaustive view: EDP for every per-chunk dataflow combo (even split).
-    println!("\nEDP by (CLP, SLP, ALP) dataflow combo (even GB split, greedy tiling):");
+    println!("\nEDP by (CLP, SLP, ALP) dataflow combo (even GB split, default tiling):");
     print!("{:>14}", "");
     for a in ALL_DATAFLOWS {
         print!("{:>12}", format!("ALP={}", a.name()));

@@ -20,4 +20,6 @@ pub use dataflow::{Dataflow, Tiling, ALL_DATAFLOWS};
 pub use eyeriss::{addernet_accel, EyerissSim};
 pub use memory::MemoryConfig;
 pub use pe::{PeKind, UnitCosts, UNIT_ENERGY_45NM};
-pub use schedule::{ChunkAccelerator, ChunkStats, Mapping, NetStats};
+pub use schedule::{
+    prune_pareto, ChunkAccelerator, ChunkFrontier, ChunkStats, FrontierPoint, Mapping, NetStats,
+};

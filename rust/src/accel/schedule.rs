@@ -86,6 +86,165 @@ impl ChunkStats {
     }
 }
 
+/// Dominance-prune a set of (cycles, energy) points: stable-sort by
+/// (cycles, then energy) and keep the strictly-descending-energy
+/// survivors. Exact ties keep the first point generated — the
+/// determinism guarantee the factored and reference mapper engines
+/// share. The result is sorted by strictly ascending cycles with
+/// strictly descending energy (a minimal Pareto frontier).
+pub fn prune_pareto<T>(mut points: Vec<T>, key: impl Fn(&T) -> (f64, f64)) -> Vec<T> {
+    points.sort_by(|a, b| {
+        let (ac, ae) = key(a);
+        let (bc, be) = key(b);
+        ac.total_cmp(&bc).then_with(|| ae.total_cmp(&be))
+    });
+    let mut out: Vec<T> = Vec::new();
+    let mut last_energy = f64::INFINITY;
+    for p in points {
+        let (_, e) = key(&p);
+        if e < last_energy {
+            last_energy = e;
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// One operating point of a chunk's (cycles, energy) Pareto frontier.
+/// Totals accumulate layer by layer exactly as `ChunkStats::push` would,
+/// so a materialized point is bit-identical to sequentially simulating
+/// its per-layer choices. The private `prev`/`opt` fields record
+/// provenance (predecessor point in the previous layer's generation and
+/// the chosen option index): extending the frontier copies two f64s per
+/// point instead of whole per-layer stat vectors, and full `ChunkStats`
+/// are reconstructed on demand via `ChunkFrontier::materialize`.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontierPoint {
+    pub cycles: f64,
+    pub energy_pj: f64,
+    prev: u32,
+    opt: u32,
+}
+
+/// The frontier of a chunk with no layers: a single zero point (the
+/// chunk contributes nothing to the pipeline period or energy).
+const ROOT: &[FrontierPoint] =
+    &[FrontierPoint { cycles: 0.0, energy_pj: 0.0, prev: 0, opt: 0 }];
+
+/// Cap on a chunk frontier's point count. Non-dominated sum-sets can in
+/// principle grow multiplicatively with layer depth (deep single-family
+/// chunks are the worst case); past this bound the frontier is thinned
+/// to an even spread that always keeps the first point (the greedy
+/// min-cycles pick — preserving the never-worse-than-greedy
+/// construction) and the last (max energy saving). The thinning is
+/// deterministic and lives inside `push_layer`, which both mapper
+/// engines share, so factored/reference equivalence is unaffected.
+const MAX_FRONTIER_POINTS: usize = 512;
+
+/// One composed layer of a `ChunkFrontier`: the layer's candidate
+/// options plus the pruned frontier over every layer up to and
+/// including it.
+#[derive(Clone, Debug)]
+struct FrontierGen {
+    layer_idx: usize,
+    options: Vec<(LayerStats, Option<Tiling>)>,
+    points: Vec<FrontierPoint>,
+}
+
+/// The non-dominated (cycles, energy) operating points of one chunk over
+/// the layers of its operator family — the unit the EDP-aware auto-mapper
+/// memoizes per chunk configuration. Built layer by layer in ascending
+/// global order: each layer contributes its candidate `(stats, tiling)`
+/// options, the running frontier is extended by every option and pruned
+/// straight back down (`prune_pareto`), so dominated tilings disappear
+/// the moment they are seen and the wider divisor-lattice axis stays
+/// affordable downstream.
+#[derive(Clone, Debug)]
+pub struct ChunkFrontier {
+    /// Which chunk (CLP=0, SLP=1, ALP=2), `OpKind::chunk_index` layout.
+    pub chunk_idx: usize,
+    generations: Vec<FrontierGen>,
+}
+
+impl ChunkFrontier {
+    pub fn new(chunk_idx: usize) -> ChunkFrontier {
+        ChunkFrontier { chunk_idx, generations: Vec::new() }
+    }
+
+    /// The frontier over all layers pushed so far: strictly ascending
+    /// cycles, strictly descending energy, never empty.
+    pub fn points(&self) -> &[FrontierPoint] {
+        match self.generations.last() {
+            Some(g) => &g.points,
+            None => ROOT,
+        }
+    }
+
+    /// Extend the frontier by one layer's candidate `(stats, tiling)`
+    /// options (non-empty; `None` tiling = the chunk's default tiling,
+    /// `Mapping` semantics). Layers must arrive in ascending global
+    /// order, as `ChunkAccelerator::simulate` visits them.
+    pub fn push_layer(&mut self, layer_idx: usize, options: Vec<(LayerStats, Option<Tiling>)>) {
+        assert!(!options.is_empty(), "push_layer needs at least one option");
+        debug_assert!(self.generations.last().is_none_or(|g| g.layer_idx < layer_idx));
+        let mut ext = Vec::with_capacity(self.points().len() * options.len());
+        for (pi, p) in self.points().iter().enumerate() {
+            for (oi, (s, _)) in options.iter().enumerate() {
+                ext.push(FrontierPoint {
+                    cycles: p.cycles + s.cycles,
+                    energy_pj: p.energy_pj + s.energy_pj,
+                    prev: pi as u32,
+                    opt: oi as u32,
+                });
+            }
+        }
+        let mut points = prune_pareto(ext, |p| (p.cycles, p.energy_pj));
+        if points.len() > MAX_FRONTIER_POINTS {
+            // Even thinning over the sorted frontier; the index map
+            // j*(n-1)/(K-1) is strictly increasing for n > K and hits
+            // both endpoints.
+            let n = points.len();
+            let thinned: Vec<FrontierPoint> = (0..MAX_FRONTIER_POINTS)
+                .map(|j| points[j * (n - 1) / (MAX_FRONTIER_POINTS - 1)])
+                .collect();
+            points = thinned;
+        }
+        self.generations.push(FrontierGen { layer_idx, options, points });
+    }
+
+    /// Index of the minimum-energy point with `cycles <= period` — the
+    /// last one under it, since energy strictly decreases along the
+    /// frontier — or `None` when even the fastest point misses the
+    /// period.
+    pub fn best_under(&self, period: f64) -> Option<usize> {
+        self.points().partition_point(|p| p.cycles <= period).checked_sub(1)
+    }
+
+    /// Reconstruct the `ChunkStats` and per-layer tiling choices
+    /// realizing frontier point `k`, replaying its options through
+    /// `ChunkStats::push` in ascending layer order — the totals come out
+    /// bit-identical to the point's own (cycles, energy).
+    pub fn materialize(&self, k: usize) -> (ChunkStats, Vec<(usize, Option<Tiling>)>) {
+        let mut choice = vec![0u32; self.generations.len()];
+        let mut pi = k;
+        for (g, layer) in self.generations.iter().enumerate().rev() {
+            let p = &layer.points[pi];
+            choice[g] = p.opt;
+            pi = p.prev as usize;
+        }
+        let mut stats = ChunkStats::new(self.chunk_idx);
+        let mut tilings = Vec::with_capacity(self.generations.len());
+        for (layer, &c) in self.generations.iter().zip(&choice) {
+            let (s, t) = layer.options[c as usize];
+            stats.push(layer.layer_idx, s);
+            tilings.push((layer.layer_idx, t));
+        }
+        debug_assert_eq!(stats.cycles.to_bits(), self.points()[k].cycles.to_bits());
+        debug_assert_eq!(stats.energy_pj.to_bits(), self.points()[k].energy_pj.to_bits());
+        (stats, tilings)
+    }
+}
+
 /// Whole-network simulation result.
 #[derive(Clone, Debug, Default)]
 pub struct NetStats {
@@ -323,6 +482,119 @@ mod tests {
         assert_eq!(c.period_cycles, 1.0);
         assert_eq!(c.energy_pj, 0.0);
         assert!(c.per_layer.is_empty());
+    }
+
+    fn ls(cycles: f64, energy_pj: f64) -> LayerStats {
+        LayerStats { cycles, energy_pj, ..Default::default() }
+    }
+
+    #[test]
+    fn prune_pareto_keeps_nondominated_sorted() {
+        let pts = vec![
+            (ls(10.0, 50.0), 0usize),
+            (ls(5.0, 80.0), 1),
+            (ls(7.0, 90.0), 2),  // dominated by (5, 80)
+            (ls(10.0, 60.0), 3), // dominated by (10, 50)
+            (ls(20.0, 20.0), 4),
+            (ls(25.0, 20.0), 5), // weakly dominated by (20, 20)
+        ];
+        let f = prune_pareto(pts, |(s, _)| (s.cycles, s.energy_pj));
+        let kept: Vec<usize> = f.iter().map(|&(_, i)| i).collect();
+        assert_eq!(kept, vec![1, 0, 4]);
+        for w in f.windows(2) {
+            assert!(w[0].0.cycles < w[1].0.cycles);
+            assert!(w[0].0.energy_pj > w[1].0.energy_pj);
+        }
+    }
+
+    #[test]
+    fn prune_pareto_exact_ties_keep_first() {
+        let pts = vec![(ls(5.0, 5.0), 'a'), (ls(5.0, 5.0), 'b')];
+        let f = prune_pareto(pts, |(s, _)| (s.cycles, s.energy_pj));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].1, 'a');
+    }
+
+    #[test]
+    fn chunk_frontier_composes_and_materializes_bit_exact() {
+        let mut f = ChunkFrontier::new(1);
+        // Layer 2: a fast/hungry and a slow/frugal option.
+        f.push_layer(2, vec![(ls(10.0, 100.0), None), (ls(30.0, 40.0), None)]);
+        // Layer 5: single option.
+        f.push_layer(5, vec![(ls(7.0, 9.0), None)]);
+        let pts = f.points();
+        assert_eq!(pts.len(), 2);
+        assert_eq!((pts[0].cycles, pts[0].energy_pj), (17.0, 109.0));
+        assert_eq!((pts[1].cycles, pts[1].energy_pj), (37.0, 49.0));
+        // Materialization replays ChunkStats::push in layer order.
+        let (stats, tilings) = f.materialize(1);
+        assert_eq!(stats.chunk_idx, 1);
+        assert_eq!(stats.cycles, 37.0);
+        assert_eq!(stats.energy_pj, 49.0);
+        assert_eq!(stats.per_layer.len(), 2);
+        assert_eq!(stats.per_layer[0].0, 2);
+        assert_eq!(stats.per_layer[1].0, 5);
+        assert_eq!(tilings, vec![(2, None), (5, None)]);
+    }
+
+    #[test]
+    fn chunk_frontier_prunes_dominated_combinations() {
+        let mut f = ChunkFrontier::new(0);
+        f.push_layer(0, vec![(ls(10.0, 10.0), None), (ls(20.0, 5.0), None)]);
+        f.push_layer(1, vec![(ls(10.0, 10.0), None), (ls(20.0, 5.0), None)]);
+        // Cross products: (20,20) (30,15) (30,15) (40,10) — the two
+        // middle combinations tie exactly; one survives.
+        let pts = f.points();
+        assert_eq!(pts.len(), 3);
+        assert_eq!((pts[0].cycles, pts[0].energy_pj), (20.0, 20.0));
+        assert_eq!((pts[1].cycles, pts[1].energy_pj), (30.0, 15.0));
+        assert_eq!((pts[2].cycles, pts[2].energy_pj), (40.0, 10.0));
+    }
+
+    #[test]
+    fn chunk_frontier_thins_past_cap() {
+        // Two complementary options per layer make every combination
+        // non-dominated (energy = 1023 - cycles), so 10 layers would
+        // give 1024 points; the cap thins to 512 keeping both endpoints
+        // (the first point is the greedy pick — it must survive).
+        let mut f = ChunkFrontier::new(0);
+        for j in 0..10usize {
+            let w = (1u32 << j) as f64;
+            f.push_layer(j, vec![(ls(w, 0.0), None), (ls(0.0, w), None)]);
+        }
+        let pts = f.points();
+        assert_eq!(pts.len(), MAX_FRONTIER_POINTS);
+        assert_eq!((pts[0].cycles, pts[0].energy_pj), (0.0, 1023.0));
+        assert_eq!((pts[511].cycles, pts[511].energy_pj), (1023.0, 0.0));
+        for w in pts.windows(2) {
+            assert!(w[0].cycles < w[1].cycles && w[0].energy_pj > w[1].energy_pj);
+        }
+        // Thinned points still materialize bit-exactly.
+        let (stats, _) = f.materialize(200);
+        assert_eq!(stats.cycles, pts[200].cycles);
+        assert_eq!(stats.energy_pj, pts[200].energy_pj);
+    }
+
+    #[test]
+    fn chunk_frontier_best_under() {
+        let mut f = ChunkFrontier::new(0);
+        f.push_layer(0, vec![(ls(10.0, 100.0), None), (ls(30.0, 40.0), None)]);
+        assert_eq!(f.best_under(5.0), None);
+        assert_eq!(f.best_under(10.0), Some(0));
+        assert_eq!(f.best_under(29.9), Some(0));
+        assert_eq!(f.best_under(30.0), Some(1));
+        assert_eq!(f.best_under(f64::INFINITY), Some(1));
+    }
+
+    #[test]
+    fn empty_chunk_frontier_is_zero_point() {
+        let f = ChunkFrontier::new(2);
+        assert_eq!(f.points().len(), 1);
+        assert_eq!(f.points()[0].cycles, 0.0);
+        assert_eq!(f.points()[0].energy_pj, 0.0);
+        let (stats, tilings) = f.materialize(0);
+        assert_eq!(stats.cycles, 0.0);
+        assert!(tilings.is_empty());
     }
 
     #[test]

@@ -58,6 +58,7 @@ USAGE: nasa <subcommand> [--options]
   derive   --space hybrid_all_c10 --choices 1,7,13,2,8,18 --name my_arch
   simulate --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
   map      --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
+           [--greedy-tiling] [--no-lattice] [--tied-noc] [--reference]
   check    [--artifacts artifacts]
   report   table2|fig2|fig6|fig7|fig8 [--out runs]
 "
@@ -221,7 +222,23 @@ fn cmd_map(args: &Args) -> Result<()> {
     let arch = load_arch(args)?;
     let accel = accel_setup(args, &arch)?;
     let q = QuantSpec::default();
-    let cfg = MapperConfig::default();
+    // Every MapperConfig axis is drivable from the CLI: compatibility
+    // greedy tiling rule, power-of-two-only tilings, NoC tied to GB, and
+    // the brute-force reference engine.
+    let cfg = MapperConfig {
+        greedy_tiling: args.flag("greedy-tiling"),
+        full_tiling_lattice: !args.flag("no-lattice"),
+        independent_noc: !args.flag("tied-noc"),
+        factored: !args.flag("reference"),
+        ..MapperConfig::default()
+    };
+    println!(
+        "mapper config: engine={} tiling={} lattice={} noc={}",
+        if cfg.factored { "factored" } else { "reference" },
+        if cfg.greedy_tiling { "greedy" } else { "frontier" },
+        if cfg.full_tiling_lattice { "full-divisor" } else { "pow2" },
+        if cfg.independent_noc { "independent" } else { "tied-to-gb" },
+    );
     let t0 = std::time::Instant::now();
     let r = auto_map(&accel, &arch, &q, &cfg);
     println!(

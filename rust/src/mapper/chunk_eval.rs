@@ -8,15 +8,28 @@
 //! each per-chunk configuration once per *combination* it appears in —
 //! ~16x per chunk for the 64 dataflow combos, worse once resource splits
 //! multiply. This module evaluates each distinct `ChunkKey` exactly once
-//! (including the per-layer tiling search) and lets `search::auto_map`
-//! assemble all whole-net candidates compositionally via
-//! `NetStats::compose`.
+//! and lets `search::auto_map` assemble all whole-net candidates
+//! compositionally.
+//!
+//! What one evaluation produces is a per-chunk **(cycles, energy) Pareto
+//! frontier** (`ChunkFrontier`), not a single point: the EDP period is
+//! the *max* of chunk cycles, so a non-bottleneck chunk should spend its
+//! slack cycles to buy energy — a decision only `search::auto_map`'s
+//! candidate assembly can make, because it depends on the other two
+//! chunks. Per layer, the non-dominated feasible tilings are kept
+//! (dominance-pruned as the candidate set is scanned, so the divisor
+//! lattice gets cheaper to compose, not just wider) and folded into the
+//! chunk frontier in the exact accumulation order `ChunkStats` uses.
+//! `chunk_frontier` is the ONE copy of that rule — the factored engine
+//! (`eval_chunk`) and the brute-force oracle (`search::auto_map_reference`)
+//! both call it, which is what keeps the two engines
+//! exhaustive-equivalent.
 
 use super::search::MapperConfig;
 use crate::accel::chunk::{Chunk, Infeasible, LayerStats};
 use crate::accel::memory::MemoryConfig;
 use crate::accel::pe::UnitCosts;
-use crate::accel::schedule::{ChunkAccelerator, ChunkStats};
+use crate::accel::schedule::{prune_pareto, ChunkAccelerator, ChunkFrontier};
 use crate::accel::{Dataflow, Tiling};
 use crate::model::arch::{Arch, LayerDesc, OpKind};
 use crate::model::quant::QuantSpec;
@@ -47,15 +60,15 @@ impl ChunkKey {
     }
 }
 
-/// One memoized evaluation: per-chunk totals plus the chosen per-layer
-/// tilings (`None` = the chunk's default tiling, matching `Mapping`
-/// semantics), or the first infeasible layer (global index) — exactly
+/// One memoized evaluation: the chunk's (cycles, energy) Pareto frontier
+/// (a single point under `MapperConfig::greedy_tiling` or with tiling
+/// search off), or the first infeasible layer (global index) — exactly
 /// what `ChunkAccelerator::simulate` would have reported for this
 /// chunk's layers.
 #[derive(Clone, Debug)]
 pub struct ChunkEval {
     pub key: ChunkKey,
-    pub result: Result<(ChunkStats, Vec<(usize, Option<Tiling>)>), (usize, Infeasible)>,
+    pub result: Result<ChunkFrontier, (usize, Infeasible)>,
 }
 
 impl ChunkEval {
@@ -64,14 +77,15 @@ impl ChunkEval {
     }
 }
 
-/// The greedy per-layer tiling rule: scan the cfg-selected candidate set
-/// and keep the feasible tiling minimizing `(cycles, energy)`
-/// lexicographically, first among exact ties. Returns `None` when tiling
-/// search is disabled or nothing is feasible (callers fall back to the
-/// chunk's default tiling). This is the ONE copy of the rule — both the
-/// factored engine (`eval_chunk`) and the brute-force oracle
-/// (`search::auto_map_reference`) call it, which is what keeps the two
-/// engines exhaustive-equivalent.
+/// The legacy greedy per-layer tiling rule: scan the cfg-selected
+/// candidate set and keep the feasible tiling minimizing `(cycles,
+/// energy)` lexicographically, first among exact ties. Returns `None`
+/// when tiling search is disabled or nothing is feasible (callers fall
+/// back to the chunk's default tiling). Retained behind
+/// `MapperConfig::greedy_tiling` so the pre-frontier behaviour stays
+/// benchmarkable; the greedy pick is exactly the first point of the
+/// layer's frontier, which is why the frontier engine is never worse by
+/// construction.
 pub(crate) fn best_layer_tiling(
     chunk: &Chunk,
     l: &LayerDesc,
@@ -102,10 +116,74 @@ pub(crate) fn best_layer_tiling(
     best
 }
 
-/// Evaluate one chunk configuration over `layer_idxs` (the global indices
-/// of this family's layers, ascending). Per-layer decisions are the
-/// shared `best_layer_tiling` rule, with a default-tiling fallback when
-/// the search finds nothing feasible.
+/// One layer's candidate `(stats, tiling)` operating points under the
+/// cfg-selected rule: the non-dominated feasible tilings (frontier rule),
+/// or the single greedy pick (`cfg.greedy_tiling`), or nothing when
+/// tiling search is off / no candidate is feasible (callers fall back to
+/// the chunk's default tiling).
+fn layer_tiling_options(
+    chunk: &Chunk,
+    l: &LayerDesc,
+    q: &QuantSpec,
+    mem: &MemoryConfig,
+    costs: &UnitCosts,
+    cfg: &MapperConfig,
+) -> Vec<(LayerStats, Option<Tiling>)> {
+    if !cfg.search_tilings {
+        return Vec::new();
+    }
+    if cfg.greedy_tiling {
+        return best_layer_tiling(chunk, l, q, mem, costs, cfg)
+            .map(|(s, t)| vec![(s, Some(t))])
+            .unwrap_or_default();
+    }
+    let cands = if cfg.full_tiling_lattice {
+        super::space::tiling_candidates_full(chunk.n_pes, l)
+    } else {
+        super::space::tiling_candidates(chunk.n_pes, l)
+    };
+    let mut pts = Vec::new();
+    for t in cands {
+        if let Ok(s) = chunk.simulate_layer_tiled(l, t, q, mem, costs) {
+            pts.push((s, Some(t)));
+        }
+    }
+    prune_pareto(pts, |(s, _)| (s.cycles, s.energy_pj))
+}
+
+/// Build one chunk's (cycles, energy) Pareto frontier over `layer_idxs`
+/// (the global indices of this family's layers, ascending). Per layer:
+/// the cfg-selected tiling options, with a default-tiling fallback when
+/// the search finds nothing feasible; a layer with no feasible option at
+/// all makes the whole chunk infeasible (first such layer reported, as
+/// `simulate` would). This is the shared rule both mapper engines call.
+pub fn chunk_frontier(
+    accel: &ChunkAccelerator,
+    arch: &Arch,
+    layer_idxs: &[usize],
+    chunk: &Chunk,
+    chunk_idx: usize,
+    q: &QuantSpec,
+    cfg: &MapperConfig,
+) -> Result<ChunkFrontier, (usize, Infeasible)> {
+    let mut front = ChunkFrontier::new(chunk_idx);
+    for &i in layer_idxs {
+        let l = &arch.layers[i];
+        let options = layer_tiling_options(chunk, l, q, &accel.mem, &accel.costs, cfg);
+        if options.is_empty() {
+            match chunk.simulate_layer(l, q, &accel.mem, &accel.costs) {
+                Ok(s) => front.push_layer(i, vec![(s, None)]),
+                Err(e) => return Err((i, e)),
+            }
+        } else {
+            front.push_layer(i, options);
+        }
+    }
+    Ok(front)
+}
+
+/// Evaluate one chunk configuration over `layer_idxs` — the memoized
+/// entry point the factored engine fans across threads.
 pub fn eval_chunk(
     accel: &ChunkAccelerator,
     arch: &Arch,
@@ -116,27 +194,8 @@ pub fn eval_chunk(
 ) -> ChunkEval {
     let kind = OpKind::ALL[key.chunk_idx];
     let chunk = accel.chunk_with(kind, key.df, key.gb_share(), key.noc_share());
-    let mut stats = ChunkStats::new(key.chunk_idx);
-    let mut tilings = Vec::with_capacity(layer_idxs.len());
-    for &i in layer_idxs {
-        let l = &arch.layers[i];
-        match best_layer_tiling(&chunk, l, q, &accel.mem, &accel.costs, cfg) {
-            // The tiling search already simulated the winning point; its
-            // stats are the layer's stats — no second pass.
-            Some((s, t)) => {
-                stats.push(i, s);
-                tilings.push((i, Some(t)));
-            }
-            None => match chunk.simulate_layer(l, q, &accel.mem, &accel.costs) {
-                Ok(s) => {
-                    stats.push(i, s);
-                    tilings.push((i, None));
-                }
-                Err(e) => return ChunkEval { key, result: Err((i, e)) },
-            },
-        }
-    }
-    ChunkEval { key, result: Ok((stats, tilings)) }
+    let result = chunk_frontier(accel, arch, layer_idxs, &chunk, key.chunk_idx, q, cfg);
+    ChunkEval { key, result }
 }
 
 #[cfg(test)]
@@ -177,6 +236,15 @@ mod tests {
         ChunkAccelerator::new(alloc, mem, costs)
     }
 
+    fn family(a: &Arch, ci: usize) -> Vec<usize> {
+        a.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind.chunk_index() == ci)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
     #[test]
     fn key_roundtrips_shares() {
         let k = ChunkKey::new(1, Dataflow::Ws, 1.0 / 3.0, 0.21);
@@ -188,23 +256,21 @@ mod tests {
     #[test]
     fn chunk_evals_compose_to_simulate() {
         // Evaluating the three chunks independently and composing must
-        // reproduce a monolithic all-RS simulation bit-for-bit.
+        // reproduce a monolithic all-RS simulation bit-for-bit. With
+        // tiling search off each frontier is a single default-tiling
+        // point.
         let acc = accel(MemoryConfig::default());
         let a = arch();
         let q = QuantSpec::default();
         let cfg = MapperConfig { search_tilings: false, ..Default::default() };
         let mut chunks = Vec::new();
         for ci in 0..3usize {
-            let idxs: Vec<usize> = a
-                .layers
-                .iter()
-                .enumerate()
-                .filter(|(_, l)| l.kind.chunk_index() == ci)
-                .map(|(i, _)| i)
-                .collect();
+            let idxs = family(&a, ci);
             let key = ChunkKey::new(ci, Dataflow::Rs, 1.0 / 3.0, 1.0 / 3.0);
             let e = eval_chunk(&acc, &a, &idxs, key, &q, &cfg);
-            let (cs, tilings) = e.result.expect("feasible chunk");
+            let front = e.result.expect("feasible chunk");
+            assert_eq!(front.points().len(), 1, "no tiling search -> one point");
+            let (cs, tilings) = front.materialize(0);
             assert!(tilings.iter().all(|(_, t)| t.is_none()));
             chunks.push(cs);
         }
@@ -215,6 +281,52 @@ mod tests {
         assert_eq!(composed.energy_pj, mono.energy_pj);
         assert_eq!(composed.period_cycles, mono.period_cycles);
         assert_eq!(composed.chunk_cycles, mono.chunk_cycles);
+    }
+
+    #[test]
+    fn greedy_rule_is_frontier_fastest_point() {
+        // The compatibility flag's single point must coincide with the
+        // frontier's min-cycles end, layer totals included — that is the
+        // "never worse than greedy" construction.
+        let acc = accel(MemoryConfig::default());
+        let a = arch();
+        let q = QuantSpec::default();
+        let idxs = family(&a, 0);
+        let key = ChunkKey::new(0, Dataflow::Ws, 1.0 / 3.0, 1.0 / 3.0);
+        let frontier_cfg = MapperConfig::default();
+        let greedy_cfg = MapperConfig { greedy_tiling: true, ..Default::default() };
+        let f = eval_chunk(&acc, &a, &idxs, key, &q, &frontier_cfg)
+            .result
+            .expect("feasible");
+        let g = eval_chunk(&acc, &a, &idxs, key, &q, &greedy_cfg)
+            .result
+            .expect("feasible");
+        assert_eq!(g.points().len(), 1, "greedy -> one point per layer");
+        assert_eq!(g.points()[0].cycles, f.points()[0].cycles);
+        assert!(g.points()[0].energy_pj >= f.points()[0].energy_pj);
+    }
+
+    #[test]
+    fn frontier_is_sorted_and_nondominated() {
+        let acc = accel(MemoryConfig::default());
+        let a = arch();
+        let q = QuantSpec::default();
+        let idxs = family(&a, 0);
+        let key = ChunkKey::new(0, Dataflow::Ws, 1.0 / 3.0, 1.0 / 3.0);
+        let f = eval_chunk(&acc, &a, &idxs, key, &q, &MapperConfig::default())
+            .result
+            .expect("feasible");
+        for w in f.points().windows(2) {
+            assert!(w[0].cycles < w[1].cycles);
+            assert!(w[0].energy_pj > w[1].energy_pj);
+        }
+        // Every point materializes back to its own totals.
+        for k in 0..f.points().len() {
+            let (cs, tilings) = f.materialize(k);
+            assert_eq!(cs.cycles, f.points()[k].cycles);
+            assert_eq!(cs.energy_pj, f.points()[k].energy_pj);
+            assert_eq!(tilings.len(), idxs.len());
+        }
     }
 
     #[test]

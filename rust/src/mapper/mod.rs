@@ -1,12 +1,17 @@
 //! NASA's auto-mapper (Sec. 4.2): automated dataflow search for hybrid
 //! models on the chunk-based accelerator.
 //!
-//! The search is chunk-factorized: `chunk_eval` memoizes per-chunk
-//! evaluations (each distinct `(dataflow, gb_share, noc_share)` chunk
-//! configuration is simulated once, tiling search included), `space`
-//! enumerates the widened outer axes (64 dataflow combos x independent
-//! GB / NoC splits x divisor-lattice tilings), and `search` assembles
-//! whole-net candidates compositionally via `NetStats::compose`. The
+//! The search is chunk-factorized and EDP-aware: `chunk_eval` memoizes
+//! per-chunk evaluations (each distinct `(dataflow, gb_share, noc_share)`
+//! chunk configuration is evaluated once, producing a per-chunk
+//! (cycles, energy) Pareto frontier over the dominance-pruned tiling
+//! choices), `space` enumerates the widened outer axes (64 dataflow
+//! combos x independent, deduplicated GB / NoC splits x full
+//! divisor-lattice tilings, default-on), and `search` assembles
+//! whole-net candidates by sweeping the merged frontier breakpoints for
+//! the EDP-optimal operating point — a non-bottleneck chunk spends
+//! period slack to buy energy, which the retired greedy rule
+//! (`MapperConfig::greedy_tiling`, compatibility flag) could not. The
 //! brute-force oracle `auto_map_reference` is retained for equivalence
 //! regressions and before/after benchmarks.
 
@@ -14,7 +19,7 @@ pub mod chunk_eval;
 pub mod search;
 pub mod space;
 
-pub use chunk_eval::{eval_chunk, ChunkEval, ChunkKey};
+pub use chunk_eval::{chunk_frontier, eval_chunk, ChunkEval, ChunkKey};
 pub use search::{auto_map, auto_map_reference, MapperConfig, MapperResult};
 pub use space::{
     candidates, dataflow_combos, gb_splits, noc_splits, tiling_candidates,

@@ -4,24 +4,31 @@
 //! (Fig. 8), including the cases where fixed-RS is infeasible under the
 //! shared-buffer budget.
 //!
-//! Structure: the search is *chunk-factorized*. A layer's stats depend
-//! only on its own chunk's `(dataflow, gb_share, noc_share, tiling)`, so
-//! `auto_map` evaluates each distinct per-chunk configuration exactly
-//! once (`chunk_eval`, fanned across threads via util::par) and then
-//! assembles every whole-net candidate compositionally with
-//! `NetStats::compose` — candidates per chunk-evaluation instead of
-//! candidates x layers x tilings simulations. The pre-factorization
-//! exhaustive path survives as `auto_map_reference`, the equivalence
-//! oracle and before/after benchmark baseline.
+//! Structure: the search is *chunk-factorized* and *EDP-aware*. A
+//! layer's stats depend only on its own chunk's `(dataflow, gb_share,
+//! noc_share, tiling)`, so `auto_map` evaluates each distinct per-chunk
+//! configuration exactly once (`chunk_eval`, fanned across threads via
+//! util::par) — producing a per-chunk (cycles, energy) Pareto frontier,
+//! not a single greedy point. Whole-net candidates are then assembled by
+//! sweeping the merged frontier breakpoints (`best_operating_point`):
+//! the EDP period is the max of chunk cycles, so for every candidate
+//! period each chunk takes its min-energy point fitting under it — a
+//! non-bottleneck chunk spends slack cycles to buy energy, which the
+//! old per-layer greedy rule could not do. O(sum of frontier sizes) per
+//! candidate instead of a cross product, and never worse than the greedy
+//! answer by construction (the greedy pick is each frontier's fastest
+//! point). The pre-factorization exhaustive path survives as
+//! `auto_map_reference`, the equivalence oracle and before/after
+//! benchmark baseline.
 
 use std::collections::{HashMap, HashSet};
 
-use super::chunk_eval::{eval_chunk, ChunkEval, ChunkKey};
+use super::chunk_eval::{chunk_frontier, eval_chunk, ChunkEval, ChunkKey};
 use super::space::MapCandidate;
 use crate::accel::chunk::Infeasible;
-use crate::accel::schedule::{ChunkAccelerator, ChunkStats, Mapping, NetStats};
+use crate::accel::schedule::{ChunkAccelerator, ChunkFrontier, ChunkStats, Mapping, NetStats};
 use crate::accel::Tiling;
-use crate::model::arch::Arch;
+use crate::model::arch::{Arch, OpKind};
 use crate::model::quant::QuantSpec;
 use crate::util::par::par_map;
 
@@ -36,14 +43,20 @@ pub struct MapperConfig {
     pub independent_noc: bool,
     /// Widened space: per-layer tilings from the full divisor lattice of
     /// the chunk's PE count (false = power-of-two splits + extremes).
-    /// Opt-in for now: the per-layer greedy rule picks min (cycles,
-    /// energy) lexicographically, so the lattice's skewed tilings can
-    /// trade a lot of energy for a few cycles; default-on once the
-    /// selection is EDP-aware (see ROADMAP).
+    /// Default-on now that tiling selection is EDP-aware: the frontier
+    /// rule dominance-prunes the lattice as it scans, so the wider axis
+    /// stays affordable and skewed low-energy tilings are used exactly
+    /// when a chunk has period slack to spend.
     pub full_tiling_lattice: bool,
     /// Use the chunk-factorized engine (false = the brute-force
     /// `auto_map_reference` oracle; same space, same result, no memoing).
     pub factored: bool,
+    /// Compatibility flag: the pre-frontier greedy per-layer tiling rule
+    /// (min `(cycles, energy)` lexicographic, one operating point per
+    /// chunk). Kept so greedy-vs-frontier stays benchmarkable; by
+    /// construction it is never better than the frontier rule on the
+    /// same space.
+    pub greedy_tiling: bool,
 }
 
 impl Default for MapperConfig {
@@ -52,8 +65,9 @@ impl Default for MapperConfig {
             search_tilings: true,
             clock_hz: 250e6,
             independent_noc: true,
-            full_tiling_lattice: false,
+            full_tiling_lattice: true,
             factored: true,
+            greedy_tiling: false,
         }
     }
 }
@@ -94,22 +108,6 @@ fn improves(edp: f64, incumbent: Option<f64>) -> bool {
     }
 }
 
-/// Select the minimum-EDP candidate, keeping the first among exact ties
-/// (matching `Iterator::min_by` on the candidate order).
-fn select_best(
-    feasible: impl IntoIterator<Item = (Mapping, NetStats)>,
-    clock_hz: f64,
-) -> Option<(Mapping, NetStats)> {
-    let mut best: Option<(f64, (Mapping, NetStats))> = None;
-    for cand in feasible {
-        let edp = cand.1.edp(clock_hz);
-        if improves(edp, best.as_ref().map(|(b, _)| *b)) {
-            best = Some((edp, cand));
-        }
-    }
-    best.map(|(_, c)| c)
-}
-
 /// Global layer indices per chunk (CLP, SLP, ALP).
 fn family_layers(arch: &Arch) -> [Vec<usize>; 3] {
     let mut fam: [Vec<usize>; 3] = [Vec::new(), Vec::new(), Vec::new()];
@@ -119,29 +117,65 @@ fn family_layers(arch: &Arch) -> [Vec<usize>; 3] {
     fam
 }
 
-/// Candidate totals from its chunks' memoized stats. Energy accumulates
-/// in global layer order (a 3-cursor merge) so the factored EDP is
-/// bit-identical to what `ChunkAccelerator::simulate` would produce.
-fn compose_totals(chunks: &[Option<&ChunkStats>; 3], n_layers: usize) -> (f64, f64) {
-    let mut cur = [0usize; 3];
-    let mut energy = 0.0;
-    for i in 0..n_layers {
-        for (fi, c) in chunks.iter().enumerate() {
-            if let Some(cs) = c {
-                if cur[fi] < cs.per_layer.len() && cs.per_layer[cur[fi]].0 == i {
-                    energy += cs.per_layer[cur[fi]].1.energy_pj;
-                    cur[fi] += 1;
-                }
-            }
-        }
-    }
-    let period = chunks
+/// The EDP-optimal operating point for one candidate's chunk frontiers
+/// (`None` entries = families with no layers): the optimum's period
+/// always equals some chunk point's cycle count, so sweep the merged
+/// frontier breakpoints ascending and at each period let every present
+/// chunk take its min-energy point fitting under it
+/// (`ChunkFrontier::best_under`) — near-linear in the sum of frontier
+/// sizes, instead of a cross product. Energy is summed chunk-major
+/// (CLP+SLP+ALP), identically for the greedy single-point frontiers, so
+/// frontier <= greedy holds bit-wise per candidate. Returns `(edp,
+/// point index per chunk)`; with no populated chunk the candidate is
+/// trivially mapped (EDP 0).
+fn best_operating_point(
+    fronts: &[Option<&ChunkFrontier>; 3],
+    clock_hz: f64,
+) -> (f64, [usize; 3]) {
+    let mut breakpoints: Vec<f64> = fronts
         .iter()
         .flatten()
-        .map(|c| c.cycles)
-        .fold(0.0, f64::max)
-        .max(1.0);
-    (energy, period)
+        .flat_map(|f| f.points().iter().map(|p| p.cycles))
+        .collect();
+    if breakpoints.is_empty() {
+        return (0.0, [0; 3]);
+    }
+    breakpoints.sort_by(|a, b| a.total_cmp(b));
+    breakpoints.dedup();
+    // The smallest feasible period: every present chunk at its fastest.
+    let p_min = fronts
+        .iter()
+        .flatten()
+        .map(|f| f.points()[0].cycles)
+        .fold(0.0_f64, f64::max);
+    let mut best: Option<(f64, [usize; 3])> = None;
+    for &bp in breakpoints.iter().filter(|&&b| b >= p_min) {
+        let mut cur = [0usize; 3];
+        let mut period: f64 = 0.0;
+        let mut energy = 0.0;
+        for (fi, f) in fronts.iter().enumerate() {
+            let Some(f) = f else { continue };
+            // `best_under` is the ONE copy of the per-chunk selection
+            // rule; it returns Some for every bp >= p_min. The fallback
+            // to the fastest point only triggers on pathological NaN
+            // cycle values.
+            let k = f.best_under(bp).unwrap_or(0);
+            let p = &f.points()[k];
+            // The chosen point may undershoot bp; the realized period is
+            // the max of what the chunks actually take.
+            period = period.max(p.cycles);
+            energy += p.energy_pj;
+            cur[fi] = k;
+        }
+        let edp = energy * (period.max(1.0) / clock_hz);
+        if improves(edp, best.map(|(b, _)| b)) {
+            best = Some((edp, cur));
+        }
+    }
+    // p_min is itself a breakpoint, so at least one period is evaluated;
+    // the fallback only triggers on pathological NaN cycle values, and a
+    // NaN EDP never displaces a finite candidate in `improves`.
+    best.unwrap_or((f64::NAN, [0; 3]))
 }
 
 /// Resolve a candidate's memoized chunk evaluations (index = chunk;
@@ -164,6 +198,37 @@ fn candidate_refs<'a>(
         refs[fi] = Some(e);
     }
     Some(refs)
+}
+
+/// Build the winning `Mapping` + `NetStats` from per-chunk frontiers and
+/// the selected operating point — shared by both engines' winner
+/// materialization (`NetStats::compose` of the replayed chunk stats is
+/// bit-identical to a monolithic simulation of the same tilings).
+fn materialize_winner(
+    c: &MapCandidate,
+    fronts: &[Option<&ChunkFrontier>; 3],
+    pts: [usize; 3],
+    n_layers: usize,
+) -> (Mapping, NetStats) {
+    let mut tilings: Vec<Option<Tiling>> = vec![None; n_layers];
+    let mut chunk_stats: Vec<ChunkStats> = Vec::new();
+    for (fi, f) in fronts.iter().enumerate() {
+        let Some(f) = f else { continue };
+        let (cs, ts) = f.materialize(pts[fi]);
+        for &(i, t) in &ts {
+            tilings[i] = t;
+        }
+        chunk_stats.push(cs);
+    }
+    let mapping = Mapping {
+        clp_df: c.dfs[0],
+        slp_df: c.dfs[1],
+        alp_df: c.dfs[2],
+        tilings,
+        gb_split: c.gb,
+        noc_split: c.noc,
+    };
+    (mapping, NetStats::compose(&chunk_stats))
 }
 
 /// Run the auto-mapper for `arch` on `accel`.
@@ -199,54 +264,44 @@ pub fn auto_map(
     }
 
     // The expensive part, done once per distinct configuration: per-layer
-    // tiling search + chunk totals, in parallel.
+    // tiling frontier + chunk frontier composition, in parallel.
     let evals: HashMap<ChunkKey, ChunkEval> =
         par_map(&keys, |k| eval_chunk(accel, arch, &fam[k.chunk_idx], *k, q, cfg))
             .into_iter()
             .map(|e| (e.key, e))
             .collect();
 
-    // Cheap compositional assembly of every candidate.
+    // Cheap compositional assembly: per candidate, sweep the merged
+    // frontier breakpoints for the EDP-optimal operating point.
     let mut combos_infeasible = 0usize;
-    let mut best: Option<(usize, f64)> = None;
+    let mut best: Option<(usize, [usize; 3], f64)> = None;
     for (ci, c) in cands.iter().enumerate() {
         let Some(refs) = candidate_refs(c, &fam, &evals) else {
             combos_infeasible += 1;
             continue;
         };
-        let stats = refs.map(|r| r.map(|e| &e.result.as_ref().unwrap().0));
-        let (energy, period) = compose_totals(&stats, arch.layers.len());
-        let edp = energy * (period / cfg.clock_hz);
-        if improves(edp, best.map(|(_, b)| b)) {
-            best = Some((ci, edp));
+        let fronts = refs.map(|r| r.map(|e| e.result.as_ref().unwrap()));
+        let (edp, pts) = best_operating_point(&fronts, cfg.clock_hz);
+        if improves(edp, best.as_ref().map(|b| b.2)) {
+            best = Some((ci, pts, edp));
         }
     }
 
     // Materialize only the winner: full NetStats + per-layer tilings.
-    let best = best.map(|(ci, best_edp)| {
+    let best = best.map(|(ci, pts, best_edp)| {
         let c = &cands[ci];
         let refs = candidate_refs(c, &fam, &evals).expect("winner is feasible");
-        let mut tilings: Vec<Option<Tiling>> = vec![None; arch.layers.len()];
-        let mut chunk_stats: Vec<ChunkStats> = Vec::new();
-        for e in refs.iter().flatten() {
-            let (cs, ts) = e.result.as_ref().expect("winner chunk is feasible");
-            for &(i, t) in ts {
-                tilings[i] = t;
-            }
-            chunk_stats.push(cs.clone());
-        }
-        let mapping = Mapping {
-            clp_df: c.dfs[0],
-            slp_df: c.dfs[1],
-            alp_df: c.dfs[2],
-            tilings,
-            gb_split: c.gb,
-            noc_split: c.noc,
-        };
-        let stats = NetStats::compose(&chunk_stats);
-        // compose_totals (selection) and NetStats::compose (report) both
-        // accumulate in global layer order; keep them in lockstep.
-        debug_assert_eq!(stats.edp(cfg.clock_hz), best_edp, "selection/report EDP drift");
+        let fronts = refs.map(|r| r.map(|e| e.result.as_ref().unwrap()));
+        let (mapping, stats) = materialize_winner(c, &fronts, pts, arch.layers.len());
+        // Selection sums energy chunk-major; compose/simulate accumulate
+        // in global layer order. Same numbers up to float associativity —
+        // agreement is to relative epsilon, not bits.
+        debug_assert!(
+            (stats.edp(cfg.clock_hz) - best_edp).abs()
+                <= 1e-9 * best_edp.abs().max(f64::MIN_POSITIVE),
+            "selection/report EDP drift: {} vs {best_edp}",
+            stats.edp(cfg.clock_hz)
+        );
         (mapping, stats)
     });
 
@@ -256,37 +311,38 @@ pub fn auto_map(
     MapperResult { best, rs_baseline, combos_tried: cands.len(), combos_infeasible }
 }
 
-/// Per-layer optimal tilings under a fixed whole-net mapping — the
-/// reference path's view of the shared `chunk_eval::best_layer_tiling`
-/// rule (the factored engine calls the same rule from `eval_chunk`).
-fn best_tilings(
+/// Build one candidate's chunk frontiers from scratch (no memo table) —
+/// the reference path's view of the shared `chunk_eval::chunk_frontier`
+/// rule. `None` = some populated family is infeasible.
+fn candidate_frontiers(
     accel: &ChunkAccelerator,
     arch: &Arch,
-    mapping: &Mapping,
+    fam: &[Vec<usize>; 3],
+    c: &MapCandidate,
     q: &QuantSpec,
     cfg: &MapperConfig,
-) -> Vec<Option<Tiling>> {
-    arch.layers
-        .iter()
-        .map(|l| {
-            let idx = l.kind.chunk_index();
-            let chunk = accel.chunk_with(
-                l.kind,
-                mapping.df_for(l.kind),
-                mapping.gb_split[idx],
-                mapping.noc_split[idx],
-            );
-            super::chunk_eval::best_layer_tiling(&chunk, l, q, &accel.mem, &accel.costs, cfg)
-                .map(|(_, t)| t)
-        })
-        .collect()
+) -> Option<[Option<ChunkFrontier>; 3]> {
+    let mut fronts: [Option<ChunkFrontier>; 3] = [None, None, None];
+    for fi in 0..3 {
+        if fam[fi].is_empty() {
+            continue;
+        }
+        let chunk = accel.chunk_with(OpKind::ALL[fi], c.dfs[fi], c.gb[fi], c.noc[fi]);
+        match chunk_frontier(accel, arch, &fam[fi], &chunk, fi, q, cfg) {
+            Ok(f) => fronts[fi] = Some(f),
+            Err(_) => return None,
+        }
+    }
+    Some(fronts)
 }
 
-/// The pre-factorization exhaustive search: one whole-net tiling search +
-/// simulation per candidate, no memoization. Retained as the equivalence
-/// oracle (`tests/mapper_equivalence.rs`) and the before/after baseline
-/// for the mapper benchmarks; same space and result as `auto_map`,
-/// asymptotically slower.
+/// The pre-factorization exhaustive search: one whole-net frontier build
+/// + breakpoint sweep per candidate, no memoization. Retained as the
+/// equivalence oracle (`tests/mapper_equivalence.rs`) and the
+/// before/after baseline for the mapper benchmarks; same space, same
+/// selection rule and result as `auto_map`, asymptotically slower. The
+/// winner is materialized through a monolithic `simulate` — the built-in
+/// cross-check that compose == simulate.
 pub fn auto_map_reference(
     accel: &ChunkAccelerator,
     arch: &Arch,
@@ -295,33 +351,42 @@ pub fn auto_map_reference(
 ) -> MapperResult {
     let op_loads = crate::accel::alloc::op_loads(arch);
     let cands = super::space::candidates(&accel.alloc, &op_loads, cfg.independent_noc);
+    let fam = family_layers(arch);
 
-    let results: Vec<Option<(Mapping, NetStats)>> = par_map(&cands, |c| {
-        let mut mapping = Mapping {
-            clp_df: c.dfs[0],
-            slp_df: c.dfs[1],
-            alp_df: c.dfs[2],
-            tilings: vec![None; arch.layers.len()],
-            gb_split: c.gb,
-            noc_split: c.noc,
-        };
-        if cfg.search_tilings {
-            mapping.tilings = best_tilings(accel, arch, &mapping, q, cfg);
-        }
-        accel.simulate(arch, &mapping, q).ok().map(|s| (mapping, s))
+    // Score every candidate with a fresh, unmemoized frontier build —
+    // the brute force the factored engine is regression-tested against.
+    let scores: Vec<Option<f64>> = par_map(&cands, |c| {
+        let fronts = candidate_frontiers(accel, arch, &fam, c, q, cfg)?;
+        let refs = [fronts[0].as_ref(), fronts[1].as_ref(), fronts[2].as_ref()];
+        Some(best_operating_point(&refs, cfg.clock_hz).0)
     });
 
-    let combos_tried = results.len();
+    let combos_tried = scores.len();
     let mut combos_infeasible = 0usize;
-    let best = select_best(
-        results.into_iter().filter_map(|r| {
-            if r.is_none() {
-                combos_infeasible += 1;
+    let mut best: Option<(usize, f64)> = None;
+    for (ci, s) in scores.iter().enumerate() {
+        match s {
+            None => combos_infeasible += 1,
+            Some(edp) => {
+                if improves(*edp, best.map(|(_, b)| b)) {
+                    best = Some((ci, *edp));
+                }
             }
-            r
-        }),
-        cfg.clock_hz,
-    );
+        }
+    }
+
+    let best = best.map(|(ci, _)| {
+        let c = &cands[ci];
+        let fronts =
+            candidate_frontiers(accel, arch, &fam, c, q, cfg).expect("winner is feasible");
+        let refs = [fronts[0].as_ref(), fronts[1].as_ref(), fronts[2].as_ref()];
+        let (_, pts) = best_operating_point(&refs, cfg.clock_hz);
+        let (mapping, _) = materialize_winner(c, &refs, pts, arch.layers.len());
+        let stats = accel
+            .simulate(arch, &mapping, q)
+            .expect("winning candidate simulates");
+        (mapping, stats)
+    });
 
     let rs_baseline = accel.simulate(arch, &Mapping::all_rs(arch.layers.len()), q);
 
@@ -332,6 +397,7 @@ pub fn auto_map_reference(
 mod tests {
     use super::*;
     use crate::accel::alloc::{allocate, AreaBudget};
+    use crate::accel::chunk::LayerStats;
     use crate::accel::{MemoryConfig, UNIT_ENERGY_45NM};
     use crate::model::arch::{LayerDesc, OpKind};
 
@@ -364,6 +430,19 @@ mod tests {
         let arch = hybrid_arch();
         let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
         ChunkAccelerator::new(alloc, mem, costs)
+    }
+
+    #[test]
+    fn default_config_is_frontier_lattice_on() {
+        // The tentpole flip: selection is EDP-aware, so the full divisor
+        // lattice is the affordable default and greedy is the opt-in
+        // compatibility path.
+        let d = MapperConfig::default();
+        assert!(d.full_tiling_lattice);
+        assert!(!d.greedy_tiling);
+        assert!(d.factored);
+        assert!(d.independent_noc);
+        assert!(d.search_tilings);
     }
 
     #[test]
@@ -418,31 +497,44 @@ mod tests {
         NetStats { energy_pj, period_cycles, ..Default::default() }
     }
 
-    #[test]
-    fn select_best_handles_zero_energy_candidate() {
-        // A degenerate zero-energy candidate has EDP 0 and must win
-        // without panicking (the old partial_cmp().unwrap() selection was
-        // one NaN away from a panic here).
-        let cands = vec![
-            (Mapping::all_rs(1), stats(100.0, 100.0)),
-            (Mapping::all_rs(1), stats(0.0, 100.0)),
-            (Mapping::all_rs(1), stats(50.0, 100.0)),
-        ];
-        let best = select_best(cands, 250e6).expect("non-empty");
-        assert_eq!(best.1.energy_pj, 0.0);
+    fn ls(cycles: f64, energy_pj: f64) -> (LayerStats, Option<Tiling>) {
+        (LayerStats { cycles, energy_pj, ..Default::default() }, None)
     }
 
     #[test]
-    fn select_best_never_picks_nan_over_finite() {
-        let cands = vec![
-            (Mapping::all_rs(1), stats(f64::NAN, 100.0)),
-            (Mapping::all_rs(1), stats(50.0, 100.0)),
-        ];
-        let best = select_best(cands, 250e6).expect("non-empty");
-        assert_eq!(best.1.energy_pj, 50.0);
-        // All-NaN input still selects (total order), no panic.
-        let all_nan = vec![(Mapping::all_rs(1), stats(f64::NAN, 100.0))];
-        assert!(select_best(all_nan, 250e6).is_some());
+    fn operating_point_buys_energy_with_slack() {
+        // The EDP-aware selection in miniature: chunk 0 is the bottleneck
+        // at 100 cycles; chunk 1 has a fast/hungry point (50cyc, 80pJ)
+        // and a slow/frugal one (90cyc, 10pJ). Greedy takes the fast
+        // point; the sweep spends the 50-cycle slack to buy 70pJ.
+        let mut c0 = ChunkFrontier::new(0);
+        c0.push_layer(0, vec![ls(100.0, 100.0)]);
+        let mut c1 = ChunkFrontier::new(1);
+        c1.push_layer(1, vec![ls(50.0, 80.0), ls(90.0, 10.0)]);
+        let fronts = [Some(&c0), Some(&c1), None];
+        let (edp, pts) = best_operating_point(&fronts, 1.0);
+        assert_eq!(pts, [0, 1, 0]);
+        assert_eq!(edp, 110.0 * 100.0);
+    }
+
+    #[test]
+    fn operating_point_shrinks_period_when_it_pays() {
+        // Symmetric case: the bottleneck itself should pick its faster,
+        // hungrier point when the period term wins the product.
+        let mut c0 = ChunkFrontier::new(0);
+        c0.push_layer(0, vec![ls(10.0, 12.0), ls(100.0, 10.0)]);
+        let fronts = [Some(&c0), None, None];
+        let (edp, pts) = best_operating_point(&fronts, 1.0);
+        assert_eq!(pts[0], 0);
+        assert_eq!(edp, 12.0 * 10.0);
+    }
+
+    #[test]
+    fn operating_point_empty_is_trivial() {
+        let fronts = [None, None, None];
+        let (edp, pts) = best_operating_point(&fronts, 250e6);
+        assert_eq!(edp, 0.0);
+        assert_eq!(pts, [0; 3]);
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //!   (the cross-chunk competition Sec. 4.2 highlights).
 //!
 //! The cross product of the three axes is the candidate set `search.rs`
-//! fans across threads: 64 ordering combos x a handful of resource
-//! splits, with the per-layer tiling chosen greedily inside each combo
+//! fans across threads: 64 ordering combos x a handful of deduplicated
+//! resource splits, with the per-layer tiling axis resolved inside each
+//! chunk evaluation as a dominance-pruned (cycles, energy) frontier
 //! (layers are independent once the chunk configuration is fixed, so the
 //! tiling choice decomposes exactly). Growing any axis here widens the
 //! auto-mapper search without touching the search loop.
@@ -37,10 +38,12 @@ pub fn tiling_candidates(n_pes: usize, l: &LayerDesc) -> Vec<Tiling> {
     tilings_impl(n_pes, l, false)
 }
 
-/// The widened tiling axis: every divisor pair `(d, n_pes/d)` of the PE
-/// count (the full divisor lattice) on top of `tiling_candidates`'s
+/// The widened tiling axis (the default since selection became
+/// EDP-aware): every divisor pair `(d, n_pes/d)` of the PE count (the
+/// full divisor lattice) on top of `tiling_candidates`'s
 /// power-of-two/extreme set. Affordable because the factored search
-/// evaluates each chunk configuration once instead of 64x.
+/// evaluates each chunk configuration once instead of 64x, and because
+/// `chunk_eval` dominance-prunes the candidates as it scans them.
 pub fn tiling_candidates_full(n_pes: usize, l: &LayerDesc) -> Vec<Tiling> {
     tilings_impl(n_pes, l, true)
 }
@@ -82,6 +85,11 @@ fn tilings_impl(n_pes: usize, l: &LayerDesc, lattice: bool) -> Vec<Tiling> {
 /// Global-buffer / NoC split candidates across (CLP, SLP, ALP). Besides
 /// the uniform third, include splits proportional to each chunk's op
 /// load and a couple of skewed variants (searchable, small, effective).
+/// Deduplicated by share bit-pattern before returning: with equal op
+/// loads the proportional split bit-equals the uniform third, and on
+/// single-family archs the skew renormalizes back onto the proportional
+/// split — without the dedup the candidate set silently contains
+/// duplicate combos.
 pub fn gb_splits(alloc: &PeAllocation, op_loads: &[u64; 3]) -> Vec<[f64; 3]> {
     let mut v = vec![[1.0 / 3.0; 3]];
     let total: f64 = op_loads.iter().map(|&o| o as f64).sum();
@@ -113,6 +121,8 @@ pub fn gb_splits(alloc: &PeAllocation, op_loads: &[u64; 3]) -> Vec<[f64; 3]> {
             v.push(skew);
         }
     }
+    let mut seen = std::collections::HashSet::new();
+    v.retain(|s| seen.insert(s.map(f64::to_bits)));
     v
 }
 
@@ -247,6 +257,46 @@ mod tests {
             let z: f64 = s.iter().sum();
             assert!((z - 1.0).abs() < 1e-9, "{s:?}");
         }
+    }
+
+    #[test]
+    fn gb_splits_dedup_by_bit_pattern() {
+        let alloc = PeAllocation { clp: 10, slp: 10, alp: 10 };
+        // Unequal loads: uniform, proportional and skew are all distinct.
+        assert_eq!(gb_splits(&alloc, &[100, 50, 25]).len(), 3);
+        // Equal loads: the proportional split bit-equals the uniform
+        // third (100/300 and 1.0/3.0 round to the same double, and the
+        // three shares sum to exactly 1.0), leaving uniform + skew.
+        let equal = gb_splits(&alloc, &[100, 100, 100]);
+        assert_eq!(equal.len(), 2);
+        assert_eq!(equal[0], [1.0 / 3.0; 3]);
+        assert_ne!(equal[1], [1.0 / 3.0; 3]);
+        // Single family: proportional is [0,0,1] and the skew clamps to
+        // 0.9 then renormalizes back onto it — uniform + one split.
+        let single = PeAllocation { clp: 0, slp: 0, alp: 10 };
+        let s = gb_splits(&single, &[0, 0, 100]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[1], [0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn candidates_contain_no_duplicate_combos() {
+        // The satellite claim: after split dedup the whole candidate set
+        // is duplicate-free by bit pattern, even with equal op loads.
+        let alloc = PeAllocation { clp: 10, slp: 10, alp: 10 };
+        let cands = candidates(&alloc, &[100, 100, 100], true);
+        let set: std::collections::HashSet<_> = cands
+            .iter()
+            .map(|c| {
+                (
+                    format!("{:?}", c.dfs),
+                    c.gb.map(f64::to_bits),
+                    c.noc.map(f64::to_bits),
+                )
+            })
+            .collect();
+        assert_eq!(set.len(), cands.len());
+        assert_eq!(cands.len(), 64 * 2 * 2); // deduped: uniform + skew only
     }
 
     #[test]

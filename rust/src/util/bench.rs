@@ -192,6 +192,18 @@ impl Runner {
         ratio
     }
 
+    /// Record a plain scalar (e.g. a search-space size) in the JSON log
+    /// as `{"bench":name,"value":v}`. ci.sh's baseline diff treats these
+    /// as structural counters: wall-times drift with the machine and are
+    /// advisory, but a counter that *shrinks* against the committed
+    /// baseline means the search space silently narrowed and is a hard
+    /// failure.
+    pub fn record_value(&mut self, name: &str, value: f64) {
+        println!("{name:<48} {value:>12}");
+        let v = if value.is_finite() { format!("{value}") } else { "null".to_string() };
+        self.records.push(format!("{{\"bench\":\"{name}\",\"value\":{v}}}"));
+    }
+
     /// Write the accumulated records to the `--json` file, if requested.
     /// Errors are reported but non-fatal (benches still printed stats).
     pub fn finish(&self) {
@@ -258,15 +270,18 @@ mod tests {
         });
         let ratio = r.record_speedup("a_vs_b", &a, &b);
         assert!(ratio > 0.0);
+        r.record_value("combos", 576.0);
         r.finish();
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.trim_start().starts_with('['));
         assert!(body.contains("\"bench\":\"a\""));
         assert!(body.contains("\"ratio\":"));
+        assert!(body.contains("\"bench\":\"combos\""));
+        assert!(body.contains("\"value\":576"));
         // Machine-readable: it must parse as JSON with one entry per record.
         let parsed = crate::util::json::Json::parse(&body).unwrap();
         match parsed {
-            crate::util::json::Json::Arr(v) => assert_eq!(v.len(), 3),
+            crate::util::json::Json::Arr(v) => assert_eq!(v.len(), 4),
             other => panic!("expected array, got {other:?}"),
         }
         let _ = std::fs::remove_file(&path);

@@ -1,8 +1,11 @@
 //! Equivalence regression: the chunk-factorized auto-mapper must be
 //! exhaustive-equivalent to the retained brute-force oracle
 //! (`auto_map_reference`) — same candidate accounting, same best EDP —
-//! across seeded hybrid archs, both resource-split spaces, and a
-//! tight-buffer setting that exercises the infeasible paths.
+//! across seeded hybrid archs, both resource-split spaces, both tiling
+//! rules (EDP-aware frontier default and the greedy compatibility flag),
+//! and a tight-buffer setting that exercises the infeasible paths. Plus
+//! the tentpole property: frontier-selected EDP is never worse than
+//! greedy-selected EDP on the same space, and strictly better somewhere.
 
 use nasa::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, UNIT_ENERGY_45NM};
 use nasa::mapper::{auto_map, auto_map_reference, MapperConfig};
@@ -80,8 +83,8 @@ fn assert_equivalent(arch: &Arch, mem: MemoryConfig, cfg: &MapperConfig, label: 
 
 #[test]
 fn factored_equals_reference_on_seeded_archs_widened_space() {
-    // Everything on: independent NoC axis (default) plus the opt-in
-    // divisor-lattice tilings.
+    // Everything on (all defaults now): EDP-aware frontier rule,
+    // independent NoC axis, full divisor-lattice tilings.
     for seed in [1u64, 7, 42] {
         let arch = seeded_arch(seed, 8);
         assert_equivalent(
@@ -91,6 +94,118 @@ fn factored_equals_reference_on_seeded_archs_widened_space() {
             &format!("seed {seed} widened"),
         );
     }
+}
+
+#[test]
+fn factored_equals_reference_under_greedy_compat_rule() {
+    // The retired greedy rule lives on behind `greedy_tiling`; the two
+    // engines must stay exhaustive-equivalent there too (single-point
+    // frontiers on both sides).
+    for seed in [7u64, 42] {
+        let arch = seeded_arch(seed, 8);
+        assert_equivalent(
+            &arch,
+            MemoryConfig::default(),
+            &MapperConfig { greedy_tiling: true, ..Default::default() },
+            &format!("seed {seed} greedy compat"),
+        );
+    }
+}
+
+/// The tentpole property: on the same (lattice-on) space, EDP-aware
+/// frontier selection is never worse than the greedy rule — the greedy
+/// pick is each frontier's fastest point, so every greedy operating
+/// point is also swept — and strictly better on at least one seeded
+/// multi-chunk arch, where a non-bottleneck chunk spends period slack
+/// to buy energy.
+#[test]
+fn frontier_never_loses_to_greedy_and_wins_somewhere() {
+    let mut checked = 0usize;
+    let mut strict = 0usize;
+    let cases: Vec<(u64, usize, MemoryConfig)> = vec![
+        (1, 8, MemoryConfig::default()),
+        (2, 10, MemoryConfig::default()),
+        (3, 8, MemoryConfig::default()),
+        (5, 8, MemoryConfig::default()),
+        (7, 8, MemoryConfig::default()),
+        (11, 9, MemoryConfig::default()),
+        (13, 12, MemoryConfig::default()),
+        (19, 14, MemoryConfig::default()),
+        (23, 9, MemoryConfig::default()),
+        (29, 11, MemoryConfig::default()),
+        (42, 8, MemoryConfig::default()),
+        (17, 10, MemoryConfig::default()),
+        (7, 8, MemoryConfig::tight()),
+        (13, 10, MemoryConfig::tight()),
+        (42, 12, MemoryConfig::tight()),
+    ];
+    let mut archs: Vec<(Arch, MemoryConfig)> = cases
+        .into_iter()
+        .map(|(seed, n_layers, mem)| (seeded_arch(seed, n_layers), mem))
+        .collect();
+    // A constructed slack case: one heavy conv bottleneck next to small
+    // shift/adder families — the non-bottleneck chunks have period slack
+    // an energy-frugal lattice tiling can spend.
+    let mk = |name: &str, kind, cin: usize, cout: usize, hw: usize, k: usize| LayerDesc {
+        name: name.into(),
+        kind,
+        cin,
+        cout,
+        h_out: hw,
+        w_out: hw,
+        k,
+        stride: 1,
+        groups: 1,
+    };
+    archs.push((
+        Arch {
+            name: "bottleneck".into(),
+            layers: vec![
+                mk("conv_big", OpKind::Conv, 64, 64, 16, 3),
+                mk("shift_a", OpKind::Shift, 64, 32, 8, 1),
+                mk("shift_b", OpKind::Shift, 32, 48, 8, 3),
+                mk("adder_a", OpKind::Adder, 48, 32, 8, 1),
+                mk("adder_b", OpKind::Adder, 32, 24, 4, 3),
+            ],
+            choices: vec![],
+        },
+        MemoryConfig::default(),
+    ));
+    for (arch, mem) in archs {
+        let label = &arch.name;
+        let accel = accel_for(&arch, mem);
+        let q = QuantSpec::default();
+        let frontier = auto_map(&accel, &arch, &q, &MapperConfig::default());
+        let greedy = auto_map(
+            &accel,
+            &arch,
+            &q,
+            &MapperConfig { greedy_tiling: true, ..Default::default() },
+        );
+        // Same space, same per-layer feasibility rule: the accounting
+        // and the set of mappable candidates are identical.
+        assert_eq!(frontier.combos_tried, greedy.combos_tried, "{label}");
+        assert_eq!(frontier.combos_infeasible, greedy.combos_infeasible, "{label}");
+        assert_eq!(frontier.best.is_some(), greedy.best.is_some(), "{label}");
+        let (Some((_, fs)), Some((_, gs))) = (&frontier.best, &greedy.best) else {
+            continue;
+        };
+        let (fe, ge) = (fs.edp(250e6), gs.edp(250e6));
+        assert!(
+            fe <= ge * (1.0 + 1e-12),
+            "{label}: frontier {fe:.17e} worse than greedy {ge:.17e}"
+        );
+        checked += 1;
+        if fe < ge * (1.0 - 1e-9) {
+            strict += 1;
+        }
+    }
+    assert!(checked > 0, "no feasible case was compared");
+    assert!(
+        strict >= 1,
+        "frontier never strictly beat greedy on any seeded arch \
+         ({checked} compared) — the EDP-aware selection is not buying energy"
+    );
 }
 
 #[test]

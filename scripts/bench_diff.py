@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_mapper.json against the committed baseline.
+
+Three record classes, three policies:
+
+* Wall-time records ({"bench", "mean_ns", ...}) are ADVISORY: drift
+  beyond +/-20% is printed but never fatal — CI machines vary.
+* Speedup/cost records ({"bench", "ratio"}) are ADVISORY too: drift
+  beyond +/-20% is printed, and any fresh "cost_ratio_" record above
+  2.0 gets a WARN line (the EXPERIMENTS.md acceptance gauge: frontier +
+  lattice-on must stay within 2x of greedy + lattice-off).
+* Structural counters ({"bench", "value"}) whose name contains
+  "combos" are a HARD gate in one direction: a value smaller than the
+  baseline (or a counter missing from the fresh run) means the mapper's
+  search space silently shrank, and the script exits nonzero. Growth is
+  fine and merely noted. Other value records (e.g. EDP-quality ratios)
+  are advisory.
+
+Usage: bench_diff.py <baseline.json> <fresh.json>
+"""
+
+import json
+import sys
+
+DRIFT = 0.20
+COST_RATIO_CEILING = 2.0
+
+
+def load(path):
+    with open(path) as f:
+        recs = json.load(f)
+    return {r["bench"]: r for r in recs if isinstance(r, dict) and "bench" in r}
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    base, fresh = load(argv[1]), load(argv[2])
+    shared = sorted(set(base) & set(fresh))
+    failures = []
+    for name in shared:
+        b, f = base[name], fresh[name]
+        if "value" in b and "value" in f:
+            if "combos" in name and f["value"] < b["value"]:
+                failures.append(
+                    f"{name}: search-space counter shrank {b['value']} -> {f['value']}"
+                )
+            elif f["value"] != b["value"]:
+                print(f"note  {name}: value {b['value']} -> {f['value']}")
+        elif b.get("ratio") and f.get("ratio"):
+            rel = f["ratio"] / b["ratio"]
+            if rel > 1.0 + DRIFT or rel < 1.0 - DRIFT:
+                print(
+                    f"drift {name}: ratio {b['ratio']:.2f} -> {f['ratio']:.2f} "
+                    f"({rel:.2f}x, advisory)"
+                )
+        elif b.get("mean_ns") and f.get("mean_ns"):
+            ratio = f["mean_ns"] / b["mean_ns"]
+            if ratio > 1.0 + DRIFT or ratio < 1.0 - DRIFT:
+                print(
+                    f"drift {name}: mean {b['mean_ns']:.0f}ns -> "
+                    f"{f['mean_ns']:.0f}ns ({ratio:.2f}x, advisory)"
+                )
+    # The EXPERIMENTS.md acceptance gauge, checked on the fresh run alone
+    # so it fires even for records the baseline predates.
+    for name, f in sorted(fresh.items()):
+        if "cost_ratio_" in name and (f.get("ratio") or 0) > COST_RATIO_CEILING:
+            print(
+                f"WARN  {name}: {f['ratio']:.2f} exceeds the {COST_RATIO_CEILING}x "
+                "acceptance gauge (advisory)"
+            )
+    for name in sorted(set(base) - set(fresh)):
+        if "value" in base[name] and "combos" in name:
+            failures.append(f"{name}: search-space counter missing from fresh run")
+    if failures:
+        for msg in failures:
+            print(f"FAIL  {msg}", file=sys.stderr)
+        return 1
+    print(f"bench diff OK ({len(shared)} shared records, walltime advisory +/-{DRIFT:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
