@@ -189,7 +189,7 @@ fn bench_pjrt() {
 
     let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
     let Ok(sn) = manifest.supernet("hybrid_all_c10") else { return };
-    let mut engine = Engine::cpu().unwrap();
+    let engine = Engine::cpu().unwrap();
     let exe = engine.load(&manifest.dir, &sn.step).unwrap();
     let mut rng = Rng::new(0);
     let params = init_params(sn, &mut rng, true).unwrap();

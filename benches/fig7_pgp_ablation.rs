@@ -1,24 +1,23 @@
-//! Bench/exhibit: regenerate Fig. 7 — the PGP ablation. Pretrains the
-//! hybrid-adder and hybrid-all supernets under (a) vanilla joint
-//! pretraining (FBNet recipe) and (b) the three-stage PGP with the
-//! customized recipe (gamma-zero init + bigger lr), and prints the
-//! training trajectories.
+//! Bench/exhibit: regenerate Fig. 7 — the PGP ablation — as ONE parallel
+//! sweep. The four trajectories (hybrid-adder / hybrid-all × vanilla /
+//! PGP+recipe) run concurrently through `coordinator::sweep::run_sweep`
+//! over a single shared engine (each supernet's step artifact compiles
+//! once and serves both of its trajectories), with per-run stage-boundary
+//! checkpoints under `runs/<name>/` — rerunning after an interruption
+//! resumes instead of restarting (NASA_FIG7_RESUME=1).
 //!
-//! This is the one bench that exercises the PJRT path, so it is sized to
-//! stay in minutes: NASA_FIG7_EPOCHS / NASA_FIG7_STEPS override the
-//! defaults.
+//! This is the one bench that exercises the execution backend, so it is
+//! sized to stay in minutes: NASA_FIG7_EPOCHS / NASA_FIG7_STEPS /
+//! NASA_FIG7_JOBS override the defaults.
 //!
 //! Run: cargo bench --bench fig7_pgp_ablation
 
-use nasa::coordinator::{run_search, Dataset, DatasetConfig, SearchConfig};
+use nasa::coordinator::{print_summary, run_sweep, SearchConfig, SweepOptions, SweepRun};
 use nasa::nas::PgpSchedule;
 use nasa::report::fig7::print_runs;
 use nasa::runtime::{Engine, Manifest};
+use nasa::util::bench::env_usize;
 use std::path::Path;
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
@@ -30,55 +29,75 @@ fn main() -> anyhow::Result<()> {
     let steps = env_usize("NASA_FIG7_STEPS", 6);
 
     let manifest = Manifest::load(dir)?;
-    let mut engine = Engine::cpu()?;
-    let mut logs = Vec::new();
+    let engine = Engine::cpu()?;
 
+    // The Fig. 7 grid: per space, (a) PGP + customized recipe and (b) the
+    // vanilla FBNet baseline (joint pretrain, small lr, no gamma-zero).
+    let mut runs = Vec::new();
     for space in ["hybrid_adder_c10", "hybrid_all_c10"] {
-        let Ok(sn) = manifest.supernet(space) else {
+        if manifest.supernet(space).is_err() {
             println!("({space} not built, skipping)");
             continue;
-        };
-        let dataset = Dataset::generate(DatasetConfig::cifar10_like(sn.input_hw));
-        for (tag, vanilla, recipe) in [
-            ("pgp+recipe", false, true),
-            ("vanilla", true, false),
-        ] {
+        }
+        for (tag, vanilla, recipe) in [("pgp+recipe", false, true), ("vanilla", true, false)] {
             let mut cfg = SearchConfig::for_space(space, pretrain, 0);
             cfg.steps_per_epoch = steps;
             cfg.gamma_zero_recipe = recipe;
             if vanilla {
                 cfg.schedule = PgpSchedule::vanilla(pretrain, 0);
                 // Vanilla recipe also means the default (small) lr.
-                cfg.lr_w = 0.05;
+                cfg.lr_w = SearchConfig::lr_for(false);
             }
-            let t0 = std::time::Instant::now();
-            let mut outcome = run_search(&mut engine, &manifest, &dataset, &cfg)?;
-            outcome.log.name = format!("fig7_{space}_{tag}");
-            println!(
-                "{space}/{tag}: {:.0}s, final loss {:.3}",
-                t0.elapsed().as_secs_f64(),
-                outcome.log.curve("train_loss").unwrap().tail_mean(2)
-            );
-            let _ = std::fs::create_dir_all("runs");
-            let _ = outcome.log.save(Path::new("runs"));
-            logs.push(outcome.log);
+            runs.push(SweepRun { name: format!("fig7_{space}_{tag}"), cfg });
+        }
+    }
+    if runs.is_empty() {
+        println!("(no fig7-capable supernets in the manifest)");
+        return Ok(());
+    }
+
+    let opts = SweepOptions {
+        jobs: env_usize("NASA_FIG7_JOBS", 0),
+        out_dir: Path::new("runs").to_path_buf(),
+        checkpoint: true,
+        resume: std::env::var("NASA_FIG7_RESUME").is_ok(),
+    };
+    let t0 = std::time::Instant::now();
+    let results = run_sweep(&engine, &manifest, &runs, &opts)?;
+    println!(
+        "fig7 sweep: {} trajectories in {:.0}s (one shared engine)",
+        results.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    print_summary(&results);
+    // Save the trajectory logs ONLY: these runs pretrain with zero Search
+    // epochs, so their derived archs are meaningless (all-zero alphas) —
+    // writing them would let fig6's searched-arch lookup pick them up.
+    for r in &results {
+        if let Ok(o) = &r.outcome {
+            let _ = o.log.save(&opts.out_dir);
         }
     }
 
-    let refs: Vec<_> = logs.iter().collect();
-    print_runs(&refs);
+    let logs: Vec<_> = results
+        .iter()
+        .filter_map(|r| r.outcome.as_ref().ok().map(|o| &o.log))
+        .collect();
+    print_runs(&logs);
 
     // Fig. 7 shape assertion: PGP final loss <= vanilla final loss.
     for space in ["hybrid_adder_c10", "hybrid_all_c10"] {
         let get = |tag: &str| {
             logs.iter()
                 .find(|l| l.name == format!("fig7_{space}_{tag}"))
-                .map(|l| l.curve("train_loss").unwrap().tail_mean(2))
+                .and_then(|l| l.curve("train_loss"))
+                .map(|c| c.tail_mean(2))
         };
         if let (Some(pgp), Some(van)) = (get("pgp+recipe"), get("vanilla")) {
             let verdict = if pgp <= van { "PGP better (paper shape holds)" } else { "UNEXPECTED" };
             println!("{space}: PGP {pgp:.3} vs vanilla {van:.3} -> {verdict}");
         }
     }
+
     Ok(())
 }

@@ -27,6 +27,22 @@ cargo check --features pjrt
 say "benches + examples compile: cargo build --release --all-targets"
 cargo build --release --all-targets
 
+say "sweep orchestrator smoke: nasa sweep (2 tiny configs, stub backend)"
+# Exercises the parallel checkpointed orchestrator end to end against the
+# committed fixtures/tiny_manifest (no HLO files needed on the stub
+# backend): grid expansion, concurrent workers over one shared engine,
+# stage-boundary checkpoints, log/arch emission — then a --resume rerun
+# that must replay instantly from the end-of-run checkpoints.
+rm -rf target/ci_sweep
+cargo run --release --quiet -- sweep --artifacts fixtures/tiny_manifest \
+    --spaces tiny --seeds 1,2 --pretrain 2 --epochs 2 --steps 2 --jobs 2 \
+    --out target/ci_sweep
+cargo run --release --quiet -- sweep --artifacts fixtures/tiny_manifest \
+    --spaces tiny --seeds 1,2 --pretrain 2 --epochs 2 --steps 2 --jobs 2 \
+    --out target/ci_sweep --resume
+test -f target/ci_sweep/tiny_vanilla_recipe_s1/checkpoint.json
+test -f target/ci_sweep/arch_tiny_vanilla_recipe_s2.json
+
 say "mapper perf smoke: accel_microbench --quick --json BENCH_mapper.json"
 # Keeps the perf trajectory accumulating (EXPERIMENTS.md §Perf reads this
 # file); --quick bounds the smoke to a few iterations per benchmark.

@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     let manifest = Manifest::load(dir)?;
     let runs = Path::new("runs");
     std::fs::create_dir_all(runs)?;
-    let mut engine = Engine::cpu()?;
+    let engine = Engine::cpu()?;
     let q = QuantSpec::default();
     let costs = UNIT_ENERGY_45NM;
     let budget = AreaBudget::macs_equivalent(168, &costs);
@@ -55,7 +55,7 @@ fn main() -> Result<()> {
         let mut cfg = SearchConfig::for_space(space, pretrain, search_epochs);
         cfg.steps_per_epoch = steps;
         let t0 = std::time::Instant::now();
-        let outcome = run_search(&mut engine, &manifest, &dataset, &cfg)?;
+        let outcome = run_search(&engine, &manifest, &dataset, &cfg)?;
         println!(
             "search: {:.1}s, choices {:?}, final train acc {:.3}",
             t0.elapsed().as_secs_f64(),
@@ -69,7 +69,7 @@ fn main() -> Result<()> {
         let mut tcfg = TrainConfig::for_space(space, train_epochs);
         tcfg.steps_per_epoch = steps;
         let t1 = std::time::Instant::now();
-        let trained = train_child(&mut engine, &manifest, &dataset, &outcome.choices, &tcfg)?;
+        let trained = train_child(&engine, &manifest, &dataset, &outcome.choices, &tcfg)?;
         println!(
             "train: {:.1}s, loss curve: {}",
             t1.elapsed().as_secs_f64(),
@@ -130,7 +130,7 @@ fn main() -> Result<()> {
             println!("=== [conv-twin of searched hybrid] train from scratch ===");
             let mut tw_cfg = TrainConfig::for_space(space, train_epochs);
             tw_cfg.steps_per_epoch = steps;
-            let tw = train_child(&mut engine, &manifest, &dataset, &twin, &tw_cfg)?;
+            let tw = train_child(&engine, &manifest, &dataset, &twin, &tw_cfg)?;
             println!(
                 "conv-twin test acc: FP32={:.4} FXP8/6={:.4}",
                 tw.test_acc_fp32, tw.test_acc_quant

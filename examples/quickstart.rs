@@ -32,7 +32,7 @@ fn main() -> Result<()> {
     );
 
     // --- L1/L2 on the rust request path ---
-    let mut engine = Engine::cpu()?;
+    let engine = Engine::cpu()?;
     let pallas = engine.load(&manifest.dir, &fc.pallas)?;
     let jnp = engine.load(&manifest.dir, &fc.jnp)?;
     let mut rng = Rng::new(0);

@@ -1,0 +1,398 @@
+//! Search-loop checkpointing: the full mid-run state of `run_search`,
+//! serialized to `runs/<name>/checkpoint.json` at PGP stage boundaries so
+//! an interrupted (preempted, crashed, budget-killed) search resumes as a
+//! **bit-identical continuation** of the uninterrupted run.
+//!
+//! Bit-exactness is the contract, so floating-point state is stored as
+//! raw bit patterns, not decimal strings: every `f32` as its `u32` bits
+//! (exact in a JSON number — u32 < 2^53) and every RNG `u64` word as a
+//! hex string (u64 does NOT fit an f64 mantissa). This also preserves
+//! NaN/±inf state from diverged runs, which decimal JSON cannot carry.
+//! The embedded `RunLog` is stored the same lossless way (f64 bits as
+//! hex words), NOT in its ordinary runs/<name>.json form — that form
+//! maps ±inf to JSON null, which would resume a diverged run's log as
+//! NaN and break the bit-identity contract precisely where it matters.
+//!
+//! What is captured: `(params, alpha, opt_w, opt_a, rng, batchers,
+//! global_step, RunLog)` — everything `run_search` mutates. Everything
+//! else (schedules, cost table, gates) is a pure function of the
+//! `SearchConfig` + manifest and is rebuilt on resume; a fingerprint of
+//! the config guards against resuming somebody else's checkpoint.
+
+use crate::coordinator::data::BatcherState;
+use crate::coordinator::metrics::RunLog;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Serialized mid-run state of one search (see module docs).
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Guard fields: a resume with a different space/seed/schedule shape
+    /// or different trajectory-shaping hyperparameters is a bug, not a
+    /// continuation — `run_search_resumable` refuses such a checkpoint
+    /// instead of silently producing a hybrid trajectory.
+    pub space_key: String,
+    pub seed: u64,
+    pub total_epochs: usize,
+    /// Stage plan as (stage code, epochs) pairs — codes as in the RunLog
+    /// "stage" curve (1=conv, 2=adder, 3=mixture, 4=search). Two
+    /// schedules can have equal `total_epochs` but different stage
+    /// layouts (pgp vs vanilla), so the plan itself is guarded.
+    pub stages: Vec<(u8, usize)>,
+    pub steps_per_epoch: usize,
+    pub top_k: usize,
+    pub eval_every: usize,
+    pub gamma_zero_recipe: bool,
+    /// Float hyperparameters, bit-exact: `[lr_w, lr_alpha, momentum,
+    /// weight_decay_w, weight_decay_alpha, lambda_hw, tau0, tau_decay,
+    /// tau_min]` (see `search_loop::hyper_fingerprint`).
+    pub hyper: Vec<f32>,
+    /// First epoch the resumed run should execute.
+    pub next_epoch: usize,
+    pub global_step: usize,
+    pub params: Vec<f32>,
+    pub alpha: Vec<f32>,
+    /// SGDM momentum buffer (weights optimizer).
+    pub opt_w_v: Vec<f32>,
+    /// Adam first/second moments + step count (alpha optimizer).
+    pub opt_a_m: Vec<f32>,
+    pub opt_a_v: Vec<f32>,
+    pub opt_a_t: i32,
+    /// Gumbel/shuffle RNG, mid-stream.
+    pub rng: [u64; 4],
+    pub w_batcher: BatcherState,
+    pub a_batcher: BatcherState,
+    pub log: RunLog,
+}
+
+fn f32_bits(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|x| Json::Num(x.to_bits() as f64)).collect())
+}
+
+fn f32_from_bits(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()?
+        .iter()
+        .map(|b| {
+            let n = b.as_f64()?;
+            if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+                bail!("not a u32 bit pattern: {n}");
+            }
+            Ok(f32::from_bits(n as u32))
+        })
+        .collect()
+}
+
+fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn u64_from_hex(j: &Json) -> Result<u64> {
+    u64::from_str_radix(j.as_str()?, 16).context("bad u64 hex word")
+}
+
+fn rng_json(s: &[u64; 4]) -> Json {
+    Json::Arr(s.iter().map(|&w| u64_hex(w)).collect())
+}
+
+fn rng_from_json(j: &Json) -> Result<[u64; 4]> {
+    let a = j.as_arr()?;
+    if a.len() != 4 {
+        bail!("rng state wants 4 words, got {}", a.len());
+    }
+    Ok([
+        u64_from_hex(&a[0])?,
+        u64_from_hex(&a[1])?,
+        u64_from_hex(&a[2])?,
+        u64_from_hex(&a[3])?,
+    ])
+}
+
+fn batcher_json(b: &BatcherState) -> Json {
+    Json::obj(vec![
+        (
+            "indices",
+            Json::Arr(b.indices.iter().map(|&i| Json::Num(i as f64)).collect()),
+        ),
+        ("pos", Json::Num(b.pos as f64)),
+        ("batch", Json::Num(b.batch as f64)),
+        ("rng", rng_json(&b.rng)),
+    ])
+}
+
+/// f64 series as u64 bit-pattern hex words — the RunLog's ordinary JSON
+/// form maps ±inf to null (no Inf in JSON), which would deserialize as
+/// NaN and break bit-identical resume exactly for diverged runs, so the
+/// embedded log stores every float losslessly instead.
+fn f64_bits(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| u64_hex(x.to_bits())).collect())
+}
+
+fn f64_from_bits(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()?.iter().map(|w| Ok(f64::from_bits(u64_from_hex(w)?))).collect()
+}
+
+fn runlog_json(log: &RunLog) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(log.name.clone())),
+        (
+            "curves",
+            Json::Arr(
+                log.curves
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("name", Json::Str(c.name.clone())),
+                            ("x", f64_bits(&c.xs)),
+                            ("y", f64_bits(&c.ys)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "scalars",
+            Json::Obj(
+                log.scalars
+                    .iter()
+                    .map(|(k, v)| (k.clone(), u64_hex(v.to_bits())))
+                    .collect(),
+            ),
+        ),
+        (
+            "notes",
+            Json::Obj(
+                log.notes.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+            ),
+        ),
+    ])
+}
+
+fn runlog_from_json(j: &Json) -> Result<RunLog> {
+    let mut log = RunLog::new(j.req("name")?.as_str()?);
+    for cj in j.req("curves")?.as_arr()? {
+        let mut c = crate::coordinator::metrics::Curve::new(cj.req("name")?.as_str()?);
+        c.xs = f64_from_bits(cj.req("x")?)?;
+        c.ys = f64_from_bits(cj.req("y")?)?;
+        log.curves.push(c);
+    }
+    for (k, v) in j.req("scalars")?.as_obj()? {
+        log.scalars.push((k.clone(), f64::from_bits(u64_from_hex(v)?)));
+    }
+    for (k, v) in j.req("notes")?.as_obj()? {
+        log.notes.push((k.clone(), v.as_str()?.to_string()));
+    }
+    Ok(log)
+}
+
+fn batcher_from_json(j: &Json) -> Result<BatcherState> {
+    Ok(BatcherState {
+        indices: j
+            .req("indices")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?,
+        pos: j.req("pos")?.as_usize()?,
+        batch: j.req("batch")?.as_usize()?,
+        rng: rng_from_json(j.req("rng")?)?,
+    })
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("space_key", Json::Str(self.space_key.clone())),
+            ("seed", u64_hex(self.seed)),
+            ("total_epochs", Json::Num(self.total_epochs as f64)),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|&(code, n)| {
+                            Json::Arr(vec![Json::Num(code as f64), Json::Num(n as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("steps_per_epoch", Json::Num(self.steps_per_epoch as f64)),
+            ("top_k", Json::Num(self.top_k as f64)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("gamma_zero_recipe", Json::Bool(self.gamma_zero_recipe)),
+            ("hyper", f32_bits(&self.hyper)),
+            ("next_epoch", Json::Num(self.next_epoch as f64)),
+            ("global_step", Json::Num(self.global_step as f64)),
+            ("params", f32_bits(&self.params)),
+            ("alpha", f32_bits(&self.alpha)),
+            ("opt_w_v", f32_bits(&self.opt_w_v)),
+            ("opt_a_m", f32_bits(&self.opt_a_m)),
+            ("opt_a_v", f32_bits(&self.opt_a_v)),
+            ("opt_a_t", Json::Num(self.opt_a_t as f64)),
+            ("rng", rng_json(&self.rng)),
+            ("w_batcher", batcher_json(&self.w_batcher)),
+            ("a_batcher", batcher_json(&self.a_batcher)),
+            ("log", runlog_json(&self.log)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Checkpoint> {
+        let version = j.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported checkpoint version {version}");
+        }
+        Ok(Checkpoint {
+            space_key: j.req("space_key")?.as_str()?.to_string(),
+            seed: u64_from_hex(j.req("seed")?)?,
+            total_epochs: j.req("total_epochs")?.as_usize()?,
+            stages: j
+                .req("stages")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    let pair = p.as_arr()?;
+                    if pair.len() != 2 {
+                        bail!("stage plan entry wants [code, epochs], got {pair:?}");
+                    }
+                    Ok((pair[0].as_usize()? as u8, pair[1].as_usize()?))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            steps_per_epoch: j.req("steps_per_epoch")?.as_usize()?,
+            top_k: j.req("top_k")?.as_usize()?,
+            eval_every: j.req("eval_every")?.as_usize()?,
+            gamma_zero_recipe: match j.req("gamma_zero_recipe")? {
+                Json::Bool(b) => *b,
+                other => bail!("gamma_zero_recipe: not a bool: {other:?}"),
+            },
+            hyper: f32_from_bits(j.req("hyper")?)?,
+            next_epoch: j.req("next_epoch")?.as_usize()?,
+            global_step: j.req("global_step")?.as_usize()?,
+            params: f32_from_bits(j.req("params")?)?,
+            alpha: f32_from_bits(j.req("alpha")?)?,
+            opt_w_v: f32_from_bits(j.req("opt_w_v")?)?,
+            opt_a_m: f32_from_bits(j.req("opt_a_m")?)?,
+            opt_a_v: f32_from_bits(j.req("opt_a_v")?)?,
+            opt_a_t: j.req("opt_a_t")?.as_i64()? as i32,
+            rng: rng_from_json(j.req("rng")?)?,
+            w_batcher: batcher_from_json(j.req("w_batcher")?)?,
+            a_batcher: batcher_from_json(j.req("a_batcher")?)?,
+            log: runlog_from_json(j.req("log")?)?,
+        })
+    }
+
+    /// Write atomically (tmp file + rename): an interruption mid-write
+    /// leaves the previous checkpoint intact, never a truncated one.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("committing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        Checkpoint::from_json(&Json::parse_file(path)?)
+            .with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut log = RunLog::new("search_x");
+        log.curve_mut("train_loss").push(0.0, 2.25);
+        // A diverged trajectory: ±inf/NaN points must survive the
+        // checkpoint exactly (the ordinary RunLog JSON cannot carry them).
+        log.curve_mut("train_loss").push(1.0, f64::INFINITY);
+        log.curve_mut("train_loss").push(2.0, f64::NEG_INFINITY);
+        log.curve_mut("train_loss").push(3.0, f64::NAN);
+        log.set_scalar("diverged_at", f64::INFINITY);
+        log.note("space", "hybrid_all");
+        Checkpoint {
+            space_key: "hybrid_all_c10".into(),
+            seed: u64::MAX - 7, // exercises the >2^53 range JSON can't hold
+            total_epochs: 15,
+            stages: vec![(1, 3), (2, 3), (3, 3), (4, 6)],
+            steps_per_epoch: 16,
+            top_k: 4,
+            eval_every: 0,
+            gamma_zero_recipe: true,
+            hyper: vec![0.1, 3e-4, 0.9, 1e-4, 5e-4, 0.05, 5.0, 0.956, 1e-2],
+            next_epoch: 9,
+            global_step: 144,
+            params: vec![0.1, -0.0, f32::NAN, f32::INFINITY, 1.5e-42], // subnormal too
+            alpha: vec![0.5; 6],
+            opt_w_v: vec![-3.25e-7; 5],
+            opt_a_m: vec![1.0; 6],
+            opt_a_v: vec![2.0; 6],
+            opt_a_t: 96,
+            rng: [u64::MAX, 1, 0x9E3779B97F4A7C15, 42],
+            w_batcher: BatcherState { indices: vec![3, 1, 2], pos: 1, batch: 2, rng: [5, 6, 7, 8] },
+            a_batcher: BatcherState { indices: vec![9, 8], pos: 0, batch: 2, rng: [1, 2, 3, 4] },
+            log,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_including_nonfinite() {
+        let c = sample();
+        let back = Checkpoint::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.params), bits(&c.params), "NaN/inf/-0/subnormal must survive");
+        assert_eq!(bits(&back.opt_w_v), bits(&c.opt_w_v));
+        assert_eq!(back.seed, c.seed);
+        assert_eq!(back.rng, c.rng);
+        assert_eq!(back.w_batcher, c.w_batcher);
+        assert_eq!(back.a_batcher, c.a_batcher);
+        assert_eq!(back.next_epoch, 9);
+        assert_eq!(back.global_step, 144);
+        assert_eq!(back.opt_a_t, 96);
+        assert_eq!(back.stages, vec![(1, 3), (2, 3), (3, 3), (4, 6)]);
+        assert_eq!(back.steps_per_epoch, 16);
+        assert_eq!(back.top_k, 4);
+        assert_eq!(back.eval_every, 0);
+        assert!(back.gamma_zero_recipe);
+        assert_eq!(bits(&back.hyper), bits(&c.hyper));
+        assert_eq!(back.log.to_json().to_string(), c.log.to_json().to_string());
+        // The diverged curve round-trips bit-for-bit: +inf stays +inf
+        // (distinct from -inf and NaN), unlike the runs/*.json form.
+        let ys = |l: &RunLog| {
+            l.curve("train_loss").unwrap().ys.iter().map(|y| y.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(ys(&back.log), ys(&c.log));
+        assert_eq!(back.log.scalar("diverged_at"), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn save_load_roundtrip_creates_parent_dirs() {
+        let dir = std::env::temp_dir()
+            .join(format!("nasa_ckpt_{}", std::process::id()))
+            .join("runs")
+            .join("deep");
+        let path = dir.join("checkpoint.json");
+        let c = sample();
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.space_key, c.space_key);
+        assert!(!path.with_extension("json.tmp").exists(), "tmp must be renamed away");
+        std::fs::remove_dir_all(dir.parent().unwrap().parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn version_and_garbage_rejected() {
+        let mut j = sample().to_json();
+        if let Json::Obj(ref mut m) = j {
+            m[0].1 = Json::Num(99.0);
+        }
+        assert!(Checkpoint::from_json(&j).is_err());
+        assert!(Checkpoint::load(Path::new("/nonexistent/checkpoint.json")).is_err());
+    }
+}

@@ -150,6 +150,15 @@ impl Dataset {
     }
 }
 
+/// Serializable snapshot of a [`Batcher`] (checkpoint/resume substrate).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatcherState {
+    pub indices: Vec<usize>,
+    pub pos: usize,
+    pub batch: usize,
+    pub rng: [u64; 4],
+}
+
 /// Batch iterator over a split: epoch-shuffled, deterministic, wraps the
 /// 50/50 w-vs-alpha split of the search recipe via disjoint index ranges.
 pub struct Batcher {
@@ -181,6 +190,28 @@ impl Batcher {
         let out = self.indices[self.pos..self.pos + self.batch].to_vec();
         self.pos += self.batch;
         out
+    }
+
+    /// Snapshot the full iteration state (shuffled order, cursor, RNG) for
+    /// checkpointing; [`Batcher::from_state`] continues the exact same
+    /// batch stream.
+    pub fn state(&self) -> BatcherState {
+        BatcherState {
+            indices: self.indices.clone(),
+            pos: self.pos,
+            batch: self.batch,
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Rebuild a batcher from a [`Batcher::state`] snapshot.
+    pub fn from_state(s: BatcherState) -> Batcher {
+        Batcher {
+            indices: s.indices,
+            pos: s.pos,
+            batch: s.batch,
+            rng: Rng::from_state(s.rng),
+        }
     }
 
     /// Materialize a batch (images, labels) from a split.
@@ -282,6 +313,18 @@ mod tests {
         let b = Batcher::half(100, 10, 1, true);
         assert!(a.indices.iter().all(|i| *i < 50));
         assert!(b.indices.iter().all(|i| *i >= 50));
+    }
+
+    #[test]
+    fn batcher_state_roundtrip_continues_stream() {
+        let mut a = Batcher::half(60, 4, 11, true);
+        for _ in 0..9 {
+            a.next_indices(); // cross a reshuffle boundary
+        }
+        let mut b = Batcher::from_state(a.state());
+        for _ in 0..20 {
+            assert_eq!(a.next_indices(), b.next_indices());
+        }
     }
 
     #[test]

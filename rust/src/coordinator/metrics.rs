@@ -130,8 +130,12 @@ impl RunLog {
         Ok(path)
     }
 
-    pub fn load(path: &Path) -> Result<RunLog> {
-        let j = Json::parse_file(path)?;
+    /// Rebuild a log from its [`RunLog::to_json`] value. Curve/scalar/note
+    /// order is preserved, so `to_json` of the result is byte-identical to
+    /// the input for finite data. (Search checkpoints do NOT use this
+    /// form — they embed logs with f64 bit patterns so ±inf survives; see
+    /// `coordinator::checkpoint`.)
+    pub fn from_json(j: &Json) -> Result<RunLog> {
         let mut log = RunLog::new(j.req("name")?.as_str()?);
         // Non-finite values are serialized as JSON null (no NaN in JSON);
         // map them back to NaN on load.
@@ -143,12 +147,23 @@ impl RunLog {
             log.curves.push(c);
         }
         for (k, v) in j.req("scalars")?.as_obj()? {
-            log.scalars.push((k.clone(), v.as_f64()?));
+            // Only null (a serialized NaN, e.g. the empty-schedule run's
+            // final acc) is coerced; any other non-number is corruption
+            // and must keep failing loudly.
+            let val = match v {
+                Json::Null => f64::NAN,
+                other => other.as_f64()?,
+            };
+            log.scalars.push((k.clone(), val));
         }
         for (k, v) in j.req("notes")?.as_obj()? {
             log.notes.push((k.clone(), v.as_str()?.to_string()));
         }
         Ok(log)
+    }
+
+    pub fn load(path: &Path) -> Result<RunLog> {
+        RunLog::from_json(&Json::parse_file(path)?)
     }
 }
 
@@ -211,6 +226,20 @@ mod tests {
         assert_eq!(loaded.curve("loss").unwrap().ys, vec![2.5, 1.5]);
         assert_eq!(loaded.scalar("acc"), Some(0.93));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn from_json_roundtrip_is_byte_stable_and_nan_scalar_tolerant() {
+        let mut log = RunLog::new("rt");
+        log.curve_mut("loss").push(0.0, 0.125);
+        log.curve_mut("acc").push(0.0, 0.5);
+        log.set_scalar("final", f64::NAN); // e.g. empty-schedule run
+        log.note("k", "v");
+        let s1 = log.to_json().to_string();
+        let back = RunLog::from_json(&Json::parse(&s1).unwrap()).unwrap();
+        assert!(back.scalar("final").unwrap().is_nan());
+        // Byte-stable re-serialization (the resume bit-identity substrate).
+        assert_eq!(back.to_json().to_string(), s1);
     }
 
     #[test]

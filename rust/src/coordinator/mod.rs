@@ -1,13 +1,23 @@
-//! L3 coordinator: data pipeline, NAS search loop (PGP + DNAS), child
+//! L3 coordinator: data pipeline, NAS search loop (PGP + DNAS) with
+//! checkpoint/resume, the parallel multi-search sweep orchestrator, child
 //! train-from-scratch loop, and run metrics. Everything here drives the
 //! AOT HLO artifacts through runtime::Engine — python is never invoked.
 
+pub mod checkpoint;
 pub mod data;
 pub mod metrics;
 pub mod search_loop;
+pub mod sweep;
 pub mod train_loop;
 
-pub use data::{Batcher, Dataset, DatasetConfig, Split};
+pub use checkpoint::Checkpoint;
+pub use data::{Batcher, BatcherState, Dataset, DatasetConfig, Split};
 pub use metrics::{sparkline, Curve, RunLog};
-pub use search_loop::{run_search, SearchConfig, SearchOutcome};
+pub use search_loop::{
+    run_search, run_search_resumable, CheckpointSpec, SearchConfig, SearchOutcome, SearchStatus,
+};
+pub use sweep::{
+    dataset_for_supernet, print_summary, run_sweep, save_outcomes, GridSpec, SweepOptions,
+    SweepRun, SweepRunResult,
+};
 pub use train_loop::{eval_choices, train_child, TrainConfig, TrainOutcome};

@@ -2,7 +2,17 @@
 //! rust: PGP stage machine -> alternating weight/alpha optimization with
 //! Gumbel-Softmax sampling and top-k masking, all through the single AOT
 //! `supernet_step` artifact. Python never runs here.
+//!
+//! Two entry points: [`run_search`] (fire-and-forget, the CLI `search`
+//! path) and [`run_search_resumable`], which adds per-run
+//! checkpoint/resume — state is snapshotted to `checkpoint.json` at every
+//! PGP stage boundary (and once more at completion), and a resumed run is
+//! a bit-identical continuation of the uninterrupted one (see
+//! `coordinator::checkpoint`). The sweep orchestrator
+//! (`coordinator::sweep`) drives many of these concurrently over one
+//! shared `Engine`.
 
+use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::data::{Batcher, Dataset};
 use crate::coordinator::metrics::RunLog;
 use crate::nas::{
@@ -10,9 +20,10 @@ use crate::nas::{
 };
 use crate::nas::optimizer::{Adam, CosineLr, LrSchedule, Sgdm};
 use crate::nas::pgp::stage_grad_gate;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, Engine, Manifest, SupernetManifest};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, Engine, Literal, Manifest, SupernetManifest};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::path::PathBuf;
 
 #[derive(Clone, Debug)]
 pub struct SearchConfig {
@@ -40,11 +51,27 @@ pub struct SearchConfig {
 }
 
 impl SearchConfig {
+    /// Whether a space defaults to the PGP schedule + bigger-lr recipe:
+    /// adder-bearing spaces need PGP (Sec. 5.1). The single source of the
+    /// classification rule — `GridSpec::expand`'s `--ablate-pgp` axis
+    /// flips relative to this.
+    pub fn default_is_pgp(space_key: &str) -> bool {
+        space_key.contains("adder") || space_key.contains("all")
+    }
+
+    /// The weight-lr half of the recipe pairing (Sec. 5.1): the bigger lr
+    /// travels with the PGP schedule, the vanilla/FBNet baseline uses the
+    /// small one. Single source for `for_space`, `GridSpec::expand`, and
+    /// the Fig. 7 bench.
+    pub fn lr_for(pgp: bool) -> f32 {
+        if pgp { 0.1 } else { 0.05 }
+    }
+
     /// Paper-mapped defaults for a space (Sec. 5.1): hybrid-shift uses the
     /// vanilla pretrain and lr 0.05; hybrid-adder/all use PGP and the
     /// bigger lr 0.1.
     pub fn for_space(space_key: &str, pretrain_epochs: usize, search_epochs: usize) -> Self {
-        let has_adder = space_key.contains("adder") || space_key.contains("all");
+        let has_adder = Self::default_is_pgp(space_key);
         SearchConfig {
             space_key: space_key.to_string(),
             seed: 42,
@@ -55,7 +82,7 @@ impl SearchConfig {
             },
             steps_per_epoch: 16,
             top_k: 4,
-            lr_w: if has_adder { 0.1 } else { 0.05 },
+            lr_w: Self::lr_for(has_adder),
             lr_alpha: 3e-4,
             momentum: 0.9,
             weight_decay_w: 1e-4,
@@ -68,6 +95,30 @@ impl SearchConfig {
     }
 }
 
+/// Checkpoint/resume policy for one search run.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    /// Where the checkpoint lives (conventionally
+    /// `runs/<name>/checkpoint.json`). Written atomically at every PGP
+    /// stage boundary and after the final epoch.
+    pub path: PathBuf,
+    /// Load `path` (if present) and continue from it instead of starting
+    /// fresh. A mismatched checkpoint (different space/seed/schedule
+    /// length) is an error, not a silent restart.
+    pub resume: bool,
+    /// Preemption hook (tests + ops drills): stop cleanly *before*
+    /// executing this epoch and return [`SearchStatus::Halted`]. The
+    /// checkpoint on disk is the last stage-boundary snapshot; resuming
+    /// replays deterministically from there.
+    pub halt_at_epoch: Option<usize>,
+}
+
+impl CheckpointSpec {
+    pub fn at(path: PathBuf, resume: bool) -> CheckpointSpec {
+        CheckpointSpec { path, resume, halt_at_epoch: None }
+    }
+}
+
 /// Everything a finished search produces.
 pub struct SearchOutcome {
     pub arch: crate::model::Arch,
@@ -77,37 +128,267 @@ pub struct SearchOutcome {
     pub log: RunLog,
 }
 
-/// Run one DNAS search. `engine` caches the compiled artifact across
-/// calls, so ablation sweeps in one process compile once.
+/// Result of a resumable search: finished, or halted at a preemption
+/// point with the checkpoint on disk.
+pub enum SearchStatus {
+    Done(Box<SearchOutcome>),
+    Halted { next_epoch: usize },
+}
+
+/// Run one DNAS search to completion. The engine caches each compiled
+/// artifact across calls AND across threads (`Engine::load` is `&self`),
+/// so ablation sweeps in one process compile once.
 pub fn run_search(
-    engine: &mut Engine,
+    engine: &Engine,
     manifest: &Manifest,
     dataset: &Dataset,
     cfg: &SearchConfig,
 ) -> Result<SearchOutcome> {
+    match run_search_resumable(engine, manifest, dataset, cfg, None)? {
+        SearchStatus::Done(o) => Ok(*o),
+        // No CheckpointSpec -> no halt hook -> Halted is unreachable; keep
+        // the arm honest anyway.
+        SearchStatus::Halted { .. } => bail!("run_search halted without a checkpoint spec"),
+    }
+}
+
+/// Live (mutable) state of one search — everything a checkpoint captures.
+struct LoopState {
+    params: Vec<f32>,
+    alpha: ArchParams,
+    opt_w: Sgdm,
+    opt_a: Adam,
+    rng: Rng,
+    w_batches: Batcher,
+    a_batches: Batcher,
+    log: RunLog,
+    global_step: usize,
+    next_epoch: usize,
+}
+
+impl LoopState {
+    fn fresh(sn: &SupernetManifest, dataset: &Dataset, cfg: &SearchConfig) -> Result<LoopState> {
+        let mut rng = Rng::new(cfg.seed);
+        let params = init_params(sn, &mut rng, cfg.gamma_zero_recipe)?;
+        let mut log = RunLog::new(&format!("search_{}", cfg.space_key));
+        log.note("space", &sn.space);
+        log.note("schedule", &format!("{:?}", cfg.schedule.stages));
+        Ok(LoopState {
+            params,
+            alpha: ArchParams::zeros(sn.n_layers, sn.n_cand),
+            opt_w: Sgdm::new(sn.n_params, cfg.momentum, cfg.weight_decay_w),
+            opt_a: Adam::new(sn.n_layers * sn.n_cand, cfg.weight_decay_alpha),
+            rng,
+            // 50/50 train split: weights on the first half, alphas on the
+            // second.
+            w_batches: Batcher::half(dataset.train.n, sn.batch, cfg.seed ^ 0xA5, false),
+            a_batches: Batcher::half(dataset.train.n, sn.batch, cfg.seed ^ 0x5A, true),
+            log,
+            global_step: 0,
+            next_epoch: 0,
+        })
+    }
+
+    fn restore(
+        c: Checkpoint,
+        sn: &SupernetManifest,
+        dataset: &Dataset,
+        cfg: &SearchConfig,
+    ) -> Result<LoopState> {
+        if c.space_key != cfg.space_key || c.seed != cfg.seed {
+            bail!(
+                "checkpoint is for space '{}' seed {}, config wants '{}' seed {}",
+                c.space_key,
+                c.seed,
+                cfg.space_key,
+                cfg.seed
+            );
+        }
+        if c.total_epochs != cfg.schedule.total_epochs() {
+            bail!(
+                "checkpoint schedule length {} != config {}",
+                c.total_epochs,
+                cfg.schedule.total_epochs()
+            );
+        }
+        // Equal length does not mean equal layout (pgp vs vanilla at the
+        // same epoch count): the stage plan itself must match, or the
+        // resumed epochs would run under different gates/enabled sets.
+        if c.stages != stage_plan(&cfg.schedule) {
+            bail!(
+                "checkpoint stage schedule {:?} != config {:?}",
+                c.stages,
+                stage_plan(&cfg.schedule)
+            );
+        }
+        // Trajectory-shaping hyperparameters must match bit-for-bit:
+        // continuing a 2-steps/epoch run at 8 steps/epoch (or a different
+        // lr/lambda/tau/recipe) would be a silent hybrid trajectory, not
+        // a continuation.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        if c.steps_per_epoch != cfg.steps_per_epoch
+            || c.top_k != cfg.top_k
+            || c.eval_every != cfg.eval_every
+            || c.gamma_zero_recipe != cfg.gamma_zero_recipe
+            || bits(&c.hyper) != bits(&hyper_fingerprint(cfg))
+        {
+            bail!(
+                "checkpoint hyperparameters do not match the config \
+                 (steps_per_epoch/top_k/eval_every/recipe/lr/wd/lambda/tau \
+                 must be identical to resume)"
+            );
+        }
+        if c.params.len() != sn.n_params || c.alpha.len() != sn.n_layers * sn.n_cand {
+            bail!("checkpoint tensor sizes do not match supernet '{}'", sn.key);
+        }
+        check_batcher(&c.w_batcher, dataset.train.n, sn.batch, "w")?;
+        check_batcher(&c.a_batcher, dataset.train.n, sn.batch, "a")?;
+        // Checkpoints are only ever written at epoch boundaries, where the
+        // loop maintains global_step == epoch * steps_per_epoch; anything
+        // else is corruption and would silently shift the cosine lr (or,
+        // for next_epoch past the end, fabricate a "completed" run).
+        if c.next_epoch > c.total_epochs || c.global_step != c.next_epoch * cfg.steps_per_epoch {
+            bail!(
+                "checkpoint cursor is inconsistent (next_epoch {} of {}, global_step {} != {})",
+                c.next_epoch,
+                c.total_epochs,
+                c.global_step,
+                c.next_epoch * cfg.steps_per_epoch
+            );
+        }
+        let mut opt_w = Sgdm::new(sn.n_params, cfg.momentum, cfg.weight_decay_w);
+        opt_w.restore(c.opt_w_v)?;
+        let mut opt_a = Adam::new(sn.n_layers * sn.n_cand, cfg.weight_decay_alpha);
+        opt_a.restore(c.opt_a_m, c.opt_a_v, c.opt_a_t)?;
+        let mut alpha = ArchParams::zeros(sn.n_layers, sn.n_cand);
+        alpha.alpha = c.alpha;
+        Ok(LoopState {
+            params: c.params,
+            alpha,
+            opt_w,
+            opt_a,
+            rng: Rng::from_state(c.rng),
+            w_batches: Batcher::from_state(c.w_batcher),
+            a_batches: Batcher::from_state(c.a_batcher),
+            log: c.log,
+            global_step: c.global_step,
+            next_epoch: c.next_epoch,
+        })
+    }
+
+    fn snapshot(&self, cfg: &SearchConfig, next_epoch: usize) -> Checkpoint {
+        let (m, v, t) = self.opt_a.state();
+        Checkpoint {
+            space_key: cfg.space_key.clone(),
+            seed: cfg.seed,
+            total_epochs: cfg.schedule.total_epochs(),
+            stages: stage_plan(&cfg.schedule),
+            steps_per_epoch: cfg.steps_per_epoch,
+            top_k: cfg.top_k,
+            eval_every: cfg.eval_every,
+            gamma_zero_recipe: cfg.gamma_zero_recipe,
+            hyper: hyper_fingerprint(cfg),
+            next_epoch,
+            global_step: self.global_step,
+            params: self.params.clone(),
+            alpha: self.alpha.alpha.clone(),
+            opt_w_v: self.opt_w.state().to_vec(),
+            opt_a_m: m.to_vec(),
+            opt_a_v: v.to_vec(),
+            opt_a_t: t,
+            rng: self.rng.state(),
+            w_batcher: self.w_batches.state(),
+            a_batcher: self.a_batches.state(),
+            log: self.log.clone(),
+        }
+    }
+}
+
+/// Stage plan as (code, epochs) pairs — `stage_code` codes, the same ones
+/// the RunLog "stage" curve records. Guarded on resume.
+fn stage_plan(schedule: &PgpSchedule) -> Vec<(u8, usize)> {
+    schedule.stages.iter().map(|&(s, n)| (stage_code(s) as u8, n)).collect()
+}
+
+/// A [`crate::coordinator::data::BatcherState`] from a checkpoint is
+/// untrusted input: bounds it would violate at `next_batch` time (slice
+/// OOB, sample index past the split) must fail loudly at restore time.
+fn check_batcher(
+    b: &crate::coordinator::data::BatcherState,
+    n_train: usize,
+    batch: usize,
+    what: &str,
+) -> Result<()> {
+    if b.batch != batch
+        || b.batch == 0
+        || b.batch > b.indices.len()
+        || b.pos > b.indices.len()
+        || b.indices.iter().any(|&i| i >= n_train)
+    {
+        bail!(
+            "checkpoint {what}-batcher state is inconsistent with the supernet/dataset \
+             (batch {} vs {batch}, {} indices over a {n_train}-sample split)",
+            b.batch,
+            b.indices.len()
+        );
+    }
+    Ok(())
+}
+
+/// The float hyperparameters that shape a search trajectory, in a fixed
+/// order — stored bit-exactly in checkpoints and compared on resume.
+fn hyper_fingerprint(cfg: &SearchConfig) -> Vec<f32> {
+    vec![
+        cfg.lr_w,
+        cfg.lr_alpha,
+        cfg.momentum,
+        cfg.weight_decay_w,
+        cfg.weight_decay_alpha,
+        cfg.lambda_hw,
+        cfg.tau.tau0 as f32,
+        cfg.tau.decay_per_epoch as f32,
+        cfg.tau.tau_min as f32,
+    ]
+}
+
+/// [`run_search`] with checkpoint/resume (see [`CheckpointSpec`]).
+/// Passing `None` is exactly the legacy behavior.
+pub fn run_search_resumable(
+    engine: &Engine,
+    manifest: &Manifest,
+    dataset: &Dataset,
+    cfg: &SearchConfig,
+    ckpt: Option<&CheckpointSpec>,
+) -> Result<SearchStatus> {
     let sn = manifest.supernet(&cfg.space_key)?;
     validate(sn, dataset)?;
     let step_exe = engine.load(&manifest.dir, &sn.step)?;
 
-    let mut rng = Rng::new(cfg.seed);
-    let mut params = init_params(sn, &mut rng, cfg.gamma_zero_recipe)?;
-    let mut alpha = ArchParams::zeros(sn.n_layers, sn.n_cand);
-    let mut opt_w = Sgdm::new(sn.n_params, cfg.momentum, cfg.weight_decay_w);
-    let mut opt_a = Adam::new(alpha.alpha.len(), cfg.weight_decay_alpha);
+    let mut st = match ckpt {
+        Some(spec) if spec.resume && spec.path.exists() => {
+            let c = Checkpoint::load(&spec.path)?;
+            let st = LoopState::restore(c, sn, dataset, cfg)?;
+            eprintln!(
+                "[search {}] resumed from {} at epoch {}",
+                cfg.space_key,
+                spec.path.display(),
+                st.next_epoch
+            );
+            st
+        }
+        _ => LoopState::fresh(sn, dataset, cfg)?,
+    };
+
     let cost = cost_table(sn);
     let total_epochs = cfg.schedule.total_epochs();
     let lr_sched = CosineLr { lr0: cfg.lr_w, total: total_epochs * cfg.steps_per_epoch };
 
-    // 50/50 train split: weights on the first half, alphas on the second.
-    let mut w_batches = Batcher::half(dataset.train.n, sn.batch, cfg.seed ^ 0xA5, false);
-    let mut a_batches = Batcher::half(dataset.train.n, sn.batch, cfg.seed ^ 0x5A, true);
-
-    let mut log = RunLog::new(&format!("search_{}", cfg.space_key));
-    log.note("space", &sn.space);
-    log.note("schedule", &format!("{:?}", cfg.schedule.stages));
-
-    let mut global_step = 0usize;
-    for epoch in 0..total_epochs {
+    for epoch in st.next_epoch..total_epochs {
+        if let Some(spec) = ckpt {
+            if spec.halt_at_epoch == Some(epoch) {
+                return Ok(SearchStatus::Halted { next_epoch: epoch });
+            }
+        }
         let stage = cfg.schedule.stage_at(epoch);
         let enabled = stage.cand_enabled(&sn.cands);
         let gate = stage_grad_gate(sn, stage);
@@ -123,29 +404,30 @@ pub fn run_search(
         for _ in 0..cfg.steps_per_epoch {
             // ---- weight update ----
             let mask = if stage == PgpStage::Search {
-                alpha.topk_mask(cfg.top_k, &enabled)
+                st.alpha.topk_mask(cfg.top_k, &enabled)
             } else {
                 stage_mask(&enabled, sn.n_layers)
             };
-            let gumbel = alpha.sample_gumbel(&mut rng);
-            let (x, y) = w_batches.next_batch(&dataset.train);
+            let gumbel = st.alpha.sample_gumbel(&mut st.rng);
+            let (x, y) = st.w_batches.next_batch(&dataset.train);
             let out = run_step(
-                &step_exe, sn, &params, &alpha.alpha, &gumbel, &mask, tau, lambda, &cost, &x, &y,
+                &step_exe, sn, &st.params, &st.alpha.alpha, &gumbel, &mask, tau, lambda, &cost,
+                &x, &y,
             )?;
-            let lr = lr_sched.lr_at(global_step);
-            opt_w.step(&mut params, &out.dparams, lr, Some(&gate));
+            let lr = lr_sched.lr_at(st.global_step);
+            st.opt_w.step(&mut st.params, &out.dparams, lr, Some(&gate));
             epoch_loss += out.loss as f64;
             epoch_ce += out.ce as f64;
             epoch_correct += out.ncorrect as f64;
 
             // ---- alpha update (search stage only) ----
             if stage.updates_alpha() {
-                let mask = alpha.topk_mask(cfg.top_k, &enabled);
-                let gumbel = alpha.sample_gumbel(&mut rng);
-                let (x, y) = a_batches.next_batch(&dataset.train);
+                let mask = st.alpha.topk_mask(cfg.top_k, &enabled);
+                let gumbel = st.alpha.sample_gumbel(&mut st.rng);
+                let (x, y) = st.a_batches.next_batch(&dataset.train);
                 let out = run_step(
-                    &step_exe, sn, &params, &alpha.alpha, &gumbel, &mask, tau, lambda, &cost,
-                    &x, &y,
+                    &step_exe, sn, &st.params, &st.alpha.alpha, &gumbel, &mask, tau, lambda,
+                    &cost, &x, &y,
                 )?;
                 // Only masked-in entries receive gradient (others are 0 by
                 // construction in the graph, but keep alphas of disabled
@@ -156,25 +438,29 @@ pub fn run_search(
                         *g = 0.0;
                     }
                 }
-                opt_a.step(&mut alpha.alpha, &da, cfg.lr_alpha);
+                st.opt_a.step(&mut st.alpha.alpha, &da, cfg.lr_alpha);
             }
-            global_step += 1;
+            st.global_step += 1;
         }
 
         let n_seen = (cfg.steps_per_epoch * sn.batch) as f64;
-        log.curve_mut("train_loss")
+        st.log
+            .curve_mut("train_loss")
             .push(epoch as f64, epoch_loss / cfg.steps_per_epoch as f64);
-        log.curve_mut("train_ce")
+        st.log
+            .curve_mut("train_ce")
             .push(epoch as f64, epoch_ce / cfg.steps_per_epoch as f64);
-        log.curve_mut("train_acc").push(epoch as f64, epoch_correct / n_seen);
-        log.curve_mut("tau").push(epoch as f64, tau as f64);
-        log.curve_mut("alpha_entropy")
-            .push(epoch as f64, alpha.mean_entropy(&enabled));
-        log.curve_mut("stage").push(epoch as f64, stage_code(stage));
+        st.log.curve_mut("train_acc").push(epoch as f64, epoch_correct / n_seen);
+        st.log.curve_mut("tau").push(epoch as f64, tau as f64);
+        let entropy = st.alpha.mean_entropy(&enabled);
+        st.log.curve_mut("alpha_entropy").push(epoch as f64, entropy);
+        st.log.curve_mut("stage").push(epoch as f64, stage_code(stage));
 
         if cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0 {
-            let acc = eval_supernet(engine, manifest, sn, dataset, &params, &alpha, &enabled, tau)?;
-            log.curve_mut("val_acc").push(epoch as f64, acc);
+            let acc = eval_supernet(
+                engine, manifest, sn, dataset, &st.params, &st.alpha, &enabled, tau,
+            )?;
+            st.log.curve_mut("val_acc").push(epoch as f64, acc);
         }
         eprintln!(
             "[search {}] epoch {:>3}/{} stage={:?} loss={:.3} acc={:.3} tau={:.2}",
@@ -186,12 +472,32 @@ pub fn run_search(
             epoch_correct / n_seen,
             tau
         );
+
+        // Stage-boundary (and end-of-run) checkpoint: the next epoch is
+        // the first of a new stage, or the schedule just finished. An
+        // end-of-run snapshot makes `--resume` of a completed run an
+        // instant no-op replay of the derivation below.
+        if let Some(spec) = ckpt {
+            let next = epoch + 1;
+            if next >= total_epochs || cfg.schedule.stage_at(next) != stage {
+                st.snapshot(cfg, next).save(&spec.path)?;
+            }
+        }
     }
 
-    let choices = alpha.argmax(&vec![true; sn.n_cand]);
-    let arch = derive_arch(sn, &alpha, &format!("searched_{}", cfg.space_key))?;
-    log.set_scalar("final_train_acc", log.curve("train_acc").unwrap().tail_mean(3));
-    Ok(SearchOutcome { arch, choices, params, alpha, log })
+    let choices = st.alpha.argmax(&vec![true; sn.n_cand]);
+    let arch = derive_arch(sn, &st.alpha, &format!("searched_{}", cfg.space_key))?;
+    // A degenerate (zero-epoch) schedule leaves the log empty; record NaN
+    // rather than panicking on the missing curve.
+    let final_acc = st.log.curve("train_acc").map_or(f64::NAN, |c| c.tail_mean(3));
+    st.log.set_scalar("final_train_acc", final_acc);
+    Ok(SearchStatus::Done(Box::new(SearchOutcome {
+        arch,
+        choices,
+        params: st.params,
+        alpha: st.alpha,
+        log: st.log,
+    })))
 }
 
 fn stage_code(s: PgpStage) -> f64 {
@@ -281,11 +587,29 @@ pub fn run_step(
     })
 }
 
+/// Pull `ncorrect` (output 1) from an eval-artifact output tuple,
+/// `bail!`-ing on malformed arity instead of panicking on the index —
+/// the same guard `run_step` applies to the step artifact. Shared by
+/// `eval_supernet` and `train_loop::eval_choices`.
+pub fn eval_output_ncorrect(out: &[Literal], artifact: &str) -> Result<f32> {
+    if out.len() != 2 {
+        bail!(
+            "eval artifact '{artifact}' returned {} outputs, want 2 (loss, ncorrect)",
+            out.len()
+        );
+    }
+    let v = out[1].to_vec::<f32>()?;
+    if v.is_empty() {
+        bail!("eval artifact '{artifact}' ncorrect output is empty");
+    }
+    Ok(v[0])
+}
+
 /// Evaluate current (params, alpha) on the val split via the eval
 /// artifact (deterministic, no gumbel). Returns accuracy.
 #[allow(clippy::too_many_arguments)]
 pub fn eval_supernet(
-    engine: &mut Engine,
+    engine: &Engine,
     manifest: &Manifest,
     sn: &SupernetManifest,
     dataset: &Dataset,
@@ -310,7 +634,7 @@ pub fn eval_supernet(
             lit_i32(&[sn.batch], &y)?,
         ];
         let out = exe.run(&inputs)?;
-        correct += out[1].to_vec::<f32>()?[0] as f64;
+        correct += eval_output_ncorrect(&out, &sn.eval.path)? as f64;
     }
     Ok(correct / (n_batches * sn.batch) as f64)
 }

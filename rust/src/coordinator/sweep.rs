@@ -1,0 +1,335 @@
+//! `coordinator::sweep` — the batch search orchestrator: run many
+//! [`SearchConfig`]s (space × PGP-vs-vanilla × seed × recipe grid)
+//! **concurrently** over `util::par::par_map_jobs`, all through ONE
+//! shared [`Engine`] (its executable cache is interior-mutable, so every
+//! worker reuses the same compiled artifacts), with per-run
+//! checkpoint/resume via [`CheckpointSpec`].
+//!
+//! This is what the paper's own workflow looks like at scale: NASA's
+//! exhibits are sweeps (Fig. 7 is a 4-trajectory ablation, Fig. 6 joins
+//! multiple searched spaces), and the ROADMAP's serve-many-scenarios
+//! north star needs the algorithm side to match the mapper's parallelism.
+//! `benches/fig7_pgp_ablation.rs` and `benches/fig6_nasa_vs_sota.rs` are
+//! each one `run_sweep` call; the CLI surface is `nasa sweep`.
+//!
+//! Determinism contract (pinned by `rust/tests/sweep_determinism.rs`):
+//! each run's RNG/batcher streams are seeded from its own config only, so
+//! a sweep at any `--jobs` produces RunLogs **bit-identical** to running
+//! the same configs sequentially through `run_search`, and a
+//! checkpoint-interrupted run resumed mid-schedule matches the
+//! uninterrupted run exactly.
+
+use crate::coordinator::data::{Dataset, DatasetConfig};
+use crate::coordinator::search_loop::{
+    run_search_resumable, CheckpointSpec, SearchConfig, SearchOutcome, SearchStatus,
+};
+use crate::coordinator::metrics::sparkline;
+use crate::runtime::{Engine, Manifest, SupernetManifest};
+use crate::util::par::par_map_jobs;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// One named cell of a sweep grid.
+#[derive(Clone, Debug)]
+pub struct SweepRun {
+    /// Unique run name: log file stem and checkpoint directory name.
+    pub name: String,
+    pub cfg: SearchConfig,
+}
+
+/// How a sweep executes.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Concurrent workers (0 = one per core). Any value yields identical
+    /// results; `jobs = 1` is literally sequential.
+    pub jobs: usize,
+    /// Runs root: checkpoints live at `<out_dir>/<name>/checkpoint.json`.
+    pub out_dir: PathBuf,
+    /// Write stage-boundary checkpoints (off = legacy fire-and-forget).
+    pub checkpoint: bool,
+    /// Continue interrupted runs from their checkpoints; completed runs
+    /// replay instantly from their end-of-run snapshot.
+    pub resume: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            jobs: 0,
+            out_dir: PathBuf::from("runs"),
+            checkpoint: true,
+            resume: false,
+        }
+    }
+}
+
+/// Outcome of one grid cell (errors are per-run, never sweep-fatal).
+pub struct SweepRunResult {
+    pub name: String,
+    pub outcome: Result<SearchOutcome>,
+    pub secs: f64,
+}
+
+/// Declarative space × schedule × seed × recipe grid, expanded into
+/// [`SweepRun`]s. The base recipe per space comes from
+/// [`SearchConfig::for_space`]; the two `ablate_*` axes add the Fig. 7
+/// counterfactual twins.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub spaces: Vec<String>,
+    pub seeds: Vec<u64>,
+    /// Also run the opposite pretraining schedule (PGP spaces gain a
+    /// vanilla twin and vice versa) — the Fig. 7 ablation axis.
+    pub ablate_pgp: bool,
+    /// Also run with the gamma-zero/bigger-lr recipe disabled.
+    pub ablate_recipe: bool,
+    pub pretrain_epochs: usize,
+    pub search_epochs: usize,
+    pub steps_per_epoch: usize,
+    /// Override Eq. 5's lambda for every cell (None = per-space default).
+    pub lambda_hw: Option<f32>,
+    pub eval_every: usize,
+}
+
+impl GridSpec {
+    pub fn new(spaces: Vec<String>, seeds: Vec<u64>) -> GridSpec {
+        GridSpec {
+            spaces,
+            seeds,
+            ablate_pgp: false,
+            ablate_recipe: false,
+            pretrain_epochs: 9,
+            search_epochs: 12,
+            steps_per_epoch: 16,
+            lambda_hw: None,
+            eval_every: 0,
+        }
+    }
+
+    /// Expand to the full run list. Names are
+    /// `<space>_<pgp|vanilla>_<recipe|plain>_s<seed>` and unique by
+    /// construction.
+    pub fn expand(&self) -> Vec<SweepRun> {
+        use crate::nas::PgpSchedule;
+        let mut runs = Vec::new();
+        for space in &self.spaces {
+            let schedules: &[bool] = if self.ablate_pgp { &[false, true] } else { &[false] };
+            let recipes: &[bool] = if self.ablate_recipe { &[true, false] } else { &[true] };
+            for &flip_schedule in schedules {
+                for &recipe in recipes {
+                    for &seed in &self.seeds {
+                        let mut cfg = SearchConfig::for_space(
+                            space,
+                            self.pretrain_epochs,
+                            self.search_epochs,
+                        );
+                        let use_pgp = SearchConfig::default_is_pgp(space) ^ flip_schedule;
+                        cfg.schedule = if use_pgp {
+                            PgpSchedule::pgp(self.pretrain_epochs, self.search_epochs)
+                        } else {
+                            PgpSchedule::vanilla(self.pretrain_epochs, self.search_epochs)
+                        };
+                        // The bigger lr travels WITH the PGP schedule in
+                        // both directions (paper recipe pairing), so a
+                        // "pgp" cell means the same recipe on every space
+                        // and cells are comparable across spaces; vanilla
+                        // twins use the small lr (the Fig. 7 baseline).
+                        cfg.lr_w = SearchConfig::lr_for(use_pgp);
+                        cfg.gamma_zero_recipe = recipe;
+                        cfg.seed = seed;
+                        cfg.steps_per_epoch = self.steps_per_epoch;
+                        cfg.eval_every = self.eval_every;
+                        if let Some(l) = self.lambda_hw {
+                            cfg.lambda_hw = l;
+                        }
+                        runs.push(SweepRun {
+                            name: format!(
+                                "{space}_{}_{}_s{seed}",
+                                if use_pgp { "pgp" } else { "vanilla" },
+                                if recipe { "recipe" } else { "plain" },
+                            ),
+                            cfg,
+                        });
+                    }
+                }
+            }
+        }
+        runs
+    }
+}
+
+/// Synthetic dataset matched to a supernet's input geometry AND class
+/// count (the search loop validates both). Sweeps share one dataset per
+/// space key via this.
+pub fn dataset_for_supernet(sn: &SupernetManifest) -> Dataset {
+    let mut cfg = if sn.num_classes >= 100 {
+        DatasetConfig::cifar100_like(sn.input_hw)
+    } else {
+        DatasetConfig::cifar10_like(sn.input_hw)
+    };
+    cfg.num_classes = sn.num_classes;
+    Dataset::generate(cfg)
+}
+
+/// Run every grid cell concurrently through one shared engine. Fails fast
+/// on structural problems (duplicate names, unknown spaces); per-run
+/// search errors land in that run's [`SweepRunResult::outcome`] so one
+/// diverged/broken cell never takes down the sweep.
+pub fn run_sweep(
+    engine: &Engine,
+    manifest: &Manifest,
+    runs: &[SweepRun],
+    opts: &SweepOptions,
+) -> Result<Vec<SweepRunResult>> {
+    if opts.resume && !opts.checkpoint {
+        bail!("sweep resume requires checkpointing (drop --no-checkpoint): with checkpoints disabled every run would silently restart from scratch");
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for r in runs {
+        if !seen.insert(&r.name) {
+            bail!("duplicate sweep run name '{}'", r.name);
+        }
+    }
+    // One dataset per distinct space, generated once and shared by every
+    // worker that searches that space.
+    let mut datasets: BTreeMap<String, Dataset> = BTreeMap::new();
+    for r in runs {
+        if !datasets.contains_key(&r.cfg.space_key) {
+            let sn = manifest.supernet(&r.cfg.space_key)?;
+            datasets.insert(r.cfg.space_key.clone(), dataset_for_supernet(sn));
+        }
+    }
+
+    let results = par_map_jobs(runs, opts.jobs, |run| {
+        let t0 = std::time::Instant::now();
+        let dataset = &datasets[&run.cfg.space_key];
+        let spec = opts.checkpoint.then(|| {
+            CheckpointSpec::at(
+                opts.out_dir.join(&run.name).join("checkpoint.json"),
+                opts.resume,
+            )
+        });
+        let outcome = run_search_resumable(engine, manifest, dataset, &run.cfg, spec.as_ref())
+            .and_then(|status| match status {
+                SearchStatus::Done(mut o) => {
+                    // The run name, not the space key, identifies the log:
+                    // several cells share a space.
+                    o.log.name = run.name.clone();
+                    Ok(*o)
+                }
+                SearchStatus::Halted { .. } => {
+                    bail!("sweep run halted unexpectedly (no halt hook set)")
+                }
+            });
+        SweepRunResult { name: run.name.clone(), outcome, secs: t0.elapsed().as_secs_f64() }
+    });
+    Ok(results)
+}
+
+/// Save each successful run's RunLog (`<out>/<name>.json`) and derived
+/// arch (`<out>/arch_<name>.json`). Returns how many runs succeeded.
+pub fn save_outcomes(results: &[SweepRunResult], out_dir: &std::path::Path) -> Result<usize> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut ok = 0;
+    for r in results {
+        if let Ok(o) = &r.outcome {
+            o.log.save(out_dir)?;
+            o.arch.save(&out_dir.join(format!("arch_{}.json", r.name)))?;
+            ok += 1;
+        }
+    }
+    Ok(ok)
+}
+
+/// Compact terminal summary: one row per run, errors included.
+pub fn print_summary(results: &[SweepRunResult]) {
+    let name_w = results.iter().map(|r| r.name.len()).max().unwrap_or(4).max(4);
+    println!("\n== sweep summary ({} runs) ==", results.len());
+    println!("{:<name_w$}  {:>7}  {:>9}  {:>8}  loss curve", "run", "time", "final acc", "diverged");
+    for r in results {
+        match &r.outcome {
+            Ok(o) => {
+                let loss = o.log.curve("train_loss");
+                println!(
+                    "{:<name_w$}  {:>6.1}s  {:>9}  {:>8}  {}",
+                    r.name,
+                    r.secs,
+                    o.log
+                        .scalar("final_train_acc")
+                        .map(|a| format!("{a:.3}"))
+                        .unwrap_or_else(|| "-".into()),
+                    loss.map(|c| if c.diverged() { "YES" } else { "no" }).unwrap_or("-"),
+                    loss.map(|c| sparkline(&c.ys, 24)).unwrap_or_default(),
+                );
+            }
+            Err(e) => println!("{:<name_w$}  {:>6.1}s  ERROR: {e}", r.name, r.secs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_expands_axes_with_unique_names() {
+        let mut g = GridSpec::new(
+            vec!["hybrid_all_c10".into(), "hybrid_shift_c10".into()],
+            vec![1, 2, 3],
+        );
+        assert_eq!(g.expand().len(), 6);
+        g.ablate_pgp = true;
+        g.ablate_recipe = true;
+        let runs = g.expand();
+        assert_eq!(runs.len(), 24);
+        let names: std::collections::BTreeSet<_> = runs.iter().map(|r| r.name.clone()).collect();
+        assert_eq!(names.len(), runs.len(), "names must be unique");
+        // The adder-bearing space defaults to PGP; its ablation twin is
+        // vanilla with the small lr. The shift space is the mirror image.
+        let pgp_all = runs
+            .iter()
+            .find(|r| r.name == "hybrid_all_c10_pgp_recipe_s1")
+            .expect("default cell");
+        assert!(pgp_all.cfg.schedule.stages.len() > 2);
+        assert_eq!(pgp_all.cfg.lr_w, 0.1);
+        let van_all = runs
+            .iter()
+            .find(|r| r.name == "hybrid_all_c10_vanilla_recipe_s1")
+            .expect("ablation twin");
+        assert_eq!(van_all.cfg.schedule.stages.len(), 2);
+        assert_eq!(van_all.cfg.lr_w, 0.05);
+        let pgp_shift = runs
+            .iter()
+            .find(|r| r.name == "hybrid_shift_c10_pgp_recipe_s1")
+            .expect("shift twin");
+        assert!(pgp_shift.cfg.schedule.stages.len() > 2);
+        // The bigger lr travels with the PGP schedule on every space, so
+        // same-named cells are comparable across spaces.
+        assert_eq!(pgp_shift.cfg.lr_w, 0.1);
+        let van_shift = runs
+            .iter()
+            .find(|r| r.name == "hybrid_shift_c10_vanilla_recipe_s1")
+            .expect("shift default");
+        assert_eq!(van_shift.cfg.lr_w, 0.05);
+        assert!(runs.iter().any(|r| !r.cfg.gamma_zero_recipe));
+    }
+
+    #[test]
+    fn grid_respects_overrides() {
+        let mut g = GridSpec::new(vec!["hybrid_all_c10".into()], vec![7]);
+        g.pretrain_epochs = 3;
+        g.search_epochs = 2;
+        g.steps_per_epoch = 4;
+        g.lambda_hw = Some(0.5);
+        g.eval_every = 2;
+        let runs = g.expand();
+        assert_eq!(runs.len(), 1);
+        let cfg = &runs[0].cfg;
+        assert_eq!(cfg.schedule.total_epochs(), 5);
+        assert_eq!(cfg.steps_per_epoch, 4);
+        assert_eq!(cfg.lambda_hw, 0.5);
+        assert_eq!(cfg.eval_every, 2);
+        assert_eq!(cfg.seed, 7);
+    }
+}

@@ -58,7 +58,7 @@ pub struct TrainOutcome {
 
 /// Train `choices` from scratch and evaluate FP32 + FXP8/6 test accuracy.
 pub fn train_child(
-    engine: &mut Engine,
+    engine: &Engine,
     manifest: &Manifest,
     dataset: &Dataset,
     choices: &[usize],
@@ -119,7 +119,7 @@ pub fn train_child(
 
 /// Evaluate a trained choice vector on the test split (FP32 or FXP).
 pub fn eval_choices(
-    engine: &mut Engine,
+    engine: &Engine,
     manifest: &Manifest,
     sn: &SupernetManifest,
     dataset: &Dataset,
@@ -144,7 +144,7 @@ pub fn eval_choices(
             lit_i32(&[sn.batch], &y)?,
         ];
         let out = exe.run(&inputs)?;
-        correct += out[1].to_vec::<f32>()?[0] as f64;
+        correct += crate::coordinator::search_loop::eval_output_ncorrect(&out, &io.path)? as f64;
     }
     Ok(correct / (n_batches * sn.batch) as f64)
 }

@@ -2,6 +2,8 @@
 //!
 //! Subcommands (run `nasa help`):
 //!   search    run NASA-NAS (PGP + DNAS) on a search space
+//!   sweep     run a space x schedule x recipe x seed grid of searches
+//!             concurrently (shared engine, per-run checkpoint/resume)
 //!   train     train a derived choice vector from scratch + eval FP32/FXP
 //!   simulate  run an arch through the chunk accelerator / baselines
 //!   map       run the auto-mapper on an arch (Fig. 8 machinery)
@@ -14,7 +16,8 @@ use nasa::accel::{
     UNIT_ENERGY_45NM,
 };
 use nasa::coordinator::{
-    run_search, train_child, Dataset, DatasetConfig, SearchConfig, TrainConfig,
+    dataset_for_supernet, print_summary, run_search, run_sweep, save_outcomes, train_child,
+    GridSpec, SearchConfig, SweepOptions, TrainConfig,
 };
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::{arch_op_counts, Arch, QuantSpec};
@@ -28,6 +31,7 @@ fn main() -> Result<()> {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     let r = match sub.as_str() {
         "search" => cmd_search(&args),
+        "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "derive" => cmd_derive(&args),
         "simulate" => cmd_simulate(&args),
@@ -54,6 +58,13 @@ USAGE: nasa <subcommand> [--options]
 
   search   --space hybrid_all_c10 [--pretrain 9] [--epochs 12] [--steps 16]
            [--seed 42] [--lambda 0.05] [--vanilla] [--no-recipe] [--out runs]
+  sweep    --spaces hybrid_all_c10,hybrid_shift_c10 --seeds 42,43
+           [--ablate-pgp] [--ablate-recipe] [--pretrain 9] [--epochs 12]
+           [--steps 16] [--lambda 0.05] [--eval-every 0] [--jobs 0]
+           [--resume] [--no-checkpoint] [--out runs]
+           (grid = spaces x schedules x recipes x seeds, run concurrently
+            through one shared engine; checkpoints land in
+            <out>/<run>/checkpoint.json at PGP stage boundaries)
   train    --space hybrid_all_c10 --choices 1,7,13,2,8,18 [--epochs 20] [--out runs]
   derive   --space hybrid_all_c10 --choices 1,7,13,2,8,18 --name my_arch
   simulate --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
@@ -71,14 +82,6 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 
 fn runs_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("out", "runs"))
-}
-
-fn dataset_for(key: &str, hw: usize) -> Dataset {
-    if key.ends_with("c100") {
-        Dataset::generate(DatasetConfig::cifar100_like(hw))
-    } else {
-        Dataset::generate(DatasetConfig::cifar10_like(hw))
-    }
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
@@ -100,10 +103,10 @@ fn cmd_search(args: &Args) -> Result<()> {
 
     let manifest = Manifest::load(&artifacts_dir(args))?;
     let sn = manifest.supernet(&space)?;
-    let dataset = dataset_for(&space, sn.input_hw);
-    let mut engine = Engine::cpu()?;
+    let dataset = dataset_for_supernet(sn);
+    let engine = Engine::cpu()?;
     let t0 = std::time::Instant::now();
-    let outcome = run_search(&mut engine, &manifest, &dataset, &cfg)?;
+    let outcome = run_search(&engine, &manifest, &dataset, &cfg)?;
     println!("search done in {:.1}s", t0.elapsed().as_secs_f64());
     println!("choices: {:?}", outcome.choices);
     let counts = arch_op_counts(&outcome.arch);
@@ -116,6 +119,69 @@ fn cmd_search(args: &Args) -> Result<()> {
     let arch_path = dir.join(format!("arch_{space}_seed{}.json", cfg.seed));
     outcome.arch.save(&arch_path)?;
     println!("arch -> {}", arch_path.display());
+    Ok(())
+}
+
+/// Parse a comma-separated list with one typed parser.
+fn parse_list<T, F: Fn(&str) -> Result<T>>(s: &str, parse: F) -> Result<Vec<T>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(parse)
+        .collect()
+}
+
+/// The parallel checkpointed sweep orchestrator: expand the grid, run
+/// every cell concurrently through ONE shared engine, print the summary,
+/// save logs + derived archs.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let spaces = parse_list(&args.str_or("spaces", "hybrid_all_c10"), |t| Ok(t.to_string()))?;
+    let seeds = parse_list(&args.str_or("seeds", "42"), |t| {
+        t.parse::<u64>().map_err(|e| anyhow::anyhow!("--seeds: {e}"))
+    })?;
+    let mut grid = GridSpec::new(spaces, seeds);
+    grid.ablate_pgp = args.flag("ablate-pgp");
+    grid.ablate_recipe = args.flag("ablate-recipe");
+    grid.pretrain_epochs = args.usize_or("pretrain", grid.pretrain_epochs)?;
+    grid.search_epochs = args.usize_or("epochs", grid.search_epochs)?;
+    grid.steps_per_epoch = args.usize_or("steps", grid.steps_per_epoch)?;
+    grid.eval_every = args.usize_or("eval-every", 0)?;
+    if args.get("lambda").is_some() {
+        grid.lambda_hw = Some(args.f64_or("lambda", 0.0)? as f32);
+    }
+    let runs = grid.expand();
+    if runs.is_empty() {
+        bail!("empty sweep grid (check --spaces/--seeds)");
+    }
+    let opts = SweepOptions {
+        jobs: args.usize_or("jobs", 0)?,
+        out_dir: runs_dir(args),
+        checkpoint: !args.flag("no-checkpoint"),
+        resume: args.flag("resume"),
+    };
+
+    let manifest = Manifest::load(&artifacts_dir(args))?;
+    let engine = Engine::cpu()?;
+    println!(
+        "sweep: {} runs (spaces x schedules x recipes x seeds), jobs={}, checkpoint={}, resume={}",
+        runs.len(),
+        if opts.jobs == 0 { "auto".to_string() } else { opts.jobs.to_string() },
+        opts.checkpoint,
+        opts.resume
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_sweep(&engine, &manifest, &runs, &opts)?;
+    print_summary(&results);
+    let ok = save_outcomes(&results, &opts.out_dir)?;
+    println!(
+        "sweep done in {:.1}s: {ok}/{} runs ok; logs + archs in {}",
+        t0.elapsed().as_secs_f64(),
+        results.len(),
+        opts.out_dir.display()
+    );
+    if ok < results.len() {
+        bail!("{} sweep run(s) failed", results.len() - ok);
+    }
     Ok(())
 }
 
@@ -152,9 +218,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let manifest = Manifest::load(&artifacts_dir(args))?;
     let sn = manifest.supernet(&space)?;
-    let dataset = dataset_for(&space, sn.input_hw);
-    let mut engine = Engine::cpu()?;
-    let out = train_child(&mut engine, &manifest, &dataset, &choices, &cfg)?;
+    let dataset = dataset_for_supernet(sn);
+    let engine = Engine::cpu()?;
+    let out = train_child(&engine, &manifest, &dataset, &choices, &cfg)?;
     println!(
         "test acc: FP32={:.4} FXP8/6={:.4}",
         out.test_acc_fp32, out.test_acc_quant
@@ -279,7 +345,7 @@ fn cmd_check(args: &Args) -> Result<()> {
         manifest.kernels.len(),
         manifest.fixed_child.is_some()
     );
-    let mut engine = Engine::cpu()?;
+    let engine = Engine::cpu()?;
     println!("PJRT platform: {}", engine.platform());
     if let Some(fc) = &manifest.fixed_child {
         let exe = engine.load(&manifest.dir, &fc.jnp)?;

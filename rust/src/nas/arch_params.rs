@@ -24,13 +24,20 @@ impl ArchParams {
     /// Eq. 6 masking: per layer, 1.0 for the top-k alphas intersected with
     /// `enabled`, 0.0 elsewhere. Ties break toward lower index
     /// (deterministic). k >= enabled count keeps everything enabled.
+    ///
+    /// Ordering is NaN-safe via [`f32::total_cmp`]: a diverged alpha row
+    /// (NaN/±inf from e.g. the bigger-lr recipe blowing up) still yields a
+    /// deterministic mask instead of panicking mid-search. Under the IEEE
+    /// total order +NaN ranks above +inf, so a NaN alpha counts as
+    /// "largest" — the run keeps going and divergence surfaces in the
+    /// RunLog curves, where `Curve::diverged` flags it.
     pub fn topk_mask(&self, k: usize, enabled: &[bool]) -> Vec<f32> {
         assert_eq!(enabled.len(), self.n_cand);
         let mut mask = vec![0.0f32; self.alpha.len()];
         for l in 0..self.n_layers {
             let row = self.row(l);
             let mut idx: Vec<usize> = (0..self.n_cand).filter(|&i| enabled[i]).collect();
-            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+            idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
             for &i in idx.iter().take(k) {
                 mask[l * self.n_cand + i] = 1.0;
             }
@@ -61,13 +68,16 @@ impl ArchParams {
     }
 
     /// Argmax over enabled candidates per layer (architecture derivation).
+    /// NaN-safe ([`f32::total_cmp`], same rationale as
+    /// [`ArchParams::topk_mask`]): derivation from a diverged run returns
+    /// a deterministic choice vector rather than panicking.
     pub fn argmax(&self, enabled: &[bool]) -> Vec<usize> {
         (0..self.n_layers)
             .map(|l| {
                 let row = self.row(l);
                 (0..self.n_cand)
                     .filter(|&i| enabled[i])
-                    .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap().then(b.cmp(&a)))
+                    .max_by(|&a, &b| row[a].total_cmp(&row[b]).then(b.cmp(&a)))
                     .expect("at least one enabled candidate")
             })
             .collect()
@@ -87,7 +97,13 @@ impl ArchParams {
         h / self.n_layers as f64
     }
 
-    /// Fresh Gumbel(0,1) noise for one step, masked entries zeroed.
+    /// Fresh Gumbel(0,1) noise for one step — one draw for EVERY
+    /// `[n_layers x n_cand]` entry, masked or not. No masking happens
+    /// here: the top-k/enabled mask is a separate artifact input, and the
+    /// step graph multiplies it in after the Gumbel-Softmax (Eq. 7), so
+    /// masked-out candidates contribute nothing downstream. Drawing
+    /// unconditionally keeps the RNG stream's position independent of the
+    /// mask, which checkpoint/resume relies on.
     pub fn sample_gumbel(&self, rng: &mut Rng) -> Vec<f32> {
         let mut g = vec![0.0f32; self.alpha.len()];
         rng.fill_gumbel(&mut g);
@@ -151,5 +167,50 @@ mod tests {
     fn argmax_ties_break_low_index() {
         let ap = ArchParams::zeros(1, 3);
         assert_eq!(ap.argmax(&vec![true; 3]), vec![0]);
+    }
+
+    #[test]
+    fn nan_inf_alpha_row_masks_and_derives_without_panicking() {
+        // Regression: a diverged run (bigger-lr recipe) leaves NaN/±inf
+        // alphas; `partial_cmp().unwrap()` used to panic here. The same
+        // bug class was evicted from the mapper's best-candidate selection
+        // in PR 2 — this pins the NAS side.
+        let mut ap = ArchParams::zeros(2, 4);
+        ap.alpha = vec![
+            f32::NAN,
+            1.0,
+            f32::NEG_INFINITY,
+            0.5, // layer 0: diverged
+            f32::INFINITY,
+            f32::NAN,
+            -1.0,
+            2.0, // layer 1: diverged harder
+        ];
+        let enabled = vec![true; 4];
+        let mask = ap.topk_mask(2, &enabled);
+        // Masks stay well-formed: exactly k entries per layer, all 0/1.
+        for l in 0..2 {
+            let row = &mask[l * 4..(l + 1) * 4];
+            assert_eq!(row.iter().filter(|&&m| m == 1.0).count(), 2, "{row:?}");
+            assert!(row.iter().all(|&m| m == 0.0 || m == 1.0));
+        }
+        // total_cmp order: NaN ranks above +inf, so layer 0 keeps
+        // {NaN(idx 0), 1.0(idx 1)}, layer 1 keeps {NaN(idx 1), +inf(idx 0)}.
+        assert_eq!(&mask[0..4], &[1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(&mask[4..8], &[1.0, 1.0, 0.0, 0.0]);
+        // Derivation is deterministic too (and repeatable).
+        let c1 = ap.argmax(&enabled);
+        let c2 = ap.argmax(&enabled);
+        assert_eq!(c1, c2);
+        assert_eq!(c1, vec![0, 1]);
+    }
+
+    #[test]
+    fn all_nan_row_still_yields_full_mask() {
+        let mut ap = ArchParams::zeros(1, 3);
+        ap.alpha = vec![f32::NAN; 3];
+        let enabled = vec![true; 3];
+        assert_eq!(ap.topk_mask(2, &enabled), vec![1.0, 1.0, 0.0]);
+        assert_eq!(ap.argmax(&enabled), vec![0]);
     }
 }

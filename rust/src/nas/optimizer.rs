@@ -39,6 +39,21 @@ impl Sgdm {
     pub fn reset(&mut self) {
         self.v.fill(0.0);
     }
+
+    /// Momentum buffer snapshot (checkpoint serialization).
+    pub fn state(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Restore a [`Sgdm::state`] snapshot; the length must match the
+    /// parameter count this optimizer was built for.
+    pub fn restore(&mut self, v: Vec<f32>) -> anyhow::Result<()> {
+        if v.len() != self.v.len() {
+            anyhow::bail!("sgdm state len {} != {}", v.len(), self.v.len());
+        }
+        self.v = v;
+        Ok(())
+    }
 }
 
 /// Adam with bias correction and additive weight decay (paper setting for
@@ -65,6 +80,28 @@ impl Adam {
             v: vec![0.0; n],
             t: 0,
         }
+    }
+
+    /// `(m, v, t)` snapshot (checkpoint serialization).
+    pub fn state(&self) -> (&[f32], &[f32], i32) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Restore an [`Adam::state`] snapshot (moment buffers + step count).
+    pub fn restore(&mut self, m: Vec<f32>, v: Vec<f32>, t: i32) -> anyhow::Result<()> {
+        if m.len() != self.m.len() || v.len() != self.v.len() {
+            anyhow::bail!(
+                "adam state lens ({}, {}) != ({}, {})",
+                m.len(),
+                v.len(),
+                self.m.len(),
+                self.v.len()
+            );
+        }
+        self.m = m;
+        self.v = v;
+        self.t = t;
+        Ok(())
     }
 
     pub fn step(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
@@ -168,6 +205,37 @@ mod tests {
             opt.step(&mut w, &g, 0.01);
         }
         assert!(w[0].abs() < 0.1, "w={}", w[0]);
+    }
+
+    #[test]
+    fn optimizer_state_roundtrip_is_bit_exact() {
+        // Interrupt-and-restore mid-trajectory must continue identically —
+        // the substrate of the search-loop checkpoint/resume contract.
+        let mut w1 = vec![3.0f32, -2.0];
+        let mut sgdm = Sgdm::new(2, 0.9, 1e-4);
+        let mut adam = Adam::new(2, 5e-4);
+        for i in 0..10 {
+            let g = vec![w1[0] * 0.1, (i as f32).sin()];
+            sgdm.step(&mut w1, &g, 0.05, None);
+            adam.step(&mut w1, &g, 0.01);
+        }
+        let mut w2 = w1.clone();
+        let mut sgdm2 = Sgdm::new(2, 0.9, 1e-4);
+        sgdm2.restore(sgdm.state().to_vec()).unwrap();
+        let (m, v, t) = adam.state();
+        let mut adam2 = Adam::new(2, 5e-4);
+        adam2.restore(m.to_vec(), v.to_vec(), t).unwrap();
+        for i in 0..10 {
+            let g = vec![0.3, (i as f32).cos()];
+            sgdm.step(&mut w1, &g, 0.05, None);
+            adam.step(&mut w1, &g, 0.01);
+            sgdm2.step(&mut w2, &g, 0.05, None);
+            adam2.step(&mut w2, &g, 0.01);
+        }
+        assert_eq!(w1, w2);
+        // Mismatched lengths are rejected loudly.
+        assert!(sgdm2.restore(vec![0.0; 3]).is_err());
+        assert!(adam2.restore(vec![0.0; 3], vec![0.0; 2], 1).is_err());
     }
 
     #[test]

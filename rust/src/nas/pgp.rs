@@ -73,28 +73,38 @@ impl PgpSchedule {
     /// The paper's PGP pretrain split followed by search. The pretrain
     /// epochs are split 1/3 conv, 1/3 adder, 1/3 mixture (the paper's 120
     /// epochs for hybrid-adder ~ 40/40/40).
+    ///
+    /// Degenerate inputs are clamped rather than silently emitting
+    /// zero-length stages: `pretrain_epochs < 3` cannot fund all three
+    /// stages, so the empty ones are dropped (e.g. 2 pretrain epochs →
+    /// one 2-epoch Mixture stage). An all-zero schedule is legal and
+    /// yields an empty stage list; `run_search` handles the resulting
+    /// empty log instead of panicking.
     pub fn pgp(pretrain_epochs: usize, search_epochs: usize) -> Self {
         let third = pretrain_epochs / 3;
         let last = pretrain_epochs - 2 * third;
-        PgpSchedule {
-            stages: vec![
-                (PgpStage::ConvPretrain, third),
-                (PgpStage::AdderPretrain, third),
-                (PgpStage::Mixture, last),
-                (PgpStage::Search, search_epochs),
-            ],
-        }
+        Self::normalized(vec![
+            (PgpStage::ConvPretrain, third),
+            (PgpStage::AdderPretrain, third),
+            (PgpStage::Mixture, last),
+            (PgpStage::Search, search_epochs),
+        ])
     }
 
     /// Vanilla FBNet pretraining (the Fig. 7 ablation baseline and the
     /// sufficient recipe for hybrid-shift): joint pretrain, then search.
     pub fn vanilla(pretrain_epochs: usize, search_epochs: usize) -> Self {
-        PgpSchedule {
-            stages: vec![
-                (PgpStage::Mixture, pretrain_epochs),
-                (PgpStage::Search, search_epochs),
-            ],
-        }
+        Self::normalized(vec![
+            (PgpStage::Mixture, pretrain_epochs),
+            (PgpStage::Search, search_epochs),
+        ])
+    }
+
+    /// Drop zero-length stages (they would make `stage_at` / stage
+    /// boundaries ambiguous and checkpoint placement degenerate).
+    fn normalized(mut stages: Vec<(PgpStage, usize)>) -> Self {
+        stages.retain(|&(_, n)| n > 0);
+        PgpSchedule { stages }
     }
 
     pub fn total_epochs(&self) -> usize {
@@ -191,6 +201,36 @@ mod tests {
         assert_eq!(s.stage_at(0), PgpStage::Mixture);
         assert_eq!(s.stage_at(4), PgpStage::Mixture);
         assert_eq!(s.stage_at(5), PgpStage::Search);
+    }
+
+    #[test]
+    fn degenerate_pgp_schedules_have_no_zero_length_stages() {
+        // pretrain < 3 cannot fund all three PGP stages; the empty ones
+        // must be dropped, not silently emitted as zero-length stages.
+        for (pre, search) in [(0, 0), (0, 3), (1, 0), (1, 2), (2, 5), (3, 0)] {
+            let s = PgpSchedule::pgp(pre, search);
+            assert!(
+                s.stages.iter().all(|&(_, n)| n > 0),
+                "pgp({pre},{search}) -> {:?}",
+                s.stages
+            );
+            assert_eq!(s.total_epochs(), pre + search, "pgp({pre},{search})");
+            let v = PgpSchedule::vanilla(pre, search);
+            assert!(v.stages.iter().all(|&(_, n)| n > 0));
+            assert_eq!(v.total_epochs(), pre + search);
+        }
+        // pgp(2, s): both pretrain epochs fund the Mixture stage.
+        let s = PgpSchedule::pgp(2, 4);
+        assert_eq!(s.stages, vec![(PgpStage::Mixture, 2), (PgpStage::Search, 4)]);
+        // pgp(0, 0) is the fully-empty schedule: legal, zero stages.
+        assert!(PgpSchedule::pgp(0, 0).stages.is_empty());
+        assert_eq!(PgpSchedule::pgp(0, 0).total_epochs(), 0);
+        // stage_at / search_epoch stay well-defined on clamped schedules.
+        let s = PgpSchedule::pgp(1, 2);
+        assert_eq!(s.stages, vec![(PgpStage::Mixture, 1), (PgpStage::Search, 2)]);
+        assert_eq!(s.stage_at(0), PgpStage::Mixture);
+        assert_eq!(s.stage_at(1), PgpStage::Search);
+        assert_eq!(s.search_epoch(1), Some(0));
     }
 
     #[test]

@@ -5,6 +5,7 @@ use super::manifest::ArtifactIo;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 /// A compiled artifact plus its expected input signature (shape checking
 /// on every call — a mismatched literal aborts deep inside PJRT otherwise).
@@ -13,6 +14,21 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     input_shapes: Vec<(Vec<usize>, String)>,
 }
+
+// SAFETY: the sweep orchestrator shares one Engine (and its cached
+// Arc<Executable>s) across worker threads, so the auto-traits the
+// raw-pointer-backed xla handles lack are asserted here, at the single
+// seam where the backend meets the coordinator. The justification: the
+// PJRT C API — and XLA's PjRtClient/PjRtLoadedExecutable on top of it —
+// is designed for concurrent compile/execute from multiple threads (the
+// CPU client serializes internally where it must). All mutation on the
+// Rust side is behind the `cache` mutex below. If a future backend's
+// client is NOT thread-safe, delete these impls and the compiler will
+// point at every call site that needs a per-thread engine instead.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Executable {
     /// Execute with literal inputs; returns the flattened output tuple.
@@ -50,9 +66,22 @@ impl Executable {
 }
 
 /// The PJRT engine: one CPU client, a cache of compiled executables.
+///
+/// The cache uses interior mutability so `load` takes `&self` and one
+/// engine is shareable across sweep worker threads. Locking is two-level:
+/// the map mutex is held only long enough to find/create a per-artifact
+/// entry, and compilation happens under that entry's own lock — so
+/// concurrent loads of the SAME artifact compile it exactly once (the
+/// second worker waits, then reuses), while DIFFERENT artifacts compile
+/// in parallel (XLA compiles take seconds each; serializing them would
+/// make sweep startup the sum instead of the max). Execution afterwards
+/// is lock-free on the shared `Arc<Executable>`. The PJRT CPU client
+/// itself is documented thread-safe for compile/execute; if a future
+/// backend is not, gate concurrency at the call site — the type surface
+/// here stays `&self` either way.
 pub struct Engine {
     client: xla::PjRtClient,
-    cache: BTreeMap<String, std::sync::Arc<Executable>>,
+    cache: Mutex<BTreeMap<String, Arc<Mutex<Option<Arc<Executable>>>>>>,
 }
 
 impl Engine {
@@ -72,7 +101,7 @@ impl Engine {
         }
         Ok(Engine {
             client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-            cache: BTreeMap::new(),
+            cache: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -80,9 +109,16 @@ impl Engine {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(&mut self, dir: &Path, io: &ArtifactIo) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.get(&io.path) {
+    /// Load + compile an HLO-text artifact (cached by path; thread-safe —
+    /// concurrent loads of the same path compile once, distinct paths
+    /// compile in parallel).
+    pub fn load(&self, dir: &Path, io: &ArtifactIo) -> Result<Arc<Executable>> {
+        let entry = {
+            let mut cache = self.cache.lock().expect("engine cache poisoned");
+            cache.entry(io.path.clone()).or_default().clone()
+        };
+        let mut slot = entry.lock().expect("engine cache entry poisoned");
+        if let Some(e) = &*slot {
             return Ok(e.clone());
         }
         let full = dir.join(&io.path);
@@ -96,7 +132,7 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", full.display()))?;
-        let e = std::sync::Arc::new(Executable {
+        let e = Arc::new(Executable {
             name: io.path.clone(),
             exe,
             input_shapes: io.input_shapes.clone(),
@@ -106,7 +142,7 @@ impl Engine {
             io.path,
             t0.elapsed().as_secs_f64()
         );
-        self.cache.insert(io.path.clone(), e.clone());
+        *slot = Some(e.clone());
         Ok(e)
     }
 }

@@ -5,7 +5,11 @@
 //! *text* (see python/compile/aot.py for why not serialized protos).
 //!
 //! Two interchangeable backends provide the same `Engine` / `Executable`
-//! / `Literal` surface:
+//! / `Literal` surface. In both, the executable cache uses interior
+//! mutability (`Engine::load` takes `&self`), so a single engine is
+//! shared by reference across the sweep orchestrator's worker threads:
+//! each artifact is compiled/materialized exactly once and all workers
+//! execute the same cached `Arc<Executable>`.
 //!
 //! * **`pjrt` feature enabled** — the real path (`engine.rs`): artifacts
 //!   are parsed and compiled through the `xla` (xla_extension) PJRT CPU

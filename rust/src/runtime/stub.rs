@@ -39,7 +39,7 @@ use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Host literal of the stub backend: shape + typed flat data.
 #[derive(Clone, Debug, PartialEq)]
@@ -290,14 +290,19 @@ fn first_f32(l: &Literal) -> f32 {
 /// The stub engine: same surface as `engine::Engine`, but "loading" an
 /// artifact only records its manifest signature — the HLO text files need
 /// not exist, so the whole pipeline runs from a manifest alone.
+///
+/// The executable cache sits behind a `Mutex`, so `load` takes `&self`
+/// and one `Engine` is shareable across sweep worker threads: each
+/// artifact is materialized once and every worker runs the same
+/// `Arc<Executable>` lock-free (`Executable::run` is `&self`).
 pub struct Engine {
-    cache: BTreeMap<String, Arc<Executable>>,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
 }
 
 impl Engine {
     /// Construct the stub backend (always succeeds; no native deps).
     pub fn cpu() -> Result<Engine> {
-        Ok(Engine { cache: BTreeMap::new() })
+        Ok(Engine { cache: Mutex::new(BTreeMap::new()) })
     }
 
     /// Backend identifier (the PJRT path reports e.g. "Host" / "cpu").
@@ -307,8 +312,10 @@ impl Engine {
     }
 
     /// "Load" an artifact: record its I/O signature (cached by path).
-    pub fn load(&mut self, _dir: &Path, io: &ArtifactIo) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.get(&io.path) {
+    /// Thread-safe; concurrent loads of the same path return one entry.
+    pub fn load(&self, _dir: &Path, io: &ArtifactIo) -> Result<Arc<Executable>> {
+        let mut cache = self.cache.lock().expect("engine cache poisoned");
+        if let Some(e) = cache.get(&io.path) {
             return Ok(e.clone());
         }
         let e = Arc::new(Executable {
@@ -316,7 +323,7 @@ impl Engine {
             input_shapes: io.input_shapes.clone(),
             kind: ArtifactKind::infer(io),
         });
-        self.cache.insert(io.path.clone(), e.clone());
+        cache.insert(io.path.clone(), e.clone());
         Ok(e)
     }
 }
@@ -404,7 +411,7 @@ mod tests {
     fn same_inputs_agree_across_artifacts() {
         // The pallas-vs-jnp cross-check property: two artifacts with the
         // same signature fed the same inputs produce identical outputs.
-        let mut engine = Engine::cpu().unwrap();
+        let engine = Engine::cpu().unwrap();
         let f = |shape: &[usize]| (shape.to_vec(), "float32".to_string());
         let io_a = ArtifactIo { path: "a.hlo.txt".into(), input_shapes: vec![f(&[8]), f(&[2, 4, 4, 3])] };
         let io_b = ArtifactIo { path: "b.hlo.txt".into(), input_shapes: vec![f(&[8]), f(&[2, 4, 4, 3])] };
@@ -438,5 +445,26 @@ mod tests {
         let l = Literal::from_i32(&[2], vec![1, 2]);
         assert!(l.to_vec::<f32>().is_err());
         assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn engine_is_shareable_across_threads() {
+        // The sweep-orchestrator contract: one Engine serves concurrent
+        // workers through `load(&self)`, artifacts are cached once, and
+        // every worker sees the same Arc'd executable.
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<Engine>();
+        let engine = Engine::cpu().unwrap();
+        let io = step_io();
+        let exes: Vec<Arc<Executable>> = crate::util::par::par_map_jobs(
+            &[0u32; 8],
+            4,
+            |_| engine.load(Path::new("artifacts"), &io).unwrap(),
+        );
+        for e in &exes {
+            assert!(Arc::ptr_eq(e, &exes[0]), "cache must dedupe concurrent loads");
+        }
+        let out = exes[0].run(&step_inputs(3)).unwrap();
+        assert_eq!(out.len(), 6);
     }
 }

@@ -10,6 +10,13 @@
 
 use std::time::{Duration, Instant};
 
+/// Sizing knob shared by the exhibit benches: read a usize from the
+/// environment (e.g. `NASA_FIG7_EPOCHS`), falling back on the default
+/// when unset or unparseable.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 pub struct Bench {
     pub name: String,
     pub warmup_iters: usize,

@@ -1,7 +1,8 @@
 //! Scoped-thread parallelism substrate (rayon is unavailable offline).
 //!
 //! `par_map` fans a work list across `available_parallelism()` OS threads
-//! through an atomic-counter work queue — a thread that drew a cheap item
+//! (`par_map_jobs` takes an explicit worker cap — the sweep orchestrator's
+//! `--jobs`) through an atomic-counter work queue — a thread that drew a cheap item
 //! immediately claims the next one, so heterogeneous items (mapper chunk
 //! evaluations range from a one-layer family to most of the net) load-
 //! balance instead of pinning the whole stripe's cost on one thread —
@@ -17,11 +18,26 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    par_map_jobs(items, 0, f)
+}
+
+/// [`par_map`] with an explicit worker cap: at most `jobs` threads draw
+/// from the work queue (`0` = one per `available_parallelism()` core).
+/// `jobs = 1` degenerates to a plain sequential map — the property the
+/// sweep determinism tests lean on.
+pub fn par_map_jobs<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     let n = items.len();
-    let threads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n.max(1));
+    let threads = if jobs == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        jobs
+    }
+    .min(n.max(1));
     if n < 2 || threads < 2 {
         return items.iter().map(&f).collect();
     }
@@ -118,6 +134,15 @@ mod tests {
             x * 2
         });
         assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_jobs_caps_and_matches() {
+        let items: Vec<u64> = (0..100).collect();
+        let seq: Vec<u64> = items.iter().map(|x| x * 3).collect();
+        for jobs in [1, 2, 7, 1000] {
+            assert_eq!(par_map_jobs(&items, jobs, |x| x * 3), seq, "jobs={jobs}");
+        }
     }
 
     #[test]

@@ -132,6 +132,64 @@ fn arch_load_bad_file_rejected() {
 }
 
 #[test]
+fn eval_output_arity_guard_bails_instead_of_indexing() {
+    use nasa::coordinator::search_loop::eval_output_ncorrect;
+    use nasa::runtime::{lit_f32, lit_scalar_f32};
+    // Well-formed (loss, ncorrect) tuple passes through.
+    let good = vec![lit_scalar_f32(1.5), lit_scalar_f32(3.0)];
+    assert_eq!(eval_output_ncorrect(&good, "eval.hlo.txt").unwrap(), 3.0);
+    // A malformed artifact returning 1 output used to panic at `out[1]`
+    // (unlike run_step's explicit arity guard); now it bails with the
+    // artifact named.
+    let one = vec![lit_scalar_f32(1.5)];
+    let err = eval_output_ncorrect(&one, "evil_eval.hlo.txt").unwrap_err().to_string();
+    assert!(err.contains("evil_eval.hlo.txt") && err.contains("1 outputs"), "{err}");
+    // Too many outputs is just as malformed.
+    let three = vec![lit_scalar_f32(0.0), lit_scalar_f32(1.0), lit_scalar_f32(2.0)];
+    assert!(eval_output_ncorrect(&three, "e").is_err());
+    // An ncorrect tensor with zero elements must not index [0].
+    let empty = vec![lit_scalar_f32(0.0), lit_f32(&[0], &[]).unwrap()];
+    let err = eval_output_ncorrect(&empty, "e").unwrap_err().to_string();
+    assert!(err.contains("empty"), "{err}");
+}
+
+#[test]
+fn eval_supernet_with_malformed_eval_signature_fails_cleanly() {
+    use nasa::coordinator::search_loop::eval_supernet;
+    use nasa::coordinator::{Dataset, DatasetConfig};
+    use nasa::nas::ArchParams;
+    // GOOD_SUPERNET declares `eval.inputs = []` — a malformed eval
+    // artifact signature. Driving the eval path must produce a loud,
+    // precise error (input-count mismatch), never an index panic deep in
+    // the output handling.
+    let d = tmpdir("badeval");
+    write_manifest(&d, GOOD_SUPERNET);
+    let m = Manifest::load(&d).unwrap();
+    let sn = m.supernet("tiny").unwrap();
+    let mut dcfg = DatasetConfig::cifar10_like(4);
+    dcfg.num_classes = 2;
+    dcfg.n_train = 16;
+    dcfg.n_val = 8;
+    dcfg.n_test = 8;
+    let dataset = Dataset::generate(dcfg);
+    let engine = nasa::runtime::Engine::cpu().unwrap();
+    let alpha = ArchParams::zeros(sn.n_layers, sn.n_cand);
+    let err = eval_supernet(
+        &engine,
+        &m,
+        sn,
+        &dataset,
+        &vec![0.0; sn.n_params],
+        &alpha,
+        &vec![true; sn.n_cand],
+        1.0,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("got 6 inputs"), "{err}");
+}
+
+#[test]
 fn runlog_load_tolerates_nonfinite_curves() {
     let d = tmpdir("runlog");
     let mut log = nasa::coordinator::RunLog::new("diverged");

@@ -44,7 +44,7 @@ fn supernet_step_executes_and_is_deterministic() {
         eprintln!("SKIP: hybrid_all_c10 not built");
         return;
     };
-    let mut engine = Engine::cpu().expect("engine");
+    let engine = Engine::cpu().expect("engine");
     let exe = engine.load(&m.dir, &sn.step).expect("compile step");
 
     let mut rng = Rng::new(7);
@@ -117,7 +117,7 @@ fn child_pallas_matches_jnp_through_pjrt() {
         return;
     };
     let sn = m.supernets.get(&fc.space_key).expect("space of fixed child");
-    let mut engine = Engine::cpu().expect("engine");
+    let engine = Engine::cpu().expect("engine");
     let pallas = engine.load(&m.dir, &fc.pallas).expect("pallas artifact");
     let jnp = engine.load(&m.dir, &fc.jnp).expect("jnp artifact");
 

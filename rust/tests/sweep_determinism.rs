@@ -1,0 +1,325 @@
+//! Sweep orchestrator determinism + checkpoint/resume bit-identity.
+//!
+//! Runs fully offline against the committed stub-backend fixture
+//! (`fixtures/tiny_manifest/` — the stub Engine materializes executables
+//! from I/O signatures, no HLO files needed). Two contracts are pinned:
+//!
+//! 1. **Parallel == sequential**: a sweep at `--jobs 4` produces RunLogs
+//!    bit-identical to running the same configs one-by-one through
+//!    `run_search` on a fresh engine.
+//! 2. **Resumed == uninterrupted**: a run halted mid-schedule (via the
+//!    preemption hook) and resumed from its stage-boundary checkpoint
+//!    produces exactly the log/params/alpha of the uninterrupted run.
+
+use nasa::coordinator::{
+    dataset_for_supernet, run_search, run_search_resumable, run_sweep, CheckpointSpec,
+    SearchConfig, SearchOutcome, SearchStatus, SweepOptions, SweepRun,
+};
+use nasa::nas::PgpSchedule;
+use nasa::runtime::{Engine, Manifest};
+use std::path::{Path, PathBuf};
+
+fn fixture_manifest() -> Manifest {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../fixtures/tiny_manifest");
+    Manifest::load(&dir).expect("committed fixture manifest must parse")
+}
+
+fn tiny_cfg(seed: u64) -> SearchConfig {
+    let mut cfg = SearchConfig::for_space("tiny", 3, 2);
+    // Force the full PGP stage machine so stage boundaries (checkpoint
+    // sites) exist: conv 1 / adder 1 / mixture 1 / search 2.
+    cfg.schedule = PgpSchedule::pgp(3, 2);
+    cfg.steps_per_epoch = 3;
+    cfg.seed = seed;
+    cfg
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("nasa_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_outcomes_bit_identical(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_eq!(bits(&a.params), bits(&b.params), "{what}: params");
+    assert_eq!(bits(&a.alpha.alpha), bits(&b.alpha.alpha), "{what}: alpha");
+    assert_eq!(a.choices, b.choices, "{what}: choices");
+    // The log compares through its serialized form: same curves, same
+    // points, byte for byte (names may differ; compare content only).
+    let strip = |o: &SearchOutcome| {
+        let mut log = o.log.clone();
+        log.name = "x".into();
+        log.to_json().to_string()
+    };
+    assert_eq!(strip(a), strip(b), "{what}: RunLog JSON");
+}
+
+#[test]
+fn parallel_sweep_matches_sequential_runs_bitwise() {
+    let manifest = fixture_manifest();
+    let runs: Vec<SweepRun> = [1u64, 2]
+        .iter()
+        .map(|&seed| SweepRun { name: format!("tiny_s{seed}"), cfg: tiny_cfg(seed) })
+        .collect();
+
+    // Parallel: one shared engine, 4 workers, checkpointing on.
+    let out = tmpdir("par");
+    let engine = Engine::cpu().unwrap();
+    let opts = SweepOptions { jobs: 4, out_dir: out.clone(), checkpoint: true, resume: false };
+    let results = run_sweep(&engine, &manifest, &runs, &opts).unwrap();
+    assert_eq!(results.len(), 2);
+
+    // Sequential reference: fresh engine, plain run_search per config.
+    let seq_engine = Engine::cpu().unwrap();
+    for (run, result) in runs.iter().zip(&results) {
+        let dataset = dataset_for_supernet(manifest.supernet(&run.cfg.space_key).unwrap());
+        let seq = run_search(&seq_engine, &manifest, &dataset, &run.cfg).unwrap();
+        let par = result.outcome.as_ref().expect("sweep run must succeed");
+        assert_outcomes_bit_identical(par, seq, &run.name);
+        // Stage-boundary checkpoints landed under <out>/<name>/.
+        assert!(
+            out.join(&run.name).join("checkpoint.json").exists(),
+            "{}: checkpoint missing",
+            run.name
+        );
+    }
+    std::fs::remove_dir_all(out).ok();
+}
+
+#[test]
+fn resumed_run_matches_uninterrupted_bitwise() {
+    let manifest = fixture_manifest();
+    let cfg = tiny_cfg(7);
+    let dataset = dataset_for_supernet(manifest.supernet("tiny").unwrap());
+    let engine = Engine::cpu().unwrap();
+
+    // Uninterrupted reference (no checkpointing at all).
+    let full = run_search(&engine, &manifest, &dataset, &cfg).unwrap();
+
+    // Interrupted: halt before epoch 3 (the mixture->search boundary, so
+    // the checkpoint written at the end of epoch 2 is the resume point).
+    let dir = tmpdir("resume");
+    let ckpt = dir.join("checkpoint.json");
+    let spec = CheckpointSpec {
+        path: ckpt.clone(),
+        resume: false,
+        halt_at_epoch: Some(3),
+    };
+    match run_search_resumable(&engine, &manifest, &dataset, &cfg, Some(&spec)).unwrap() {
+        SearchStatus::Halted { next_epoch } => assert_eq!(next_epoch, 3),
+        SearchStatus::Done(_) => panic!("run must halt at the preemption hook"),
+    }
+    assert!(ckpt.exists(), "stage-boundary checkpoint must exist at halt");
+
+    // Resume to completion and compare bit-for-bit.
+    let resumed = match run_search_resumable(
+        &engine,
+        &manifest,
+        &dataset,
+        &cfg,
+        Some(&CheckpointSpec::at(ckpt.clone(), true)),
+    )
+    .unwrap()
+    {
+        SearchStatus::Done(o) => *o,
+        SearchStatus::Halted { .. } => panic!("resume must run to completion"),
+    };
+    assert_outcomes_bit_identical(&resumed, &full, "resumed-vs-uninterrupted");
+
+    // The end-of-run checkpoint makes a second resume an instant replay
+    // with the same outcome (the sweep `--resume` skip-finished path).
+    let replay = match run_search_resumable(
+        &engine,
+        &manifest,
+        &dataset,
+        &cfg,
+        Some(&CheckpointSpec::at(ckpt, true)),
+    )
+    .unwrap()
+    {
+        SearchStatus::Done(o) => *o,
+        SearchStatus::Halted { .. } => panic!("replay must complete"),
+    };
+    assert_outcomes_bit_identical(&replay, &full, "replayed-vs-uninterrupted");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn mismatched_checkpoint_is_rejected_not_silently_restarted() {
+    let manifest = fixture_manifest();
+    let cfg = tiny_cfg(7);
+    let dataset = dataset_for_supernet(manifest.supernet("tiny").unwrap());
+    let engine = Engine::cpu().unwrap();
+
+    let dir = tmpdir("mismatch");
+    let ckpt = dir.join("checkpoint.json");
+    let spec = CheckpointSpec { path: ckpt.clone(), resume: false, halt_at_epoch: Some(3) };
+    let _ = run_search_resumable(&engine, &manifest, &dataset, &cfg, Some(&spec)).unwrap();
+
+    // Same checkpoint, different seed -> refuse.
+    let other = tiny_cfg(8);
+    let err = run_search_resumable(
+        &engine,
+        &manifest,
+        &dataset,
+        &other,
+        Some(&CheckpointSpec::at(ckpt.clone(), true)),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("seed"), "{err}");
+
+    // Same seed, different schedule length -> refuse.
+    let mut longer = tiny_cfg(7);
+    longer.schedule = PgpSchedule::pgp(3, 4);
+    let err = run_search_resumable(
+        &engine,
+        &manifest,
+        &dataset,
+        &longer,
+        Some(&CheckpointSpec::at(ckpt.clone(), true)),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("schedule"), "{err}");
+
+    // Same TOTAL length, different stage layout (vanilla vs pgp at 3+2
+    // epochs) -> refuse: resumed epochs would run under different
+    // gates/enabled sets.
+    let mut vanilla = tiny_cfg(7);
+    vanilla.schedule = PgpSchedule::vanilla(3, 2);
+    let err = run_search_resumable(
+        &engine,
+        &manifest,
+        &dataset,
+        &vanilla,
+        Some(&CheckpointSpec::at(ckpt.clone(), true)),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("stage schedule"), "{err}");
+
+    // Same shape, different steps_per_epoch (or any trajectory-shaping
+    // hyperparameter) -> refuse rather than continue a hybrid trajectory.
+    let mut steps = tiny_cfg(7);
+    steps.steps_per_epoch = 5;
+    let err = run_search_resumable(
+        &engine,
+        &manifest,
+        &dataset,
+        &steps,
+        Some(&CheckpointSpec::at(ckpt.clone(), true)),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("hyperparameters"), "{err}");
+    let mut lr = tiny_cfg(7);
+    lr.lr_w *= 2.0;
+    let err = run_search_resumable(
+        &engine,
+        &manifest,
+        &dataset,
+        &lr,
+        Some(&CheckpointSpec::at(ckpt, true)),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("hyperparameters"), "{err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn resume_without_checkpointing_is_rejected() {
+    let manifest = fixture_manifest();
+    let engine = Engine::cpu().unwrap();
+    let runs = vec![SweepRun { name: "r".into(), cfg: tiny_cfg(1) }];
+    let opts = SweepOptions {
+        jobs: 1,
+        out_dir: tmpdir("noresume"),
+        checkpoint: false,
+        resume: true,
+    };
+    let err = run_sweep(&engine, &manifest, &runs, &opts).unwrap_err().to_string();
+    assert!(err.contains("checkpoint"), "{err}");
+    std::fs::remove_dir_all(opts.out_dir).ok();
+}
+
+#[test]
+fn sweep_survives_a_failing_cell_and_reports_it() {
+    let manifest = fixture_manifest();
+    let runs = vec![
+        SweepRun { name: "good".into(), cfg: tiny_cfg(1) },
+        SweepRun {
+            name: "bad_space".into(),
+            cfg: {
+                let mut c = tiny_cfg(2);
+                c.space_key = "tiny".into();
+                c
+            },
+        },
+    ];
+    // Unknown spaces fail the whole sweep up front (structural)...
+    let mut structural = runs.clone();
+    structural[1].cfg.space_key = "nope".into();
+    let engine = Engine::cpu().unwrap();
+    let opts = SweepOptions {
+        jobs: 2,
+        out_dir: tmpdir("fail"),
+        checkpoint: false,
+        resume: false,
+    };
+    assert!(run_sweep(&engine, &manifest, &structural, &opts).is_err());
+    // ...duplicate names too.
+    let dup = vec![
+        SweepRun { name: "same".into(), cfg: tiny_cfg(1) },
+        SweepRun { name: "same".into(), cfg: tiny_cfg(2) },
+    ];
+    let err = run_sweep(&engine, &manifest, &dup, &opts).unwrap_err().to_string();
+    assert!(err.contains("duplicate"), "{err}");
+    // ...while valid cells all succeed...
+    let results = run_sweep(&engine, &manifest, &runs, &opts).unwrap();
+    assert!(results.iter().all(|r| r.outcome.is_ok()));
+
+    // ...and a RUN-LEVEL failure stays contained per-cell: complete one
+    // cell under checkpointing, then resume-sweep it with a changed
+    // steps_per_epoch (its checkpoint now mismatches -> that cell errors)
+    // next to a healthy cell, which must still run to completion.
+    let out = tmpdir("cellfail");
+    let ck = SweepOptions { jobs: 2, out_dir: out.clone(), checkpoint: true, resume: false };
+    let clash = vec![SweepRun { name: "clash".into(), cfg: tiny_cfg(3) }];
+    run_sweep(&engine, &manifest, &clash, &ck).unwrap();
+    let mut changed = tiny_cfg(3);
+    changed.steps_per_epoch += 1;
+    let mixed = vec![
+        SweepRun { name: "clash".into(), cfg: changed },
+        SweepRun { name: "healthy".into(), cfg: tiny_cfg(4) },
+    ];
+    let res = SweepOptions { jobs: 2, out_dir: out.clone(), checkpoint: true, resume: true };
+    let results = run_sweep(&engine, &manifest, &mixed, &res).unwrap();
+    let err = results[0].outcome.as_ref().unwrap_err().to_string();
+    assert!(err.contains("hyperparameters"), "{err}");
+    assert!(results[1].outcome.is_ok(), "healthy cell must survive the failing one");
+    std::fs::remove_dir_all(out).ok();
+    std::fs::remove_dir_all(opts.out_dir).ok();
+}
+
+#[test]
+fn zero_epoch_schedule_completes_with_empty_log() {
+    // The degenerate-schedule satellite: pgp(0,0) -> empty stage list ->
+    // run_search must return (NaN final acc), not panic on the missing
+    // train_acc curve.
+    let manifest = fixture_manifest();
+    let mut cfg = tiny_cfg(1);
+    cfg.schedule = PgpSchedule::pgp(0, 0);
+    let dataset = dataset_for_supernet(manifest.supernet("tiny").unwrap());
+    let engine = Engine::cpu().unwrap();
+    let out = run_search(&engine, &manifest, &dataset, &cfg).unwrap();
+    assert!(out.log.scalar("final_train_acc").unwrap().is_nan());
+    assert!(out.log.curve("train_acc").is_none());
+    assert_eq!(out.choices.len(), 2);
+}

@@ -94,10 +94,20 @@ pub trait BorrowLiteral {}
 impl BorrowLiteral for Literal {}
 impl<'a, B: BorrowLiteral> BorrowLiteral for &'a B {}
 
+/// Marker giving a handle type the same auto-traits as the real
+/// raw-pointer-backed xla_extension handles: **not** `Send`/`Sync`.
+/// This keeps `cargo check --features pjrt` honest — code that shares an
+/// engine across threads (the sweep orchestrator) must state its
+/// thread-safety assumption explicitly at the engine seam (see the
+/// `unsafe impl`s in `rust/src/runtime/engine.rs`) instead of silently
+/// relying on the stub being plain data.
+#[derive(Debug, Default, Clone, Copy)]
+struct NotThreadSafe(std::marker::PhantomData<*const ()>);
+
 /// Device buffer handle returned by execution.
 #[derive(Debug)]
 pub struct PjRtBuffer {
-    _private: (),
+    _private: NotThreadSafe,
 }
 
 impl PjRtBuffer {
@@ -110,7 +120,7 @@ impl PjRtBuffer {
 /// A compiled, loaded executable.
 #[derive(Debug)]
 pub struct PjRtLoadedExecutable {
-    _private: (),
+    _private: NotThreadSafe,
 }
 
 impl PjRtLoadedExecutable {
@@ -123,7 +133,7 @@ impl PjRtLoadedExecutable {
 /// PJRT client handle.
 #[derive(Debug)]
 pub struct PjRtClient {
-    _private: (),
+    _private: NotThreadSafe,
 }
 
 impl PjRtClient {
