@@ -1,0 +1,97 @@
+//! Serve exhibit: dynamic batching vs batch=1 on the stub backend, plus
+//! the bit-determinism proof of the virtual-time loadtest.
+//!
+//! Feeds EXPERIMENTS.md §Perf Iteration 3 (ci.sh runs
+//! `cargo bench --bench serve_loadtest -- --quick --json BENCH_serve.json`
+//! and diffs it against the committed `BENCH_baseline_serve.json`).
+//!
+//! Two claims, measured separately:
+//!
+//! * **Wall clock** — draining the same closed-loop workload through the
+//!   real engine with `batch_max=8` vs `batch_max=1`. The stub hashes
+//!   every input tensor per artifact run, so per-batch weight traffic is
+//!   real work and batching amortizes it exactly like weight fetch on
+//!   the accelerator (`serve/speedup_batch8_vs_batch1`).
+//! * **Virtual time** — modeled throughput from the mapper-priced
+//!   service model at both settings; `serve/vthroughput_*` records the
+//!   req/s, and batch-max=8 must be *strictly* higher (asserted, the
+//!   acceptance criterion).
+
+use nasa::model::zoo::{resnet32_adder_like, shiftaddnet_like};
+use nasa::runtime::Engine;
+use nasa::serve::{run_loadtest, LoadSpec, Process, ServeConfig, ServedModel, Service};
+use nasa::util::bench::{env_usize, header, Runner};
+use std::path::Path;
+use std::sync::Arc;
+
+fn service(batch_max: usize) -> Service {
+    let m0 = ServedModel::from_arch("sa16", &shiftaddnet_like(16, 10), 1).unwrap();
+    let m1 = ServedModel::from_arch("rn16", &resnet32_adder_like(16, 10), 2).unwrap();
+    let cfg = ServeConfig { batch_max, deadline_us: 2_000, ..ServeConfig::default() };
+    Service::new(Arc::new(Engine::cpu().unwrap()), Path::new("artifacts"), vec![m0, m1], cfg)
+        .unwrap()
+}
+
+fn main() {
+    let mut runner = Runner::from_args();
+    header();
+    // NASA_SERVE_REQUESTS sizes the workload (default 400, quick 160).
+    let n = env_usize("NASA_SERVE_REQUESTS", if runner.is_quick() { 160 } else { 400 });
+    let spec = LoadSpec {
+        requests: n,
+        process: Process::Closed { clients: 16, think_us: 0 },
+        mix: vec![3.0, 1.0],
+    };
+
+    let svc8 = service(8);
+    let svc1 = service(1);
+
+    // Wall-clock: same workload, batched vs unbatched, through the real
+    // (stub) engine. Each iteration simulates the full workload.
+    let wall8 = runner.bench("serve/loadtest_closed_batch8", || {
+        let out = run_loadtest(&svc8, &spec, 42).unwrap();
+        assert_eq!(out.metrics.completed as usize, n);
+        std::hint::black_box(out.metrics.span_us);
+    });
+    let wall1 = runner.bench("serve/loadtest_closed_batch1", || {
+        let out = run_loadtest(&svc1, &spec, 42).unwrap();
+        assert_eq!(out.metrics.completed as usize, n);
+        std::hint::black_box(out.metrics.span_us);
+    });
+    runner.record_speedup("serve/speedup_batch8_vs_batch1", &wall1, &wall8);
+
+    // Virtual-time throughput + occupancy: the acceptance criterion is
+    // strictly-higher modeled throughput with dynamic batching on.
+    let out8 = run_loadtest(&svc8, &spec, 42).unwrap();
+    let out1 = run_loadtest(&svc1, &spec, 42).unwrap();
+    let (t8, t1) = (out8.metrics.throughput_rps(), out1.metrics.throughput_rps());
+    runner.record_value("serve/vthroughput_rps_batch8", t8);
+    runner.record_value("serve/vthroughput_rps_batch1", t1);
+    runner.record_value("serve/vthroughput_gain_batch8_vs_batch1", t8 / t1);
+    runner.record_value("serve/occupancy_batch8", out8.metrics.batch_occupancy());
+    runner.record_value("serve/p99_us_batch8", out8.metrics.global.percentile(0.99) as f64);
+    runner.record_value("serve/p99_us_batch1", out1.metrics.global.percentile(0.99) as f64);
+    assert!(
+        t8 > t1,
+        "dynamic batching must beat batch=1: {t8:.1} vs {t1:.1} req/s"
+    );
+    assert!(out8.metrics.batch_occupancy() > 1.0, "batching never coalesced");
+
+    // Bit-determinism exhibit: two fresh runs of the same seeded
+    // workload must agree byte-for-byte on batches and metrics JSON.
+    let again = run_loadtest(&service(8), &spec, 42).unwrap();
+    assert_eq!(again.batches, out8.batches, "batch boundaries must replay exactly");
+    assert_eq!(
+        again.metrics.to_json().to_string(),
+        out8.metrics.to_json().to_string(),
+        "metrics JSON must replay exactly"
+    );
+    println!(
+        "serve: batch8 {t8:.1} req/s vs batch1 {t1:.1} req/s (x{:.2} virtual), \
+         occupancy {:.2}, deterministic replay OK",
+        t8 / t1,
+        out8.metrics.batch_occupancy()
+    );
+
+    runner.finish();
+}

@@ -43,6 +43,54 @@ cargo run --release --quiet -- sweep --artifacts fixtures/tiny_manifest \
 test -f target/ci_sweep/tiny_vanilla_recipe_s1/checkpoint.json
 test -f target/ci_sweep/arch_tiny_vanilla_recipe_s2.json
 
+say "serve smoke: live service + deterministic loadtest replay"
+# Derive two tiny children from the committed fixture manifest, launch
+# the in-process live service (closed loop, 200 requests across 4
+# clients), then replay its recorded arrival trace through the
+# virtual-time loadtest TWICE — the two metrics JSONs must be
+# byte-identical (bit-deterministic batching), every request must
+# complete (zero dropped), and p99 must be reported.
+rm -rf target/ci_serve
+mkdir -p target/ci_serve
+cargo run --release --quiet -- derive --artifacts fixtures/tiny_manifest \
+    --space tiny --choices 0,1 --name s0 --out target/ci_serve
+cargo run --release --quiet -- derive --artifacts fixtures/tiny_manifest \
+    --space tiny --choices 1,2 --name s1 --out target/ci_serve
+SERVE_MODELS=target/ci_serve/arch_s0.json,target/ci_serve/arch_s1.json
+cargo run --release --quiet -- serve --models "$SERVE_MODELS" \
+    --requests 200 --clients 4 --batch-max 8 --deadline-us 2000 --seed 7 \
+    --trace target/ci_serve/trace.json
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --trace target/ci_serve/trace.json --batch-max 8 --deadline-us 2000 \
+    --json target/ci_serve/replay1.json
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --trace target/ci_serve/trace.json --batch-max 8 --deadline-us 2000 \
+    --json target/ci_serve/replay2.json
+cmp target/ci_serve/replay1.json target/ci_serve/replay2.json
+grep -q '"completed":200' target/ci_serve/replay1.json
+grep -q '"rejected":0' target/ci_serve/replay1.json
+grep -q '"p99_us"' target/ci_serve/replay1.json
+# A seeded closed-loop loadtest must be deterministic end to end too.
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --closed-loop 4 --requests 200 --seed 11 --json target/ci_serve/cl1.json
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --closed-loop 4 --requests 200 --seed 11 --json target/ci_serve/cl2.json
+cmp target/ci_serve/cl1.json target/ci_serve/cl2.json
+
+say "serve perf smoke: serve_loadtest --quick --json BENCH_serve.json"
+# Batched-vs-unbatched throughput exhibit (EXPERIMENTS.md §Perf
+# Iteration 3); the bench itself asserts batch-max=8 strictly beats
+# batch=1 and that the seeded replay is bit-identical.
+cargo bench --bench serve_loadtest -- --quick --json BENCH_serve.json
+
+say "serve bench baseline diff (advisory)"
+if [ -f BENCH_baseline_serve.json ]; then
+    python3 scripts/bench_diff.py BENCH_baseline_serve.json BENCH_serve.json
+else
+    cp BENCH_serve.json BENCH_baseline_serve.json
+    echo "no serve baseline found -- seeded BENCH_baseline_serve.json from this run (commit it)"
+fi
+
 say "mapper perf smoke: accel_microbench --quick --json BENCH_mapper.json"
 # Keeps the perf trajectory accumulating (EXPERIMENTS.md §Perf reads this
 # file); --quick bounds the smoke to a few iterations per benchmark.

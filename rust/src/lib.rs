@@ -3,9 +3,11 @@
 //!
 //! Three-layer architecture:
 //! * **L3 (this crate)** — the coordinator: NAS outer loop (PGP +
-//!   Gumbel-Softmax DNAS), optimizers, data pipeline, and the entire
+//!   Gumbel-Softmax DNAS), optimizers, data pipeline, the entire
 //!   hardware side (chunk-based accelerator simulator, Eyeriss /
-//!   AdderNet-accelerator baselines, auto-mapper dataflow search).
+//!   AdderNet-accelerator baselines, auto-mapper dataflow search), and
+//!   the online serving layer (`serve`: dynamic-batching inference
+//!   service + deterministic load-test harness over the shared engine).
 //! * **L2** — the hybrid supernet fwd/bwd in JAX (python/compile/model.py),
 //!   AOT-lowered once to HLO text.
 //! * **L1** — Pallas kernels for the conv/shift/adder operators
@@ -27,4 +29,5 @@ pub mod model;
 pub mod nas;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

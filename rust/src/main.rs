@@ -7,6 +7,9 @@
 //!   train     train a derived choice vector from scratch + eval FP32/FXP
 //!   simulate  run an arch through the chunk accelerator / baselines
 //!   map       run the auto-mapper on an arch (Fig. 8 machinery)
+//!   serve     run the live dynamic-batching inference service in-process
+//!             (closed-loop self-drive, replayable --trace output)
+//!   loadtest  deterministic virtual-time load test of the same service
 //!   check     verify artifacts + engine round-trip
 //!   report    print paper-style tables/figures from saved runs
 
@@ -23,8 +26,13 @@ use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::{arch_op_counts, Arch, QuantSpec};
 use nasa::nas::PgpSchedule;
 use nasa::runtime::{Engine, Manifest};
+use nasa::serve::{
+    drive_closed_loop, replay_trace, run_loadtest, LoadSpec, Process, ServeConfig, ServedModel,
+    Service, Trace,
+};
 use nasa::util::cli::Args;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args = Args::parse_env()?;
@@ -36,6 +44,8 @@ fn main() -> Result<()> {
         "derive" => cmd_derive(&args),
         "simulate" => cmd_simulate(&args),
         "map" => cmd_map(&args),
+        "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "check" => cmd_check(&args),
         "report" => cmd_report(&args),
         _ => {
@@ -70,6 +80,20 @@ USAGE: nasa <subcommand> [--options]
   simulate --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
   map      --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
            [--greedy-tiling] [--no-lattice] [--tied-noc] [--reference]
+  serve    --models runs/a.json,runs/b.json [--requests 200] [--clients 4]
+           [--batch-max 8] [--deadline-us 2000] [--queue-cap 256]
+           [--overhead-us 50] [--mix 3,1] [--fxp] [--seed 42]
+           [--trace out.json] [--json metrics.json]
+           (live threaded service, wall-clock numbers; --trace records a
+            replayable arrival schedule for `loadtest --trace`)
+  loadtest --models runs/a.json,runs/b.json [--requests 200] [--seed 42]
+           (--rps 1000 [--poisson] | --closed-loop 4 [--think-us 0]
+            | --trace in.json)
+           [--batch-max 8] [--deadline-us 2000] [--queue-cap 256]
+           [--overhead-us 50] [--mix 3,1] [--fxp]
+           [--json metrics.json] [--save-trace out.json]
+           (deterministic virtual-time load test: identical flags+seed
+            give bit-identical batches, latencies and metrics JSON)
   check    [--artifacts artifacts]
   report   table2|fig2|fig6|fig7|fig8 [--out runs]
 "
@@ -332,6 +356,124 @@ fn cmd_map(args: &Args) -> Result<()> {
     }
     if let Some(saving) = r.edp_saving_vs_rs(accel.clock_hz) {
         println!("auto-mapper EDP saving vs RS: {:.1}%", saving * 100.0);
+    }
+    Ok(())
+}
+
+/// Shared `serve`/`loadtest` plumbing: models from `--models` arch-JSON
+/// paths (model names come from the arch files), policy from flags.
+fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>)> {
+    let model_paths = parse_list(args.require("models")?, |t| Ok(t.to_string()))?;
+    if model_paths.is_empty() {
+        bail!("--models needs at least one arch JSON path");
+    }
+    let seed = args.u64_or("seed", 42)?;
+    let mut models = Vec::new();
+    for (i, p) in model_paths.iter().enumerate() {
+        let arch = Arch::load(Path::new(p))?;
+        let name = if arch.name.is_empty() { format!("m{i}") } else { arch.name.clone() };
+        models.push(ServedModel::from_arch(&name, &arch, seed ^ ((i as u64) << 17))?);
+    }
+    let cfg = ServeConfig {
+        batch_max: args.usize_or("batch-max", 8)?,
+        deadline_us: args.u64_or("deadline-us", 2_000)?,
+        queue_cap: args.usize_or("queue-cap", 256)?,
+        batch_overhead_us: args.u64_or("overhead-us", 50)?,
+        fxp: args.flag("fxp"),
+    };
+    let mix = match args.get("mix") {
+        None => vec![],
+        Some(s) => parse_list(s, |t| t.parse::<f64>().map_err(|e| anyhow::anyhow!("--mix: {e}")))?,
+    };
+    let engine = Arc::new(Engine::cpu()?);
+    for m in &models {
+        println!(
+            "model '{}': {} layers, {} params, {:.1} cyc/inf, {:.3} uJ/inf{}",
+            m.name,
+            m.arch.layers.len(),
+            m.n_params(),
+            m.cost.period_cycles,
+            m.cost.energy_uj_per_inf(),
+            if m.cost.mapper_feasible { "" } else { " (mapper infeasible, ops fallback)" }
+        );
+    }
+    let svc = Service::new(engine, &artifacts_dir(args), models, cfg)?;
+    Ok((svc, mix))
+}
+
+/// Run the live threaded service and self-drive it closed-loop.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (svc, mix) = serve_setup(args)?;
+    let requests = args.usize_or("requests", 200)?;
+    let clients = args.usize_or("clients", 4)?;
+    let seed = args.u64_or("seed", 42)?;
+    println!(
+        "serve: live batcher (batch_max={} deadline={}us queue_cap={}), {} closed-loop clients x {} requests",
+        svc.cfg.batch_max, svc.cfg.deadline_us, svc.cfg.queue_cap, clients, requests
+    );
+    let t0 = std::time::Instant::now();
+    let (metrics, trace) = drive_closed_loop(svc, clients, requests, &mix, seed)?;
+    println!("serve done in {:.2}s (wall)", t0.elapsed().as_secs_f64());
+    metrics.print_table();
+    if let Some(p) = args.get("trace") {
+        trace.save(Path::new(p))?;
+        println!("arrival trace ({} rows) -> {p} (replay: nasa loadtest --trace {p})", trace.arrivals.len());
+    }
+    if let Some(p) = args.get("json") {
+        std::fs::write(p, metrics.to_json().to_string())?;
+        println!("metrics -> {p}");
+    }
+    if metrics.completed as usize != requests {
+        bail!("serve: completed {} of {requests} requests", metrics.completed);
+    }
+    Ok(())
+}
+
+/// Deterministic virtual-time load test of the same serving core.
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    let (svc, mix) = serve_setup(args)?;
+    let seed = args.u64_or("seed", 42)?;
+    let requests = args.usize_or("requests", 200)?;
+    let t0 = std::time::Instant::now();
+    let (outcome, what) = if let Some(p) = args.get("trace") {
+        let trace = Trace::load(Path::new(p))?;
+        let n = trace.arrivals.len();
+        (replay_trace(&svc, &trace)?, format!("trace replay ({n} arrivals from {p})"))
+    } else if args.get("closed-loop").is_some() {
+        let clients = args.usize_or("closed-loop", 4)?;
+        let think_us = args.u64_or("think-us", 0)?;
+        let spec = LoadSpec { requests, process: Process::Closed { clients, think_us }, mix };
+        (run_loadtest(&svc, &spec, seed)?, format!("closed-loop ({clients} clients)"))
+    } else {
+        let rps = args.f64_or("rps", 1_000.0)?;
+        let process = if args.flag("poisson") {
+            Process::OpenPoisson { rps }
+        } else {
+            Process::OpenUniform { rps }
+        };
+        let spec = LoadSpec { requests, process, mix };
+        (run_loadtest(&svc, &spec, seed)?, format!("open-loop ({rps} rps)"))
+    };
+    println!(
+        "loadtest [{what}] seed={seed}: simulated {:.3}s of traffic in {:.2}s wall",
+        outcome.metrics.span_us as f64 / 1e6,
+        t0.elapsed().as_secs_f64()
+    );
+    outcome.metrics.print_table();
+    if let Some(p) = args.get("save-trace") {
+        outcome.trace.save(Path::new(p))?;
+        println!("arrival trace -> {p}");
+    }
+    if let Some(p) = args.get("json") {
+        std::fs::write(p, outcome.metrics.to_json().to_string())?;
+        println!("metrics -> {p}");
+    }
+    if outcome.metrics.completed != outcome.metrics.admitted {
+        bail!(
+            "loadtest: {} admitted but only {} completed",
+            outcome.metrics.admitted,
+            outcome.metrics.completed
+        );
     }
     Ok(())
 }

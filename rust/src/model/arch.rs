@@ -168,6 +168,15 @@ impl Arch {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
+    /// The classifier (final) layer, or `None` for a zero-layer arch.
+    /// Op-accounting callers must go through this (or
+    /// [`crate::model::ops::classifier_op_counts`]) rather than
+    /// `layers.last().unwrap()`, so an empty arch stays a typed absence
+    /// instead of a panic.
+    pub fn classifier(&self) -> Option<&LayerDesc> {
+        self.layers.last()
+    }
+
     /// Fraction of MAC positions per operator family.
     pub fn kind_fractions(&self) -> [f64; 3] {
         let total = self.total_macs().max(1) as f64;

@@ -10,5 +10,5 @@ pub mod quant;
 pub mod zoo;
 
 pub use arch::{Arch, LayerDesc, OpKind};
-pub use ops::{arch_op_counts, layer_op_counts, OpCounts};
-pub use quant::QuantSpec;
+pub use ops::{arch_op_counts, classifier_op_counts, layer_op_counts, OpCounts};
+pub use quant::{dequantize, fake_quant, quantize, quantize_with_scale, QuantSpec, QuantTensor};

@@ -54,6 +54,14 @@ pub fn arch_op_counts(a: &Arch) -> OpCounts {
     total
 }
 
+/// Op counts of the classifier (final) layer alone — the Table 2
+/// "everything but the backbone" readout. A zero-layer arch has no
+/// classifier and contributes zero ops; this must not panic (the old
+/// `layers.last().unwrap()` call sites did).
+pub fn classifier_op_counts(a: &Arch) -> OpCounts {
+    a.classifier().map(layer_op_counts).unwrap_or_default()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +116,16 @@ mod tests {
         assert_eq!(c.mult, 128);
         assert_eq!(c.add, 128 + 256);
         assert_eq!(c.total(), 512);
+        assert_eq!(classifier_op_counts(&a), layer_op_counts(&l(OpKind::Adder)));
+    }
+
+    #[test]
+    fn zero_layer_arch_accounts_as_zero_without_panicking() {
+        // Regression: classifier accounting used `layers.last().unwrap()`.
+        let empty = Arch::default();
+        assert!(empty.classifier().is_none());
+        assert_eq!(arch_op_counts(&empty), OpCounts::default());
+        assert_eq!(classifier_op_counts(&empty), OpCounts::default());
+        assert_eq!(classifier_op_counts(&empty).total(), 0);
     }
 }

@@ -1,10 +1,28 @@
-//! Quantization specification (Sec. 5.1): weights/activations in 8-bit
-//! fixed point, except shift/adder layer weights which use 6 bits. The
-//! numeric effect is exercised through the `supernet_eval_quant` artifact;
-//! this module carries the bit-widths into the accelerator energy/area
-//! model (narrower operands -> cheaper PEs and less RF/NoC traffic).
+//! Quantization (Sec. 5.1): weights/activations in 8-bit fixed point,
+//! except shift/adder layer weights which use 6 bits.
+//!
+//! Two halves live here:
+//!
+//! * [`QuantSpec`] — the bit-width table carried into the accelerator
+//!   energy/area model (narrower operands -> cheaper PEs and less RF/NoC
+//!   traffic) and into the `supernet_eval_quant` artifact path.
+//! * The **numeric round-trip** — [`quantize`] / [`dequantize`] /
+//!   [`fake_quant`]: symmetric linear fixed-point over `bits`-wide signed
+//!   integers. The serve subsystem quantizes each served child's weight
+//!   tensors through this (per-layer bit-widths from `QuantSpec`), so an
+//!   FXP-mode service replies with genuinely quantized-weight outputs
+//!   instead of only *labelling* responses FXP.
+//!
+//! Scheme: for a tensor `w` and width `b`, `qmax = 2^(b-1) - 1`,
+//! `scale = max|w| / qmax` (1.0 for an all-zero/non-finite tensor), and
+//! each element maps to `clamp(round(w/scale), -qmax, qmax)`. The
+//! representable range is symmetric (the extra negative two's-complement
+//! code is unused, matching common FXP hardware), round-trip error is at
+//! most `scale/2` for in-range values, and out-of-range values saturate
+//! to `±qmax·scale` (exercised via [`quantize_with_scale`]).
 
 use crate::model::arch::OpKind;
+use anyhow::{bail, Result};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct QuantSpec {
@@ -44,11 +62,95 @@ impl QuantSpec {
     pub fn act_bytes(&self) -> f64 {
         self.act_bits as f64 / 8.0
     }
+
+    /// Quantize→dequantize a weight tensor at this spec's width for the
+    /// given operator family (the serve path's FXP weights).
+    pub fn fake_quant_weights(&self, kind: OpKind, w: &[f32]) -> Result<Vec<f32>> {
+        fake_quant(w, self.weight_bits(kind))
+    }
+}
+
+/// A quantized tensor: integer codes + the scale that dequantizes them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantTensor {
+    pub bits: u32,
+    pub scale: f32,
+    /// Codes in `[-qmax, qmax]` with `qmax = 2^(bits-1) - 1`; stored
+    /// widened to i32 so one type serves every width up to 32.
+    pub q: Vec<i32>,
+}
+
+impl QuantTensor {
+    /// Largest representable code magnitude at this width.
+    pub fn qmax(&self) -> i32 {
+        qmax_for(self.bits)
+    }
+}
+
+fn qmax_for(bits: u32) -> i32 {
+    (1i32 << (bits - 1)) - 1
+}
+
+fn check_bits(bits: u32) -> Result<()> {
+    if !(2..=16).contains(&bits) {
+        bail!("quantize: bits must be in 2..=16, got {bits}");
+    }
+    Ok(())
+}
+
+/// Symmetric per-tensor quantization: scale from the tensor's own max
+/// magnitude (so nothing saturates), 1.0 for all-zero/non-finite input.
+pub fn quantize(w: &[f32], bits: u32) -> Result<QuantTensor> {
+    check_bits(bits)?;
+    let max_abs = w
+        .iter()
+        .copied()
+        .filter(|x| x.is_finite())
+        .fold(0.0f32, |m, x| m.max(x.abs()));
+    let scale = if max_abs > 0.0 { max_abs / qmax_for(bits) as f32 } else { 1.0 };
+    quantize_with_scale(w, bits, scale)
+}
+
+/// Quantize with a caller-chosen scale; elements beyond `±qmax·scale`
+/// saturate to the extreme codes (the FXP overflow behaviour the unit
+/// tests pin). Non-finite elements also map to the saturated extremes
+/// (NaN to 0), so the round-trip is always finite.
+pub fn quantize_with_scale(w: &[f32], bits: u32, scale: f32) -> Result<QuantTensor> {
+    check_bits(bits)?;
+    if !(scale > 0.0) || !scale.is_finite() {
+        bail!("quantize: scale must be finite and positive, got {scale}");
+    }
+    let qmax = qmax_for(bits);
+    let q = w
+        .iter()
+        .map(|&x| {
+            if x.is_nan() {
+                0
+            } else {
+                // f32 -> f64 for the divide so huge x / tiny scale cannot
+                // overflow to inf before the clamp.
+                let r = (x as f64 / scale as f64).round();
+                r.clamp(-(qmax as f64), qmax as f64) as i32
+            }
+        })
+        .collect();
+    Ok(QuantTensor { bits, scale, q })
+}
+
+/// Map integer codes back to f32 weights.
+pub fn dequantize(t: &QuantTensor) -> Vec<f32> {
+    t.q.iter().map(|&c| c as f32 * t.scale).collect()
+}
+
+/// Quantize→dequantize round trip (straight-through FXP simulation).
+pub fn fake_quant(w: &[f32], bits: u32) -> Result<Vec<f32>> {
+    Ok(dequantize(&quantize(w, bits)?))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn default_matches_paper() {
@@ -58,5 +160,99 @@ mod tests {
         assert_eq!(q.weight_bits(OpKind::Shift), 6);
         assert_eq!(q.weight_bits(OpKind::Adder), 6);
         assert_eq!(q.weight_bytes(OpKind::Shift), 0.75);
+    }
+
+    fn seeded_weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.normal() * 0.1) as f32).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        for bits in [6u32, 8] {
+            let w = seeded_weights(4096, 11 + bits as u64);
+            let t = quantize(&w, bits).unwrap();
+            let back = dequantize(&t);
+            assert_eq!(back.len(), w.len());
+            let max_err = w
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // The pinned contract: |w - deq(q(w))| <= scale/2, plus the
+            // f32 rounding of the q*scale product (≤ max|w|·2⁻²³).
+            assert!(
+                max_err <= 0.5 * t.scale * (1.0 + 1e-4),
+                "bits={bits}: max_err={max_err} scale={}",
+                t.scale
+            );
+            // Codes stay inside the symmetric range.
+            assert!(t.q.iter().all(|&c| c.abs() <= t.qmax()));
+        }
+    }
+
+    #[test]
+    fn fxp8_is_no_coarser_than_fxp6() {
+        let w = seeded_weights(2048, 3);
+        let err = |bits| {
+            let back = fake_quant(&w, bits).unwrap();
+            w.iter().zip(&back).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
+        };
+        assert!(err(8) <= err(6));
+    }
+
+    #[test]
+    fn tensor_extremes_hit_the_extreme_codes() {
+        // The element that sets the scale maps to the ±qmax codes and
+        // round-trips to ±max|w| up to one f32 rounding of the scale.
+        let w = vec![-0.5f32, 0.1, 0.5];
+        let t = quantize(&w, 8).unwrap();
+        let back = dequantize(&t);
+        assert_eq!(t.q[0], -t.qmax());
+        assert_eq!(t.q[2], t.qmax());
+        assert!((back[0] + 0.5).abs() < 1e-6);
+        assert!((back[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn saturation_clamps_to_extreme_codes() {
+        // Fixed scale of 0.01 at 6 bits represents ±31·0.01 = ±0.31;
+        // everything beyond saturates, infinities included.
+        let w = vec![10.0f32, -10.0, 0.05, f32::INFINITY, f32::NEG_INFINITY, f32::NAN];
+        let t = quantize_with_scale(&w, 6, 0.01).unwrap();
+        assert_eq!(t.q[0], 31);
+        assert_eq!(t.q[1], -31);
+        assert_eq!(t.q[2], 5);
+        assert_eq!(t.q[3], 31);
+        assert_eq!(t.q[4], -31);
+        assert_eq!(t.q[5], 0);
+        let back = dequantize(&t);
+        assert!((back[0] - 0.31).abs() < 1e-6);
+        assert!(back.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn degenerate_and_invalid_inputs() {
+        // All-zero tensor: scale defaults to 1.0, round-trip is exact.
+        let t = quantize(&[0.0, 0.0], 8).unwrap();
+        assert_eq!(t.scale, 1.0);
+        assert_eq!(dequantize(&t), vec![0.0, 0.0]);
+        // Empty tensor round-trips to empty.
+        assert_eq!(fake_quant(&[], 8).unwrap(), Vec::<f32>::new());
+        // Width and scale validation.
+        assert!(quantize(&[1.0], 1).is_err());
+        assert!(quantize(&[1.0], 17).is_err());
+        assert!(quantize_with_scale(&[1.0], 8, 0.0).is_err());
+        assert!(quantize_with_scale(&[1.0], 8, f32::NAN).is_err());
+    }
+
+    #[test]
+    fn spec_routes_weight_bits_by_kind() {
+        let spec = QuantSpec::default();
+        let w = seeded_weights(512, 9);
+        let conv = spec.fake_quant_weights(OpKind::Conv, &w).unwrap();
+        let shift = spec.fake_quant_weights(OpKind::Shift, &w).unwrap();
+        assert_eq!(conv, fake_quant(&w, 8).unwrap());
+        assert_eq!(shift, fake_quant(&w, 6).unwrap());
     }
 }

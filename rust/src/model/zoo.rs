@@ -235,7 +235,7 @@ pub fn shiftaddnet_like(input_hw: usize, num_classes: usize) -> Arch {
 #[cfg(test)]
 mod shiftadd_tests {
     use super::*;
-    use crate::model::ops::arch_op_counts;
+    use crate::model::ops::{arch_op_counts, classifier_op_counts, OpCounts};
 
     #[test]
     fn shiftaddnet_is_multiplication_free_except_fc() {
@@ -243,8 +243,17 @@ mod shiftadd_tests {
         let c = arch_op_counts(&a);
         assert!(c.shift > 0 && c.add > 0);
         // Only the classifier multiplies.
-        let fc_macs = a.layers.last().unwrap().macs();
-        assert_eq!(c.mult, fc_macs);
+        assert_eq!(c.mult, classifier_op_counts(&a).mult);
+    }
+
+    #[test]
+    fn classifier_accounting_survives_zero_layer_arch() {
+        // Regression for the old `a.layers.last().unwrap()` panic path:
+        // a handcrafted-baselines consumer probing an empty arch must get
+        // zeros, not a panic.
+        let empty = Arch { name: "empty".into(), layers: vec![], choices: vec![] };
+        assert_eq!(classifier_op_counts(&empty), OpCounts::default());
+        assert_eq!(arch_op_counts(&empty).total(), 0);
     }
 
     #[test]

@@ -36,4 +36,4 @@ mod stub;
 pub use stub::{Engine, Executable, Literal};
 
 pub use manifest::{ArtifactIo, CandSpec, LayerGeom, Manifest, ParamEntry, SupernetManifest};
-pub use tensor::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, HostTensor};
+pub use tensor::{lit_f32, lit_f32_batch, lit_i32, lit_scalar_f32, to_vec_f32, HostTensor};

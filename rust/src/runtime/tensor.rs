@@ -119,6 +119,33 @@ pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
     Ok(l.to_vec::<f32>()?)
 }
 
+/// Assemble per-request samples into one batched literal of shape
+/// `[samples.len(), ...sample_shape]` — the serve subsystem's dynamic
+/// batcher coalesces queued requests through this single seam (it is
+/// backend-agnostic: the concatenated buffer goes through [`lit_f32`]).
+/// Every sample must match the sample shape's element count exactly.
+pub fn lit_f32_batch(sample_shape: &[usize], samples: &[Vec<f32>]) -> Result<Literal> {
+    if samples.is_empty() {
+        bail!("lit_f32_batch: empty batch");
+    }
+    let per: usize = sample_shape.iter().product();
+    let mut flat = Vec::with_capacity(per * samples.len());
+    for (i, s) in samples.iter().enumerate() {
+        if s.len() != per {
+            bail!(
+                "lit_f32_batch: sample {i} has {} elems, sample shape {:?} wants {per}",
+                s.len(),
+                sample_shape
+            );
+        }
+        flat.extend_from_slice(s);
+    }
+    let mut shape = Vec::with_capacity(sample_shape.len() + 1);
+    shape.push(samples.len());
+    shape.extend_from_slice(sample_shape);
+    lit_f32(&shape, &flat)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +165,24 @@ mod tests {
         assert!(lit_i32(&[3], &[1, 2, 3]).is_ok());
         assert!(lit_i32(&[3], &[1, 2]).is_err());
         assert_eq!(lit_scalar_f32(1.5).element_count(), 1);
+    }
+
+    #[test]
+    fn batch_assembly_shapes_and_rejects() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let l = lit_f32_batch(&[2], &[a.clone(), b]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(lit_f32_batch(&[2], &[]).is_err());
+        assert!(lit_f32_batch(&[3], &[a]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_batch_preserves_sample_order() {
+        let l = lit_f32_batch(&[1, 2], &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(l.shape(), &[2, 1, 2]);
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
     }
 
     #[cfg(not(feature = "pjrt"))]

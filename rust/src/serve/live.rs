@@ -1,0 +1,293 @@
+//! The threaded shell around the serving core: a [`LiveService`] accepts
+//! `submit` calls from any thread, and ONE long-lived batcher worker
+//! (`util::par::Worker` — the long-lived counterpart of the scoped
+//! `par_map` substrate) drains the shared [`BatchQueue`] under the same
+//! full-batch / deadline-flush policy the virtual-time loadtest uses.
+//! Responses come back over per-request mpsc channels; timing here is
+//! wall-clock (microseconds since service start), so live numbers are
+//! *not* bit-deterministic — determinism claims live with the
+//! virtual-time engine in `serve::loadgen`. `nasa serve` can record every
+//! admitted arrival as a `loadgen::Trace`, which `nasa loadtest --trace`
+//! then replays deterministically.
+
+use super::loadgen::{json_safe_seed, pick_model, Arrival, LoadSpec, Process, Trace};
+use super::metrics::ServeMetrics;
+use super::service::{BatchQueue, Rejected, Request, Response, Service};
+use crate::util::par::Worker;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct LiveState {
+    queue: BatchQueue,
+    /// Response channel per queued request id.
+    pending: std::collections::BTreeMap<u64, Sender<Response>>,
+    metrics: ServeMetrics,
+    /// Every admitted arrival, for `--trace` replay.
+    trace: Trace,
+    open: bool,
+    worker_err: Option<String>,
+}
+
+struct LiveShared {
+    svc: Service,
+    state: Mutex<LiveState>,
+    cv: Condvar,
+    t0: Instant,
+}
+
+/// A running in-process inference service (one batcher worker).
+pub struct LiveService {
+    shared: Arc<LiveShared>,
+    worker: Option<Worker>,
+    next_id: AtomicU64,
+}
+
+impl LiveService {
+    pub fn start(svc: Service) -> LiveService {
+        let n_models = svc.models.len();
+        let queue_cap = svc.cfg.queue_cap;
+        let metrics = ServeMetrics::new(&svc.models);
+        let shared = Arc::new(LiveShared {
+            state: Mutex::new(LiveState {
+                queue: BatchQueue::new(n_models, queue_cap),
+                pending: std::collections::BTreeMap::new(),
+                metrics,
+                trace: Trace::default(),
+                open: true,
+                worker_err: None,
+            }),
+            cv: Condvar::new(),
+            t0: Instant::now(),
+            svc,
+        });
+        let shell = shared.clone();
+        let wake_shared = shared.clone();
+        let worker = Worker::spawn(
+            "serve-batcher",
+            // Take the state lock before notifying: the batcher holds it
+            // from its stop-flag check until it parks on the condvar, so
+            // a lockless notify could land in that window and be lost.
+            move || {
+                let _guard = wake_shared.state.lock();
+                wake_shared.cv.notify_all();
+            },
+            move |stop| batcher_loop(&shell, stop),
+        );
+        LiveService { shared, worker: Some(worker), next_id: AtomicU64::new(0) }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.shared.t0.elapsed().as_micros() as u64
+    }
+
+    /// Submit one request for `model`; returns the channel its response
+    /// will arrive on, or the typed admission-control refusal.
+    pub fn submit(&self, model: usize, seed: u64) -> Result<Receiver<Response>, Rejected> {
+        let arrival_us = self.now_us();
+        let mut st = self.shared.state.lock().expect("live state poisoned");
+        if !st.open {
+            return Err(Rejected::Closed);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, model, client: usize::MAX, arrival_us, seed };
+        match st.queue.submit(req) {
+            Ok(()) => {
+                st.metrics.on_admit();
+                st.trace.arrivals.push(Arrival { t_us: arrival_us, model, seed });
+                let (tx, rx) = channel();
+                st.pending.insert(id, tx);
+                drop(st);
+                self.shared.cv.notify_all();
+                Ok(rx)
+            }
+            Err(e) => {
+                st.metrics.on_reject(model);
+                Err(e)
+            }
+        }
+    }
+
+    /// Stop accepting work, let the batcher drain the queue, join it, and
+    /// return the final metrics plus the replayable arrival trace.
+    pub fn shutdown(mut self) -> Result<(ServeMetrics, Trace)> {
+        {
+            let mut st = self.shared.state.lock().expect("live state poisoned");
+            st.open = false;
+        }
+        self.shared.cv.notify_all();
+        if let Some(w) = self.worker.take() {
+            w.stop_and_join();
+        }
+        let mut st = self.shared.state.lock().expect("live state poisoned");
+        if let Some(e) = st.worker_err.take() {
+            return Err(anyhow!("serve batcher failed: {e}"));
+        }
+        let mut trace = std::mem::take(&mut st.trace);
+        // Wall-clock submissions can interleave across threads; the
+        // canonical replay order is by (time, model, seed).
+        trace.arrivals.sort_by_key(|a| (a.t_us, a.model, a.seed));
+        Ok((st.metrics.clone(), trace))
+    }
+}
+
+/// The worker body: coalesce → execute → deliver, sleeping until the
+/// next deadline when no batch is ready. On `stop`/close it drains the
+/// queue (deadline policy ignored — everything flushes) before exiting.
+fn batcher_loop(shared: &LiveShared, stop: &AtomicBool) {
+    let cfg = shared.svc.cfg;
+    let mut st = shared.state.lock().expect("live state poisoned");
+    loop {
+        let draining = stop.load(Ordering::Acquire) || !st.open;
+        let now = shared.t0.elapsed().as_micros() as u64;
+        // When draining, every queued request is "expired" (deadline 0).
+        let deadline = if draining { 0 } else { cfg.deadline_us };
+        if let Some((model, reqs)) = st.queue.pop_ready(now, cfg.batch_max, deadline) {
+            let txs: Vec<Option<Sender<Response>>> =
+                reqs.iter().map(|r| st.pending.remove(&r.id)).collect();
+            drop(st); // execute without holding the lock
+            let start = shared.t0.elapsed().as_micros() as u64;
+            let result = shared.svc.execute_batch(model, &reqs, start);
+            st = shared.state.lock().expect("live state poisoned");
+            match result {
+                Ok((mut resps, mut rec)) => {
+                    // Live mode reports wall time, not the virtual model.
+                    let done = shared.t0.elapsed().as_micros() as u64;
+                    rec.done_us = done;
+                    st.metrics.on_batch(&rec);
+                    for (r, tx) in resps.iter_mut().zip(txs) {
+                        r.done_us = done;
+                        st.metrics.on_response(r);
+                        if let Some(tx) = tx {
+                            let _ = tx.send(r.clone()); // receiver may be gone
+                        }
+                    }
+                }
+                Err(e) => {
+                    st.worker_err.get_or_insert_with(|| e.to_string());
+                }
+            }
+            continue;
+        }
+        if draining && st.queue.total() == 0 {
+            return;
+        }
+        // Sleep until the earliest queued deadline (or a coarse tick so a
+        // shutdown with an empty queue is noticed promptly).
+        let wait_us = st
+            .queue
+            .next_deadline(cfg.deadline_us)
+            .map(|d| d.saturating_sub(now))
+            .unwrap_or(cfg.deadline_us.max(1_000))
+            .clamp(50, 1_000_000);
+        let (guard, _) = shared
+            .cv
+            .wait_timeout(st, Duration::from_micros(wait_us))
+            .expect("live state poisoned");
+        st = guard;
+    }
+}
+
+/// Drive a live service with closed-loop clients from the calling
+/// process (the `nasa serve` self-drive and the ci.sh smoke): `clients`
+/// threads each issue their share of `requests` sequentially, blocking
+/// on each response. Returns metrics + the replayable arrival trace.
+pub fn drive_closed_loop(
+    svc: Service,
+    clients: usize,
+    requests: usize,
+    mix: &[f64],
+    seed: u64,
+) -> Result<(ServeMetrics, Trace)> {
+    let clients = clients.max(1);
+    // Same mix normalization/validation as the virtual loadtest path.
+    let cum = LoadSpec {
+        requests,
+        process: Process::Closed { clients, think_us: 0 },
+        mix: mix.to_vec(),
+    }
+    .cumulative_mix(svc.models.len())?;
+    let live = Arc::new(LiveService::start(svc));
+    let failures: Vec<String> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let live = live.clone();
+            let share = requests / clients + usize::from(c < requests % clients);
+            let cum = cum.clone();
+            handles.push(s.spawn(move || -> Result<(), String> {
+                let mut rng = crate::util::rng::Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37));
+                for _ in 0..share {
+                    let model = pick_model(&mut rng, &cum);
+                    let req_seed = json_safe_seed(&mut rng);
+                    loop {
+                        match live.submit(model, req_seed) {
+                            Ok(rx) => {
+                                rx.recv().map_err(|e| format!("response channel: {e}"))?;
+                                break;
+                            }
+                            Err(Rejected::QueueFull { .. }) => {
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(e) => return Err(format!("submit refused: {e}")),
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().unwrap_or_else(|_| Err("client panicked".into())).err())
+            .collect()
+    });
+    let live = Arc::into_inner(live).expect("all client threads joined");
+    let (metrics, trace) = live.shutdown()?;
+    if let Some(f) = failures.first() {
+        anyhow::bail!("live drive failed: {f}");
+    }
+    Ok((metrics, trace))
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use crate::model::zoo::shiftaddnet_like;
+    use crate::runtime::Engine;
+    use crate::serve::model::ServedModel;
+    use crate::serve::service::ServeConfig;
+    use std::path::Path;
+
+    fn tiny_service(cfg: ServeConfig) -> Service {
+        let arch = shiftaddnet_like(8, 4);
+        let m = ServedModel::from_arch("live", &arch, 5).unwrap();
+        Service::new(Arc::new(Engine::cpu().unwrap()), Path::new("artifacts"), vec![m], cfg)
+            .unwrap()
+    }
+
+    #[test]
+    fn live_service_serves_and_drains_on_shutdown() {
+        let cfg = ServeConfig { deadline_us: 500, ..ServeConfig::default() };
+        let (metrics, trace) =
+            drive_closed_loop(tiny_service(cfg), 2, 24, &[], 42).unwrap();
+        assert_eq!(metrics.completed, 24, "every request must be answered");
+        assert_eq!(metrics.admitted, 24);
+        assert_eq!(trace.arrivals.len(), 24);
+        assert!(metrics.batches >= 1);
+        assert!(metrics.span_us > 0);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_request_and_closes() {
+        let live = LiveService::start(tiny_service(ServeConfig::default()));
+        let rx = live.submit(0, 1).unwrap();
+        // (the response may or may not have arrived yet — both are fine)
+        let shared = live.shared.clone();
+        let (m, _) = live.shutdown().unwrap();
+        assert_eq!(m.completed, 1, "shutdown must drain the queued request");
+        assert!(rx.try_recv().is_ok(), "drained response must be delivered");
+        let st = shared.state.lock().unwrap();
+        assert!(!st.open, "shutdown leaves the service closed");
+    }
+}

@@ -1,0 +1,453 @@
+//! Deterministic load generation + the virtual-time loadtest engine.
+//!
+//! Arrival processes are seeded over `util::rng`, so a load test is a
+//! pure function of `(models, config, spec, seed)`:
+//!
+//! * **Open-loop** — requests arrive on a schedule regardless of service
+//!   progress: uniform (`rps` evenly spaced) or Poisson (exponential
+//!   inter-arrivals), over a weighted multi-model mix. Open arrivals are
+//!   materialized as a [`Trace`] first (saveable/replayable JSON — the
+//!   `nasa serve --trace` / `nasa loadtest --trace` interchange).
+//! * **Closed-loop** — `clients` concurrent callers; each issues its
+//!   next request `think_us` after its previous response completes, so
+//!   offered load adapts to service capacity (no drops at steady state).
+//!
+//! [`run_loadtest`] executes the workload as a discrete-event simulation
+//! in **virtual microseconds**: batches really execute through the
+//! shared engine (stub outputs are real), while time advances by the
+//! mapper-priced service model (`ModelCost::service_us`). Latencies,
+//! batch boundaries, and the metrics JSON are therefore bit-identical
+//! across runs — the property `rust/tests/serve_determinism.rs` and the
+//! ci.sh replay `cmp` pin. Wall-clock throughput of the same drive is
+//! measured separately by `benches/serve_loadtest.rs`.
+
+use super::metrics::ServeMetrics;
+use super::service::{BatchQueue, BatchRecord, Rejected, Request, Response, Service};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BinaryHeap;
+use std::path::Path;
+
+/// Arrival process of a load spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Process {
+    /// Evenly spaced arrivals at `rps` requests/second.
+    OpenUniform { rps: f64 },
+    /// Poisson arrivals (exponential inter-arrival) at mean `rps`.
+    OpenPoisson { rps: f64 },
+    /// `clients` concurrent closed-loop callers with fixed think time.
+    Closed { clients: usize, think_us: u64 },
+}
+
+/// A complete workload description.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// Total requests to issue.
+    pub requests: usize,
+    pub process: Process,
+    /// Per-model mix weights (empty = uniform across registered models).
+    pub mix: Vec<f64>,
+}
+
+impl LoadSpec {
+    /// Normalize the mix into a cumulative distribution over models
+    /// (shared with the live drive, so both paths validate identically).
+    pub(crate) fn cumulative_mix(&self, n_models: usize) -> Result<Vec<f64>> {
+        let w: Vec<f64> = if self.mix.is_empty() {
+            vec![1.0; n_models]
+        } else {
+            self.mix.clone()
+        };
+        if w.len() != n_models {
+            bail!("load mix has {} weights for {} models", w.len(), n_models);
+        }
+        if w.iter().any(|&x| !(x >= 0.0) || !x.is_finite()) {
+            bail!("load mix weights must be finite and non-negative");
+        }
+        let total: f64 = w.iter().sum();
+        if total <= 0.0 {
+            bail!("load mix weights sum to zero");
+        }
+        let mut cum = Vec::with_capacity(w.len());
+        let mut acc = 0.0;
+        for x in &w {
+            acc += x / total;
+            cum.push(acc);
+        }
+        Ok(cum)
+    }
+}
+
+pub(crate) fn pick_model(rng: &mut Rng, cum: &[f64]) -> usize {
+    let u = rng.uniform();
+    cum.iter().position(|&c| u < c).unwrap_or(cum.len() - 1)
+}
+
+/// One scheduled arrival (replayable trace row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    pub t_us: u64,
+    pub model: usize,
+    pub seed: u64,
+}
+
+/// A replayable arrival schedule. Replaying a trace through
+/// [`replay_trace`] reproduces the originating run's batch composition
+/// and latencies exactly (arrivals are the only free variable).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub arrivals: Vec<Arrival>,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "arrivals",
+            Json::Arr(
+                self.arrivals
+                    .iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("t_us", Json::Num(a.t_us as f64)),
+                            ("model", Json::Num(a.model as f64)),
+                            ("seed", Json::Num(a.seed as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let mut arrivals = Vec::new();
+        for aj in j.req("arrivals")?.as_arr()? {
+            arrivals.push(Arrival {
+                t_us: aj.req("t_us")?.as_f64()? as u64,
+                model: aj.req("model")?.as_usize()?,
+                // Seeds can exceed 2^53; stored as f64 they stay exact
+                // only below that, so traces store seeds already folded
+                // into the f64-exact range (see `gen_trace`).
+                seed: aj.req("seed")?.as_f64()? as u64,
+            });
+        }
+        Ok(Trace { arrivals })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        Trace::from_json(&Json::parse_file(path)?)
+    }
+}
+
+/// Seeds travel through JSON f64s; keep them in the 2^53-exact range.
+pub(crate) fn json_safe_seed(rng: &mut Rng) -> u64 {
+    rng.next_u64() >> 11
+}
+
+/// Materialize an open-loop arrival schedule. Closed-loop arrivals
+/// depend on completions and are generated inside [`run_loadtest`].
+pub fn gen_trace(spec: &LoadSpec, n_models: usize, seed: u64) -> Result<Trace> {
+    let cum = spec.cumulative_mix(n_models)?;
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut arrivals = Vec::with_capacity(spec.requests);
+    match spec.process {
+        Process::Closed { .. } => {
+            bail!("closed-loop arrivals are generated during simulation; use run_loadtest")
+        }
+        Process::OpenUniform { rps } | Process::OpenPoisson { rps } => {
+            if !(rps > 0.0) || !rps.is_finite() {
+                bail!("open-loop rps must be finite and positive, got {rps}");
+            }
+            let poisson = matches!(spec.process, Process::OpenPoisson { .. });
+            for _ in 0..spec.requests {
+                let gap_s = if poisson {
+                    -(rng.uniform().max(1e-12)).ln() / rps
+                } else {
+                    1.0 / rps
+                };
+                t += gap_s * 1e6;
+                arrivals.push(Arrival {
+                    t_us: t as u64,
+                    model: pick_model(&mut rng, &cum),
+                    seed: json_safe_seed(&mut rng),
+                });
+            }
+        }
+    }
+    Ok(Trace { arrivals })
+}
+
+/// Everything one loadtest run produces.
+pub struct LoadtestOutcome {
+    pub metrics: ServeMetrics,
+    /// Per-request results in completion order (deterministic).
+    pub responses: Vec<Response>,
+    /// Dispatched batches in dispatch order.
+    pub batches: Vec<BatchRecord>,
+    /// The arrivals actually submitted (replayable, including the
+    /// closed-loop schedule that emerged from completions).
+    pub trace: Trace,
+}
+
+/// Heap entry: (t_us, seq, model, seed, client) — `seq` makes same-time
+/// arrivals pop in issue order, keeping the simulation deterministic.
+type HeapEntry = std::cmp::Reverse<(u64, u64, usize, u64, usize)>;
+
+/// Run a workload against a service in virtual time (see module docs).
+pub fn run_loadtest(svc: &Service, spec: &LoadSpec, seed: u64) -> Result<LoadtestOutcome> {
+    match spec.process {
+        Process::Closed { clients, think_us } => {
+            if clients == 0 {
+                bail!("closed-loop load needs at least one client");
+            }
+            let cum = spec.cumulative_mix(svc.models.len())?;
+            let mut master = Rng::new(seed);
+            let rngs: Vec<Rng> = (0..clients).map(|c| master.fork(c as u64)).collect();
+            simulate(svc, Source::Closed { rngs, cum, think_us, budget: spec.requests })
+        }
+        _ => replay_trace(svc, &gen_trace(spec, svc.models.len(), seed)?),
+    }
+}
+
+/// Replay a recorded arrival schedule (open-loop semantics: rejected
+/// arrivals are dropped, not retried).
+pub fn replay_trace(svc: &Service, trace: &Trace) -> Result<LoadtestOutcome> {
+    for a in &trace.arrivals {
+        if a.model >= svc.models.len() {
+            bail!("trace references model {} but only {} registered", a.model, svc.models.len());
+        }
+    }
+    simulate(svc, Source::Replay(trace.clone()))
+}
+
+enum Source {
+    Replay(Trace),
+    Closed {
+        rngs: Vec<Rng>,
+        cum: Vec<f64>,
+        think_us: u64,
+        budget: usize,
+    },
+}
+
+const OPEN_CLIENT: usize = usize::MAX;
+
+fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
+    let cfg = svc.cfg;
+    let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<HeapEntry>, seq: &mut u64, t, model, s, client| {
+        heap.push(std::cmp::Reverse((t, *seq, model, s, client)));
+        *seq += 1;
+    };
+
+    // Remaining new requests still to schedule (closed loop only; replay
+    // arrivals are all pushed up front and its clients never reissue).
+    let mut issued_budget = 0usize;
+    match &mut source {
+        Source::Replay(trace) => {
+            for a in &trace.arrivals {
+                push(&mut heap, &mut seq, a.t_us, a.model, a.seed, OPEN_CLIENT);
+            }
+        }
+        Source::Closed { rngs, cum, budget, .. } => {
+            issued_budget = *budget;
+            let n = rngs.len().min(issued_budget);
+            for (c, rng) in rngs.iter_mut().enumerate().take(n) {
+                let model = pick_model(rng, cum);
+                let s = json_safe_seed(rng);
+                // Stagger starts by 1µs so client order is explicit.
+                push(&mut heap, &mut seq, c as u64, model, s, c);
+            }
+            issued_budget -= n;
+        }
+    }
+
+    let mut queue = BatchQueue::new(svc.models.len(), cfg.queue_cap);
+    let mut metrics = ServeMetrics::new(&svc.models);
+    let mut responses: Vec<Response> = Vec::new();
+    let mut batches: Vec<BatchRecord> = Vec::new();
+    let mut trace_out = Trace::default();
+    let mut inflight: Option<(Vec<Response>, BatchRecord)> = None;
+    let mut next_id = 0u64;
+    let mut now = 0u64;
+
+    // Every iteration either consumes work or advances virtual time, so
+    // the event count is linear in arrivals + batches; this cap only
+    // turns a would-be hang into a loud failure. Closed-loop retry
+    // pushes are legitimate (each advances time by the backoff) and are
+    // not known up front, so each one extends the budget below.
+    let mut fuel = 0u64;
+    let mut max_fuel = 64 + 64 * (seq + issued_budget as u64 + 1_000);
+
+    loop {
+        fuel += 1;
+        if fuel > max_fuel {
+            bail!("loadtest event loop exceeded {max_fuel} events — scheduler bug");
+        }
+        // 1. Deliver a finished batch.
+        if inflight.as_ref().is_some_and(|(_, rec)| rec.done_us <= now) {
+            let (resps, rec) = inflight.take().unwrap();
+            for r in &resps {
+                metrics.on_response(r);
+                if let Source::Closed { rngs, cum, think_us, .. } = &mut source {
+                    if issued_budget > 0 && r.client != OPEN_CLIENT {
+                        let rng = &mut rngs[r.client];
+                        let model = pick_model(rng, cum);
+                        let s = json_safe_seed(rng);
+                        push(&mut heap, &mut seq, r.done_us + *think_us, model, s, r.client);
+                        issued_budget -= 1;
+                    }
+                }
+            }
+            metrics.on_batch(&rec);
+            responses.extend(resps);
+            batches.push(rec);
+        }
+
+        // 2. Ingest arrivals due now.
+        while heap.peek().is_some_and(|e| e.0 .0 <= now) {
+            let (t, _, model, rseed, client) = heap.pop().unwrap().0;
+            trace_out.arrivals.push(Arrival { t_us: t, model, seed: rseed });
+            let req = Request { id: next_id, model, client, arrival_us: t, seed: rseed };
+            match queue.submit(req) {
+                Ok(()) => {
+                    metrics.on_admit();
+                    next_id += 1;
+                }
+                Err(Rejected::QueueFull { .. }) => {
+                    metrics.on_reject(model);
+                    if matches!(source, Source::Closed { .. }) {
+                        // A closed-loop client retries after a backoff so
+                        // its request stream eventually completes; the
+                        // retry is a real extra event, so grow the fuel
+                        // budget with it (see max_fuel above).
+                        let backoff = cfg.deadline_us.max(1);
+                        push(&mut heap, &mut seq, now + backoff, model, rseed, client);
+                        max_fuel = max_fuel.saturating_add(64);
+                    }
+                }
+                // Closed never occurs mid-simulation; UnknownModel is
+                // excluded by replay_trace / pick_model validation.
+                Err(other) => unreachable!("unexpected mid-simulation rejection: {other}"),
+            }
+        }
+
+        // 3. Dispatch if the executor is idle and a batch is ready.
+        if inflight.is_none() {
+            if let Some((m, reqs)) = queue.pop_ready(now, cfg.batch_max, cfg.deadline_us) {
+                inflight = Some(svc.execute_batch(m, &reqs, now)?);
+                continue;
+            }
+        }
+
+        // 4. Advance virtual time to the next event.
+        let mut next: Option<u64> = inflight.as_ref().map(|(_, rec)| rec.done_us);
+        if let Some(e) = heap.peek() {
+            let t = e.0 .0;
+            next = Some(next.map_or(t, |n| n.min(t)));
+        }
+        if inflight.is_none() && queue.total() > 0 {
+            if let Some(d) = queue.next_deadline(cfg.deadline_us) {
+                next = Some(next.map_or(d, |n| n.min(d)));
+            }
+        }
+        match next {
+            None => break,
+            Some(t) => {
+                debug_assert!(t >= now, "virtual time must not run backwards");
+                now = t.max(now);
+            }
+        }
+    }
+
+    // Closed-loop retries count as extra attempts on the same logical
+    // request, so `completed == admitted` must hold in every mode.
+    debug_assert_eq!(metrics.completed, metrics.admitted);
+    debug_assert_eq!(metrics.issued, metrics.admitted + metrics.rejected);
+    Ok(LoadtestOutcome { metrics, responses, batches, trace: trace_out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_trace_spacing_and_budget() {
+        let spec = LoadSpec {
+            requests: 10,
+            process: Process::OpenUniform { rps: 1000.0 },
+            mix: vec![],
+        };
+        let t = gen_trace(&spec, 2, 7).unwrap();
+        assert_eq!(t.arrivals.len(), 10);
+        for (i, a) in t.arrivals.iter().enumerate() {
+            assert_eq!(a.t_us, 1000 * (i as u64 + 1));
+            assert!(a.model < 2);
+        }
+    }
+
+    #[test]
+    fn poisson_trace_is_seeded_and_increasing() {
+        let spec = LoadSpec {
+            requests: 200,
+            process: Process::OpenPoisson { rps: 5000.0 },
+            mix: vec![],
+        };
+        let a = gen_trace(&spec, 1, 11).unwrap();
+        let b = gen_trace(&spec, 1, 11).unwrap();
+        let c = gen_trace(&spec, 1, 12).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.arrivals.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+    }
+
+    #[test]
+    fn mix_validation_and_skew() {
+        let bad = LoadSpec {
+            requests: 1,
+            process: Process::OpenUniform { rps: 1.0 },
+            mix: vec![1.0],
+        };
+        assert!(gen_trace(&bad, 2, 0).is_err());
+        let zero = LoadSpec { mix: vec![0.0, 0.0], ..bad.clone() };
+        assert!(gen_trace(&zero, 2, 0).is_err());
+        // A 9:1 mix lands overwhelmingly on model 0.
+        let spec = LoadSpec {
+            requests: 2000,
+            process: Process::OpenUniform { rps: 1.0 },
+            mix: vec![9.0, 1.0],
+        };
+        let t = gen_trace(&spec, 2, 5).unwrap();
+        let m0 = t.arrivals.iter().filter(|a| a.model == 0).count();
+        assert!((1600..2000).contains(&m0), "mix skew off: {m0}/2000");
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let t = Trace {
+            arrivals: vec![
+                Arrival { t_us: 5, model: 1, seed: 42 },
+                Arrival { t_us: 9, model: 0, seed: (1u64 << 53) - 1 },
+            ],
+        };
+        let back = Trace::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn closed_loop_trace_generation_rejected() {
+        let spec = LoadSpec {
+            requests: 1,
+            process: Process::Closed { clients: 1, think_us: 0 },
+            mix: vec![],
+        };
+        assert!(gen_trace(&spec, 1, 0).is_err());
+    }
+}

@@ -1,0 +1,432 @@
+//! Online serving metrics: a streaming latency histogram with
+//! p50/p95/p99 readout, throughput and batch-occupancy counters, and the
+//! per-model accelerator-cost join (energy/EDP estimates from
+//! `mapper::auto_map`, carried on each [`ServedModel`]).
+//!
+//! The histogram is HDR-style: exact buckets below 16µs, then 16
+//! sub-buckets per power of two, so any recorded value is reproduced to
+//! within a 1/16 relative error by `percentile` (pinned against a
+//! sorted-slice oracle in the unit tests). Everything here is pure
+//! integer/deterministic-f64 state: two identical request streams
+//! produce byte-identical `to_json()` output, which is the substrate of
+//! the loadtest determinism tests and the ci.sh replay `cmp`.
+
+use super::model::ServedModel;
+use super::service::{BatchRecord, Response};
+use crate::util::json::Json;
+
+/// Sub-bucket resolution: 2^4 buckets per octave → ≤ 1/16 relative error.
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS;
+/// Bucket count covering the full u64 µs range at SUB_BITS resolution.
+const N_BUCKETS: usize = (64 - SUB_BITS as usize) * SUB + SUB;
+
+/// Streaming latency histogram over u64 microseconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros();
+        let shift = msb - SUB_BITS;
+        let sub = ((v >> shift) & (SUB as u64 - 1)) as usize;
+        ((msb - SUB_BITS + 1) as usize) * SUB + sub
+    }
+}
+
+/// Largest value mapping to bucket `i` (the percentile representative —
+/// an upper bound, so reported percentiles never understate latency).
+fn bucket_upper(i: usize) -> u64 {
+    if i < SUB {
+        i as u64
+    } else {
+        let octave = (i / SUB) as u32;
+        let sub = (i % SUB) as u64;
+        let msb = octave + SUB_BITS - 1;
+        let width = 1u64 << (msb - SUB_BITS);
+        (1u64 << msb) + sub * width + (width - 1)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, v_us: u64) {
+        self.counts[bucket_index(v_us)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v_us);
+        self.min = self.min.min(v_us);
+        self.max = self.max.max(v_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean over exact sums (not bucketized).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn min_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// The value at quantile `p` in `[0, 1]`: an upper bound within 1/16
+    /// relative error of the true order statistic, clamped to the exact
+    /// observed max. Returns 0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Per-model serving counters + the accelerator-cost join.
+#[derive(Clone, Debug)]
+pub struct ModelMetrics {
+    pub name: String,
+    pub completed: u64,
+    pub rejected: u64,
+    pub hist: LatencyHistogram,
+    /// Mapper-joined accelerator cost: modeled steady-state µs and µJ per
+    /// inference at the serving accelerator config.
+    pub per_inf_us: f64,
+    pub energy_uj_per_inf: f64,
+    pub mapper_feasible: bool,
+}
+
+impl ModelMetrics {
+    /// Energy-delay-product estimate per served request (µJ·s): the
+    /// mapper's per-inference energy times the *observed* mean serving
+    /// latency — deployment EDP, not bare accelerator EDP.
+    pub fn edp_uj_s(&self) -> f64 {
+        self.energy_uj_per_inf * self.hist.mean_us() / 1e6
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("p50_us", Json::Num(self.hist.percentile(0.50) as f64)),
+            ("p95_us", Json::Num(self.hist.percentile(0.95) as f64)),
+            ("p99_us", Json::Num(self.hist.percentile(0.99) as f64)),
+            ("min_us", Json::Num(self.hist.min_us() as f64)),
+            ("max_us", Json::Num(self.hist.max_us() as f64)),
+            ("mean_us", Json::Num(self.hist.mean_us())),
+            ("per_inf_us", Json::Num(self.per_inf_us)),
+            ("energy_uj_per_inf", Json::Num(self.energy_uj_per_inf)),
+            ("edp_uj_s", Json::Num(self.edp_uj_s())),
+            ("mapper_feasible", Json::Bool(self.mapper_feasible)),
+        ])
+    }
+}
+
+/// Whole-service metrics: admission accounting, batching shape, latency
+/// distribution, and the per-model breakdown.
+#[derive(Clone, Debug)]
+pub struct ServeMetrics {
+    /// Submission attempts (admitted + rejected).
+    pub issued: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Virtual (or wall) time of the last completed batch.
+    pub span_us: u64,
+    pub global: LatencyHistogram,
+    pub per_model: Vec<ModelMetrics>,
+}
+
+impl ServeMetrics {
+    pub fn new(models: &[ServedModel]) -> ServeMetrics {
+        ServeMetrics {
+            issued: 0,
+            admitted: 0,
+            completed: 0,
+            rejected: 0,
+            batches: 0,
+            batched_requests: 0,
+            span_us: 0,
+            global: LatencyHistogram::default(),
+            per_model: models
+                .iter()
+                .map(|m| ModelMetrics {
+                    name: m.name.clone(),
+                    completed: 0,
+                    rejected: 0,
+                    hist: LatencyHistogram::default(),
+                    per_inf_us: m.cost.per_inf_us(),
+                    energy_uj_per_inf: m.cost.energy_uj_per_inf(),
+                    mapper_feasible: m.cost.mapper_feasible,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn on_response(&mut self, r: &Response) {
+        let lat = r.latency_us();
+        self.completed += 1;
+        self.global.record(lat);
+        self.per_model[r.model].completed += 1;
+        self.per_model[r.model].hist.record(lat);
+        self.span_us = self.span_us.max(r.done_us);
+    }
+
+    pub fn on_batch(&mut self, rec: &BatchRecord) {
+        self.batches += 1;
+        self.batched_requests += rec.ids.len() as u64;
+        self.span_us = self.span_us.max(rec.done_us);
+    }
+
+    /// Tolerates an out-of-range model (an `UnknownModel` rejection has
+    /// no per-model row to charge) — the global counters still move.
+    pub fn on_reject(&mut self, model: usize) {
+        self.issued += 1;
+        self.rejected += 1;
+        if let Some(pm) = self.per_model.get_mut(model) {
+            pm.rejected += 1;
+        }
+    }
+
+    pub fn on_admit(&mut self) {
+        self.issued += 1;
+        self.admitted += 1;
+    }
+
+    /// Mean requests per executed batch (the dynamic-batching payoff dial).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Completed requests per second of (virtual or wall) span.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.span_us == 0 {
+            0.0
+        } else {
+            self.completed as f64 * 1e6 / self.span_us as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("issued", Json::Num(self.issued as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batch_occupancy", Json::Num(self.batch_occupancy())),
+            ("span_us", Json::Num(self.span_us as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("p50_us", Json::Num(self.global.percentile(0.50) as f64)),
+            ("p95_us", Json::Num(self.global.percentile(0.95) as f64)),
+            ("p99_us", Json::Num(self.global.percentile(0.99) as f64)),
+            ("min_us", Json::Num(self.global.min_us() as f64)),
+            ("max_us", Json::Num(self.global.max_us() as f64)),
+            ("mean_us", Json::Num(self.global.mean_us())),
+            (
+                "models",
+                Json::Arr(self.per_model.iter().map(|m| m.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Human table (the `nasa serve`/`nasa loadtest` terminal readout).
+    pub fn print_table(&self) {
+        println!(
+            "{:<20} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10} {:>12}",
+            "model", "done", "rejected", "p50_us", "p95_us", "p99_us", "uJ/inf", "edp_uJ_s"
+        );
+        println!("{}", "-".repeat(94));
+        for m in &self.per_model {
+            println!(
+                "{:<20} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10.3} {:>12.5}",
+                m.name,
+                m.completed,
+                m.rejected,
+                m.hist.percentile(0.50),
+                m.hist.percentile(0.95),
+                m.hist.percentile(0.99),
+                m.energy_uj_per_inf,
+                m.edp_uj_s(),
+            );
+        }
+        println!("{}", "-".repeat(94));
+        println!(
+            "TOTAL: {}/{} completed ({} rejected) | {} batches, occupancy {:.2} | \
+             {:.1} req/s over {:.3}s | p50={}us p95={}us p99={}us",
+            self.completed,
+            self.issued,
+            self.rejected,
+            self.batches,
+            self.batch_occupancy(),
+            self.throughput_rps(),
+            self.span_us as f64 / 1e6,
+            self.global.percentile(0.50),
+            self.global.percentile(0.95),
+            self.global.percentile(0.99),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Oracle: exact order statistic at quantile p (ceil-rank convention,
+    /// matching `LatencyHistogram::percentile`).
+    fn oracle(sorted: &[u64], p: f64) -> u64 {
+        let n = sorted.len() as f64;
+        let rank = ((p * n).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_upper_bounds() {
+        let mut prev = 0usize;
+        for v in 0..100_000u64 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index must be monotone at v={v}");
+            assert!(bucket_upper(i) >= v, "upper({i}) < {v}");
+            // Upper bound within 1/16 relative error.
+            assert!(bucket_upper(i) as f64 <= v as f64 * (1.0 + 1.0 / 16.0) + 1.0);
+            prev = i;
+        }
+        assert!(bucket_index(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LatencyHistogram::default();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        for (k, p) in [(1u64, 1.0 / 16.0), (8, 8.0 / 16.0), (16, 1.0)] {
+            assert_eq!(h.percentile(p), k - 1);
+        }
+    }
+
+    #[test]
+    fn percentiles_match_sorted_oracle_within_bucket_error() {
+        let mut rng = Rng::new(42);
+        let mut h = LatencyHistogram::default();
+        let mut vals: Vec<u64> = (0..20_000)
+            .map(|_| (rng.uniform() * 500_000.0) as u64 + 1)
+            .collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for p in [0.10, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            let exact = oracle(&vals, p);
+            let est = h.percentile(p);
+            assert!(est >= exact, "p={p}: est {est} < exact {exact}");
+            assert!(
+                est as f64 <= exact as f64 * (1.0 + 1.0 / 16.0) + 1.0,
+                "p={p}: est {est} too far above exact {exact}"
+            );
+        }
+        assert_eq!(h.percentile(1.0), *vals.last().unwrap()); // clamped to max
+        assert_eq!(h.count(), 20_000);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.min_us(), 0);
+        h.record(1234);
+        // A single value is reported exactly at every quantile (the
+        // bucket's upper bound clamps to the observed max).
+        for p in [0.0, 0.5, 1.0] {
+            assert_eq!(h.percentile(p), 1234);
+        }
+        assert_eq!((h.min_us(), h.max_us()), (1234, 1234));
+        h.record(10);
+        assert_eq!((h.min_us(), h.max_us()), (10, 1234));
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut rng = Rng::new(7);
+        let vals: Vec<u64> = (0..5000).map(|_| (rng.uniform() * 90_000.0) as u64).collect();
+        let (mut a, mut b, mut all) = (
+            LatencyHistogram::default(),
+            LatencyHistogram::default(),
+            LatencyHistogram::default(),
+        );
+        for (i, &v) in vals.iter().enumerate() {
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+}

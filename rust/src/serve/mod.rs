@@ -1,0 +1,41 @@
+//! Online serving: a queue + dynamic-batching inference service over the
+//! shared `runtime::Engine`, with a deterministic load-test harness.
+//!
+//! This is the deployment face of the reproduction (the ROADMAP's
+//! "serving heavy traffic" north star): searched/derived child networks
+//! become [`ServedModel`]s (seeded FP32 + FXP-round-tripped weights,
+//! per-batch-size executables warmed through ONE shared engine, and an
+//! accelerator cost joined from `mapper::auto_map`), and a [`Service`]
+//! coalesces incoming requests into batches under a
+//! `batch_max`/`deadline_us` policy with bounded-queue admission control
+//! (typed [`Rejected::QueueFull`] backpressure).
+//!
+//! Two execution modes share that core:
+//!
+//! * **Virtual time** (`loadgen::run_loadtest`, CLI `nasa loadtest`) — a
+//!   discrete-event simulation driven by seeded open-/closed-loop
+//!   arrival processes; batches really execute through the engine while
+//!   time advances by the mapper-priced service model, so batch
+//!   composition, per-request latencies, and the metrics JSON are
+//!   bit-identical across runs (and across `--trace` replays).
+//! * **Wall clock** (`live::LiveService`, CLI `nasa serve`) — a
+//!   long-lived `util::par::Worker` batcher thread serving concurrent
+//!   callers over mpsc channels, recording a replayable arrival trace.
+//!
+//! `serve::metrics` streams p50/p95/p99 latency (HDR-style histogram),
+//! throughput, batch occupancy, and per-model energy/EDP estimates.
+//! Module map: [`model`] (served models + mapper cost join), [`service`]
+//! (queue/batcher/execution core), [`loadgen`] (arrival processes +
+//! virtual-time engine), [`live`] (threaded shell), [`metrics`].
+
+pub mod live;
+pub mod loadgen;
+pub mod metrics;
+pub mod model;
+pub mod service;
+
+pub use live::{drive_closed_loop, LiveService};
+pub use loadgen::{gen_trace, replay_trace, run_loadtest, Arrival, LoadSpec, LoadtestOutcome, Process, Trace};
+pub use metrics::{LatencyHistogram, ModelMetrics, ServeMetrics};
+pub use model::{model_cost, ModelCost, ServedModel};
+pub use service::{BatchQueue, BatchRecord, Rejected, Request, Response, ServeConfig, Service};

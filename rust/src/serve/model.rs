@@ -1,0 +1,258 @@
+//! A servable model: a derived child [`Arch`] plus everything the
+//! batcher needs at request time — deterministic seeded weights (FP32 and
+//! FXP round-tripped through `model::quant`), the synthesized per-batch
+//! artifact signatures the engine compiles, and the accelerator cost
+//! joined from `mapper::auto_map` (per-inference cycles/energy at the
+//! default 168-MAC-equivalent chunk accelerator), which both prices the
+//! virtual-time service model of the deterministic loadtest and feeds the
+//! per-model energy/EDP estimates in `serve::metrics`.
+
+use crate::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, UNIT_ENERGY_45NM};
+use crate::mapper::{auto_map, MapperConfig};
+use crate::model::{Arch, QuantSpec};
+use crate::runtime::ArtifactIo;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Accelerator cost of serving one inference, from the auto-mapper.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCost {
+    /// Steady-state pipeline period per sample (cycles) of the best
+    /// mapping (or the ops-proportional smoke fallback).
+    pub period_cycles: f64,
+    /// Energy per sample (pJ).
+    pub energy_pj: f64,
+    pub clock_hz: f64,
+    /// False when neither the auto-mapper nor the all-RS baseline found a
+    /// feasible mapping and the ops-proportional fallback priced the
+    /// model instead.
+    pub mapper_feasible: bool,
+}
+
+impl ModelCost {
+    /// Modeled per-inference service time (µs) at the accelerator clock.
+    pub fn per_inf_us(&self) -> f64 {
+        self.period_cycles / self.clock_hz * 1e6
+    }
+
+    /// Energy per inference in µJ.
+    pub fn energy_uj_per_inf(&self) -> f64 {
+        self.energy_pj / 1e6
+    }
+
+    /// Virtual service time for one batch: a fixed per-batch overhead
+    /// (weight fetch / dispatch, the quantity dynamic batching amortizes)
+    /// plus the per-sample pipeline period — always ≥ 1µs so virtual
+    /// time strictly advances.
+    pub fn service_us(&self, batch: usize, overhead_us: u64) -> u64 {
+        let compute = (batch as f64 * self.per_inf_us()).ceil() as u64;
+        overhead_us.saturating_add(compute).max(1)
+    }
+}
+
+/// Price an arch on the default serving accelerator via the auto-mapper.
+/// Falls back to the all-RS expert baseline, then to an ops-proportional
+/// smoke estimate (`mapper_feasible = false`) so a model that the chunk
+/// accelerator cannot host still serves with *some* deterministic cost.
+pub fn model_cost(arch: &Arch, budget_pes: usize) -> ModelCost {
+    let costs = UNIT_ENERGY_45NM;
+    let budget = AreaBudget::macs_equivalent(budget_pes, &costs);
+    let alloc = allocate(arch, budget, &costs);
+    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    let clock_hz = accel.clock_hz;
+    let r = auto_map(&accel, arch, &QuantSpec::default(), &MapperConfig::default());
+    if let Some((_, s)) = r.best {
+        return ModelCost {
+            period_cycles: s.period_cycles,
+            energy_pj: s.energy_pj,
+            clock_hz,
+            mapper_feasible: true,
+        };
+    }
+    if let Ok(s) = r.rs_baseline {
+        return ModelCost {
+            period_cycles: s.period_cycles,
+            energy_pj: s.energy_pj,
+            clock_hz,
+            mapper_feasible: true,
+        };
+    }
+    let macs = arch.total_macs().max(1) as f64;
+    ModelCost {
+        period_cycles: macs / budget_pes.max(1) as f64,
+        energy_pj: macs * 4.0, // ~MAC+RF energy per op, smoke only
+        clock_hz,
+        mapper_feasible: false,
+    }
+}
+
+/// One model registered with the serving layer.
+#[derive(Clone, Debug)]
+pub struct ServedModel {
+    pub name: String,
+    pub arch: Arch,
+    /// Input sample shape `[h, w, c]`, reconstructed from the first
+    /// layer's output geometry and stride.
+    pub sample_shape: Vec<usize>,
+    /// FP32 weights, one contiguous segment per layer in layer order
+    /// (seeded He-normal — the stub backend only hashes them, the real
+    /// path would load trained weights here).
+    pub params: Vec<f32>,
+    /// The same weights after a per-layer FXP quantize→dequantize round
+    /// trip at `QuantSpec` widths (conv 8b, shift/adder 6b).
+    pub params_fxp: Vec<f32>,
+    pub cost: ModelCost,
+}
+
+impl ServedModel {
+    /// Default accelerator sizing for the cost join (the Fig. 6/8 budget).
+    pub const DEFAULT_BUDGET_PES: usize = 168;
+
+    pub fn from_arch(name: &str, arch: &Arch, seed: u64) -> Result<ServedModel> {
+        Self::from_arch_with_budget(name, arch, seed, Self::DEFAULT_BUDGET_PES)
+    }
+
+    pub fn from_arch_with_budget(
+        name: &str,
+        arch: &Arch,
+        seed: u64,
+        budget_pes: usize,
+    ) -> Result<ServedModel> {
+        // Typed empty-arch rejection (the model layer's op accounting has
+        // the same contract — see `model::ops::classifier_op_counts`).
+        let Some(first) = arch.layers.first() else {
+            bail!("serve: model '{name}' has a zero-layer arch — nothing to serve");
+        };
+        if name.is_empty() || name.contains(['/', '@', ',']) {
+            bail!("serve: model name '{name}' must be non-empty without '/', '@' or ','");
+        }
+        let sample_shape = vec![first.h_out * first.stride, first.w_out * first.stride, first.cin];
+        let spec = QuantSpec::default();
+        let mut rng = Rng::new(seed ^ 0x5E54E);
+        let mut params = Vec::new();
+        let mut params_fxp = Vec::new();
+        for l in &arch.layers {
+            let fan_in = (l.k * l.k * l.cin / l.groups).max(1);
+            let w: Vec<f32> = (0..l.n_weights()).map(|_| rng.he_normal(fan_in)).collect();
+            params_fxp.extend(spec.fake_quant_weights(l.kind, &w)?);
+            params.extend(w);
+        }
+        if params.is_empty() {
+            bail!("serve: model '{name}' has no weights");
+        }
+        Ok(ServedModel {
+            name: name.to_string(),
+            arch: arch.clone(),
+            sample_shape,
+            params,
+            params_fxp,
+            cost: model_cost(arch, budget_pes),
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Flat element count of one input sample.
+    pub fn sample_len(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+
+    /// The weight vector the service executes with (FXP mode swaps in the
+    /// quantization-round-tripped weights, so outputs genuinely change).
+    pub fn params_for(&self, fxp: bool) -> &[f32] {
+        if fxp {
+            &self.params_fxp
+        } else {
+            &self.params
+        }
+    }
+
+    /// Synthesize the child-infer artifact signature for one batch size.
+    /// Each distinct batch size is its own executable (real serving
+    /// stacks compile per batch-shape bucket); `Engine::load` caches by
+    /// this path, which is what makes the cache "warm per model".
+    pub fn infer_io(&self, batch: usize) -> ArtifactIo {
+        let mut x_shape = Vec::with_capacity(4);
+        x_shape.push(batch);
+        x_shape.extend_from_slice(&self.sample_shape);
+        ArtifactIo {
+            path: format!("serve/{}@b{batch}.hlo.txt", self.name),
+            input_shapes: vec![
+                (vec![self.n_params()], "float32".to_string()),
+                (x_shape, "float32".to_string()),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::shiftaddnet_like;
+
+    #[test]
+    fn from_arch_builds_params_and_cost() {
+        let arch = shiftaddnet_like(8, 4);
+        let m = ServedModel::from_arch("sa8", &arch, 1).unwrap();
+        let expect: u64 = arch.layers.iter().map(|l| l.n_weights()).sum();
+        assert_eq!(m.n_params() as u64, expect);
+        assert_eq!(m.params_fxp.len(), m.params.len());
+        assert_ne!(m.params, m.params_fxp, "FXP round trip must perturb weights");
+        assert_eq!(m.sample_shape, vec![8, 8, 3]);
+        assert!(m.cost.period_cycles >= 1.0);
+        assert!(m.cost.energy_pj > 0.0);
+        assert!(m.cost.per_inf_us() > 0.0);
+    }
+
+    #[test]
+    fn from_arch_is_deterministic() {
+        let arch = shiftaddnet_like(8, 4);
+        let a = ServedModel::from_arch("m", &arch, 9).unwrap();
+        let b = ServedModel::from_arch("m", &arch, 9).unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.cost.period_cycles.to_bits(), b.cost.period_cycles.to_bits());
+        let c = ServedModel::from_arch("m", &arch, 10).unwrap();
+        assert_ne!(a.params, c.params);
+    }
+
+    #[test]
+    fn zero_layer_arch_is_a_typed_error() {
+        let empty = Arch::default();
+        let err = ServedModel::from_arch("e", &empty, 0).unwrap_err().to_string();
+        assert!(err.contains("zero-layer"), "{err}");
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        let arch = shiftaddnet_like(8, 4);
+        assert!(ServedModel::from_arch("a/b", &arch, 0).is_err());
+        assert!(ServedModel::from_arch("", &arch, 0).is_err());
+    }
+
+    #[test]
+    fn infer_io_shapes_follow_batch() {
+        let arch = shiftaddnet_like(8, 4);
+        let m = ServedModel::from_arch("sa", &arch, 1).unwrap();
+        let io = m.infer_io(5);
+        assert_eq!(io.input_shapes.len(), 2); // params + x => stub ChildInfer kind
+        assert_eq!(io.input_shapes[1].0, vec![5, 8, 8, 3]);
+        assert_ne!(m.infer_io(1).path, m.infer_io(2).path);
+    }
+
+    #[test]
+    fn batching_amortizes_overhead() {
+        let cost = ModelCost {
+            period_cycles: 1000.0,
+            energy_pj: 1.0,
+            clock_hz: 250e6,
+            mapper_feasible: true,
+        };
+        let t1 = cost.service_us(1, 50);
+        let t8 = cost.service_us(8, 50);
+        // Per-request time must strictly improve with batching.
+        assert!((t8 as f64) / 8.0 < t1 as f64);
+        assert!(cost.service_us(1, 0) >= 1);
+    }
+}

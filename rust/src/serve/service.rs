@@ -1,0 +1,475 @@
+//! The serving core: typed requests/responses, the bounded multi-model
+//! FIFO [`BatchQueue`] with admission control, and the [`Service`] that
+//! executes coalesced batches through ONE shared `runtime::Engine`.
+//!
+//! Batching policy (shared by the virtual-time loadtest and the threaded
+//! live service, so both modes batch identically):
+//!
+//! 1. **Full batch first** — any model with ≥ `batch_max` queued requests
+//!    dispatches immediately (round-robin across models for fairness).
+//! 2. **Deadline flush** — otherwise, the model whose *oldest* queued
+//!    request has waited `deadline_us` dispatches whatever it has (up to
+//!    `batch_max`).
+//! 3. **Backpressure** — a submission that would push the total queued
+//!    count past `queue_cap` is refused with the typed
+//!    [`Rejected::QueueFull`] instead of growing the queue unboundedly.
+//!
+//! Everything is deterministic: ties break on (arrival, model index), the
+//! round-robin cursor advances identically for identical request streams,
+//! and request payloads are seeded (`Request::sample`), so the stub
+//! backend returns bit-identical outputs for bit-identical schedules.
+
+use super::model::ServedModel;
+use crate::runtime::{lit_f32, lit_f32_batch, to_vec_f32, Engine};
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Batching/admission policy knobs (CLI: `nasa serve` / `nasa loadtest`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Largest batch one dispatch may coalesce.
+    pub batch_max: usize,
+    /// Max time the oldest queued request waits before a partial batch
+    /// flushes anyway.
+    pub deadline_us: u64,
+    /// Bound on total queued (not yet dispatched) requests across models.
+    pub queue_cap: usize,
+    /// Fixed per-batch cost (weight fetch/dispatch) in the virtual-time
+    /// service model — the quantity batching amortizes.
+    pub batch_overhead_us: u64,
+    /// Serve with FXP-round-tripped weights instead of FP32.
+    pub fxp: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch_max: 8,
+            deadline_us: 2_000,
+            queue_cap: 256,
+            batch_overhead_us: 50,
+            fxp: false,
+        }
+    }
+}
+
+/// Typed admission-control refusal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The bounded queue is at capacity; the request was NOT enqueued.
+    QueueFull { queued: usize },
+    /// The request named a model index that is not registered.
+    UnknownModel { model: usize, n_models: usize },
+    /// The service is shutting down and refuses new work.
+    Closed,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::QueueFull { queued } => write!(f, "queue full ({queued} queued)"),
+            Rejected::UnknownModel { model, n_models } => {
+                write!(f, "unknown model {model} (have {n_models})")
+            }
+            Rejected::Closed => write!(f, "service closed"),
+        }
+    }
+}
+
+/// One inference request. The payload is not stored: it is a pure
+/// function of `seed` (materialized at dispatch via [`Request::sample`]),
+/// which keeps queued requests tiny and traces replayable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub model: usize,
+    /// Issuing closed-loop client (`usize::MAX` for open-loop/replay).
+    pub client: usize,
+    pub arrival_us: u64,
+    pub seed: u64,
+}
+
+impl Request {
+    /// Deterministic input sample for this request.
+    pub fn sample(&self, len: usize) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed);
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+}
+
+/// One served inference result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    pub id: u64,
+    pub model: usize,
+    pub client: usize,
+    pub arrival_us: u64,
+    /// When the batch containing this request started executing.
+    pub start_us: u64,
+    pub done_us: u64,
+    pub batch_size: usize,
+    /// Argmax class of the served logits (first index on ties).
+    pub argmax: usize,
+}
+
+impl Response {
+    pub fn latency_us(&self) -> u64 {
+        self.done_us.saturating_sub(self.arrival_us)
+    }
+
+    pub fn queue_us(&self) -> u64 {
+        self.start_us.saturating_sub(self.arrival_us)
+    }
+}
+
+/// Record of one dispatched batch (the determinism tests compare these
+/// across runs: identical ids/boundaries ⇒ identical batch composition).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchRecord {
+    pub model: usize,
+    pub start_us: u64,
+    pub done_us: u64,
+    pub ids: Vec<u64>,
+}
+
+/// Bounded per-model FIFO queues with the batching policy above.
+#[derive(Clone, Debug)]
+pub struct BatchQueue {
+    queues: Vec<VecDeque<Request>>,
+    total: usize,
+    cap: usize,
+    /// Round-robin start model for the full-batch scan.
+    rr: usize,
+}
+
+impl BatchQueue {
+    pub fn new(n_models: usize, cap: usize) -> BatchQueue {
+        BatchQueue {
+            queues: (0..n_models).map(|_| VecDeque::new()).collect(),
+            total: 0,
+            cap: cap.max(1),
+            rr: 0,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Admit or refuse one request. Validating the model index here (not
+    /// just at the trace/CLI boundary) keeps a bad `LiveService::submit`
+    /// a typed refusal instead of an index panic inside the state mutex.
+    pub fn submit(&mut self, req: Request) -> Result<(), Rejected> {
+        if req.model >= self.queues.len() {
+            return Err(Rejected::UnknownModel { model: req.model, n_models: self.queues.len() });
+        }
+        if self.total >= self.cap {
+            return Err(Rejected::QueueFull { queued: self.total });
+        }
+        self.queues[req.model].push_back(req);
+        self.total += 1;
+        Ok(())
+    }
+
+    /// Pop the next dispatchable batch at virtual/wall time `now_us`, or
+    /// `None` if no model has a full batch or an expired deadline.
+    pub fn pop_ready(
+        &mut self,
+        now_us: u64,
+        batch_max: usize,
+        deadline_us: u64,
+    ) -> Option<(usize, Vec<Request>)> {
+        let n = self.queues.len();
+        let batch_max = batch_max.max(1);
+        // 1. Full batch, round-robin from the cursor.
+        for k in 0..n {
+            let m = (self.rr + k) % n;
+            if self.queues[m].len() >= batch_max {
+                return Some((m, self.take(m, batch_max)));
+            }
+        }
+        // 2. Oldest expired head (ties: lower model index).
+        let mut best: Option<(u64, usize)> = None;
+        for (m, q) in self.queues.iter().enumerate() {
+            if let Some(head) = q.front() {
+                if head.arrival_us.saturating_add(deadline_us) <= now_us
+                    && best.map_or(true, |(t, _)| head.arrival_us < t)
+                {
+                    best = Some((head.arrival_us, m));
+                }
+            }
+        }
+        best.map(|(_, m)| {
+            let take = self.queues[m].len().min(batch_max);
+            (m, self.take(m, take))
+        })
+    }
+
+    fn take(&mut self, model: usize, k: usize) -> Vec<Request> {
+        let out: Vec<Request> = self.queues[model].drain(..k).collect();
+        self.total -= out.len();
+        self.rr = (model + 1) % self.queues.len();
+        out
+    }
+
+    /// Earliest deadline among queue heads (when a partial batch would
+    /// flush if nothing else happens) — the batcher's sleep horizon.
+    pub fn next_deadline(&self, deadline_us: u64) -> Option<u64> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front())
+            .map(|h| h.arrival_us.saturating_add(deadline_us))
+            .min()
+    }
+}
+
+/// The inference service core: registered models + the shared engine.
+/// Construction warms the per-model executable cache for every batch
+/// size the batcher can form, so no compile happens on the serving path.
+pub struct Service {
+    engine: Arc<Engine>,
+    dir: PathBuf,
+    pub cfg: ServeConfig,
+    pub models: Vec<ServedModel>,
+}
+
+impl Service {
+    /// Batch sizes warmed eagerly at startup (larger `batch_max` values
+    /// warm lazily through the engine cache on first use).
+    const WARM_MAX: usize = 64;
+
+    pub fn new(
+        engine: Arc<Engine>,
+        dir: &Path,
+        models: Vec<ServedModel>,
+        cfg: ServeConfig,
+    ) -> Result<Service> {
+        if models.is_empty() {
+            bail!("serve: no models registered");
+        }
+        if cfg.batch_max == 0 {
+            bail!("serve: batch_max must be >= 1");
+        }
+        // The engine caches executables by artifact path, and serve paths
+        // embed the model name — duplicates would silently share (and
+        // shape-clash) executables.
+        for (i, m) in models.iter().enumerate() {
+            if models[..i].iter().any(|o| o.name == m.name) {
+                bail!("serve: duplicate model name '{}'", m.name);
+            }
+        }
+        for m in &models {
+            for b in 1..=cfg.batch_max.min(Self::WARM_MAX) {
+                engine.load(dir, &m.infer_io(b))?;
+            }
+        }
+        Ok(Service { engine, dir: dir.to_path_buf(), cfg, models })
+    }
+
+    /// Execute one coalesced batch (all requests share `model`) through
+    /// the shared engine. `start_us` is the dispatch time; the returned
+    /// `done_us` adds the mapper-priced virtual service time.
+    pub fn execute_batch(
+        &self,
+        model: usize,
+        reqs: &[Request],
+        start_us: u64,
+    ) -> Result<(Vec<Response>, BatchRecord)> {
+        if reqs.is_empty() {
+            bail!("serve: empty batch dispatched");
+        }
+        let m = &self.models[model];
+        let exe = self.engine.load(&self.dir, &m.infer_io(reqs.len()))?;
+        let samples: Vec<Vec<f32>> = reqs.iter().map(|r| r.sample(m.sample_len())).collect();
+        let x = lit_f32_batch(&m.sample_shape, &samples)?;
+        let params = lit_f32(&[m.n_params()], m.params_for(self.cfg.fxp))?;
+        let out = exe.run(&[params, x])?;
+        let Some(logits_lit) = out.first() else {
+            bail!("serve: artifact '{}' returned no outputs", m.infer_io(reqs.len()).path);
+        };
+        let logits = to_vec_f32(logits_lit)?;
+        if logits.is_empty() || logits.len() % reqs.len() != 0 {
+            bail!(
+                "serve: artifact returned {} logits for batch {} — not per-request rows",
+                logits.len(),
+                reqs.len()
+            );
+        }
+        let classes = logits.len() / reqs.len();
+        let done_us = start_us + m.cost.service_us(reqs.len(), self.cfg.batch_overhead_us);
+        let responses = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .fold((0usize, f32::NEG_INFINITY), |(bi, bv), (j, &v)| {
+                        if v > bv {
+                            (j, v)
+                        } else {
+                            (bi, bv)
+                        }
+                    })
+                    .0;
+                Response {
+                    id: r.id,
+                    model: r.model,
+                    client: r.client,
+                    arrival_us: r.arrival_us,
+                    start_us,
+                    done_us,
+                    batch_size: reqs.len(),
+                    argmax,
+                }
+            })
+            .collect();
+        let rec = BatchRecord {
+            model,
+            start_us,
+            done_us,
+            ids: reqs.iter().map(|r| r.id).collect(),
+        };
+        Ok((responses, rec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: usize, arrival: u64) -> Request {
+        Request { id, model, client: usize::MAX, arrival_us: arrival, seed: id ^ 0xABCD }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut q = BatchQueue::new(2, 64);
+        for i in 0..5 {
+            q.submit(req(i, 0, 10)).unwrap();
+        }
+        // Below batch_max and before the deadline: nothing dispatches.
+        assert!(q.pop_ready(11, 8, 1000).is_none());
+        for i in 5..8 {
+            q.submit(req(i, 0, 12)).unwrap();
+        }
+        let (m, batch) = q.pop_ready(12, 8, 1000).unwrap();
+        assert_eq!(m, 0);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), (0..8).collect::<Vec<_>>());
+        assert_eq!(q.total(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch_oldest_first() {
+        let mut q = BatchQueue::new(2, 64);
+        q.submit(req(0, 1, 100)).unwrap();
+        q.submit(req(1, 0, 150)).unwrap();
+        assert!(q.pop_ready(1099, 8, 1000).is_none());
+        // Model 1's head (arrival 100) expires first.
+        let (m, batch) = q.pop_ready(1100, 8, 1000).unwrap();
+        assert_eq!((m, batch.len()), (1, 1));
+        assert_eq!(q.next_deadline(1000), Some(1150));
+        let (m2, _) = q.pop_ready(2000, 8, 1000).unwrap();
+        assert_eq!(m2, 0);
+    }
+
+    #[test]
+    fn queue_cap_rejects_with_typed_error() {
+        let mut q = BatchQueue::new(1, 2);
+        q.submit(req(0, 0, 0)).unwrap();
+        q.submit(req(1, 0, 0)).unwrap();
+        assert_eq!(q.submit(req(2, 0, 0)), Err(Rejected::QueueFull { queued: 2 }));
+        // Draining frees capacity again.
+        let _ = q.pop_ready(0, 2, 1000).unwrap();
+        assert!(q.submit(req(3, 0, 1)).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_model_is_a_typed_refusal_not_a_panic() {
+        let mut q = BatchQueue::new(2, 8);
+        assert_eq!(
+            q.submit(req(0, 2, 0)),
+            Err(Rejected::UnknownModel { model: 2, n_models: 2 })
+        );
+        assert_eq!(q.total(), 0);
+    }
+
+    #[test]
+    fn round_robin_alternates_between_full_queues() {
+        let mut q = BatchQueue::new(2, 64);
+        for i in 0..4 {
+            q.submit(req(i, 0, 0)).unwrap();
+            q.submit(req(10 + i, 1, 0)).unwrap();
+        }
+        let (m1, _) = q.pop_ready(0, 2, 1000).unwrap();
+        let (m2, _) = q.pop_ready(0, 2, 1000).unwrap();
+        let (m3, _) = q.pop_ready(0, 2, 1000).unwrap();
+        assert_eq!(vec![m1, m2, m3], vec![0, 1, 0], "fairness cursor must alternate");
+    }
+
+    #[test]
+    fn request_samples_are_seed_deterministic() {
+        let a = req(1, 0, 0).sample(16);
+        let b = req(1, 0, 0).sample(16);
+        assert_eq!(a, b);
+        let c = Request { seed: 999, ..req(1, 0, 0) }.sample(16);
+        assert_ne!(a, c);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    mod stub_exec {
+        use super::*;
+        use crate::model::zoo::shiftaddnet_like;
+        use crate::serve::model::ServedModel;
+
+        fn service(cfg: ServeConfig) -> Service {
+            let arch = shiftaddnet_like(8, 4);
+            let m = ServedModel::from_arch("sa8", &arch, 3).unwrap();
+            Service::new(Arc::new(Engine::cpu().unwrap()), Path::new("artifacts"), vec![m], cfg)
+                .unwrap()
+        }
+
+        #[test]
+        fn execute_batch_is_deterministic_and_shaped() {
+            let svc = service(ServeConfig::default());
+            let reqs: Vec<Request> = (0..3).map(|i| req(i, 0, 5)).collect();
+            let (resps, rec) = svc.execute_batch(0, &reqs, 40).unwrap();
+            let (resps2, rec2) = svc.execute_batch(0, &reqs, 40).unwrap();
+            assert_eq!(resps, resps2);
+            assert_eq!(rec, rec2);
+            assert_eq!(resps.len(), 3);
+            assert_eq!(rec.ids, vec![0, 1, 2]);
+            assert!(rec.done_us > rec.start_us);
+            for r in &resps {
+                assert_eq!(r.batch_size, 3);
+                assert_eq!(r.start_us, 40);
+                assert!(r.latency_us() >= r.queue_us());
+            }
+        }
+
+        #[test]
+        fn fxp_mode_changes_outputs() {
+            let fp = service(ServeConfig::default());
+            let fx = service(ServeConfig { fxp: true, ..ServeConfig::default() });
+            let reqs: Vec<Request> = (0..8).map(|i| req(i, 0, 0)).collect();
+            let (a, _) = fp.execute_batch(0, &reqs, 0).unwrap();
+            let (b, _) = fx.execute_batch(0, &reqs, 0).unwrap();
+            // Quantized weights hash differently through the stub, so at
+            // least one served argmax differs with overwhelming odds.
+            assert_ne!(
+                a.iter().map(|r| r.argmax).collect::<Vec<_>>(),
+                b.iter().map(|r| r.argmax).collect::<Vec<_>>()
+            );
+        }
+
+        #[test]
+        fn empty_batch_is_an_error() {
+            let svc = service(ServeConfig::default());
+            assert!(svc.execute_batch(0, &[], 0).is_err());
+        }
+    }
+}
