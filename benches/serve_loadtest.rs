@@ -16,20 +16,36 @@
 //!   service model at both settings; `serve/vthroughput_*` records the
 //!   req/s, and batch-max=8 must be *strictly* higher (asserted, the
 //!   acceptance criterion).
+//!
+//! A third exhibit prices the **cpu backend** (real multiplication-free
+//! kernels) on the same batch=8 workload: `serve/loadtest_closed_batch8_cpu`
+//! is the wall-clock bench, `serve/cpu_vs_stub_batch8` the relative cost
+//! of real arithmetic over synthetic outputs, and the cpu run must replay
+//! bit-identically just like the stub one (real-hardware rows for
+//! EXPERIMENTS.md §Perf Iteration 4).
 
 use nasa::model::zoo::{resnet32_adder_like, shiftaddnet_like};
-use nasa::runtime::Engine;
+use nasa::runtime::{Backend, Engine};
 use nasa::serve::{run_loadtest, LoadSpec, Process, ServeConfig, ServedModel, Service};
 use nasa::util::bench::{env_usize, header, Runner};
 use std::path::Path;
 use std::sync::Arc;
 
-fn service(batch_max: usize) -> Service {
+fn service_on(batch_max: usize, backend: Backend) -> Service {
     let m0 = ServedModel::from_arch("sa16", &shiftaddnet_like(16, 10), 1).unwrap();
     let m1 = ServedModel::from_arch("rn16", &resnet32_adder_like(16, 10), 2).unwrap();
     let cfg = ServeConfig { batch_max, deadline_us: 2_000, ..ServeConfig::default() };
-    Service::new(Arc::new(Engine::cpu().unwrap()), Path::new("artifacts"), vec![m0, m1], cfg)
-        .unwrap()
+    Service::new(
+        Arc::new(Engine::with_backend(backend).unwrap()),
+        Path::new("artifacts"),
+        vec![m0, m1],
+        cfg,
+    )
+    .unwrap()
+}
+
+fn service(batch_max: usize) -> Service {
+    service_on(batch_max, Backend::Stub)
 }
 
 fn main() {
@@ -86,9 +102,43 @@ fn main() {
         out8.metrics.to_json().to_string(),
         "metrics JSON must replay exactly"
     );
+
+    // Real-hardware rows: the cpu backend executes the served children
+    // through the native multiplication-free kernels, so these numbers
+    // price genuine shift/adder arithmetic instead of synthetic hashing.
+    let svc_cpu = service_on(8, Backend::Cpu);
+    let wall_cpu = runner.bench("serve/loadtest_closed_batch8_cpu", || {
+        let out = run_loadtest(&svc_cpu, &spec, 42).unwrap();
+        assert_eq!(out.metrics.completed as usize, n);
+        std::hint::black_box(out.metrics.span_us);
+    });
+    // >1 means real kernels cost more wall time per workload than the
+    // stub — the price of real outputs (recorded, not asserted: tiny
+    // models can go either way on a noisy CI host).
+    runner.record_speedup("serve/cpu_vs_stub_batch8", &wall_cpu, &wall8);
+    let out_cpu = run_loadtest(&svc_cpu, &spec, 42).unwrap();
+    runner.record_value("serve/vthroughput_rps_batch8_cpu", out_cpu.metrics.throughput_rps());
+    runner.record_value("serve/occupancy_batch8_cpu", out_cpu.metrics.batch_occupancy());
+    runner.record_value(
+        "serve/p99_us_batch8_cpu",
+        out_cpu.metrics.global.percentile(0.99) as f64,
+    );
+    assert_eq!(out_cpu.metrics.completed as usize, n, "cpu backend dropped requests");
+    // Virtual-time scheduling is backend-independent: the mapper-priced
+    // service model drives batching, so the cpu run coalesces exactly
+    // like the stub run and replays bit-identically.
+    assert_eq!(out_cpu.batches, out8.batches, "cpu batch boundaries must match stub");
+    let cpu_again = run_loadtest(&service_on(8, Backend::Cpu), &spec, 42).unwrap();
+    assert_eq!(cpu_again.batches, out_cpu.batches, "cpu batches must replay exactly");
+    assert_eq!(
+        cpu_again.metrics.to_json().to_string(),
+        out_cpu.metrics.to_json().to_string(),
+        "cpu metrics JSON must replay exactly"
+    );
+
     println!(
         "serve: batch8 {t8:.1} req/s vs batch1 {t1:.1} req/s (x{:.2} virtual), \
-         occupancy {:.2}, deterministic replay OK",
+         occupancy {:.2}, deterministic replay OK (stub + cpu)",
         t8 / t1,
         out8.metrics.batch_occupancy()
     );

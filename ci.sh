@@ -7,6 +7,10 @@
 #
 # Tier-1 (the hard gate, mirrored by the project driver):
 #   cargo build --release && cargo test -q
+# `cargo test` includes the kernel differential harness
+# (tests/kernel_differential.rs): every native multiplication-free kernel
+# vs its naive oracle over seeded shape/tiling grids, plus the committed
+# Python-generated golden vectors in fixtures/kernel_golden/.
 
 set -eu
 
@@ -77,10 +81,21 @@ cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
     --closed-loop 4 --requests 200 --seed 11 --json target/ci_serve/cl2.json
 cmp target/ci_serve/cl1.json target/ci_serve/cl2.json
 
+say "cpu backend smoke: nasa serve --backend cpu (real kernel inference)"
+# Same derived children, served through the native multiplication-free
+# kernels instead of the stub: 50 closed-loop requests must all complete
+# (cmd_serve bails on any drop), producing genuine input-sensitive
+# argmaxes end to end with no artifacts or native deps.
+cargo run --release --quiet -- serve --models "$SERVE_MODELS" \
+    --backend cpu --requests 50 --clients 2 --batch-max 8 \
+    --deadline-us 2000 --seed 7
+
 say "serve perf smoke: serve_loadtest --quick --json BENCH_serve.json"
 # Batched-vs-unbatched throughput exhibit (EXPERIMENTS.md §Perf
-# Iteration 3); the bench itself asserts batch-max=8 strictly beats
-# batch=1 and that the seeded replay is bit-identical.
+# Iterations 3-4); the bench itself asserts batch-max=8 strictly beats
+# batch=1, that the seeded replay is bit-identical (stub AND cpu), and
+# emits the cpu-backend rows (real-kernel wall clock, cpu-vs-stub
+# speedup, modeled throughput/occupancy/p99) into the same JSON.
 cargo bench --bench serve_loadtest -- --quick --json BENCH_serve.json
 
 say "serve bench baseline diff (advisory)"

@@ -167,3 +167,39 @@ def test_batch_norm_normalizes():
     y = np.asarray(ref.batch_norm_ref(x, jnp.ones(8), jnp.zeros(8)))
     np.testing.assert_allclose(y.mean(axis=0), 0.0, atol=1e-4)
     np.testing.assert_allclose(y.std(axis=0), 1.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Golden-vector reproduction: the committed fixtures under
+# fixtures/kernel_golden/ (consumed byte-for-byte by the Rust differential
+# harness, tests/kernel_differential.rs) must be exactly what
+# scripts/gen_kernel_golden.py generates from these references today.
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_golden_fixtures_reproduce_byte_for_byte():
+    import importlib.util
+    from pathlib import Path
+
+    repo = Path(__file__).resolve().parents[2]
+    spec = importlib.util.spec_from_file_location(
+        "gen_kernel_golden", repo / "scripts" / "gen_kernel_golden.py"
+    )
+    gen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gen)
+
+    fixture_dir = repo / "fixtures" / "kernel_golden"
+    files = gen.generate_all()
+    assert set(files) == {
+        "pow2_quant.json",
+        "pw_f32.json",
+        "pw_fxp.json",
+        "dw_f32.json",
+        "dw_fxp.json",
+    }
+    for name, text in files.items():
+        committed = (fixture_dir / name).read_text()
+        assert committed == text, (
+            f"{name} is stale — regenerate with "
+            "`PYTHONPATH=python python3 scripts/gen_kernel_golden.py`"
+        )

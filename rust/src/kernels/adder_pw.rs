@@ -1,0 +1,71 @@
+//! AdderNet pointwise kernel: `out[i,j] = -Σ_t |x[i,t] - w[t,j]|` —
+//! similarity as negative ℓ1 distance, computed with subtractions,
+//! absolute values, and adds only.
+
+use crate::accel::Tiling;
+use crate::model::quant::qmax_for;
+
+use super::run_tiled;
+
+/// f32 adder GEMM. Same sequential per-element accumulation order as
+/// [`super::ref_impls::adder_pw_ref`], so the comparison is bit-exact.
+pub fn adder_pw_f32(x2d: &[f32], w: &[f32], m: usize, k: usize, n: usize, tiling: Option<Tiling>) -> Vec<f32> {
+    assert_eq!(x2d.len(), m * k, "adder_pw_f32 x2d shape");
+    assert_eq!(w.len(), k * n, "adder_pw_f32 w shape");
+    run_tiled(m, n, tiling, |m0, m1, n0, n1| {
+        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
+        for i in m0..m1 {
+            let xr = &x2d[i * k..(i + 1) * k];
+            for j in n0..n1 {
+                let mut acc = 0.0f32;
+                for (t, &xv) in xr.iter().enumerate() {
+                    acc += (xv - w[t * n + j]).abs();
+                }
+                block.push(-acc);
+            }
+        }
+        block
+    })
+}
+
+/// FXP adder GEMM. ℓ1 distance only dequantizes linearly if activations
+/// and weights share one scale (`|sx·a - sw·b|` has no common factor
+/// otherwise), so callers quantize both sides at
+/// [`adder_shared_scale`] and dequantize with `acc_scale = s as f64`.
+pub fn adder_pw_fxp(xq: &[i32], wq: &[i32], m: usize, k: usize, n: usize, tiling: Option<Tiling>) -> Vec<i64> {
+    assert_eq!(xq.len(), m * k, "adder_pw_fxp xq shape");
+    assert_eq!(wq.len(), k * n, "adder_pw_fxp wq shape");
+    run_tiled(m, n, tiling, |m0, m1, n0, n1| {
+        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
+        for i in m0..m1 {
+            let xr = &xq[i * k..(i + 1) * k];
+            for j in n0..n1 {
+                let mut acc = 0i64;
+                for (t, &xv) in xr.iter().enumerate() {
+                    acc += (xv as i64 - wq[t * n + j] as i64).abs();
+                }
+                block.push(-acc);
+            }
+        }
+        block
+    })
+}
+
+/// The single scale an adder layer's activations *and* weights are
+/// quantized at: `max(|x| ∪ |w|) / qmax(bits)` over finite values
+/// (mirroring `quant::quantize`'s max-abs rule, but over the union),
+/// `1.0` when everything is zero/non-finite.
+pub fn adder_shared_scale(x: &[f32], w: &[f32], bits: u32) -> f32 {
+    let qmax = qmax_for(bits) as f32;
+    let max_abs = x
+        .iter()
+        .chain(w.iter())
+        .map(|v| v.abs())
+        .filter(|v| v.is_finite())
+        .fold(0.0f32, f32::max);
+    if max_abs > 0.0 {
+        max_abs / qmax
+    } else {
+        1.0
+    }
+}

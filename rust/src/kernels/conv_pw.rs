@@ -1,0 +1,53 @@
+//! Multiplication-based pointwise convolution (plain GEMM): the baseline
+//! operator the shift/adder kernels are traded against. `x2d` is the
+//! flattened activation matrix `[M, K]` (`M = B*H*W` pixels for a 1×1
+//! conv, or im2col patch rows for dense K×K), `w` is `[K, N]`.
+
+use crate::accel::Tiling;
+
+use super::run_tiled;
+
+/// f32 GEMM, tiled per the mapper's choice. The inner contraction is a
+/// single sequential f32 accumulator per output element, so results are
+/// bitwise identical to [`super::ref_impls::conv_pw_ref`] for every
+/// tiling and thread count.
+pub fn conv_pw_f32(x2d: &[f32], w: &[f32], m: usize, k: usize, n: usize, tiling: Option<Tiling>) -> Vec<f32> {
+    assert_eq!(x2d.len(), m * k, "conv_pw_f32 x2d shape");
+    assert_eq!(w.len(), k * n, "conv_pw_f32 w shape");
+    run_tiled(m, n, tiling, |m0, m1, n0, n1| {
+        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
+        for i in m0..m1 {
+            let xr = &x2d[i * k..(i + 1) * k];
+            for j in n0..n1 {
+                let mut acc = 0.0f32;
+                for (t, &xv) in xr.iter().enumerate() {
+                    acc += xv * w[t * n + j];
+                }
+                block.push(acc);
+            }
+        }
+        block
+    })
+}
+
+/// FXP GEMM over quantized activations/weights: pure i64 integer
+/// accumulation (`Σ xq·wq`), bit-exact by construction. Dequantize the
+/// result with `kernels::dequant_i64(acc, sx as f64 * sw as f64)`.
+pub fn conv_pw_fxp(xq: &[i32], wq: &[i32], m: usize, k: usize, n: usize, tiling: Option<Tiling>) -> Vec<i64> {
+    assert_eq!(xq.len(), m * k, "conv_pw_fxp xq shape");
+    assert_eq!(wq.len(), k * n, "conv_pw_fxp wq shape");
+    run_tiled(m, n, tiling, |m0, m1, n0, n1| {
+        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
+        for i in m0..m1 {
+            let xr = &xq[i * k..(i + 1) * k];
+            for j in n0..n1 {
+                let mut acc = 0i64;
+                for (t, &xv) in xr.iter().enumerate() {
+                    acc += xv as i64 * wq[t * n + j] as i64;
+                }
+                block.push(acc);
+            }
+        }
+        block
+    })
+}

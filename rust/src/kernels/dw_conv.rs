@@ -1,0 +1,199 @@
+//! Depthwise K×K kernels (SAME padding) for all three operator families.
+//!
+//! Layouts: `x` NHWC `[B,H,W,C]`, weights `[K,K,C]` flattened in
+//! `(ki, kj, c)` order, output `[B,Ho,Wo,C]`. Padded positions fetch
+//! `0.0` (or code `0` on the FXP path) and *do contribute* to adder sums
+//! (`|0 - w| != 0`), matching `ref.py::_dw_patches`, which materializes
+//! zero-padded patches before the reduction.
+//!
+//! Tiling maps the mapper's `[M, N]` PE grid onto `M = B*Ho*Wo` output
+//! pixels × `N = C` channels via [`super::run_tiled`]; per-element
+//! accumulation runs the fixed `(ki, kj)` order, so outputs are bitwise
+//! tiling/thread-invariant and f32-comparable against the oracles.
+
+use crate::accel::Tiling;
+use crate::model::OpKind;
+
+use super::{mul_pow2, run_tiled, same_out_hw, ShiftCode};
+
+/// Shared geometry/dispatch for the three f32 depthwise kernels.
+fn dw_f32(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+    term: impl Fn(f32, usize) -> f32 + Sync, // (x_val, weight_index) -> contribution
+    negate: bool,
+) -> Vec<f32> {
+    assert_eq!(x.len(), b * h * w * c, "dw kernel x shape");
+    let pad = ((k - 1) / 2) as isize;
+    let (ho, wo) = same_out_hw(h, w, k, stride);
+    let m = b * ho * wo;
+    let flat = run_tiled(m, c, tiling, |m0, m1, n0, n1| {
+        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
+        for pix in m0..m1 {
+            let bi = pix / (ho * wo);
+            let oy = (pix / wo) % ho;
+            let ox = pix % wo;
+            for ci in n0..n1 {
+                let mut acc = 0.0f32;
+                for ki in 0..k {
+                    for kj in 0..k {
+                        let iy = (oy * stride + ki) as isize - pad;
+                        let ix = (ox * stride + kj) as isize - pad;
+                        let v = if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            x[((bi * h + iy as usize) * w + ix as usize) * c + ci]
+                        } else {
+                            0.0
+                        };
+                        acc += term(v, (ki * k + kj) * c + ci);
+                    }
+                }
+                block.push(if negate { -acc } else { acc });
+            }
+        }
+        block
+    });
+    flat
+}
+
+pub fn dw_conv_f32(
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    h: usize,
+    wd: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+) -> Vec<f32> {
+    assert_eq!(w.len(), k * k * c, "dw_conv_f32 w shape");
+    dw_f32(x, b, h, wd, c, k, stride, tiling, |v, wi| v * w[wi], false)
+}
+
+/// Depthwise shift: each tap is `±(v scaled by 2^p)` via exponent
+/// arithmetic; zero codes contribute `+0.0` exactly like the oracle's
+/// multiply by zero (`v * 0.0` is `±0.0`, and adding either to a sum
+/// started at `+0.0` leaves its bits unchanged).
+pub fn dw_shift_f32(
+    x: &[f32],
+    codes: &[ShiftCode],
+    b: usize,
+    h: usize,
+    wd: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+) -> Vec<f32> {
+    assert_eq!(codes.len(), k * k * c, "dw_shift_f32 codes shape");
+    dw_f32(
+        x,
+        b,
+        h,
+        wd,
+        c,
+        k,
+        stride,
+        tiling,
+        |v, wi| {
+            let cd = codes[wi];
+            match cd.s {
+                0 => 0.0,
+                1 => mul_pow2(v, cd.p as i32),
+                _ => -mul_pow2(v, cd.p as i32),
+            }
+        },
+        false,
+    )
+}
+
+pub fn dw_adder_f32(
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    h: usize,
+    wd: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+) -> Vec<f32> {
+    assert_eq!(w.len(), k * k * c, "dw_adder_f32 w shape");
+    dw_f32(x, b, h, wd, c, k, stride, tiling, |v, wi| (v - w[wi]).abs(), true)
+}
+
+/// FXP depthwise, one entry point for all three kinds (quantized i32
+/// activations, i64 accumulators). `wq` is ignored for `Shift` (codes
+/// are used) and `codes` is ignored otherwise; pass `&[]` for the unused
+/// one. Padded taps fetch code `0` — for adder layers they contribute
+/// `|0 - wq|`, mirroring the f32 semantics in the shared-scale frame.
+#[allow(clippy::too_many_arguments)]
+pub fn dw_fxp(
+    kind: OpKind,
+    xq: &[i32],
+    wq: &[i32],
+    codes: &[ShiftCode],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+) -> Vec<i64> {
+    assert_eq!(xq.len(), b * h * w * c, "dw_fxp xq shape");
+    match kind {
+        OpKind::Shift => assert_eq!(codes.len(), k * k * c, "dw_fxp codes shape"),
+        _ => assert_eq!(wq.len(), k * k * c, "dw_fxp wq shape"),
+    }
+    let pad = ((k - 1) / 2) as isize;
+    let (ho, wo) = same_out_hw(h, w, k, stride);
+    let m = b * ho * wo;
+    run_tiled(m, c, tiling, |m0, m1, n0, n1| {
+        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
+        for pix in m0..m1 {
+            let bi = pix / (ho * wo);
+            let oy = (pix / wo) % ho;
+            let ox = pix % wo;
+            for ci in n0..n1 {
+                let mut acc = 0i64;
+                for ki in 0..k {
+                    for kj in 0..k {
+                        let iy = (oy * stride + ki) as isize - pad;
+                        let ix = (ox * stride + kj) as isize - pad;
+                        let v = if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            xq[((bi * h + iy as usize) * w + ix as usize) * c + ci] as i64
+                        } else {
+                            0
+                        };
+                        let wi = (ki * k + kj) * c + ci;
+                        match kind {
+                            OpKind::Conv => acc += v * wq[wi] as i64,
+                            OpKind::Shift => {
+                                let cd = codes[wi];
+                                if cd.s != 0 {
+                                    let e = (cd.p as i32 + super::shift_pw::SHIFT_FXP_EXP) as u32;
+                                    let term = v << e;
+                                    if cd.s > 0 {
+                                        acc += term;
+                                    } else {
+                                        acc -= term;
+                                    }
+                                }
+                            }
+                            OpKind::Adder => acc += (v - wq[wi] as i64).abs(),
+                        }
+                    }
+                }
+                block.push(if kind == OpKind::Adder { -acc } else { acc });
+            }
+        }
+        block
+    })
+}

@@ -1,0 +1,251 @@
+//! Deliberately-naive reference oracles for every optimized kernel.
+//!
+//! These are the Rust half of the differential harness
+//! (`tests/kernel_differential.rs`): straight-line triple loops, no
+//! tiling, no threads, no exponent tricks — shift weights are applied by
+//! *actual floating multiplies* against the decoded `s * 2^p` value, and
+//! the FXP shift oracle uses an integer *multiply* by `s << e` where the
+//! optimized kernel uses a shift-add. Per element the contraction axis
+//! runs in the same k-order as the optimized kernels, which is what
+//! makes the f32 comparisons bit-exact rather than merely close (both
+//! sides perform the identical sequence of f32 adds; a pow2 scale is
+//! exact, so multiply-by-value and exponent-add round identically).
+//!
+//! Keep these boring. Any cleverness here defeats their purpose.
+
+use super::{same_out_hw, ShiftCode};
+
+/// Textbook DeepShift-Q rounding — `round(log2|w|)` through f64 `log2`
+/// (the literal transliteration of `ref.py::pow2_quant`). Used only to
+/// cross-check the exact bit-pattern decomposition in `kernels::mod`.
+pub fn pow2_quant_log2(w: f32) -> f32 {
+    let a = w.abs();
+    if !(a >= super::POW2_ZERO_THRESH) {
+        return 0.0;
+    }
+    let p = (a as f64 + 1e-12).log2().round().clamp(super::P_MIN as f64, super::P_MAX as f64);
+    (if w < 0.0 { -1.0f64 } else { 1.0 } * f64::powi(2.0, p as i32)) as f32
+}
+
+// ---------------------------------------------------------------------------
+// pointwise (matrix) oracles: x2d [M,K] · w [K,N] -> [M,N]
+// ---------------------------------------------------------------------------
+
+pub fn conv_pw_ref(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += x[i * k + t] * w[t * n + j];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Shift oracle: decode each code to its f32 value and multiply.
+pub fn shift_pw_ref(x: &[f32], codes: &[ShiftCode], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += x[i * k + t] * codes[t * n + j].value();
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// AdderNet oracle: `out[i,j] = -Σ_t |x[i,t] - w[t,j]|`.
+pub fn adder_pw_ref(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += (x[i * k + t] - w[t * n + j]).abs();
+            }
+            out[i * n + j] = -acc;
+        }
+    }
+    out
+}
+
+// FXP oracles: quantized i32 inputs, i64 accumulators. The conv/shift
+// oracles multiply (shift's factor is `s * 2^e` materialized as an i64);
+// the optimized kernels must reproduce these accumulators bit-exactly.
+
+pub fn conv_pw_fxp_ref(xq: &[i32], wq: &[i32], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for t in 0..k {
+                acc += xq[i * k + t] as i64 * wq[t * n + j] as i64;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// FXP shift oracle in the fixed-point frame `2^-SHIFT_FXP_EXP`: code
+/// `s·2^p` becomes the integer factor `s · 2^(p + SHIFT_FXP_EXP)` and is
+/// applied by multiplication.
+pub fn shift_pw_fxp_ref(xq: &[i32], codes: &[ShiftCode], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for t in 0..k {
+                let c = codes[t * n + j];
+                let e = c.p as i32 + super::shift_pw::SHIFT_FXP_EXP;
+                acc += xq[i * k + t] as i64 * (c.s as i64 * (1i64 << e));
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+pub fn adder_pw_fxp_ref(xq: &[i32], wq: &[i32], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for t in 0..k {
+                acc += (xq[i * k + t] as i64 - wq[t * n + j] as i64).abs();
+            }
+            out[i * n + j] = -acc;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// depthwise oracles: x NHWC [B,H,W,C], w [K,K,C] -> [B,Ho,Wo,C]
+// ---------------------------------------------------------------------------
+
+/// Padded fetch: SAME padding contributes 0.0 — which *does* contribute
+/// to adder sums (`|0 - w| != 0`), exactly like `ref.py::_dw_patches`.
+fn at(x: &[f32], b: usize, h: usize, w: usize, c: usize, bi: usize, iy: isize, ix: isize, ci: usize) -> f32 {
+    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+        x[((bi * h + iy as usize) * w + ix as usize) * c + ci]
+    } else {
+        0.0
+    }
+}
+
+fn dw_loop(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    f: impl Fn(&mut f32, f32, usize), // (acc, x_val, weight_index)
+    finish: impl Fn(f32) -> f32,
+) -> Vec<f32> {
+    let pad = ((k - 1) / 2) as isize;
+    let (ho, wo) = same_out_hw(h, w, k, stride);
+    let mut out = vec![0.0f32; b * ho * wo * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for ci in 0..c {
+                    let mut acc = 0.0f32;
+                    for ki in 0..k {
+                        for kj in 0..k {
+                            let iy = (oy * stride + ki) as isize - pad;
+                            let ix = (ox * stride + kj) as isize - pad;
+                            let v = at(x, b, h, w, c, bi, iy, ix, ci);
+                            f(&mut acc, v, (ki * k + kj) * c + ci);
+                        }
+                    }
+                    out[((bi * ho + oy) * wo + ox) * c + ci] = finish(acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn dw_conv_ref(x: &[f32], w: &[f32], b: usize, h: usize, wd: usize, c: usize, k: usize, stride: usize) -> Vec<f32> {
+    dw_loop(x, b, h, wd, c, k, stride, |acc, v, wi| *acc += v * w[wi], |a| a)
+}
+
+pub fn dw_shift_ref(
+    x: &[f32],
+    codes: &[ShiftCode],
+    b: usize,
+    h: usize,
+    wd: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+) -> Vec<f32> {
+    dw_loop(x, b, h, wd, c, k, stride, |acc, v, wi| *acc += v * codes[wi].value(), |a| a)
+}
+
+pub fn dw_adder_ref(x: &[f32], w: &[f32], b: usize, h: usize, wd: usize, c: usize, k: usize, stride: usize) -> Vec<f32> {
+    dw_loop(x, b, h, wd, c, k, stride, |acc, v, wi| *acc += (v - w[wi]).abs(), |a| -a)
+}
+
+// ---------------------------------------------------------------------------
+// dense K×K oracle (direct loops, no im2col) for the composed path
+// ---------------------------------------------------------------------------
+
+/// Dense convolution by direct 7-deep loops, any of the three operator
+/// kinds. Weights are `[K*K*Cin, Cout]` in `(ki, kj, cin)` row order —
+/// the same layout the optimized path feeds to the pointwise kernels
+/// after `im2col_nhwc`. The inner `(ki, kj, cin)` order also matches the
+/// im2col patch order, keeping f32 accumulation comparable bit-exactly.
+pub fn dense_conv_ref(
+    kind: crate::model::OpKind,
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    h: usize,
+    wd: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let pad = ((k - 1) / 2) as isize;
+    let (ho, wo) = same_out_hw(h, wd, k, stride);
+    let codes = super::decompose_pow2(w);
+    let mut out = vec![0.0f32; b * ho * wo * cout];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for co in 0..cout {
+                    let mut acc = 0.0f32;
+                    for ki in 0..k {
+                        for kj in 0..k {
+                            let iy = (oy * stride + ki) as isize - pad;
+                            let ix = (ox * stride + kj) as isize - pad;
+                            for ci in 0..cin {
+                                let v = at(x, b, h, wd, cin, bi, iy, ix, ci);
+                                let wi = ((ki * k + kj) * cin + ci) * cout + co;
+                                match kind {
+                                    crate::model::OpKind::Conv => acc += v * w[wi],
+                                    crate::model::OpKind::Shift => acc += v * codes[wi].value(),
+                                    crate::model::OpKind::Adder => acc += (v - w[wi]).abs(),
+                                }
+                            }
+                        }
+                    }
+                    let oi = ((bi * ho + oy) * wo + ox) * cout + co;
+                    out[oi] = if kind == crate::model::OpKind::Adder { -acc } else { acc };
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,94 @@
+//! DeepShift-Q pointwise kernel: every weight is `s * 2^p`
+//! ([`super::ShiftCode`]), so the inner loop never multiplies.
+//!
+//! * f32 path: scale by exponent-field addition ([`super::mul_pow2`]) —
+//!   bit-identical to multiplying by the exact pow2 value, without the
+//!   multiplier.
+//! * FXP path: a genuine integer shift-add — activations are quantized
+//!   to i32, each term is `±(xq << (p + SHIFT_FXP_EXP))`, and the i64
+//!   accumulator carries the result in the `2^-SHIFT_FXP_EXP` frame.
+//!   This is the paper's multiplication-free claim made literal.
+
+use crate::accel::Tiling;
+
+use super::{run_tiled, ShiftCode};
+
+/// Fixed-point exponent offset for the FXP shift path: since
+/// `p ∈ [P_MIN, 0] = [-14, 0]`, biasing by 14 makes every shift amount
+/// non-negative (`0..=14`), so terms are exact left-shifts. Dequantize
+/// with `acc * sx * 2^-SHIFT_FXP_EXP`.
+pub const SHIFT_FXP_EXP: i32 = -super::P_MIN;
+
+/// f32 shift GEMM: `out[i,j] = Σ_t ± x[i,t]·2^p` applied via exponent
+/// arithmetic. Zero codes (`s == 0`) are skipped — adding `±0.0` to a
+/// running sum that started at `+0.0` never changes its bits, so the
+/// skip is bitwise equivalent to the oracle's multiply-by-zero.
+pub fn shift_pw_f32(
+    x2d: &[f32],
+    codes: &[ShiftCode],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiling: Option<Tiling>,
+) -> Vec<f32> {
+    assert_eq!(x2d.len(), m * k, "shift_pw_f32 x2d shape");
+    assert_eq!(codes.len(), k * n, "shift_pw_f32 codes shape");
+    run_tiled(m, n, tiling, |m0, m1, n0, n1| {
+        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
+        for i in m0..m1 {
+            let xr = &x2d[i * k..(i + 1) * k];
+            for j in n0..n1 {
+                let mut acc = 0.0f32;
+                for (t, &xv) in xr.iter().enumerate() {
+                    let c = codes[t * n + j];
+                    match c.s {
+                        0 => {}
+                        1 => acc += super::mul_pow2(xv, c.p as i32),
+                        _ => acc -= super::mul_pow2(xv, c.p as i32),
+                    }
+                }
+                block.push(acc);
+            }
+        }
+        block
+    })
+}
+
+/// FXP shift GEMM: `acc ± (xq << (p + SHIFT_FXP_EXP))` — shifts and adds
+/// only. Bit-exact against [`super::ref_impls::shift_pw_fxp_ref`] (which
+/// multiplies by the materialized `s·2^e` factor).
+pub fn shift_pw_fxp(
+    xq: &[i32],
+    codes: &[ShiftCode],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiling: Option<Tiling>,
+) -> Vec<i64> {
+    assert_eq!(xq.len(), m * k, "shift_pw_fxp xq shape");
+    assert_eq!(codes.len(), k * n, "shift_pw_fxp codes shape");
+    run_tiled(m, n, tiling, |m0, m1, n0, n1| {
+        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
+        for i in m0..m1 {
+            let xr = &xq[i * k..(i + 1) * k];
+            for j in n0..n1 {
+                let mut acc = 0i64;
+                for (t, &xv) in xr.iter().enumerate() {
+                    let c = codes[t * n + j];
+                    if c.s == 0 {
+                        continue;
+                    }
+                    let e = (c.p as i32 + SHIFT_FXP_EXP) as u32;
+                    let term = (xv as i64) << e;
+                    if c.s > 0 {
+                        acc += term;
+                    } else {
+                        acc -= term;
+                    }
+                }
+                block.push(acc);
+            }
+        }
+        block
+    })
+}

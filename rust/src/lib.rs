@@ -14,9 +14,11 @@
 //!   (python/compile/kernels/), on the executed path via the fixed-child
 //!   artifacts.
 //!
-//! Execution backends (see the `runtime` module): the default build uses
-//! a pure-Rust deterministic stub so everything compiles and runs with no
-//! native dependencies; enabling the non-default `pjrt` cargo feature
+//! Execution backends (see the `runtime` module): the default build
+//! offers the pure-Rust deterministic stub (everything compiles and runs
+//! with no native dependencies) and the native `cpu` backend (`kernels`
+//! module: real multiplication-free shift/adder/conv arithmetic for
+//! served children); enabling the non-default `pjrt` cargo feature
 //! selects the real XLA/PJRT path for the AOT HLO artifacts.
 //!
 //! See DESIGN.md for the full system inventory and experiment index, and
@@ -24,6 +26,7 @@
 
 pub mod accel;
 pub mod coordinator;
+pub mod kernels;
 pub mod mapper;
 pub mod model;
 pub mod nas;

@@ -25,7 +25,7 @@ use nasa::coordinator::{
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::{arch_op_counts, Arch, QuantSpec};
 use nasa::nas::PgpSchedule;
-use nasa::runtime::{Engine, Manifest};
+use nasa::runtime::{Backend, Engine, Manifest};
 use nasa::serve::{
     drive_closed_loop, replay_trace, run_loadtest, LoadSpec, Process, ServeConfig, ServedModel,
     Service, Trace,
@@ -81,19 +81,22 @@ USAGE: nasa <subcommand> [--options]
   map      --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
            [--greedy-tiling] [--no-lattice] [--tied-noc] [--reference]
   serve    --models runs/a.json,runs/b.json [--requests 200] [--clients 4]
-           [--batch-max 8] [--deadline-us 2000] [--queue-cap 256]
-           [--overhead-us 50] [--mix 3,1] [--fxp] [--seed 42]
-           [--trace out.json] [--json metrics.json]
-           (live threaded service, wall-clock numbers; --trace records a
-            replayable arrival schedule for `loadtest --trace`)
+           [--backend stub|cpu] [--batch-max 8] [--deadline-us 2000]
+           [--queue-cap 256] [--overhead-us 50] [--mix 3,1] [--fxp]
+           [--seed 42] [--trace out.json] [--json metrics.json]
+           (live threaded service, wall-clock numbers; --backend cpu runs
+            real multiplication-free kernels so logits/argmax are genuine;
+            --trace records a replayable arrival schedule for
+            `loadtest --trace`)
   loadtest --models runs/a.json,runs/b.json [--requests 200] [--seed 42]
            (--rps 1000 [--poisson] | --closed-loop 4 [--think-us 0]
             | --trace in.json)
-           [--batch-max 8] [--deadline-us 2000] [--queue-cap 256]
-           [--overhead-us 50] [--mix 3,1] [--fxp]
+           [--backend stub|cpu] [--batch-max 8] [--deadline-us 2000]
+           [--queue-cap 256] [--overhead-us 50] [--mix 3,1] [--fxp]
            [--json metrics.json] [--save-trace out.json]
            (deterministic virtual-time load test: identical flags+seed
-            give bit-identical batches, latencies and metrics JSON)
+            give bit-identical batches, latencies and metrics JSON;
+            scheduling is backend-independent)
   check    [--artifacts artifacts]
   report   table2|fig2|fig6|fig7|fig8 [--out runs]
 "
@@ -385,7 +388,14 @@ fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>)> {
         None => vec![],
         Some(s) => parse_list(s, |t| t.parse::<f64>().map_err(|e| anyhow::anyhow!("--mix: {e}")))?,
     };
-    let engine = Arc::new(Engine::cpu()?);
+    // --backend: stub (default) keeps the historical synthetic outputs;
+    // cpu executes the served children through the native kernels; pjrt
+    // needs the feature build.
+    let engine = match args.get("backend") {
+        None => Arc::new(Engine::cpu()?),
+        Some(b) => Arc::new(Engine::with_backend(Backend::parse(b)?)?),
+    };
+    println!("backend: {}", engine.platform());
     for m in &models {
         println!(
             "model '{}': {} layers, {} params, {:.1} cyc/inf, {:.3} uJ/inf{}",

@@ -87,7 +87,8 @@ impl QuantTensor {
     }
 }
 
-fn qmax_for(bits: u32) -> i32 {
+/// Largest representable code magnitude at a given width.
+pub fn qmax_for(bits: u32) -> i32 {
     (1i32 << (bits - 1)) - 1
 }
 

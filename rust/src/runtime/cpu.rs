@@ -1,0 +1,450 @@
+//! Real CPU execution of derived-child networks: [`CpuModel`] compiles a
+//! serve [`Arch`](crate::model::Arch) into a plan over the native kernels
+//! in `crate::kernels` and runs genuine shift/adder/conv arithmetic —
+//! unlike the stub, logits are a function of the actual input values, so
+//! argmax differs across distinct inputs.
+//!
+//! Execution contract (what the differential/determinism tests pin):
+//!
+//! * Weights are the serve layer's flat seeded `params`, interpreted per
+//!   layer as `[cin, cout]` (pointwise), `[k*k*cin, cout]` in
+//!   `(ki, kj, ci)` row order (dense), or `[k, k, c]` (depthwise) — the
+//!   layouts the kernels and `ref_impls` oracles share.
+//! * Between layers (never after the last), activations pass through a
+//!   per-sample normalization (f64 mean/variance, `eps = 1e-5`) and
+//!   ReLU. Adder layers output `-Σ|·| ≤ 0` everywhere, so a bare ReLU
+//!   would zero them; normalizing first keeps signal flowing while
+//!   staying batch-composition invariant (each sample only sees itself).
+//! * Spatial geometry follows the arch: each layer consumes
+//!   `h_out*stride × w_out*stride`; if the incoming activation is larger
+//!   (e.g. the zoo's resnet-like head before its 1×1 fc), an adaptive
+//!   average pool reconciles it, and a final global pool collapses any
+//!   remaining spatial extent before the logits.
+//! * FXP mode is the real quantized path: activations are quantized
+//!   per sample at `QuantSpec` act width, weights per layer (conv codes,
+//!   shift pow2 codes, adder shared-scale codes), kernels accumulate in
+//!   integers (`shift` by literal shift-adds), and `dequant_i64` maps
+//!   the accumulators back — `quantize_with_scale → integer accumulate →
+//!   dequantize`, end to end.
+//!
+//! Everything is deterministic: sequential per-element accumulation,
+//! f64 reductions for the pools/norms, and tiling/thread-count-invariant
+//! kernels, so replaying a trace is bit-identical run to run.
+
+use crate::accel::Tiling;
+use crate::kernels::{
+    adder_pw::{adder_pw_f32, adder_pw_fxp, adder_shared_scale},
+    conv_pw::{conv_pw_f32, conv_pw_fxp},
+    decompose_pow2, dequant_i64,
+    dw_conv::{dw_adder_f32, dw_conv_f32, dw_fxp, dw_shift_f32},
+    im2col_nhwc, same_out_hw,
+    shift_pw::{shift_pw_f32, shift_pw_fxp, SHIFT_FXP_EXP},
+    ShiftCode,
+};
+use crate::model::quant::{quantize, quantize_with_scale, QuantSpec};
+use crate::model::{Arch, OpKind};
+use anyhow::{bail, Result};
+
+/// One compiled layer: geometry plus its slice of the flat weight vector
+/// and the mapper tiling its kernel launches with.
+#[derive(Clone, Debug)]
+struct CpuLayer {
+    kind: OpKind,
+    cin: usize,
+    cout: usize,
+    h_out: usize,
+    w_out: usize,
+    k: usize,
+    stride: usize,
+    depthwise: bool,
+    w_off: usize,
+    w_len: usize,
+    tiling: Option<Tiling>,
+}
+
+/// A derived child compiled for native CPU execution.
+pub struct CpuModel {
+    pub name: String,
+    /// Run the integer FXP path instead of f32.
+    pub fxp: bool,
+    layers: Vec<CpuLayer>,
+    n_params: usize,
+    classes: usize,
+}
+
+impl CpuModel {
+    /// Compile an arch into a kernel plan. `tilings` is the mapper's
+    /// per-layer choice (`Mapping::tilings` from `mapper::auto_map`);
+    /// pass an empty slice (or `None` entries) for default blocking.
+    pub fn compile(name: &str, arch: &Arch, fxp: bool, tilings: &[Option<Tiling>]) -> Result<CpuModel> {
+        if arch.layers.is_empty() {
+            bail!("cpu backend: model '{name}' has a zero-layer arch");
+        }
+        if !tilings.is_empty() && tilings.len() != arch.layers.len() {
+            bail!(
+                "cpu backend: model '{name}' got {} tilings for {} layers",
+                tilings.len(),
+                arch.layers.len()
+            );
+        }
+        let mut layers = Vec::with_capacity(arch.layers.len());
+        let mut w_off = 0usize;
+        for (i, l) in arch.layers.iter().enumerate() {
+            let depthwise = l.is_depthwise();
+            if !depthwise && l.groups != 1 {
+                bail!("cpu backend: layer '{}' has groups={} (only dense or depthwise)", l.name, l.groups);
+            }
+            if depthwise && l.cout != l.cin {
+                bail!("cpu backend: depthwise layer '{}' must keep cout == cin", l.name);
+            }
+            if l.k == 0 || l.stride == 0 || l.h_out == 0 || l.w_out == 0 || l.cin == 0 || l.cout == 0 {
+                bail!("cpu backend: layer '{}' has a zero dimension", l.name);
+            }
+            // The layer consumes h_out*stride spatial input; its SAME-pad
+            // geometry must land back on (h_out, w_out).
+            let (ho, wo) = same_out_hw(l.h_out * l.stride, l.w_out * l.stride, l.k, l.stride);
+            if (ho, wo) != (l.h_out, l.w_out) {
+                bail!(
+                    "cpu backend: layer '{}' geometry k={} stride={} does not produce {}x{}",
+                    l.name, l.k, l.stride, l.h_out, l.w_out
+                );
+            }
+            let w_len = l.n_weights() as usize;
+            layers.push(CpuLayer {
+                kind: l.kind,
+                cin: l.cin,
+                cout: l.cout,
+                h_out: l.h_out,
+                w_out: l.w_out,
+                k: l.k,
+                stride: l.stride,
+                depthwise,
+                w_off,
+                w_len,
+                tiling: tilings.get(i).copied().flatten(),
+            });
+            w_off += w_len;
+        }
+        let classes = layers.last().expect("nonempty").cout;
+        Ok(CpuModel { name: name.to_string(), fxp, layers, n_params: w_off, classes })
+    }
+
+    /// Logit width (the last layer's cout).
+    pub fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Total weight element count the flat `params` must carry.
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Input sample shape `[h, w, c]` the first layer consumes.
+    pub fn sample_shape(&self) -> [usize; 3] {
+        let f = &self.layers[0];
+        [f.h_out * f.stride, f.w_out * f.stride, f.cin]
+    }
+
+    /// Run a batch: `x` is NHWC `[batch, h, w, c]` flat, returns logits
+    /// `[batch * classes]`. Bit-deterministic, and batch-composition
+    /// invariant (row `i` of a batch equals the same sample run alone).
+    pub fn infer(&self, params: &[f32], x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if params.len() != self.n_params {
+            bail!("cpu backend '{}': got {} params, model wants {}", self.name, params.len(), self.n_params);
+        }
+        let [h0, w0, c0] = self.sample_shape();
+        if batch == 0 || x.len() != batch * h0 * w0 * c0 {
+            bail!(
+                "cpu backend '{}': x has {} elements, wants batch {batch} x {h0}x{w0}x{c0}",
+                self.name,
+                x.len()
+            );
+        }
+        let mut cur = x.to_vec();
+        let (mut ch, mut cw, mut cc) = (h0, w0, c0);
+        let last = self.layers.len() - 1;
+        for (i, l) in self.layers.iter().enumerate() {
+            if cc != l.cin {
+                bail!("cpu backend '{}': layer {i} wants cin={}, has {cc}", self.name, l.cin);
+            }
+            let (eh, ew) = (l.h_out * l.stride, l.w_out * l.stride);
+            if ch != eh || cw != ew {
+                if ch >= eh && cw >= ew {
+                    cur = adaptive_avg_pool(&cur, batch, ch, cw, cc, eh, ew);
+                    (ch, cw) = (eh, ew);
+                } else {
+                    bail!(
+                        "cpu backend '{}': layer {i} wants {eh}x{ew} input, has {ch}x{cw}",
+                        self.name
+                    );
+                }
+            }
+            let w = &params[l.w_off..l.w_off + l.w_len];
+            cur = if self.fxp {
+                self.apply_layer_fxp(l, w, &cur, batch, ch, cw)?
+            } else {
+                apply_layer_f32(l, w, &cur, batch, ch, cw)
+            };
+            (ch, cw, cc) = (l.h_out, l.w_out, l.cout);
+            if i != last {
+                normalize_relu(&mut cur, batch);
+            }
+        }
+        // Collapse any remaining spatial extent to per-class logits.
+        if ch * cw > 1 {
+            cur = adaptive_avg_pool(&cur, batch, ch, cw, cc, 1, 1);
+        }
+        debug_assert_eq!(cur.len(), batch * self.classes);
+        Ok(cur)
+    }
+
+    /// FXP path: per-sample activation quantization, per-layer weight
+    /// codes, integer kernels, dequantize. Samples are processed
+    /// independently (their scales differ), which also makes batch
+    /// invariance structural.
+    fn apply_layer_fxp(
+        &self,
+        l: &CpuLayer,
+        w: &[f32],
+        x: &[f32],
+        batch: usize,
+        h: usize,
+        wd: usize,
+    ) -> Result<Vec<f32>> {
+        let spec = QuantSpec::default();
+        // Per-layer weight prep (adder layers couple to per-sample scale).
+        let conv_wq = match l.kind {
+            OpKind::Conv => Some(quantize(w, spec.weight_bits(OpKind::Conv))?),
+            _ => None,
+        };
+        let shift_codes: Vec<ShiftCode> =
+            if l.kind == OpKind::Shift { decompose_pow2(w) } else { vec![] };
+        let adder_bits = spec.act_bits.min(spec.adder_w_bits);
+        let sample_in = h * wd * l.cin;
+        let sample_out = l.h_out * l.w_out * l.cout;
+        let mut out = Vec::with_capacity(batch * sample_out);
+        for b in 0..batch {
+            let xb = &x[b * sample_in..(b + 1) * sample_in];
+            // Quantize this sample's activations; adder layers share one
+            // scale between acts and weights so |xq - wq| dequantizes.
+            let (xq, wq, acc_scale): (Vec<i32>, Vec<i32>, f64) = match l.kind {
+                OpKind::Conv => {
+                    let xt = quantize(xb, spec.act_bits)?;
+                    let wt = conv_wq.as_ref().expect("conv weights prepped");
+                    let s = xt.scale as f64 * wt.scale as f64;
+                    (xt.q, wt.q.clone(), s)
+                }
+                OpKind::Shift => {
+                    let xt = quantize(xb, spec.act_bits)?;
+                    let s = xt.scale as f64 * f64::powi(2.0, -SHIFT_FXP_EXP);
+                    (xt.q, vec![], s)
+                }
+                OpKind::Adder => {
+                    let s = adder_shared_scale(xb, w, adder_bits);
+                    let xt = quantize_with_scale(xb, adder_bits, s)?;
+                    let wt = quantize_with_scale(w, adder_bits, s)?;
+                    (xt.q, wt.q, s as f64)
+                }
+            };
+            let acc: Vec<i64> = if l.depthwise {
+                dw_fxp(l.kind, &xq, &wq, &shift_codes, 1, h, wd, l.cin, l.k, l.stride, l.tiling)
+            } else {
+                let (x2d, m, kk) = if l.k == 1 && l.stride == 1 {
+                    (xq, h * wd, l.cin)
+                } else {
+                    let (p, ho, wo) = im2col_nhwc(&xq, 1, h, wd, l.cin, l.k, l.stride);
+                    (p, ho * wo, l.k * l.k * l.cin)
+                };
+                match l.kind {
+                    OpKind::Conv => conv_pw_fxp(&x2d, &wq, m, kk, l.cout, l.tiling),
+                    OpKind::Shift => shift_pw_fxp(&x2d, &shift_codes, m, kk, l.cout, l.tiling),
+                    OpKind::Adder => adder_pw_fxp(&x2d, &wq, m, kk, l.cout, l.tiling),
+                }
+            };
+            out.extend(dequant_i64(&acc, acc_scale));
+        }
+        Ok(out)
+    }
+}
+
+/// f32 layer dispatch: depthwise direct, pointwise as GEMM, dense K×K
+/// through im2col then GEMM. Weight codes for shift layers come from the
+/// exact pow2 decomposition.
+fn apply_layer_f32(l: &CpuLayer, w: &[f32], x: &[f32], batch: usize, h: usize, wd: usize) -> Vec<f32> {
+    if l.depthwise {
+        return match l.kind {
+            OpKind::Conv => dw_conv_f32(x, w, batch, h, wd, l.cin, l.k, l.stride, l.tiling),
+            OpKind::Shift => {
+                dw_shift_f32(x, &decompose_pow2(w), batch, h, wd, l.cin, l.k, l.stride, l.tiling)
+            }
+            OpKind::Adder => dw_adder_f32(x, w, batch, h, wd, l.cin, l.k, l.stride, l.tiling),
+        };
+    }
+    let (x2d, m, kk): (std::borrow::Cow<[f32]>, usize, usize) = if l.k == 1 && l.stride == 1 {
+        (x.into(), batch * h * wd, l.cin)
+    } else {
+        let (p, ho, wo) = im2col_nhwc(x, batch, h, wd, l.cin, l.k, l.stride);
+        (p.into(), batch * ho * wo, l.k * l.k * l.cin)
+    };
+    match l.kind {
+        OpKind::Conv => conv_pw_f32(&x2d, w, m, kk, l.cout, l.tiling),
+        OpKind::Shift => shift_pw_f32(&x2d, &decompose_pow2(w), m, kk, l.cout, l.tiling),
+        OpKind::Adder => adder_pw_f32(&x2d, w, m, kk, l.cout, l.tiling),
+    }
+}
+
+/// Per-sample normalization + ReLU between layers: f64 two-pass
+/// mean/variance over each sample's elements, `(v - μ)/√(σ² + 1e-5)`,
+/// then clamp at zero. Sequential, hence bit-deterministic.
+fn normalize_relu(x: &mut [f32], batch: usize) {
+    let n = x.len() / batch;
+    if n == 0 {
+        return;
+    }
+    for b in 0..batch {
+        let s = &mut x[b * n..(b + 1) * n];
+        let mean = s.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let var = s.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for v in s.iter_mut() {
+            let y = ((*v as f64 - mean) * inv) as f32;
+            *v = if y > 0.0 { y } else { 0.0 };
+        }
+    }
+}
+
+/// Adaptive average pool NHWC `[b,h,w,c] -> [b,oh,ow,c]` with floor
+/// region bounds (`iy ∈ [oy*h/oh, (oy+1)*h/oh)`), f64 accumulation.
+/// Requires `h >= oh`, `w >= ow` (checked by the caller).
+fn adaptive_avg_pool(x: &[f32], b: usize, h: usize, w: usize, c: usize, oh: usize, ow: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * oh * ow * c];
+    for bi in 0..b {
+        for oy in 0..oh {
+            let (y0, y1) = (oy * h / oh, (oy + 1) * h / oh);
+            for ox in 0..ow {
+                let (x0, x1) = (ox * w / ow, (ox + 1) * w / ow);
+                let cnt = ((y1 - y0) * (x1 - x0)) as f64;
+                for ci in 0..c {
+                    let mut acc = 0.0f64;
+                    for iy in y0..y1 {
+                        for ix in x0..x1 {
+                            acc += x[((bi * h + iy) * w + ix) * c + ci] as f64;
+                        }
+                    }
+                    out[((bi * oh + oy) * ow + ox) * c + ci] = (acc / cnt) as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{resnet32_adder_like, shiftaddnet_like};
+    use crate::util::rng::Rng;
+
+    fn seeded(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn model_and_params(arch: &crate::model::Arch, fxp: bool) -> (CpuModel, Vec<f32>) {
+        let m = CpuModel::compile("t", arch, fxp, &[]).unwrap();
+        let p = seeded(m.n_params(), 0xA11CE);
+        (m, p)
+    }
+
+    #[test]
+    fn zoo_archs_compile_and_infer_finite_logits() {
+        for (arch, seed) in [(shiftaddnet_like(8, 4), 1u64), (resnet32_adder_like(8, 4), 2)] {
+            let (m, p) = model_and_params(&arch, false);
+            let [h, w, c] = m.sample_shape();
+            let x = seeded(2 * h * w * c, seed);
+            let logits = m.infer(&p, &x, 2).unwrap();
+            assert_eq!(logits.len(), 2 * m.num_classes());
+            assert!(logits.iter().all(|v| v.is_finite()), "{logits:?}");
+            // Real compute: logits must depend on the input values.
+            let x2 = seeded(2 * h * w * c, seed ^ 0xFF);
+            assert_ne!(m.infer(&p, &x2, 2).unwrap(), logits);
+        }
+    }
+
+    #[test]
+    fn inference_is_batch_composition_invariant() {
+        for fxp in [false, true] {
+            let arch = shiftaddnet_like(8, 4);
+            let (m, p) = model_and_params(&arch, fxp);
+            let [h, w, c] = m.sample_shape();
+            let x = seeded(3 * h * w * c, 9);
+            let all = m.infer(&p, &x, 3).unwrap();
+            for b in 0..3 {
+                let one = m.infer(&p, &x[b * h * w * c..(b + 1) * h * w * c], 1).unwrap();
+                assert_eq!(one, all[b * m.num_classes()..(b + 1) * m.num_classes()], "fxp={fxp} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fxp_mode_changes_logits_but_stays_finite() {
+        let arch = shiftaddnet_like(8, 4);
+        let (mf, p) = model_and_params(&arch, false);
+        let (mq, _) = model_and_params(&arch, true);
+        let [h, w, c] = mf.sample_shape();
+        let x = seeded(h * w * c, 5);
+        let lf = mf.infer(&p, &x, 1).unwrap();
+        let lq = mq.infer(&p, &x, 1).unwrap();
+        assert_eq!(lf.len(), lq.len());
+        assert!(lq.iter().all(|v| v.is_finite()));
+        assert_ne!(lf, lq, "quantization must perturb the logits");
+    }
+
+    #[test]
+    fn argmax_varies_across_inputs() {
+        // The acceptance criterion that separates cpu from stub: across
+        // many distinct inputs the predicted class is not constant.
+        let arch = shiftaddnet_like(8, 4);
+        let (m, p) = model_and_params(&arch, false);
+        let [h, w, c] = m.sample_shape();
+        let mut seen = std::collections::BTreeSet::new();
+        for seed in 0..64u64 {
+            let x = seeded(h * w * c, 0x1000 + seed);
+            let l = m.infer(&p, &x, 1).unwrap();
+            let am = l
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            seen.insert(am);
+        }
+        assert!(seen.len() >= 2, "argmax constant across 64 inputs: {seen:?}");
+    }
+
+    #[test]
+    fn shape_errors_are_typed() {
+        let arch = shiftaddnet_like(8, 4);
+        let (m, p) = model_and_params(&arch, false);
+        let [h, w, c] = m.sample_shape();
+        let err = m.infer(&p[1..], &seeded(h * w * c, 1), 1).unwrap_err().to_string();
+        assert!(err.contains("params"), "{err}");
+        let err = m.infer(&p, &seeded(h * w * c - 1, 1), 1).unwrap_err().to_string();
+        assert!(err.contains("elements"), "{err}");
+        assert!(CpuModel::compile("t", &crate::model::Arch::default(), false, &[]).is_err());
+        // Tiling arity is validated at compile time.
+        assert!(CpuModel::compile("t", &arch, false, &[None]).is_err());
+    }
+
+    #[test]
+    fn mapper_tilings_do_not_change_results() {
+        let arch = shiftaddnet_like(8, 4);
+        let (m, p) = model_and_params(&arch, false);
+        let tilings: Vec<Option<Tiling>> =
+            (0..arch.layers.len()).map(|i| Some(Tiling { tm: 1 + i % 4, tn: 1 + i % 3 })).collect();
+        let mt = CpuModel::compile("t", &arch, false, &tilings).unwrap();
+        let [h, w, c] = m.sample_shape();
+        let x = seeded(2 * h * w * c, 77);
+        assert_eq!(m.infer(&p, &x, 2).unwrap(), mt.infer(&p, &x, 2).unwrap());
+    }
+}

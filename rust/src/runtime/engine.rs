@@ -105,6 +105,38 @@ impl Engine {
         })
     }
 
+    /// Construct a specific backend. In the `pjrt` build only
+    /// `Backend::Pjrt` exists; asking for the stub/cpu backends is a
+    /// typed error (rebuild without the feature), keeping callers
+    /// (`main.rs`, `serve::Service`) free of cfg branching.
+    pub fn with_backend(backend: super::Backend) -> Result<Engine> {
+        match backend {
+            super::Backend::Pjrt => Self::cpu(),
+            other => bail!(
+                "backend '{}' is unavailable in the pjrt build — rebuild without --features pjrt",
+                other.name()
+            ),
+        }
+    }
+
+    /// Which backend this engine dispatches to.
+    pub fn backend(&self) -> super::Backend {
+        super::Backend::Pjrt
+    }
+
+    /// Registering child archs for native kernel execution is a
+    /// `Backend::Cpu` concern; the PJRT engine executes the real HLO, so
+    /// this is a no-op that exists to keep the Engine surface uniform.
+    pub fn register_child_arch(
+        &self,
+        _name: &str,
+        _arch: &crate::model::Arch,
+        _fxp: bool,
+        _tilings: &[Option<crate::accel::Tiling>],
+    ) -> Result<()> {
+        Ok(())
+    }
+
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

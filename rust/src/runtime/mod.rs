@@ -4,24 +4,83 @@
 //! module is the only bridge to the compute graphs. Interchange is HLO
 //! *text* (see python/compile/aot.py for why not serialized protos).
 //!
-//! Two interchangeable backends provide the same `Engine` / `Executable`
-//! / `Literal` surface. In both, the executable cache uses interior
-//! mutability (`Engine::load` takes `&self`), so a single engine is
-//! shared by reference across the sweep orchestrator's worker threads:
-//! each artifact is compiled/materialized exactly once and all workers
+//! Three backends provide the same `Engine` / `Executable` / `Literal`
+//! surface. In all of them the executable cache uses interior mutability
+//! (`Engine::load` takes `&self`), so a single engine is shared by
+//! reference across the sweep orchestrator's worker threads: each
+//! artifact is compiled/materialized exactly once and all workers
 //! execute the same cached `Arc<Executable>`.
 //!
-//! * **`pjrt` feature enabled** — the real path (`engine.rs`): artifacts
-//!   are parsed and compiled through the `xla` (xla_extension) PJRT CPU
-//!   client and executed natively.
-//! * **default build** — the pure-Rust stub (`stub.rs`): no native
-//!   dependencies; shape-checked, deterministic synthetic outputs derived
-//!   from the input tensors via `util::rng`. Lets the whole stack —
-//!   coordinator loops, CLI, tests, exhibit benches — build and run
-//!   anywhere; numbers are synthetic (see `stub.rs` docs).
+//! * **`pjrt` feature enabled** — the real HLO path (`engine.rs`):
+//!   artifacts are parsed and compiled through the `xla` (xla_extension)
+//!   PJRT CPU client and executed natively.
+//! * **default build, [`Backend::Stub`]** — the pure-Rust stub
+//!   (`stub.rs`): no native dependencies; shape-checked, deterministic
+//!   synthetic outputs derived from the input tensors via `util::rng`.
+//!   Lets the whole stack — coordinator loops, CLI, tests, exhibit
+//!   benches — build and run anywhere; numbers are synthetic.
+//! * **default build, [`Backend::Cpu`]** — native kernel execution
+//!   (`cpu.rs` + `crate::kernels`): child-infer artifacts registered via
+//!   `Engine::register_child_arch` run real multiplication-free
+//!   shift/adder (and conv) arithmetic on the host; outputs are genuine
+//!   logits, bit-deterministic and pinned by
+//!   `tests/kernel_differential.rs`.
 
+mod cpu;
 mod manifest;
 mod tensor;
+
+pub use cpu::CpuModel;
+
+use anyhow::{bail, Result};
+
+/// Which execution backend an `Engine` dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Deterministic synthetic outputs (default; any artifact kind).
+    Stub,
+    /// Native kernel execution of registered child archs (`cpu.rs`).
+    Cpu,
+    /// XLA PJRT execution of the AOT HLO artifacts (`--features pjrt`).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "stub" => Backend::Stub,
+            "cpu" => Backend::Cpu,
+            "pjrt" => Backend::Pjrt,
+            _ => bail!("unknown backend '{s}' (expected stub, cpu or pjrt)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Stub => "stub",
+            Backend::Cpu => "cpu",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Shared child-infer shape inference: the batch dimension of the `x`
+/// input. Child-infer artifacts take `x` as `[batch, ...sample dims]`;
+/// a rank-0/1 `x` has no batch dimension and is a caller arity bug —
+/// historically the stub silently read a rank-1 `[n]` as batch `n`.
+/// Both the stub synthetic path and the CPU backend route through this.
+pub fn infer_x_batch(x_shape: &[usize]) -> Result<usize> {
+    if x_shape.len() < 2 {
+        bail!(
+            "child-infer x input must be rank >= 2 `[batch, ...]`, got shape {x_shape:?}"
+        );
+    }
+    let batch = x_shape[0];
+    if batch == 0 {
+        bail!("child-infer x input has batch 0, shape {x_shape:?}");
+    }
+    Ok(batch)
+}
 
 #[cfg(feature = "pjrt")]
 mod engine;

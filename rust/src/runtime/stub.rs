@@ -35,6 +35,9 @@
 //! the `pjrt` feature with the real `xla` bindings.
 
 use super::manifest::ArtifactIo;
+use super::{infer_x_batch, Backend, CpuModel};
+use crate::accel::Tiling;
+use crate::model::Arch;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -151,12 +154,20 @@ impl ArtifactKind {
     }
 }
 
+/// How a loaded artifact executes: synthetic stub outputs, or a
+/// registered [`CpuModel`] running the native kernels.
+enum ExecMode {
+    Synthetic,
+    Cpu(Arc<CpuModel>),
+}
+
 /// A "loaded" artifact: its manifest signature plus the inferred kind.
 /// Mirrors `engine::Executable` (same public surface).
 pub struct Executable {
     pub name: String,
     input_shapes: Vec<(Vec<usize>, String)>,
     kind: ArtifactKind,
+    mode: ExecMode,
 }
 
 impl Executable {
@@ -186,11 +197,21 @@ impl Executable {
         for lit in inputs {
             lit.hash_into(&mut h);
         }
+        // Real execution path: a child-infer artifact backed by a
+        // registered CpuModel runs the native kernels instead of the
+        // synthetic generator.
+        if let (ArtifactKind::ChildInfer, ExecMode::Cpu(model)) = (self.kind, &self.mode) {
+            let params = inputs[0].to_vec::<f32>()?;
+            let x = inputs[1].to_vec::<f32>()?;
+            let batch = infer_x_batch(inputs[1].shape())?;
+            let logits = model.infer(&params, &x, batch)?;
+            return Ok(vec![Literal::from_f32(&[batch, model.num_classes()], logits)]);
+        }
         let mut rng = Rng::new(h);
         Ok(match self.kind {
             ArtifactKind::SupernetStep => self.run_step(inputs, &mut rng),
             ArtifactKind::SupernetEval => self.run_eval(inputs, &mut rng),
-            ArtifactKind::ChildInfer => self.run_infer(inputs, &mut rng),
+            ArtifactKind::ChildInfer => self.run_infer(inputs, &mut rng)?,
             ArtifactKind::Generic => vec![scalar(rng.uniform() as f32)],
         })
     }
@@ -240,19 +261,21 @@ impl Executable {
         vec![scalar(loss), scalar(ncorrect)]
     }
 
-    /// Output: rank-2 logits `[batch, classes]`, batch = leading dim of x.
-    /// The class count is not part of the artifact I/O signature the stub
-    /// sees, so it defaults to 10 (the CIFAR-10-like spaces); set
-    /// `NASA_STUB_NUM_CLASSES` when driving a manifest with a different
-    /// class count (e.g. the c100 spaces).
-    fn run_infer(&self, inputs: &[Literal], rng: &mut Rng) -> Vec<Literal> {
+    /// Output: rank-2 logits `[batch, classes]`, batch via the shared
+    /// `runtime::infer_x_batch` shape check (the same one the CPU backend
+    /// uses — a rank-<2 `x` is a typed arity error, not a silent
+    /// misread). The class count is not part of the artifact I/O
+    /// signature the stub sees, so it defaults to 10 (the CIFAR-10-like
+    /// spaces); set `NASA_STUB_NUM_CLASSES` when driving a manifest with
+    /// a different class count (e.g. the c100 spaces).
+    fn run_infer(&self, inputs: &[Literal], rng: &mut Rng) -> Result<Vec<Literal>> {
         let classes = stub_num_classes();
-        let batch = inputs[1].shape().first().copied().unwrap_or(1).max(1);
+        let batch = infer_x_batch(inputs[1].shape())?;
         let mut logits = vec![0.0f32; batch * classes];
         for v in logits.iter_mut() {
             *v = rng.normal() as f32;
         }
-        vec![Literal::from_f32(&[batch, classes], logits)]
+        Ok(vec![Literal::from_f32(&[batch, classes], logits)])
     }
 
     /// Number of inputs the artifact expects.
@@ -296,32 +319,108 @@ fn first_f32(l: &Literal) -> f32 {
 /// artifact is materialized once and every worker runs the same
 /// `Arc<Executable>` lock-free (`Executable::run` is `&self`).
 pub struct Engine {
+    backend: Backend,
     cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+    /// Child models registered for native execution, keyed by model name
+    /// (`Backend::Cpu` resolves child-infer artifacts against these).
+    cpu_models: Mutex<BTreeMap<String, Arc<CpuModel>>>,
 }
 
 impl Engine {
-    /// Construct the stub backend (always succeeds; no native deps).
+    /// Construct the default (stub) backend — the historical entry point;
+    /// always succeeds, no native deps.
     pub fn cpu() -> Result<Engine> {
-        Ok(Engine { cache: Mutex::new(BTreeMap::new()) })
+        Self::with_backend(Backend::Stub)
+    }
+
+    /// Construct a specific backend. `Backend::Pjrt` requires the `pjrt`
+    /// feature (this is the non-pjrt build, so it is a typed error).
+    pub fn with_backend(backend: Backend) -> Result<Engine> {
+        if backend == Backend::Pjrt {
+            bail!("backend 'pjrt' requires building with --features pjrt");
+        }
+        Ok(Engine {
+            backend,
+            cache: Mutex::new(BTreeMap::new()),
+            cpu_models: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Which backend this engine dispatches to.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     /// Backend identifier (the PJRT path reports e.g. "Host" / "cpu").
     pub fn platform(&self) -> String {
-        "stub-cpu (deterministic synthetic outputs; build with --features pjrt for XLA)"
-            .to_string()
+        match self.backend {
+            Backend::Cpu => "cpu (native multiplication-free kernels)".to_string(),
+            _ => "stub-cpu (deterministic synthetic outputs; build with --features pjrt for XLA)"
+                .to_string(),
+        }
+    }
+
+    /// Register a child arch for native execution under `Backend::Cpu`
+    /// (compiles it into a [`CpuModel`] kernel plan). A no-op engine-side
+    /// concern on the other backends, but callers register
+    /// unconditionally-cheaply only when the backend is Cpu.
+    pub fn register_child_arch(
+        &self,
+        name: &str,
+        arch: &Arch,
+        fxp: bool,
+        tilings: &[Option<Tiling>],
+    ) -> Result<()> {
+        let model = Arc::new(CpuModel::compile(name, arch, fxp, tilings)?);
+        self.cpu_models.lock().expect("cpu models poisoned").insert(name.to_string(), model);
+        Ok(())
     }
 
     /// "Load" an artifact: record its I/O signature (cached by path).
     /// Thread-safe; concurrent loads of the same path return one entry.
+    /// Under `Backend::Cpu`, child-infer artifacts must match a model
+    /// registered via [`Engine::register_child_arch`] (serve artifact
+    /// paths are `serve/{name}@b{batch}...`); anything else is a typed
+    /// error — the cpu backend refuses to fake outputs.
     pub fn load(&self, _dir: &Path, io: &ArtifactIo) -> Result<Arc<Executable>> {
         let mut cache = self.cache.lock().expect("engine cache poisoned");
         if let Some(e) = cache.get(&io.path) {
             return Ok(e.clone());
         }
+        let kind = ArtifactKind::infer(io);
+        let mode = match self.backend {
+            Backend::Cpu => {
+                if kind != ArtifactKind::ChildInfer {
+                    bail!(
+                        "cpu backend only executes child-infer artifacts, not '{}' \
+                         ({} inputs) — use the stub or pjrt backend",
+                        io.path,
+                        io.input_shapes.len()
+                    );
+                }
+                // Model names exclude '/' and '@', so the prefix match is
+                // unambiguous.
+                let models = self.cpu_models.lock().expect("cpu models poisoned");
+                let model = models
+                    .iter()
+                    .find(|(name, _)| io.path.starts_with(&format!("serve/{name}@")))
+                    .map(|(_, m)| m.clone());
+                match model {
+                    Some(m) => ExecMode::Cpu(m),
+                    None => bail!(
+                        "cpu backend: no registered model for artifact '{}' — \
+                         call Engine::register_child_arch first",
+                        io.path
+                    ),
+                }
+            }
+            _ => ExecMode::Synthetic,
+        };
         let e = Arc::new(Executable {
             name: io.path.clone(),
             input_shapes: io.input_shapes.clone(),
-            kind: ArtifactKind::infer(io),
+            kind,
+            mode,
         });
         cache.insert(io.path.clone(), e.clone());
         Ok(e)
@@ -466,5 +565,107 @@ mod tests {
         }
         let out = exes[0].run(&step_inputs(3)).unwrap();
         assert_eq!(out.len(), 6);
+    }
+
+    fn infer_io(batch: usize) -> ArtifactIo {
+        let f = |shape: &[usize]| (shape.to_vec(), "float32".to_string());
+        ArtifactIo {
+            path: format!("serve/m@b{batch}.hlo.txt"),
+            input_shapes: vec![f(&[8]), f(&[batch, 2, 2, 3])],
+        }
+    }
+
+    #[test]
+    fn infer_batch_comes_from_x_leading_dim() {
+        // Regression (batch>1 arity): the logits' leading dim must follow
+        // x's batch dimension through the shared runtime::infer_x_batch
+        // helper, for batch 1 and >1 alike.
+        let engine = Engine::cpu().unwrap();
+        for batch in [1usize, 4] {
+            let exe = engine.load(Path::new("x"), &infer_io(batch)).unwrap();
+            let inputs = vec![
+                Literal::from_f32(&[8], vec![0.5; 8]),
+                Literal::from_f32(&[batch, 2, 2, 3], vec![0.25; batch * 12]),
+            ];
+            let out = exe.run(&inputs).unwrap();
+            assert_eq!(out[0].shape(), &[batch, stub_num_classes()]);
+        }
+    }
+
+    #[test]
+    fn infer_rank1_x_is_a_typed_arity_error() {
+        // Previously a rank-1 x of length 40 silently became batch=40.
+        let engine = Engine::cpu().unwrap();
+        let io = ArtifactIo {
+            path: "serve/m@b1.hlo.txt".into(),
+            input_shapes: vec![
+                (vec![8], "float32".to_string()),
+                (vec![40], "float32".to_string()),
+            ],
+        };
+        let exe = engine.load(Path::new("x"), &io).unwrap();
+        let inputs = vec![
+            Literal::from_f32(&[8], vec![0.5; 8]),
+            Literal::from_f32(&[40], vec![0.25; 40]),
+        ];
+        let err = exe.run(&inputs).unwrap_err().to_string();
+        assert!(err.contains("rank >= 2"), "{err}");
+    }
+
+    #[test]
+    fn cpu_backend_runs_real_inference() {
+        use crate::model::zoo::shiftaddnet_like;
+        let engine = Engine::with_backend(Backend::Cpu).unwrap();
+        assert_eq!(engine.backend(), Backend::Cpu);
+        let arch = shiftaddnet_like(8, 4);
+        engine.register_child_arch("m", &arch, false, &[]).unwrap();
+        let n_params: usize = arch.layers.iter().map(|l| l.n_weights() as usize).sum();
+        let f = |shape: &[usize]| (shape.to_vec(), "float32".to_string());
+        let io = ArtifactIo {
+            path: "serve/m@b2.hlo.txt".into(),
+            input_shapes: vec![f(&[n_params]), f(&[2, 8, 8, 3])],
+        };
+        let exe = engine.load(Path::new("x"), &io).unwrap();
+        let mut rng = Rng::new(42);
+        let params: Vec<f32> = (0..n_params).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let x: Vec<f32> = (0..2 * 192).map(|_| rng.normal() as f32).collect();
+        let run = |x: &[f32]| {
+            let inputs = vec![
+                Literal::from_f32(&[n_params], params.clone()),
+                Literal::from_f32(&[2, 8, 8, 3], x.to_vec()),
+            ];
+            exe.run(&inputs).unwrap()
+        };
+        let out = run(&x);
+        assert_eq!(out[0].shape(), &[2, 4]);
+        let logits = out[0].to_vec::<f32>().unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // Deterministic, input-sensitive, batch-invariant.
+        assert_eq!(run(&x), out);
+        let x2: Vec<f32> = x.iter().map(|v| v * -0.7 + 0.1).collect();
+        assert_ne!(run(&x2)[0].to_vec::<f32>().unwrap(), logits);
+        let io1 = ArtifactIo {
+            path: "serve/m@b1.hlo.txt".into(),
+            input_shapes: vec![f(&[n_params]), f(&[1, 8, 8, 3])],
+        };
+        let exe1 = engine.load(Path::new("x"), &io1).unwrap();
+        let one = exe1
+            .run(&[
+                Literal::from_f32(&[n_params], params.clone()),
+                Literal::from_f32(&[1, 8, 8, 3], x[..192].to_vec()),
+            ])
+            .unwrap();
+        assert_eq!(one[0].to_vec::<f32>().unwrap(), logits[..4]);
+    }
+
+    #[test]
+    fn cpu_backend_rejects_unregistered_and_non_infer_artifacts() {
+        let engine = Engine::with_backend(Backend::Cpu).unwrap();
+        let err = engine.load(Path::new("x"), &infer_io(1)).unwrap_err().to_string();
+        assert!(err.contains("no registered model"), "{err}");
+        let err = engine.load(Path::new("x"), &step_io()).unwrap_err().to_string();
+        assert!(err.contains("child-infer"), "{err}");
+        // Pjrt without the feature is a typed error, not a panic.
+        assert!(Engine::with_backend(Backend::Pjrt).is_err());
     }
 }

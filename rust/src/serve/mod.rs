@@ -37,5 +37,5 @@ pub mod service;
 pub use live::{drive_closed_loop, LiveService};
 pub use loadgen::{gen_trace, replay_trace, run_loadtest, Arrival, LoadSpec, LoadtestOutcome, Process, Trace};
 pub use metrics::{LatencyHistogram, ModelMetrics, ServeMetrics};
-pub use model::{model_cost, ModelCost, ServedModel};
+pub use model::{model_cost, model_cost_with_tilings, ModelCost, ServedModel};
 pub use service::{BatchQueue, BatchRecord, Rejected, Request, Response, ServeConfig, Service};

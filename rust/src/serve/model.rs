@@ -7,7 +7,7 @@
 //! virtual-time service model of the deterministic loadtest and feeds the
 //! per-model energy/EDP estimates in `serve::metrics`.
 
-use crate::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, UNIT_ENERGY_45NM};
+use crate::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, Tiling, UNIT_ENERGY_45NM};
 use crate::mapper::{auto_map, MapperConfig};
 use crate::model::{Arch, QuantSpec};
 use crate::runtime::ArtifactIo;
@@ -55,35 +55,48 @@ impl ModelCost {
 /// smoke estimate (`mapper_feasible = false`) so a model that the chunk
 /// accelerator cannot host still serves with *some* deterministic cost.
 pub fn model_cost(arch: &Arch, budget_pes: usize) -> ModelCost {
+    model_cost_with_tilings(arch, budget_pes).0
+}
+
+/// [`model_cost`] plus the winning mapping's per-layer tilings — the CPU
+/// backend tiles its kernel launches with the mapper's own choice (the
+/// same join the cost pricing uses). Layers the mapper left untiled (or
+/// every layer, on the fallback paths) get `None` (kernel default
+/// blocking).
+pub fn model_cost_with_tilings(arch: &Arch, budget_pes: usize) -> (ModelCost, Vec<Option<Tiling>>) {
     let costs = UNIT_ENERGY_45NM;
     let budget = AreaBudget::macs_equivalent(budget_pes, &costs);
     let alloc = allocate(arch, budget, &costs);
     let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
     let clock_hz = accel.clock_hz;
+    let no_tilings = || vec![None; arch.layers.len()];
     let r = auto_map(&accel, arch, &QuantSpec::default(), &MapperConfig::default());
-    if let Some((_, s)) = r.best {
-        return ModelCost {
+    if let Some((mapping, s)) = r.best {
+        let cost = ModelCost {
             period_cycles: s.period_cycles,
             energy_pj: s.energy_pj,
             clock_hz,
             mapper_feasible: true,
         };
+        return (cost, mapping.tilings);
     }
     if let Ok(s) = r.rs_baseline {
-        return ModelCost {
+        let cost = ModelCost {
             period_cycles: s.period_cycles,
             energy_pj: s.energy_pj,
             clock_hz,
             mapper_feasible: true,
         };
+        return (cost, no_tilings());
     }
     let macs = arch.total_macs().max(1) as f64;
-    ModelCost {
+    let cost = ModelCost {
         period_cycles: macs / budget_pes.max(1) as f64,
         energy_pj: macs * 4.0, // ~MAC+RF energy per op, smoke only
         clock_hz,
         mapper_feasible: false,
-    }
+    };
+    (cost, no_tilings())
 }
 
 /// One model registered with the serving layer.
@@ -102,6 +115,9 @@ pub struct ServedModel {
     /// trip at `QuantSpec` widths (conv 8b, shift/adder 6b).
     pub params_fxp: Vec<f32>,
     pub cost: ModelCost,
+    /// The auto-mapper's per-layer tilings from the cost join — the CPU
+    /// backend launches its kernels with these.
+    pub tilings: Vec<Option<Tiling>>,
 }
 
 impl ServedModel {
@@ -140,13 +156,15 @@ impl ServedModel {
         if params.is_empty() {
             bail!("serve: model '{name}' has no weights");
         }
+        let (cost, tilings) = model_cost_with_tilings(arch, budget_pes);
         Ok(ServedModel {
             name: name.to_string(),
             arch: arch.clone(),
             sample_shape,
             params,
             params_fxp,
-            cost: model_cost(arch, budget_pes),
+            cost,
+            tilings,
         })
     }
 
@@ -201,6 +219,7 @@ mod tests {
         assert_eq!(m.params_fxp.len(), m.params.len());
         assert_ne!(m.params, m.params_fxp, "FXP round trip must perturb weights");
         assert_eq!(m.sample_shape, vec![8, 8, 3]);
+        assert_eq!(m.tilings.len(), arch.layers.len());
         assert!(m.cost.period_cycles >= 1.0);
         assert!(m.cost.energy_pj > 0.0);
         assert!(m.cost.per_inf_us() > 0.0);

@@ -261,6 +261,14 @@ impl Service {
                 bail!("serve: duplicate model name '{}'", m.name);
             }
         }
+        // The cpu backend executes real kernels: compile each model's
+        // arch into its kernel plan (with the mapper's tilings) before
+        // warming, so the loads below resolve against registered models.
+        if engine.backend() == crate::runtime::Backend::Cpu {
+            for m in &models {
+                engine.register_child_arch(&m.name, &m.arch, cfg.fxp, &m.tilings)?;
+            }
+        }
         for m in &models {
             for b in 1..=cfg.batch_max.min(Self::WARM_MAX) {
                 engine.load(dir, &m.infer_io(b))?;

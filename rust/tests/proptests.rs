@@ -8,6 +8,8 @@ use nasa::accel::{
     allocate, AreaBudget, Chunk, ChunkAccelerator, Dataflow, MemoryConfig, PeKind, Tiling,
     UNIT_ENERGY_45NM, ALL_DATAFLOWS,
 };
+use nasa::kernels::{adder_pw, conv_pw, decompose_pow2, shift_pw};
+use nasa::model::quant::{dequantize, quantize};
 use nasa::model::{arch_op_counts, Arch, LayerDesc, OpKind, QuantSpec};
 use nasa::nas::ArchParams;
 use nasa::util::json::Json;
@@ -254,6 +256,94 @@ fn prop_ws_weight_traffic_never_above_os() {
         let (w_ws, ..) = nasa::accel::dataflow::stream_factors(Dataflow::Ws, &d, &t);
         let (w_os, ..) = nasa::accel::dataflow::stream_factors(Dataflow::Os, &d, &t);
         assert!(w_ws <= w_os);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// kernel invariants (the native CPU backend's operator semantics)
+// ---------------------------------------------------------------------------
+
+fn random_pw(rng: &mut Rng) -> (usize, usize, usize, Vec<f32>, Vec<f32>) {
+    let (m, k, n) = (1 + rng.below(8), 1 + rng.below(12), 1 + rng.below(8));
+    let x = (0..m * k).map(|_| (rng.normal() * 1.5) as f32).collect();
+    let w = (0..k * n).map(|_| (rng.normal() * 0.3) as f32).collect();
+    (m, k, n, x, w)
+}
+
+#[test]
+fn prop_shift_requant_invariance() {
+    // Pow2 quantization is a projection: re-quantizing the decoded
+    // values is the identity on codes, so running the shift kernel off
+    // either code set is bitwise the same output.
+    for_cases("shift_requant", |rng| {
+        let (m, k, n, x, w) = random_pw(rng);
+        let codes = decompose_pow2(&w);
+        let decoded: Vec<f32> = codes.iter().map(|c| c.value()).collect();
+        let again = decompose_pow2(&decoded);
+        assert_eq!(codes, again, "pow2 quant must be idempotent");
+        let y1 = shift_pw::shift_pw_f32(&x, &codes, m, k, n, None);
+        let y2 = shift_pw::shift_pw_f32(&x, &again, m, k, n, None);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_adder_symmetry_and_negation() {
+    for_cases("adder_identities", |rng| {
+        let (m, k, n, x, w) = random_pw(rng);
+        let y = adder_pw::adder_pw_f32(&x, &w, m, k, n, None);
+        // (1) Negative-ℓ1 similarity is never positive.
+        assert!(y.iter().all(|&v| v <= 0.0));
+        // (2) Global negation invariance: |(-a) - (-b)| = |a - b|.
+        let xn: Vec<f32> = x.iter().map(|v| -v).collect();
+        let wn: Vec<f32> = w.iter().map(|v| -v).collect();
+        let yn = adder_pw::adder_pw_f32(&xn, &wn, m, k, n, None);
+        for (a, b) in y.iter().zip(&yn) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // (3) Role symmetry: swapping activations and weights transposes
+        // the output (|x - w| is symmetric in its arguments).
+        let xt: Vec<f32> = (0..n * k).map(|i| w[(i % k) * n + i / k]).collect();
+        let wt: Vec<f32> = (0..k * m).map(|i| x[(i % m) * k + i / m]).collect();
+        let yt = adder_pw::adder_pw_f32(&xt, &wt, n, k, m, None);
+        for i in 0..m {
+            for j in 0..n {
+                // Same terms, possibly different add order -> close, not
+                // bitwise.
+                let (a, b) = (y[i * n + j], yt[j * m + i]);
+                assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0), "({i},{j}): {a} vs {b}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fxp_error_within_pinned_quant_bound() {
+    // Per-element round-trip error obeys quant.rs's pinned contract, and
+    // the FXP conv kernel's dequantized output stays within the
+    // triangle-inequality propagation of that bound through K terms.
+    for_cases("fxp_bound", |rng| {
+        let (m, k, n, x, w) = random_pw(rng);
+        let (xt, wt) = (quantize(&x, 8).unwrap(), quantize(&w, 8).unwrap());
+        for (orig, t) in [(&x, &xt), (&w, &wt)] {
+            let back = dequantize(t);
+            for (a, b) in orig.iter().zip(&back) {
+                assert!((a - b).abs() <= 0.5 * t.scale * (1.0 + 1e-4), "{a} vs {b}");
+            }
+        }
+        let acc = conv_pw::conv_pw_fxp(&xt.q, &wt.q, m, k, n, None);
+        let deq = nasa::kernels::dequant_i64(&acc, xt.scale as f64 * wt.scale as f64);
+        let exact = nasa::kernels::ref_impls::conv_pw_ref(&x, &w, m, k, n);
+        let xmax = x.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        let wmax = w.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        // |x·w - (sx xq)(sw wq)| <= |x|·sw/2 + sw|wq|·sx/2 per term.
+        let per_term = 0.5 * (xmax * wt.scale + (wmax + 0.5 * wt.scale) * xt.scale);
+        let tol = k as f32 * per_term * (1.0 + 1e-3) + 1e-6;
+        for (a, b) in deq.iter().zip(&exact) {
+            assert!((a - b).abs() <= tol, "{a} vs {b} (tol {tol})");
+        }
     });
 }
 

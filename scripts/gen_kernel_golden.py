@@ -1,0 +1,357 @@
+#!/usr/bin/env python3
+"""Generate the committed golden vectors under fixtures/kernel_golden/.
+
+The Rust CPU kernels (rust/src/kernels/) are pinned against the Python
+references in python/compile/kernels/ref.py two ways:
+
+  * f32 cases — inputs/weights plus ref.py's own outputs, every f32
+    stored as its u32 bit pattern (JSON floats would not round-trip
+    bytes). Rust compares within a pinned relative tolerance (jnp picks
+    its own reduction order, so bit equality is not owed there).
+  * integer (FXP) cases — quantized codes and i64 accumulators computed
+    in exact Python integer arithmetic; Rust must match byte-for-byte.
+
+Shift weights go through an EXACT mirror of the Rust pow2 decision
+(exponent from the f32 bit pattern, round boundary decided by the exact
+f64 comparison |w|^2 < 2^(2e+1)); the generator cross-checks it against
+ref.pow2_quant on every sampled weight and refuses to emit fixtures on
+any disagreement. Sampled shift weights are nudged off the rounding
+boundary first so float32 log2 in ref.py cannot land on the other side.
+
+Output is deterministic byte-for-byte (seeded legacy RandomState, sorted
+keys, fixed separators, trailing newline); python/tests/test_kernels.py
+re-runs generate_all() and diffs against the committed files.
+
+Run from the repo root:  PYTHONPATH=python python3 scripts/gen_kernel_golden.py
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import struct
+import sys
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "python"))
+
+from compile.kernels import ref  # noqa: E402
+
+SEED = 0x6010D
+P_MIN, P_MAX = -14, 0
+
+
+# ---------------------------------------------------------------------------
+# f32 <-> u32 bit plumbing
+# ---------------------------------------------------------------------------
+
+
+def f32_bits(x: np.float32) -> int:
+    return struct.unpack("<I", struct.pack("<f", float(np.float32(x))))[0]
+
+
+def bits_list(a: np.ndarray) -> list[int]:
+    return [f32_bits(v) for v in np.asarray(a, dtype=np.float32).ravel()]
+
+
+# ---------------------------------------------------------------------------
+# exact mirror of rust's kernels::pow2_quant_one
+# ---------------------------------------------------------------------------
+
+
+def pow2_code(w: np.float32) -> tuple[int, int]:
+    """(s, p) with s in {-1,0,1}: the identical decision Rust makes."""
+    wf = float(np.float32(w))  # exact f32 -> f64
+    a = abs(wf)
+    if not (a >= 2.0**-15) or math.isnan(a):
+        return (0, 0)
+    ef = ((f32_bits(np.float32(a)) >> 23) & 0xFF) - 127
+    a2 = a * a  # one f64 rounding, same as Rust's `a as f64 * a as f64`
+    e = ef if a2 < 2.0 ** (2 * ef + 1) else ef + 1
+    p = min(max(e, P_MIN), P_MAX)
+    return ((-1 if wf < 0.0 else 1), p)
+
+
+def shift_weights(rng: np.random.RandomState, n: int) -> np.ndarray:
+    """Sample f32 weights kept away from the pow2 rounding boundary, so the
+    float32 log2 in ref.pow2_quant and the exact decision agree."""
+    w = (rng.standard_normal(n) * 0.3).astype(np.float32)
+    for i in range(n):
+        for _ in range(64):
+            a = abs(float(np.float32(w[i])))
+            if a < 2.0**-16 and a != 0.0:
+                w[i] = np.float32(0.0)  # park sub-threshold noise at zero
+                continue
+            if a == 0.0:
+                break
+            t = math.log2(a)
+            # Distance to the nearest half-integer rounding boundary.
+            d = abs(((t - 0.5) % 1.0) - 0.5)
+            if d > 1e-4:
+                break
+            w[i] = np.float32(float(w[i]) * 1.0009)
+        else:
+            raise RuntimeError(f"could not nudge weight {w[i]} off the pow2 boundary")
+    return w
+
+
+def check_codes_match_ref(w: np.ndarray) -> list[tuple[int, int]]:
+    codes = [pow2_code(v) for v in np.asarray(w, dtype=np.float32).ravel()]
+    got = np.asarray(ref.pow2_quant(np.asarray(w, dtype=np.float32)), dtype=np.float32).ravel()
+    for i, ((s, p), rv) in enumerate(zip(codes, got)):
+        want = np.float32(s * 2.0**p)
+        if f32_bits(want) != f32_bits(rv):
+            raise RuntimeError(
+                f"pow2 mirror disagrees with ref.pow2_quant at [{i}]: "
+                f"w={w.ravel()[i]!r} mirror={want!r} ref={rv!r} — bump SEED"
+            )
+    return codes
+
+
+# ---------------------------------------------------------------------------
+# pure-integer FXP references (exact; Rust must match byte-for-byte)
+# ---------------------------------------------------------------------------
+
+
+def pw_fxp_acc(kind: str, xq, wq, codes, m: int, k: int, n: int) -> list[int]:
+    out = []
+    for i in range(m):
+        for j in range(n):
+            acc = 0
+            for t in range(k):
+                if kind == "conv":
+                    acc += xq[i * k + t] * wq[t * n + j]
+                elif kind == "adder":
+                    acc += abs(xq[i * k + t] - wq[t * n + j])
+                else:  # shift: factor s * 2^(p + 14), applied by multiply
+                    s, p = codes[t * n + j]
+                    acc += xq[i * k + t] * (s << (p + 14)) if s else 0
+            out.append(-acc if kind == "adder" else acc)
+    return out
+
+
+def dw_fxp_acc(kind: str, xq, wq, codes, b, h, w, c, k, stride) -> list[int]:
+    pad = (k - 1) // 2
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    out = []
+    for bi in range(b):
+        for oy in range(ho):
+            for ox in range(wo):
+                for ci in range(c):
+                    acc = 0
+                    for ki in range(k):
+                        for kj in range(k):
+                            iy = oy * stride + ki - pad
+                            ix = ox * stride + kj - pad
+                            v = (
+                                xq[((bi * h + iy) * w + ix) * c + ci]
+                                if 0 <= iy < h and 0 <= ix < w
+                                else 0
+                            )
+                            wi = (ki * k + kj) * c + ci
+                            if kind == "conv":
+                                acc += v * wq[wi]
+                            elif kind == "adder":
+                                acc += abs(v - wq[wi])
+                            else:
+                                s, p = codes[wi]
+                                acc += v * (s << (p + 14)) if s else 0
+                    out.append(-acc if kind == "adder" else acc)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fixture builders
+# ---------------------------------------------------------------------------
+
+
+def gen_pow2_quant(rng: np.random.RandomState) -> dict:
+    # Broad magnitude sweep (2^-20 .. 2^4) plus exact powers of two, zeros
+    # and both signs — every interesting region of the quantizer.
+    mags = 2.0 ** rng.uniform(-20, 4, size=480)
+    signs = rng.choice([-1.0, 1.0], size=480)
+    w = (mags * signs).astype(np.float32)
+    w = np.concatenate(
+        [
+            w,
+            np.float32([0.0, -0.0, 2.0**-15, -(2.0**-15), 1.0, -1.0, 0.5, 100.0]),
+            np.float32([2.0**p for p in range(P_MIN, P_MAX + 1)]),
+        ]
+    )
+    # Nudge boundary-straddlers so the float32 ref agrees (same guard as
+    # the shift-weight sampler, applied to the raw sweep).
+    for i in range(len(w)):
+        a = abs(float(w[i]))
+        if a < 2.0**-15 or a == 0.0:
+            continue
+        t = math.log2(a)
+        if abs(((t - 0.5) % 1.0) - 0.5) <= 1e-4:
+            w[i] = np.float32(float(w[i]) * 1.0009)
+    codes = check_codes_match_ref(w)
+    return {
+        "seed": SEED,
+        "w_bits": bits_list(w),
+        "s": [s for s, _ in codes],
+        "p": [p if s else 0 for s, p in codes],
+    }
+
+
+PW_SHAPES = [(3, 5, 4), (4, 8, 6), (2, 16, 3), (1, 1, 1)]
+DW_SHAPES = [(1, 5, 5, 2, 3, 1), (2, 6, 6, 3, 3, 2), (1, 7, 7, 2, 5, 2)]
+
+
+def gen_pw_f32(rng: np.random.RandomState) -> dict:
+    cases = []
+    for m, k, n in PW_SHAPES:
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        for kind in ("conv", "shift", "adder"):
+            if kind == "shift":
+                w = shift_weights(rng, k * n).reshape(k, n)
+                check_codes_match_ref(w)
+                y = ref.shift_pw_ref(x, w)
+            elif kind == "conv":
+                w = (rng.standard_normal((k, n)) * 0.3).astype(np.float32)
+                y = ref.conv_pw_ref(x, w)
+            else:
+                w = (rng.standard_normal((k, n)) * 0.3).astype(np.float32)
+                y = ref.adder_pw_ref(x, w)
+            cases.append(
+                {
+                    "kind": kind,
+                    "m": m,
+                    "k": k,
+                    "n": n,
+                    "x_bits": bits_list(x),
+                    "w_bits": bits_list(w),
+                    "y_bits": bits_list(np.asarray(y, dtype=np.float32)),
+                }
+            )
+    return {"seed": SEED, "cases": cases}
+
+
+def gen_pw_fxp(rng: np.random.RandomState) -> dict:
+    cases = []
+    for m, k, n in PW_SHAPES:
+        xq = [int(v) for v in rng.randint(-127, 128, size=m * k)]
+        for kind in ("conv", "shift", "adder"):
+            case = {"kind": kind, "m": m, "k": k, "n": n, "xq": xq}
+            if kind == "shift":
+                codes = [
+                    (int(s), int(p))
+                    for s, p in zip(
+                        rng.randint(-1, 2, size=k * n), rng.randint(P_MIN, P_MAX + 1, size=k * n)
+                    )
+                ]
+                case["s"] = [s for s, _ in codes]
+                case["p"] = [p if s else 0 for s, p in codes]
+                case["acc"] = pw_fxp_acc(kind, xq, None, codes, m, k, n)
+            else:
+                wq = [int(v) for v in rng.randint(-127, 128, size=k * n)]
+                case["wq"] = wq
+                case["acc"] = pw_fxp_acc(kind, xq, wq, None, m, k, n)
+            cases.append(case)
+    return {"seed": SEED, "cases": cases}
+
+
+def gen_dw_f32(rng: np.random.RandomState) -> dict:
+    cases = []
+    for b, h, w_, c, k, stride in DW_SHAPES:
+        x = rng.standard_normal((b, h, w_, c)).astype(np.float32)
+        for kind in ("conv", "shift", "adder"):
+            if kind == "shift":
+                wt = shift_weights(rng, k * k * c).reshape(k, k, c)
+                check_codes_match_ref(wt)
+                y = ref.dw_shift_ref(x, wt, stride)
+            elif kind == "conv":
+                wt = (rng.standard_normal((k, k, c)) * 0.3).astype(np.float32)
+                y = ref.dw_conv_ref(x, wt, stride)
+            else:
+                wt = (rng.standard_normal((k, k, c)) * 0.3).astype(np.float32)
+                y = ref.dw_adder_ref(x, wt, stride)
+            cases.append(
+                {
+                    "kind": kind,
+                    "b": b,
+                    "h": h,
+                    "w": w_,
+                    "c": c,
+                    "k": k,
+                    "stride": stride,
+                    "x_bits": bits_list(x),
+                    "w_bits": bits_list(wt),
+                    "y_bits": bits_list(np.asarray(y, dtype=np.float32)),
+                }
+            )
+    return {"seed": SEED, "cases": cases}
+
+
+def gen_dw_fxp(rng: np.random.RandomState) -> dict:
+    cases = []
+    for b, h, w_, c, k, stride in DW_SHAPES:
+        xq = [int(v) for v in rng.randint(-127, 128, size=b * h * w_ * c)]
+        for kind in ("conv", "shift", "adder"):
+            case = {
+                "kind": kind,
+                "b": b,
+                "h": h,
+                "w": w_,
+                "c": c,
+                "k": k,
+                "stride": stride,
+                "xq": xq,
+            }
+            if kind == "shift":
+                codes = [
+                    (int(s), int(p))
+                    for s, p in zip(
+                        rng.randint(-1, 2, size=k * k * c),
+                        rng.randint(P_MIN, P_MAX + 1, size=k * k * c),
+                    )
+                ]
+                case["s"] = [s for s, _ in codes]
+                case["p"] = [p if s else 0 for s, p in codes]
+                case["acc"] = dw_fxp_acc(kind, xq, None, codes, b, h, w_, c, k, stride)
+            else:
+                wq = [int(v) for v in rng.randint(-31, 32, size=k * k * c)]
+                case["wq"] = wq
+                case["acc"] = dw_fxp_acc(kind, xq, wq, None, b, h, w_, c, k, stride)
+            cases.append(case)
+    return {"seed": SEED, "cases": cases}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def encode(obj: dict) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":")) + "\n"
+
+
+def generate_all() -> dict[str, str]:
+    """filename -> exact file contents; the byte-reproduction contract."""
+    rng = np.random.RandomState(SEED)
+    return {
+        "pow2_quant.json": encode(gen_pow2_quant(rng)),
+        "pw_f32.json": encode(gen_pw_f32(rng)),
+        "pw_fxp.json": encode(gen_pw_fxp(rng)),
+        "dw_f32.json": encode(gen_dw_f32(rng)),
+        "dw_fxp.json": encode(gen_dw_fxp(rng)),
+    }
+
+
+def main() -> None:
+    out_dir = REPO / "fixtures" / "kernel_golden"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, text in generate_all().items():
+        path = out_dir / name
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} bytes)")
+
+
+if __name__ == "__main__":
+    main()
