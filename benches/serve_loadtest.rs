@@ -23,18 +23,37 @@
 //! of real arithmetic over synthetic outputs, and the cpu run must replay
 //! bit-identically just like the stub one (real-hardware rows for
 //! EXPERIMENTS.md §Perf Iteration 4).
+//!
+//! Fleet exhibits (EXPERIMENTS.md §Perf Iteration 5):
+//!
+//! * **Sharded throughput** — the same seeded Poisson trace, offered at
+//!   ~2.5x one executor's modeled capacity (at least 100k simulated
+//!   req/s), replayed through `--shards 1` and `--shards 4`. The
+//!   4-shard fleet's virtual throughput must *strictly* beat the
+//!   single executor (asserted, the acceptance criterion), per-shard
+//!   occupancy is recorded, and the sharded run must replay
+//!   bit-identically.
+//! * **Adaptive SLO** — a paced single-model arrival stream where the
+//!   static full-batch-first rule holds requests for 7 inter-arrival
+//!   gaps and blows the interactive p99 objective, while the AIMD
+//!   batcher sizes against the SLO and meets it (asserted, the other
+//!   acceptance criterion).
+//! * **Per-class latency** — a mixed interactive/batch workload on the
+//!   4-shard fleet, recording p50/p95/p99 per SLO class.
 
 use nasa::model::zoo::{resnet32_adder_like, shiftaddnet_like};
 use nasa::runtime::{Backend, Engine};
-use nasa::serve::{run_loadtest, LoadSpec, Process, ServeConfig, ServedModel, Service};
+use nasa::serve::{
+    gen_trace, replay_trace, run_loadtest, LoadSpec, Process, ServeConfig, ServedModel, Service,
+    SloClass,
+};
 use nasa::util::bench::{env_usize, header, Runner};
 use std::path::Path;
 use std::sync::Arc;
 
-fn service_on(batch_max: usize, backend: Backend) -> Service {
+fn service_with(cfg: ServeConfig, backend: Backend) -> Service {
     let m0 = ServedModel::from_arch("sa16", &shiftaddnet_like(16, 10), 1).unwrap();
     let m1 = ServedModel::from_arch("rn16", &resnet32_adder_like(16, 10), 2).unwrap();
-    let cfg = ServeConfig { batch_max, deadline_us: 2_000, ..ServeConfig::default() };
     Service::new(
         Arc::new(Engine::with_backend(backend).unwrap()),
         Path::new("artifacts"),
@@ -44,8 +63,21 @@ fn service_on(batch_max: usize, backend: Backend) -> Service {
     .unwrap()
 }
 
+fn service_on(batch_max: usize, backend: Backend) -> Service {
+    service_with(ServeConfig { batch_max, deadline_us: 2_000, ..ServeConfig::default() }, backend)
+}
+
 fn service(batch_max: usize) -> Service {
     service_on(batch_max, Backend::Stub)
+}
+
+/// A fleet-sized service: wide queue so overload never drops, `shards`
+/// concurrent executors.
+fn fleet_service(batch_max: usize, shards: usize) -> Service {
+    service_with(
+        ServeConfig { batch_max, queue_cap: 4096, shards, ..ServeConfig::default() },
+        Backend::Stub,
+    )
 }
 
 fn main() {
@@ -57,6 +89,7 @@ fn main() {
         requests: n,
         process: Process::Closed { clients: 16, think_us: 0 },
         mix: vec![3.0, 1.0],
+        ..LoadSpec::default()
     };
 
     let svc8 = service(8);
@@ -85,8 +118,8 @@ fn main() {
     runner.record_value("serve/vthroughput_rps_batch1", t1);
     runner.record_value("serve/vthroughput_gain_batch8_vs_batch1", t8 / t1);
     runner.record_value("serve/occupancy_batch8", out8.metrics.batch_occupancy());
-    runner.record_value("serve/p99_us_batch8", out8.metrics.global.percentile(0.99) as f64);
-    runner.record_value("serve/p99_us_batch1", out1.metrics.global.percentile(0.99) as f64);
+    runner.record_value("serve/p99_us_batch8", out8.metrics.global().percentile(0.99) as f64);
+    runner.record_value("serve/p99_us_batch1", out1.metrics.global().percentile(0.99) as f64);
     assert!(
         t8 > t1,
         "dynamic batching must beat batch=1: {t8:.1} vs {t1:.1} req/s"
@@ -121,7 +154,7 @@ fn main() {
     runner.record_value("serve/occupancy_batch8_cpu", out_cpu.metrics.batch_occupancy());
     runner.record_value(
         "serve/p99_us_batch8_cpu",
-        out_cpu.metrics.global.percentile(0.99) as f64,
+        out_cpu.metrics.global().percentile(0.99) as f64,
     );
     assert_eq!(out_cpu.metrics.completed as usize, n, "cpu backend dropped requests");
     // Virtual-time scheduling is backend-independent: the mapper-priced
@@ -136,11 +169,131 @@ fn main() {
         "cpu metrics JSON must replay exactly"
     );
 
+    // --- Fleet exhibit 1: sharded virtual throughput under overload. ---
+    // Offer a seeded Poisson trace at ~2.5x one executor's modeled
+    // batch-8 capacity (at least 100k simulated req/s) and replay it
+    // through shards=1 and shards=4. The queue is wide enough that
+    // nothing drops — the single executor just falls behind, so modeled
+    // throughput scales with fleet width.
+    let svc_s1 = fleet_service(8, 1);
+    let svc_s4 = fleet_service(8, 4);
+    let overhead = svc_s1.cfg.batch_overhead_us;
+    let per8: f64 = svc_s1
+        .models
+        .iter()
+        .map(|m| m.cost.service_us(8, overhead) as f64)
+        .sum::<f64>()
+        / svc_s1.models.len() as f64;
+    let cap1 = 8e6 / per8; // one executor's modeled req/s at full batches
+    let rps = (2.5 * cap1).max(100_000.0);
+    let fleet_spec = LoadSpec {
+        requests: n,
+        process: Process::OpenPoisson { rps },
+        mix: vec![3.0, 1.0],
+        ..LoadSpec::default()
+    };
+    let trace = gen_trace(&fleet_spec, svc_s1.models.len(), 4242).unwrap();
+    let out_s1 = replay_trace(&svc_s1, &trace).unwrap();
+    let out_s4 = replay_trace(&svc_s4, &trace).unwrap();
+    assert_eq!(out_s1.metrics.completed as usize, n, "shards=1 dropped requests");
+    assert_eq!(out_s4.metrics.completed as usize, n, "shards=4 dropped requests");
+    let (ts1, ts4) = (out_s1.metrics.throughput_rps(), out_s4.metrics.throughput_rps());
+    runner.record_value("serve/offered_rps_fleet", rps);
+    runner.record_value("serve/vthroughput_rps_shards1", ts1);
+    runner.record_value("serve/vthroughput_rps_shards4", ts4);
+    runner.record_value("serve/vthroughput_gain_shards4_vs_shards1", ts4 / ts1);
+    for s in 0..4 {
+        runner
+            .record_value(&format!("serve/occupancy_shard{s}"), out_s4.metrics.shard_occupancy(s));
+    }
+    assert!(
+        ts4 > ts1,
+        "sharded fleet must beat the single executor: {ts4:.1} vs {ts1:.1} req/s"
+    );
+    // The sharded schedule is as deterministic as the single-executor one.
+    let s4_again = replay_trace(&fleet_service(8, 4), &trace).unwrap();
+    assert_eq!(s4_again.batches, out_s4.batches, "sharded batches must replay exactly");
+    assert_eq!(
+        s4_again.metrics.to_json().to_string(),
+        out_s4.metrics.to_json().to_string(),
+        "sharded metrics JSON must replay exactly"
+    );
+
+    // --- Fleet exhibit 2: adaptive batching meets an SLO the static rule
+    // misses. A single-model stream paced at one request per 2*s1 (s1 =
+    // modeled batch-1 latency): the static full-batch-first rule holds
+    // the oldest request for 7 inter-arrival gaps (the deadline is
+    // roomier still), blowing an interactive objective of 3*(gap + s1);
+    // the AIMD batcher stops growing its target once doubling the worst
+    // observed latency would cross the SLO, so it stays under.
+    let s1 = svc_s1.models[0].cost.service_us(1, overhead);
+    let gap = (2 * s1).max(2);
+    let slo = 3 * (gap + s1);
+    let slo_svc = |adaptive: bool| {
+        service_with(
+            ServeConfig {
+                deadline_us: 2 * slo,
+                queue_cap: 4096,
+                adaptive,
+                slo_us: [slo, 10 * slo],
+                ..ServeConfig::default()
+            },
+            Backend::Stub,
+        )
+    };
+    let paced = LoadSpec {
+        requests: n,
+        process: Process::OpenUniform { rps: 1e6 / gap as f64 },
+        mix: vec![1.0, 0.0],
+        ..LoadSpec::default()
+    };
+    let out_static = run_loadtest(&slo_svc(false), &paced, 7).unwrap();
+    let out_adapt = run_loadtest(&slo_svc(true), &paced, 7).unwrap();
+    assert_eq!(out_static.metrics.completed as usize, n, "static SLO run dropped requests");
+    assert_eq!(out_adapt.metrics.completed as usize, n, "adaptive SLO run dropped requests");
+    let p99_static = out_static.metrics.global().percentile(0.99);
+    let p99_adapt = out_adapt.metrics.global().percentile(0.99);
+    runner.record_value("serve/slo_us", slo as f64);
+    runner.record_value("serve/p99_us_static_slo", p99_static as f64);
+    runner.record_value("serve/p99_us_adaptive_slo", p99_adapt as f64);
+    assert!(
+        p99_static > slo && p99_adapt <= slo,
+        "adaptive batching must meet the {slo}us SLO the static rule misses \
+         (static p99 {p99_static}us, adaptive p99 {p99_adapt}us)"
+    );
+
+    // --- Fleet exhibit 3: per-class latency on the mixed fleet. ---
+    let mixed = LoadSpec {
+        requests: n,
+        process: Process::OpenPoisson { rps },
+        mix: vec![3.0, 1.0],
+        interactive_frac: 0.5,
+        ..LoadSpec::default()
+    };
+    let out_mixed = run_loadtest(&fleet_service(8, 4), &mixed, 2026).unwrap();
+    assert_eq!(out_mixed.metrics.completed as usize, n, "mixed-class run dropped requests");
+    for class in SloClass::ALL {
+        let cm = &out_mixed.metrics.per_class[class.index()];
+        assert!(cm.completed > 0, "{} class starved in the mixed exhibit", class.name());
+        for (tag, p) in [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)] {
+            runner.record_value(
+                &format!("serve/{}_us_{}_class", tag, class.name()),
+                cm.hist.percentile(p) as f64,
+            );
+        }
+    }
+
     println!(
         "serve: batch8 {t8:.1} req/s vs batch1 {t1:.1} req/s (x{:.2} virtual), \
          occupancy {:.2}, deterministic replay OK (stub + cpu)",
         t8 / t1,
         out8.metrics.batch_occupancy()
+    );
+    println!(
+        "serve: fleet shards4 {ts4:.1} req/s vs shards1 {ts1:.1} req/s (x{:.2} at \
+         {rps:.0} offered rps); adaptive p99 {p99_adapt}us vs static {p99_static}us \
+         against a {slo}us SLO",
+        ts4 / ts1
     );
 
     runner.finish();

@@ -81,6 +81,40 @@ cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
     --closed-loop 4 --requests 200 --seed 11 --json target/ci_serve/cl2.json
 cmp target/ci_serve/cl1.json target/ci_serve/cl2.json
 
+say "sharded fleet smoke: serve --shards 4 --adaptive + deterministic replay"
+# The live fleet (4 batcher shards, adaptive targets, mixed SLO classes)
+# must answer all 200 closed-loop requests, and its recorded trace must
+# replay byte-identically through the 4-shard virtual-time scheduler with
+# zero drops.
+cargo run --release --quiet -- serve --models "$SERVE_MODELS" \
+    --requests 200 --clients 4 --shards 4 --adaptive --interactive-frac 0.5 \
+    --batch-max 8 --deadline-us 2000 --seed 9 \
+    --trace target/ci_serve/trace_sharded.json
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --trace target/ci_serve/trace_sharded.json --shards 4 --adaptive \
+    --batch-max 8 --deadline-us 2000 --json target/ci_serve/sh1.json
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --trace target/ci_serve/trace_sharded.json --shards 4 --adaptive \
+    --batch-max 8 --deadline-us 2000 --json target/ci_serve/sh2.json
+cmp target/ci_serve/sh1.json target/ci_serve/sh2.json
+grep -q '"completed":200' target/ci_serve/sh1.json
+grep -q '"rejected":0' target/ci_serve/sh1.json
+
+say "scenario zoo smoke: bursty arrivals + zipf mix, trace-replay identical"
+# The seeded on/off (bursty) arrival process with a skewed-popularity
+# model mix must generate, serve, and save a trace whose replay is
+# byte-identical (generation knobs are baked into the trace, so the
+# replay needs only the scheduler flags).
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --requests 300 --rps 20000 --bursty 2000,20000 --zipf 1.2 --seed 5 \
+    --shards 2 --interactive-frac 0.7 --queue-cap 4096 \
+    --json target/ci_serve/burst1.json --save-trace target/ci_serve/burst_trace.json
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --trace target/ci_serve/burst_trace.json --shards 2 --queue-cap 4096 \
+    --json target/ci_serve/burst2.json
+cmp target/ci_serve/burst1.json target/ci_serve/burst2.json
+grep -q '"completed":300' target/ci_serve/burst1.json
+
 say "cpu backend smoke: nasa serve --backend cpu (real kernel inference)"
 # Same derived children, served through the native multiplication-free
 # kernels instead of the stub: 50 closed-loop requests must all complete

@@ -27,8 +27,8 @@ use nasa::model::{arch_op_counts, Arch, QuantSpec};
 use nasa::nas::PgpSchedule;
 use nasa::runtime::{Backend, Engine, Manifest};
 use nasa::serve::{
-    drive_closed_loop, replay_trace, run_loadtest, LoadSpec, Process, ServeConfig, ServedModel,
-    Service, Trace,
+    drive_closed_loop, replay_trace, run_loadtest, zipf_mix, LoadSpec, Process, ServeConfig,
+    ServedModel, Service, Trace,
 };
 use nasa::util::cli::Args;
 use std::path::{Path, PathBuf};
@@ -82,21 +82,34 @@ USAGE: nasa <subcommand> [--options]
            [--greedy-tiling] [--no-lattice] [--tied-noc] [--reference]
   serve    --models runs/a.json,runs/b.json [--requests 200] [--clients 4]
            [--backend stub|cpu] [--batch-max 8] [--deadline-us 2000]
-           [--queue-cap 256] [--overhead-us 50] [--mix 3,1] [--fxp]
+           [--queue-cap 256] [--overhead-us 50] [--mix 3,1 | --zipf 1.2]
+           [--shards 1] [--adaptive] [--slo-us 5000] [--slo-batch-us 50000]
+           [--class-cap-interactive N] [--class-cap-batch N]
+           [--interactive-frac 1.0] [--threads 0] [--fxp]
            [--seed 42] [--trace out.json] [--json metrics.json]
-           (live threaded service, wall-clock numbers; --backend cpu runs
-            real multiplication-free kernels so logits/argmax are genuine;
-            --trace records a replayable arrival schedule for
-            `loadtest --trace`)
+           (live threaded service, wall-clock numbers; --shards runs an
+            executor fleet over one shared SLO-classed queue; --adaptive
+            sizes batches against the per-class SLO instead of the static
+            full-batch-first rule; --threads caps TOTAL worker threads —
+            fleet + kernel fan-out — via the shared budget, 0=unlimited;
+            --backend cpu runs real multiplication-free kernels so
+            logits/argmax are genuine; --trace records a replayable
+            arrival schedule for `loadtest --trace`)
   loadtest --models runs/a.json,runs/b.json [--requests 200] [--seed 42]
-           (--rps 1000 [--poisson] | --closed-loop 4 [--think-us 0]
-            | --trace in.json)
+           (--rps 1000 [--poisson | --bursty ON_US,OFF_US]
+            | --closed-loop 4 [--think-us 0] | --trace in.json)
            [--backend stub|cpu] [--batch-max 8] [--deadline-us 2000]
-           [--queue-cap 256] [--overhead-us 50] [--mix 3,1] [--fxp]
+           [--queue-cap 256] [--overhead-us 50] [--mix 3,1 | --zipf 1.2]
+           [--shards 1] [--adaptive] [--slo-us 5000] [--slo-batch-us 50000]
+           [--class-cap-interactive N] [--class-cap-batch N]
+           [--interactive-frac 1.0] [--fxp]
            [--json metrics.json] [--save-trace out.json]
-           (deterministic virtual-time load test: identical flags+seed
-            give bit-identical batches, latencies and metrics JSON;
-            scheduling is backend-independent)
+           (deterministic virtual-time load test across N simulated
+            shards: identical flags+seed give bit-identical batches,
+            shard placements, latencies and metrics JSON; scheduling is
+            backend-independent; --bursty gates Poisson arrivals through
+            a seeded on/off duty cycle, --zipf derives a skewed-popularity
+            model mix)
   check    [--artifacts artifacts]
   report   table2|fig2|fig6|fig7|fig8 [--out runs]
 "
@@ -365,7 +378,9 @@ fn cmd_map(args: &Args) -> Result<()> {
 
 /// Shared `serve`/`loadtest` plumbing: models from `--models` arch-JSON
 /// paths (model names come from the arch files), policy from flags.
-fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>)> {
+/// Returns the service, the model mix, and the interactive-class
+/// fraction.
+fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>, f64)> {
     let model_paths = parse_list(args.require("models")?, |t| Ok(t.to_string()))?;
     if model_paths.is_empty() {
         bail!("--models needs at least one arch JSON path");
@@ -377,16 +392,34 @@ fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>)> {
         let name = if arch.name.is_empty() { format!("m{i}") } else { arch.name.clone() };
         models.push(ServedModel::from_arch(&name, &arch, seed ^ ((i as u64) << 17))?);
     }
+    let shards = args.usize_or("shards", 1)?;
+    if shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    // One knob bounds TOTAL threads: fleet workers + kernel par_map
+    // fan-out all draw on the shared util::par budget (0 = unlimited).
+    nasa::util::par::set_thread_budget(args.usize_or("threads", 0)?);
     let cfg = ServeConfig {
         batch_max: args.usize_or("batch-max", 8)?,
         deadline_us: args.u64_or("deadline-us", 2_000)?,
         queue_cap: args.usize_or("queue-cap", 256)?,
         batch_overhead_us: args.u64_or("overhead-us", 50)?,
         fxp: args.flag("fxp"),
+        shards,
+        adaptive: args.flag("adaptive"),
+        slo_us: [args.u64_or("slo-us", 5_000)?, args.u64_or("slo-batch-us", 50_000)?],
+        class_caps: [
+            args.usize_or("class-cap-interactive", usize::MAX)?,
+            args.usize_or("class-cap-batch", usize::MAX)?,
+        ],
     };
-    let mix = match args.get("mix") {
-        None => vec![],
-        Some(s) => parse_list(s, |t| t.parse::<f64>().map_err(|e| anyhow::anyhow!("--mix: {e}")))?,
+    let mix = match (args.get("mix"), args.get("zipf")) {
+        (Some(_), Some(_)) => bail!("--mix and --zipf are mutually exclusive"),
+        (Some(s), None) => {
+            parse_list(s, |t| t.parse::<f64>().map_err(|e| anyhow::anyhow!("--mix: {e}")))?
+        }
+        (None, Some(_)) => zipf_mix(models.len(), args.f64_or("zipf", 1.0)?),
+        (None, None) => vec![],
     };
     // --backend: stub (default) keeps the historical synthetic outputs;
     // cpu executes the served children through the native kernels; pjrt
@@ -408,21 +441,30 @@ fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>)> {
         );
     }
     let svc = Service::new(engine, &artifacts_dir(args), models, cfg)?;
-    Ok((svc, mix))
+    let frac = args.f64_or("interactive-frac", 1.0)?;
+    Ok((svc, mix, frac))
 }
 
 /// Run the live threaded service and self-drive it closed-loop.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (svc, mix) = serve_setup(args)?;
+    let (svc, mix, frac) = serve_setup(args)?;
     let requests = args.usize_or("requests", 200)?;
     let clients = args.usize_or("clients", 4)?;
     let seed = args.u64_or("seed", 42)?;
     println!(
-        "serve: live batcher (batch_max={} deadline={}us queue_cap={}), {} closed-loop clients x {} requests",
-        svc.cfg.batch_max, svc.cfg.deadline_us, svc.cfg.queue_cap, clients, requests
+        "serve: {} batcher shard(s) ({} batching, batch_max={} deadline={}us queue_cap={}), \
+         {} closed-loop clients x {} requests ({:.0}% interactive)",
+        svc.cfg.shards,
+        if svc.cfg.adaptive { "adaptive" } else { "static" },
+        svc.cfg.batch_max,
+        svc.cfg.deadline_us,
+        svc.cfg.queue_cap,
+        clients,
+        requests,
+        frac * 100.0
     );
     let t0 = std::time::Instant::now();
-    let (metrics, trace) = drive_closed_loop(svc, clients, requests, &mix, seed)?;
+    let (metrics, trace) = drive_closed_loop(svc, clients, requests, &mix, frac, seed)?;
     println!("serve done in {:.2}s (wall)", t0.elapsed().as_secs_f64());
     metrics.print_table();
     if let Some(p) = args.get("trace") {
@@ -441,7 +483,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// Deterministic virtual-time load test of the same serving core.
 fn cmd_loadtest(args: &Args) -> Result<()> {
-    let (svc, mix) = serve_setup(args)?;
+    let (svc, mix, frac) = serve_setup(args)?;
     let seed = args.u64_or("seed", 42)?;
     let requests = args.usize_or("requests", 200)?;
     let t0 = std::time::Instant::now();
@@ -452,16 +494,29 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     } else if args.get("closed-loop").is_some() {
         let clients = args.usize_or("closed-loop", 4)?;
         let think_us = args.u64_or("think-us", 0)?;
-        let spec = LoadSpec { requests, process: Process::Closed { clients, think_us }, mix };
+        let spec = LoadSpec {
+            requests,
+            process: Process::Closed { clients, think_us },
+            mix,
+            interactive_frac: frac,
+        };
         (run_loadtest(&svc, &spec, seed)?, format!("closed-loop ({clients} clients)"))
     } else {
         let rps = args.f64_or("rps", 1_000.0)?;
-        let process = if args.flag("poisson") {
+        let process = if let Some(b) = args.get("bursty") {
+            let win = parse_list(b, |t| {
+                t.parse::<u64>().map_err(|e| anyhow::anyhow!("--bursty: {e}"))
+            })?;
+            let [on_us, off_us] = win[..] else {
+                bail!("--bursty wants ON_US,OFF_US (got {} values)", win.len());
+            };
+            Process::OpenBursty { rps, on_us, off_us }
+        } else if args.flag("poisson") {
             Process::OpenPoisson { rps }
         } else {
             Process::OpenUniform { rps }
         };
-        let spec = LoadSpec { requests, process, mix };
+        let spec = LoadSpec { requests, process, mix, interactive_frac: frac };
         (run_loadtest(&svc, &spec, seed)?, format!("open-loop ({rps} rps)"))
     };
     println!(

@@ -148,6 +148,13 @@ impl CpuModel {
     /// Run a batch: `x` is NHWC `[batch, h, w, c]` flat, returns logits
     /// `[batch * classes]`. Bit-deterministic, and batch-composition
     /// invariant (row `i` of a batch equals the same sample run alone).
+    ///
+    /// Multi-sample batches fan the samples across `util::par::par_map`:
+    /// composition invariance (pinned below) makes per-sample execution
+    /// equivalent to whole-batch execution, and the par substrate is
+    /// budget-aware, so serving-fleet executor threads and this nested
+    /// fan-out share one oversubscription cap (degrading to sequential
+    /// when the budget is spent).
     pub fn infer(&self, params: &[f32], x: &[f32], batch: usize) -> Result<Vec<f32>> {
         if params.len() != self.n_params {
             bail!("cpu backend '{}': got {} params, model wants {}", self.name, params.len(), self.n_params);
@@ -160,6 +167,26 @@ impl CpuModel {
                 x.len()
             );
         }
+        if batch > 1 {
+            let sample = h0 * w0 * c0;
+            let idx: Vec<usize> = (0..batch).collect();
+            let rows = crate::util::par::par_map(&idx, |&b| {
+                self.infer_seq(&x[b * sample..(b + 1) * sample])
+            });
+            let mut out = Vec::with_capacity(batch * self.classes);
+            for row in rows {
+                out.extend(row?);
+            }
+            return Ok(out);
+        }
+        self.infer_seq(x)
+    }
+
+    /// Single-sample layer pipeline (`x` is one `[h, w, c]` sample,
+    /// already shape-checked by [`CpuModel::infer`]).
+    fn infer_seq(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let batch = 1usize;
+        let [h0, w0, c0] = self.sample_shape();
         let mut cur = x.to_vec();
         let (mut ch, mut cw, mut cc) = (h0, w0, c0);
         let last = self.layers.len() - 1;

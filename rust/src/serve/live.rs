@@ -1,18 +1,23 @@
 //! The threaded shell around the serving core: a [`LiveService`] accepts
-//! `submit` calls from any thread, and ONE long-lived batcher worker
-//! (`util::par::Worker` — the long-lived counterpart of the scoped
-//! `par_map` substrate) drains the shared [`BatchQueue`] under the same
-//! full-batch / deadline-flush policy the virtual-time loadtest uses.
-//! Responses come back over per-request mpsc channels; timing here is
-//! wall-clock (microseconds since service start), so live numbers are
+//! `submit` calls from any thread, and a fleet of `cfg.shards` long-lived
+//! batcher workers (`util::par::Worker` — the long-lived counterpart of
+//! the scoped `par_map` substrate) drains the shared [`ClassedQueue`]
+//! under the same full-batch / deadline-flush / class-priority /
+//! adaptive-target policy the virtual-time loadtest uses — every policy
+//! is priced in `serve::loadgen` first, and this shell only swaps
+//! virtual clocks for wall clocks. Each worker claims one slot of the
+//! global `util::par` thread budget for its lifetime, so the fleet and
+//! the kernels' nested `par_map` fan-outs share one oversubscription
+//! cap. Responses come back over per-request mpsc channels; timing here
+//! is wall-clock (microseconds since service start), so live numbers are
 //! *not* bit-deterministic — determinism claims live with the
 //! virtual-time engine in `serve::loadgen`. `nasa serve` can record every
 //! admitted arrival as a `loadgen::Trace`, which `nasa loadtest --trace`
 //! then replays deterministically.
 
-use super::loadgen::{json_safe_seed, pick_model, Arrival, LoadSpec, Process, Trace};
+use super::loadgen::{json_safe_seed, pick_model, sample_class, Arrival, LoadSpec, Process, Trace};
 use super::metrics::ServeMetrics;
-use super::service::{BatchQueue, Rejected, Request, Response, Service};
+use super::service::{AdaptiveBatcher, ClassedQueue, Rejected, Request, Response, Service, SloClass};
 use crate::util::par::Worker;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -21,7 +26,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 struct LiveState {
-    queue: BatchQueue,
+    queue: ClassedQueue,
+    adaptive: AdaptiveBatcher,
     /// Response channel per queued request id.
     pending: std::collections::BTreeMap<u64, Sender<Response>>,
     metrics: ServeMetrics,
@@ -38,21 +44,23 @@ struct LiveShared {
     t0: Instant,
 }
 
-/// A running in-process inference service (one batcher worker).
+/// A running in-process inference service (a fleet of `cfg.shards`
+/// batcher workers over one shared classed queue).
 pub struct LiveService {
     shared: Arc<LiveShared>,
-    worker: Option<Worker>,
+    workers: Vec<Worker>,
     next_id: AtomicU64,
 }
 
 impl LiveService {
     pub fn start(svc: Service) -> LiveService {
         let n_models = svc.models.len();
-        let queue_cap = svc.cfg.queue_cap;
-        let metrics = ServeMetrics::new(&svc.models);
+        let cfg = svc.cfg;
+        let metrics = ServeMetrics::new(&svc.models, cfg.shards.max(1));
         let shared = Arc::new(LiveShared {
             state: Mutex::new(LiveState {
-                queue: BatchQueue::new(n_models, queue_cap),
+                queue: ClassedQueue::new(n_models, &cfg),
+                adaptive: AdaptiveBatcher::new(n_models, cfg.batch_max),
                 pending: std::collections::BTreeMap::new(),
                 metrics,
                 trace: Trace::default(),
@@ -63,40 +71,55 @@ impl LiveService {
             t0: Instant::now(),
             svc,
         });
-        let shell = shared.clone();
-        let wake_shared = shared.clone();
-        let worker = Worker::spawn(
-            "serve-batcher",
-            // Take the state lock before notifying: the batcher holds it
-            // from its stop-flag check until it parks on the condvar, so
-            // a lockless notify could land in that window and be lost.
-            move || {
-                let _guard = wake_shared.state.lock();
-                wake_shared.cv.notify_all();
-            },
-            move |stop| batcher_loop(&shell, stop),
-        );
-        LiveService { shared, worker: Some(worker), next_id: AtomicU64::new(0) }
+        let workers = (0..cfg.shards.max(1))
+            .map(|shard| {
+                let shell = shared.clone();
+                let wake_shared = shared.clone();
+                Worker::spawn(
+                    &format!("serve-batcher-{shard}"),
+                    // Take the state lock before notifying: a batcher
+                    // holds it from its stop-flag check until it parks on
+                    // the condvar, so a lockless notify could land in
+                    // that window and be lost.
+                    move || {
+                        let _guard = wake_shared.state.lock();
+                        wake_shared.cv.notify_all();
+                    },
+                    move |stop| batcher_loop(&shell, shard, stop),
+                )
+            })
+            .collect();
+        LiveService { shared, workers, next_id: AtomicU64::new(0) }
     }
 
     fn now_us(&self) -> u64 {
         self.shared.t0.elapsed().as_micros() as u64
     }
 
-    /// Submit one request for `model`; returns the channel its response
-    /// will arrive on, or the typed admission-control refusal.
+    /// Submit one `interactive`-class request for `model`; returns the
+    /// channel its response will arrive on, or the typed refusal.
     pub fn submit(&self, model: usize, seed: u64) -> Result<Receiver<Response>, Rejected> {
+        self.submit_class(model, SloClass::Interactive, seed)
+    }
+
+    /// [`LiveService::submit`] with an explicit SLO class.
+    pub fn submit_class(
+        &self,
+        model: usize,
+        class: SloClass,
+        seed: u64,
+    ) -> Result<Receiver<Response>, Rejected> {
         let arrival_us = self.now_us();
         let mut st = self.shared.state.lock().expect("live state poisoned");
         if !st.open {
             return Err(Rejected::Closed);
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, model, client: usize::MAX, arrival_us, seed };
+        let req = Request { id, model, client: usize::MAX, arrival_us, seed, class };
         match st.queue.submit(req) {
             Ok(()) => {
                 st.metrics.on_admit();
-                st.trace.arrivals.push(Arrival { t_us: arrival_us, model, seed });
+                st.trace.arrivals.push(Arrival { t_us: arrival_us, model, seed, class });
                 let (tx, rx) = channel();
                 st.pending.insert(id, tx);
                 drop(st);
@@ -104,21 +127,21 @@ impl LiveService {
                 Ok(rx)
             }
             Err(e) => {
-                st.metrics.on_reject(model);
+                st.metrics.on_reject(model, class);
                 Err(e)
             }
         }
     }
 
-    /// Stop accepting work, let the batcher drain the queue, join it, and
-    /// return the final metrics plus the replayable arrival trace.
+    /// Stop accepting work, let the fleet drain the queue, join every
+    /// worker, and return the final metrics plus the replayable trace.
     pub fn shutdown(mut self) -> Result<(ServeMetrics, Trace)> {
         {
             let mut st = self.shared.state.lock().expect("live state poisoned");
             st.open = false;
         }
         self.shared.cv.notify_all();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             w.stop_and_join();
         }
         let mut st = self.shared.state.lock().expect("live state poisoned");
@@ -133,10 +156,13 @@ impl LiveService {
     }
 }
 
-/// The worker body: coalesce → execute → deliver, sleeping until the
-/// next deadline when no batch is ready. On `stop`/close it drains the
-/// queue (deadline policy ignored — everything flushes) before exiting.
-fn batcher_loop(shared: &LiveShared, stop: &AtomicBool) {
+/// One fleet worker's body: coalesce → execute → deliver, sleeping until
+/// the next deadline when no batch is ready. All workers drain the one
+/// shared queue under the lock; batches execute with the lock RELEASED,
+/// which is exactly where the fleet's parallelism comes from. On
+/// `stop`/close each worker keeps draining (deadline policy ignored —
+/// everything flushes) until the queue is empty, then exits.
+fn batcher_loop(shared: &LiveShared, shard: usize, stop: &AtomicBool) {
     let cfg = shared.svc.cfg;
     let mut st = shared.state.lock().expect("live state poisoned");
     loop {
@@ -144,7 +170,14 @@ fn batcher_loop(shared: &LiveShared, stop: &AtomicBool) {
         let now = shared.t0.elapsed().as_micros() as u64;
         // When draining, every queued request is "expired" (deadline 0).
         let deadline = if draining { 0 } else { cfg.deadline_us };
-        if let Some((model, reqs)) = st.queue.pop_ready(now, cfg.batch_max, deadline) {
+        let popped = {
+            let s = &mut *st;
+            // Adaptive targets are ignored while draining: the final
+            // flush should empty the queue in as few batches as possible.
+            let targets = if cfg.adaptive && !draining { Some(s.adaptive.targets().to_vec()) } else { None };
+            s.queue.pop_ready(now, cfg.batch_max, deadline, targets.as_deref())
+        };
+        if let Some((model, class, reqs)) = popped {
             let txs: Vec<Option<Sender<Response>>> =
                 reqs.iter().map(|r| st.pending.remove(&r.id)).collect();
             drop(st); // execute without holding the lock
@@ -156,13 +189,24 @@ fn batcher_loop(shared: &LiveShared, stop: &AtomicBool) {
                     // Live mode reports wall time, not the virtual model.
                     let done = shared.t0.elapsed().as_micros() as u64;
                     rec.done_us = done;
+                    rec.shard = shard;
                     st.metrics.on_batch(&rec);
+                    let mut worst = 0u64;
                     for (r, tx) in resps.iter_mut().zip(txs) {
                         r.done_us = done;
-                        st.metrics.on_response(r);
+                        worst = worst.max(r.latency_us());
+                        st.metrics.on_response(r, shard);
                         if let Some(tx) = tx {
                             let _ = tx.send(r.clone()); // receiver may be gone
                         }
+                    }
+                    if cfg.adaptive {
+                        st.adaptive.on_batch_done(
+                            model,
+                            worst,
+                            rec.ids.len(),
+                            cfg.slo_us[class.index()],
+                        );
                     }
                 }
                 Err(e) => {
@@ -199,16 +243,19 @@ pub fn drive_closed_loop(
     clients: usize,
     requests: usize,
     mix: &[f64],
+    interactive_frac: f64,
     seed: u64,
 ) -> Result<(ServeMetrics, Trace)> {
     let clients = clients.max(1);
-    // Same mix normalization/validation as the virtual loadtest path.
+    // Same mix/frac normalization/validation as the virtual loadtest path.
     let cum = LoadSpec {
         requests,
         process: Process::Closed { clients, think_us: 0 },
         mix: mix.to_vec(),
+        interactive_frac,
     }
     .cumulative_mix(svc.models.len())?;
+    super::loadgen::check_frac(interactive_frac)?;
     let live = Arc::new(LiveService::start(svc));
     let failures: Vec<String> = std::thread::scope(|s| {
         let mut handles = Vec::new();
@@ -221,13 +268,14 @@ pub fn drive_closed_loop(
                 for _ in 0..share {
                     let model = pick_model(&mut rng, &cum);
                     let req_seed = json_safe_seed(&mut rng);
+                    let class = sample_class(&mut rng, interactive_frac);
                     loop {
-                        match live.submit(model, req_seed) {
+                        match live.submit_class(model, class, req_seed) {
                             Ok(rx) => {
                                 rx.recv().map_err(|e| format!("response channel: {e}"))?;
                                 break;
                             }
-                            Err(Rejected::QueueFull { .. }) => {
+                            Err(Rejected::QueueFull { .. }) | Err(Rejected::ClassFull { .. }) => {
                                 std::thread::sleep(Duration::from_micros(200));
                             }
                             Err(e) => return Err(format!("submit refused: {e}")),
@@ -270,12 +318,37 @@ mod tests {
     fn live_service_serves_and_drains_on_shutdown() {
         let cfg = ServeConfig { deadline_us: 500, ..ServeConfig::default() };
         let (metrics, trace) =
-            drive_closed_loop(tiny_service(cfg), 2, 24, &[], 42).unwrap();
+            drive_closed_loop(tiny_service(cfg), 2, 24, &[], 1.0, 42).unwrap();
         assert_eq!(metrics.completed, 24, "every request must be answered");
         assert_eq!(metrics.admitted, 24);
         assert_eq!(trace.arrivals.len(), 24);
         assert!(metrics.batches >= 1);
         assert!(metrics.span_us > 0);
+    }
+
+    #[test]
+    fn sharded_fleet_serves_mixed_classes_and_drains() {
+        let cfg = ServeConfig {
+            deadline_us: 300,
+            shards: 4,
+            adaptive: true,
+            ..ServeConfig::default()
+        };
+        let (metrics, trace) =
+            drive_closed_loop(tiny_service(cfg), 4, 40, &[], 0.5, 11).unwrap();
+        assert_eq!(metrics.completed, 40, "fleet must answer every request");
+        assert_eq!(trace.arrivals.len(), 40);
+        assert_eq!(metrics.per_shard.len(), 4);
+        // Batches landed somewhere in the fleet and the per-class books
+        // cover everything completed.
+        assert_eq!(metrics.per_shard.iter().map(|s| s.batches).sum::<u64>(), metrics.batches);
+        assert_eq!(
+            metrics.per_class.iter().map(|c| c.completed).sum::<u64>(),
+            metrics.completed
+        );
+        // With frac 0.5 over 40 seeded draws both classes appear (the
+        // exact split is pinned by the seed, the bound is loose).
+        assert!(metrics.per_class.iter().all(|c| c.completed > 0));
     }
 
     #[test]

@@ -4,25 +4,32 @@
 //! pure function of `(models, config, spec, seed)`:
 //!
 //! * **Open-loop** — requests arrive on a schedule regardless of service
-//!   progress: uniform (`rps` evenly spaced) or Poisson (exponential
-//!   inter-arrivals), over a weighted multi-model mix. Open arrivals are
-//!   materialized as a [`Trace`] first (saveable/replayable JSON — the
-//!   `nasa serve --trace` / `nasa loadtest --trace` interchange).
+//!   progress: uniform (`rps` evenly spaced), Poisson (exponential
+//!   inter-arrivals), or bursty (Poisson gated through a seeded on/off
+//!   duty cycle), over a weighted multi-model mix — [`zipf_mix`] builds
+//!   the skewed-popularity weights. Open arrivals are materialized as a
+//!   [`Trace`] first (saveable/replayable JSON — the `nasa serve
+//!   --trace` / `nasa loadtest --trace` interchange). Each arrival
+//!   carries an [`SloClass`] drawn from `interactive_frac`.
 //! * **Closed-loop** — `clients` concurrent callers; each issues its
 //!   next request `think_us` after its previous response completes, so
 //!   offered load adapts to service capacity (no drops at steady state).
 //!
 //! [`run_loadtest`] executes the workload as a discrete-event simulation
-//! in **virtual microseconds**: batches really execute through the
-//! shared engine (stub outputs are real), while time advances by the
-//! mapper-priced service model (`ModelCost::service_us`). Latencies,
-//! batch boundaries, and the metrics JSON are therefore bit-identical
-//! across runs — the property `rust/tests/serve_determinism.rs` and the
-//! ci.sh replay `cmp` pin. Wall-clock throughput of the same drive is
+//! in **virtual microseconds** across `cfg.shards` concurrent executor
+//! slots — the same fleet shape `serve/live.rs` runs on real threads:
+//! batches really execute through the shared engine (stub outputs are
+//! real), while time advances by the mapper-priced service model
+//! (`ModelCost::service_us`). Latencies, batch boundaries, shard
+//! placements, and the metrics JSON are therefore bit-identical across
+//! runs — the property `rust/tests/serve_determinism.rs` and the ci.sh
+//! replay `cmp` pin. Wall-clock throughput of the same drive is
 //! measured separately by `benches/serve_loadtest.rs`.
 
 use super::metrics::ServeMetrics;
-use super::service::{BatchQueue, BatchRecord, Rejected, Request, Response, Service};
+use super::service::{
+    AdaptiveBatcher, BatchRecord, ClassedQueue, Rejected, Request, Response, Service, SloClass,
+};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
@@ -36,6 +43,11 @@ pub enum Process {
     OpenUniform { rps: f64 },
     /// Poisson arrivals (exponential inter-arrival) at mean `rps`.
     OpenPoisson { rps: f64 },
+    /// On/off bursty arrivals: a Poisson process at `rps` that is only
+    /// "on" for `on_us` out of every `on_us + off_us` of wall time —
+    /// requests pile up in bursts separated by silent gaps (the queue-
+    /// depth stress the steady processes never produce).
+    OpenBursty { rps: f64, on_us: u64, off_us: u64 },
     /// `clients` concurrent closed-loop callers with fixed think time.
     Closed { clients: usize, think_us: u64 },
 }
@@ -48,6 +60,50 @@ pub struct LoadSpec {
     pub process: Process,
     /// Per-model mix weights (empty = uniform across registered models).
     pub mix: Vec<f64>,
+    /// Fraction of requests in the `interactive` SLO class (the rest are
+    /// `batch`). 1.0 — the default — reproduces the pre-class behavior
+    /// bit-exactly (no extra rng draw is consumed at the extremes).
+    pub interactive_frac: f64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            requests: 0,
+            process: Process::Closed { clients: 1, think_us: 0 },
+            mix: vec![],
+            interactive_frac: 1.0,
+        }
+    }
+}
+
+/// Zipf-skewed popularity weights over `n_models` (rank r gets r^-s):
+/// the standing "few hot models, long cold tail" serving mix. `s = 0`
+/// is uniform; larger `s` is more skewed.
+pub fn zipf_mix(n_models: usize, s: f64) -> Vec<f64> {
+    (1..=n_models.max(1)).map(|r| (r as f64).powf(-s)).collect()
+}
+
+/// Draw an SLO class from `interactive_frac`. The extremes skip the rng
+/// draw entirely so frac=1.0 (the default) leaves legacy seeded streams
+/// untouched.
+pub(crate) fn sample_class(rng: &mut Rng, interactive_frac: f64) -> SloClass {
+    if interactive_frac >= 1.0 {
+        SloClass::Interactive
+    } else if interactive_frac <= 0.0 {
+        SloClass::Batch
+    } else if rng.uniform() < interactive_frac {
+        SloClass::Interactive
+    } else {
+        SloClass::Batch
+    }
+}
+
+pub(crate) fn check_frac(f: f64) -> Result<()> {
+    if !(0.0..=1.0).contains(&f) {
+        bail!("interactive_frac must be in [0, 1], got {f}");
+    }
+    Ok(())
 }
 
 impl LoadSpec {
@@ -90,6 +146,7 @@ pub struct Arrival {
     pub t_us: u64,
     pub model: usize,
     pub seed: u64,
+    pub class: SloClass,
 }
 
 /// A replayable arrival schedule. Replaying a trace through
@@ -112,6 +169,7 @@ impl Trace {
                             ("t_us", Json::Num(a.t_us as f64)),
                             ("model", Json::Num(a.model as f64)),
                             ("seed", Json::Num(a.seed as f64)),
+                            ("class", Json::Num(a.class.index() as f64)),
                         ])
                     })
                     .collect(),
@@ -129,6 +187,12 @@ impl Trace {
                 // only below that, so traces store seeds already folded
                 // into the f64-exact range (see `gen_trace`).
                 seed: aj.req("seed")?.as_f64()? as u64,
+                // Optional for back-compat: pre-class traces replay as
+                // all-interactive, matching the scheduler they recorded.
+                class: match aj.get("class") {
+                    Some(c) => SloClass::from_index(c.as_usize()?),
+                    None => SloClass::Interactive,
+                },
             });
         }
         Ok(Trace { arrivals })
@@ -153,6 +217,7 @@ pub(crate) fn json_safe_seed(rng: &mut Rng) -> u64 {
 /// depend on completions and are generated inside [`run_loadtest`].
 pub fn gen_trace(spec: &LoadSpec, n_models: usize, seed: u64) -> Result<Trace> {
     let cum = spec.cumulative_mix(n_models)?;
+    check_frac(spec.interactive_frac)?;
     let mut rng = Rng::new(seed);
     let mut t = 0.0f64;
     let mut arrivals = Vec::with_capacity(spec.requests);
@@ -176,6 +241,32 @@ pub fn gen_trace(spec: &LoadSpec, n_models: usize, seed: u64) -> Result<Trace> {
                     t_us: t as u64,
                     model: pick_model(&mut rng, &cum),
                     seed: json_safe_seed(&mut rng),
+                    class: sample_class(&mut rng, spec.interactive_frac),
+                });
+            }
+        }
+        Process::OpenBursty { rps, on_us, off_us } => {
+            if !(rps > 0.0) || !rps.is_finite() {
+                bail!("bursty rps must be finite and positive, got {rps}");
+            }
+            if on_us == 0 {
+                bail!("bursty on_us must be >= 1");
+            }
+            // Generate a plain Poisson stream in "active" time, then map
+            // each active instant into wall time by inserting an `off_us`
+            // silence after every `on_us` of activity. The stream stays a
+            // pure function of the seed, and the on/off shape is exact:
+            // every wall-clock arrival satisfies
+            // `t % (on_us + off_us) < on_us`.
+            for _ in 0..spec.requests {
+                t += -(rng.uniform().max(1e-12)).ln() / rps * 1e6;
+                let ta = t as u64;
+                let t_abs = (ta / on_us) * (on_us + off_us) + (ta % on_us);
+                arrivals.push(Arrival {
+                    t_us: t_abs,
+                    model: pick_model(&mut rng, &cum),
+                    seed: json_safe_seed(&mut rng),
+                    class: sample_class(&mut rng, spec.interactive_frac),
                 });
             }
         }
@@ -195,9 +286,10 @@ pub struct LoadtestOutcome {
     pub trace: Trace,
 }
 
-/// Heap entry: (t_us, seq, model, seed, client) — `seq` makes same-time
-/// arrivals pop in issue order, keeping the simulation deterministic.
-type HeapEntry = std::cmp::Reverse<(u64, u64, usize, u64, usize)>;
+/// Heap entry: (t_us, seq, model, seed, client, class-index) — `seq`
+/// makes same-time arrivals pop in issue order, keeping the simulation
+/// deterministic.
+type HeapEntry = std::cmp::Reverse<(u64, u64, usize, u64, usize, usize)>;
 
 /// Run a workload against a service in virtual time (see module docs).
 pub fn run_loadtest(svc: &Service, spec: &LoadSpec, seed: u64) -> Result<LoadtestOutcome> {
@@ -207,9 +299,19 @@ pub fn run_loadtest(svc: &Service, spec: &LoadSpec, seed: u64) -> Result<Loadtes
                 bail!("closed-loop load needs at least one client");
             }
             let cum = spec.cumulative_mix(svc.models.len())?;
+            check_frac(spec.interactive_frac)?;
             let mut master = Rng::new(seed);
             let rngs: Vec<Rng> = (0..clients).map(|c| master.fork(c as u64)).collect();
-            simulate(svc, Source::Closed { rngs, cum, think_us, budget: spec.requests })
+            simulate(
+                svc,
+                Source::Closed {
+                    rngs,
+                    cum,
+                    think_us,
+                    budget: spec.requests,
+                    frac: spec.interactive_frac,
+                },
+            )
         }
         _ => replay_trace(svc, &gen_trace(spec, svc.models.len(), seed)?),
     }
@@ -233,6 +335,7 @@ enum Source {
         cum: Vec<f64>,
         think_us: u64,
         budget: usize,
+        frac: f64,
     },
 }
 
@@ -240,10 +343,11 @@ const OPEN_CLIENT: usize = usize::MAX;
 
 fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
     let cfg = svc.cfg;
+    let shards = cfg.shards.max(1);
     let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
     let mut seq = 0u64;
-    let push = |heap: &mut BinaryHeap<HeapEntry>, seq: &mut u64, t, model, s, client| {
-        heap.push(std::cmp::Reverse((t, *seq, model, s, client)));
+    let push = |heap: &mut BinaryHeap<HeapEntry>, seq: &mut u64, t, model, s, client, class: SloClass| {
+        heap.push(std::cmp::Reverse((t, *seq, model, s, client, class.index())));
         *seq += 1;
     };
 
@@ -253,28 +357,32 @@ fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
     match &mut source {
         Source::Replay(trace) => {
             for a in &trace.arrivals {
-                push(&mut heap, &mut seq, a.t_us, a.model, a.seed, OPEN_CLIENT);
+                push(&mut heap, &mut seq, a.t_us, a.model, a.seed, OPEN_CLIENT, a.class);
             }
         }
-        Source::Closed { rngs, cum, budget, .. } => {
+        Source::Closed { rngs, cum, budget, frac, .. } => {
             issued_budget = *budget;
             let n = rngs.len().min(issued_budget);
             for (c, rng) in rngs.iter_mut().enumerate().take(n) {
                 let model = pick_model(rng, cum);
                 let s = json_safe_seed(rng);
+                let class = sample_class(rng, *frac);
                 // Stagger starts by 1µs so client order is explicit.
-                push(&mut heap, &mut seq, c as u64, model, s, c);
+                push(&mut heap, &mut seq, c as u64, model, s, c, class);
             }
             issued_budget -= n;
         }
     }
 
-    let mut queue = BatchQueue::new(svc.models.len(), cfg.queue_cap);
-    let mut metrics = ServeMetrics::new(&svc.models);
+    let mut queue = ClassedQueue::new(svc.models.len(), &cfg);
+    let mut adaptive = AdaptiveBatcher::new(svc.models.len(), cfg.batch_max);
+    let mut metrics = ServeMetrics::new(&svc.models, shards);
     let mut responses: Vec<Response> = Vec::new();
     let mut batches: Vec<BatchRecord> = Vec::new();
     let mut trace_out = Trace::default();
-    let mut inflight: Option<(Vec<Response>, BatchRecord)> = None;
+    // One virtual executor slot per shard; a slot holds the batch it is
+    // executing until virtual time reaches its done_us.
+    let mut inflight: Vec<Option<(Vec<Response>, BatchRecord)>> = (0..shards).map(|_| None).collect();
     let mut next_id = 0u64;
     let mut now = 0u64;
 
@@ -291,17 +399,36 @@ fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
         if fuel > max_fuel {
             bail!("loadtest event loop exceeded {max_fuel} events — scheduler bug");
         }
-        // 1. Deliver a finished batch.
-        if inflight.as_ref().is_some_and(|(_, rec)| rec.done_us <= now) {
-            let (resps, rec) = inflight.take().unwrap();
+        // 1. Deliver finished batches, earliest done_us first (ties:
+        // lower shard index) — the deterministic analogue of "whichever
+        // executor thread finishes first".
+        loop {
+            let due = inflight
+                .iter()
+                .enumerate()
+                .filter_map(|(si, s)| s.as_ref().map(|(_, rec)| (rec.done_us, si)))
+                .filter(|&(d, _)| d <= now)
+                .min();
+            let Some((_, si)) = due else { break };
+            let (resps, rec) = inflight[si].take().unwrap();
+            if cfg.adaptive {
+                let worst = resps.iter().map(|r| r.latency_us()).max().unwrap_or(0);
+                adaptive.on_batch_done(
+                    rec.model,
+                    worst,
+                    rec.ids.len(),
+                    cfg.slo_us[rec.class.index()],
+                );
+            }
             for r in &resps {
-                metrics.on_response(r);
-                if let Source::Closed { rngs, cum, think_us, .. } = &mut source {
+                metrics.on_response(r, si);
+                if let Source::Closed { rngs, cum, think_us, frac, .. } = &mut source {
                     if issued_budget > 0 && r.client != OPEN_CLIENT {
                         let rng = &mut rngs[r.client];
                         let model = pick_model(rng, cum);
                         let s = json_safe_seed(rng);
-                        push(&mut heap, &mut seq, r.done_us + *think_us, model, s, r.client);
+                        let class = sample_class(rng, *frac);
+                        push(&mut heap, &mut seq, r.done_us + *think_us, model, s, r.client, class);
                         issued_budget -= 1;
                     }
                 }
@@ -313,23 +440,24 @@ fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
 
         // 2. Ingest arrivals due now.
         while heap.peek().is_some_and(|e| e.0 .0 <= now) {
-            let (t, _, model, rseed, client) = heap.pop().unwrap().0;
-            trace_out.arrivals.push(Arrival { t_us: t, model, seed: rseed });
-            let req = Request { id: next_id, model, client, arrival_us: t, seed: rseed };
+            let (t, _, model, rseed, client, ci) = heap.pop().unwrap().0;
+            let class = SloClass::from_index(ci);
+            trace_out.arrivals.push(Arrival { t_us: t, model, seed: rseed, class });
+            let req = Request { id: next_id, model, client, arrival_us: t, seed: rseed, class };
             match queue.submit(req) {
                 Ok(()) => {
                     metrics.on_admit();
                     next_id += 1;
                 }
-                Err(Rejected::QueueFull { .. }) => {
-                    metrics.on_reject(model);
+                Err(Rejected::QueueFull { .. }) | Err(Rejected::ClassFull { .. }) => {
+                    metrics.on_reject(model, class);
                     if matches!(source, Source::Closed { .. }) {
                         // A closed-loop client retries after a backoff so
                         // its request stream eventually completes; the
                         // retry is a real extra event, so grow the fuel
                         // budget with it (see max_fuel above).
                         let backoff = cfg.deadline_us.max(1);
-                        push(&mut heap, &mut seq, now + backoff, model, rseed, client);
+                        push(&mut heap, &mut seq, now + backoff, model, rseed, client, class);
                         max_fuel = max_fuel.saturating_add(64);
                     }
                 }
@@ -339,21 +467,33 @@ fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
             }
         }
 
-        // 3. Dispatch if the executor is idle and a batch is ready.
-        if inflight.is_none() {
-            if let Some((m, reqs)) = queue.pop_ready(now, cfg.batch_max, cfg.deadline_us) {
-                inflight = Some(svc.execute_batch(m, &reqs, now)?);
-                continue;
-            }
+        // 3. Dispatch ready batches onto idle shards. Placement prefers
+        // the model's home shard (model % shards — keeps a model's
+        // executable cache hot on its shard), stealing the lowest idle
+        // shard when home is busy.
+        loop {
+            let Some(fallback) = inflight.iter().position(|s| s.is_none()) else { break };
+            let targets = if cfg.adaptive { Some(adaptive.targets().to_vec()) } else { None };
+            let Some((m, _class, reqs)) =
+                queue.pop_ready(now, cfg.batch_max, cfg.deadline_us, targets.as_deref())
+            else {
+                break;
+            };
+            let home = m % shards;
+            let si = if inflight[home].is_none() { home } else { fallback };
+            let (resps, mut rec) = svc.execute_batch(m, &reqs, now)?;
+            rec.shard = si;
+            inflight[si] = Some((resps, rec));
         }
 
         // 4. Advance virtual time to the next event.
-        let mut next: Option<u64> = inflight.as_ref().map(|(_, rec)| rec.done_us);
+        let mut next: Option<u64> =
+            inflight.iter().flatten().map(|(_, rec)| rec.done_us).min();
         if let Some(e) = heap.peek() {
             let t = e.0 .0;
             next = Some(next.map_or(t, |n| n.min(t)));
         }
-        if inflight.is_none() && queue.total() > 0 {
+        if inflight.iter().any(|s| s.is_none()) && queue.total() > 0 {
             if let Some(d) = queue.next_deadline(cfg.deadline_us) {
                 next = Some(next.map_or(d, |n| n.min(d)));
             }
@@ -383,7 +523,7 @@ mod tests {
         let spec = LoadSpec {
             requests: 10,
             process: Process::OpenUniform { rps: 1000.0 },
-            mix: vec![],
+            ..LoadSpec::default()
         };
         let t = gen_trace(&spec, 2, 7).unwrap();
         assert_eq!(t.arrivals.len(), 10);
@@ -398,7 +538,7 @@ mod tests {
         let spec = LoadSpec {
             requests: 200,
             process: Process::OpenPoisson { rps: 5000.0 },
-            mix: vec![],
+            ..LoadSpec::default()
         };
         let a = gen_trace(&spec, 1, 11).unwrap();
         let b = gen_trace(&spec, 1, 11).unwrap();
@@ -414,6 +554,7 @@ mod tests {
             requests: 1,
             process: Process::OpenUniform { rps: 1.0 },
             mix: vec![1.0],
+            ..LoadSpec::default()
         };
         assert!(gen_trace(&bad, 2, 0).is_err());
         let zero = LoadSpec { mix: vec![0.0, 0.0], ..bad.clone() };
@@ -423,6 +564,7 @@ mod tests {
             requests: 2000,
             process: Process::OpenUniform { rps: 1.0 },
             mix: vec![9.0, 1.0],
+            ..LoadSpec::default()
         };
         let t = gen_trace(&spec, 2, 5).unwrap();
         let m0 = t.arrivals.iter().filter(|a| a.model == 0).count();
@@ -433,8 +575,8 @@ mod tests {
     fn trace_json_roundtrip() {
         let t = Trace {
             arrivals: vec![
-                Arrival { t_us: 5, model: 1, seed: 42 },
-                Arrival { t_us: 9, model: 0, seed: (1u64 << 53) - 1 },
+                Arrival { t_us: 5, model: 1, seed: 42, class: SloClass::Interactive },
+                Arrival { t_us: 9, model: 0, seed: (1u64 << 53) - 1, class: SloClass::Batch },
             ],
         };
         let back = Trace::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
@@ -446,8 +588,77 @@ mod tests {
         let spec = LoadSpec {
             requests: 1,
             process: Process::Closed { clients: 1, think_us: 0 },
-            mix: vec![],
+            ..LoadSpec::default()
         };
         assert!(gen_trace(&spec, 1, 0).is_err());
+    }
+
+    #[test]
+    fn bursty_trace_is_seeded_and_on_off_shaped() {
+        let spec = LoadSpec {
+            requests: 300,
+            process: Process::OpenBursty { rps: 10_000.0, on_us: 2_000, off_us: 20_000 },
+            ..LoadSpec::default()
+        };
+        let a = gen_trace(&spec, 1, 21).unwrap();
+        let b = gen_trace(&spec, 1, 21).unwrap();
+        assert_eq!(a, b, "bursty trace must be a pure function of the seed");
+        assert_ne!(a, gen_trace(&spec, 1, 22).unwrap());
+        assert!(a.arrivals.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        // Exact duty-cycle shape: every arrival lands inside an on-window.
+        for arr in &a.arrivals {
+            assert!(arr.t_us % 22_000 < 2_000, "arrival at {} outside on-window", arr.t_us);
+        }
+        // At 10k rps a 2ms window holds ~20 arrivals: 300 requests must
+        // span multiple bursts, i.e. the off-gaps really appear.
+        let cycles: std::collections::BTreeSet<u64> =
+            a.arrivals.iter().map(|x| x.t_us / 22_000).collect();
+        assert!(cycles.len() > 1, "expected multiple bursts, got {}", cycles.len());
+        // Validation: a zero on-window or bad rps is refused.
+        let bad = LoadSpec {
+            process: Process::OpenBursty { rps: 100.0, on_us: 0, off_us: 10 },
+            ..spec.clone()
+        };
+        assert!(gen_trace(&bad, 1, 0).is_err());
+    }
+
+    #[test]
+    fn zipf_mix_is_skewed_and_serves() {
+        assert_eq!(zipf_mix(3, 0.0), vec![1.0, 1.0, 1.0]);
+        let w = zipf_mix(2, 2.0);
+        assert_eq!(w, vec![1.0, 0.25]);
+        let spec = LoadSpec {
+            requests: 2000,
+            process: Process::OpenUniform { rps: 1000.0 },
+            mix: w,
+            ..LoadSpec::default()
+        };
+        let t = gen_trace(&spec, 2, 13).unwrap();
+        let m0 = t.arrivals.iter().filter(|a| a.model == 0).count();
+        // p(model 0) = 1.0/1.25 = 0.8 ± sampling noise.
+        assert!((1400..1900).contains(&m0), "zipf skew off: {m0}/2000");
+    }
+
+    #[test]
+    fn interactive_frac_splits_classes_and_roundtrips() {
+        let spec = LoadSpec {
+            requests: 400,
+            process: Process::OpenUniform { rps: 1000.0 },
+            interactive_frac: 0.25,
+            ..LoadSpec::default()
+        };
+        let t = gen_trace(&spec, 1, 3).unwrap();
+        let inter = t.arrivals.iter().filter(|a| a.class == SloClass::Interactive).count();
+        assert!((50..170).contains(&inter), "frac 0.25 of 400 gave {inter} interactive");
+        // Classes survive the JSON round trip.
+        let back = Trace::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, t);
+        // A legacy row without a class column decodes as interactive.
+        let legacy = Json::parse(r#"{"arrivals":[{"t_us":7,"model":0,"seed":1}]}"#).unwrap();
+        let lt = Trace::from_json(&legacy).unwrap();
+        assert_eq!(lt.arrivals[0].class, SloClass::Interactive);
+        // An out-of-range fraction is refused.
+        let bad = LoadSpec { interactive_frac: 1.5, ..spec };
+        assert!(gen_trace(&bad, 1, 0).is_err());
     }
 }

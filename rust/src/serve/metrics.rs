@@ -12,7 +12,7 @@
 //! the loadtest determinism tests and the ci.sh replay `cmp`.
 
 use super::model::ServedModel;
-use super::service::{BatchRecord, Response};
+use super::service::{BatchRecord, Response, SloClass};
 use crate::util::json::Json;
 
 /// Sub-bucket resolution: 2^4 buckets per octave → ≤ 1/16 relative error.
@@ -134,6 +134,22 @@ impl LatencyHistogram {
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
+
+    /// Fold any number of histograms into a fresh one — the fleet-wide
+    /// readout over per-shard histograms, no re-sorting of raw samples
+    /// (bucket counts add exactly, so merged percentiles carry the same
+    /// 1/16 error bound as single-histogram ones; pinned against the
+    /// sorted oracle in the unit tests).
+    pub fn merged<'a, I>(parts: I) -> LatencyHistogram
+    where
+        I: IntoIterator<Item = &'a LatencyHistogram>,
+    {
+        let mut out = LatencyHistogram::default();
+        for h in parts {
+            out.merge(h);
+        }
+        out
+    }
 }
 
 /// Per-model serving counters + the accelerator-cost join.
@@ -177,8 +193,30 @@ impl ModelMetrics {
     }
 }
 
+/// Per-shard executor counters: how much work each fleet member carried
+/// and its latency view (merged into the fleet-wide readout by
+/// [`ServeMetrics::global`]).
+#[derive(Clone, Debug, Default)]
+pub struct ShardMetrics {
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Total virtual/wall time this shard spent executing batches.
+    pub busy_us: u64,
+    pub hist: LatencyHistogram,
+}
+
+/// Per-SLO-class admission and latency accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ClassMetrics {
+    pub completed: u64,
+    pub rejected: u64,
+    pub hist: LatencyHistogram,
+}
+
 /// Whole-service metrics: admission accounting, batching shape, latency
-/// distribution, and the per-model breakdown.
+/// distribution, and the per-model / per-shard / per-class breakdowns.
+/// The fleet-wide latency histogram is not stored — it is the fold of
+/// the per-shard histograms ([`ServeMetrics::global`]).
 #[derive(Clone, Debug)]
 pub struct ServeMetrics {
     /// Submission attempts (admitted + rejected).
@@ -190,12 +228,13 @@ pub struct ServeMetrics {
     pub batched_requests: u64,
     /// Virtual (or wall) time of the last completed batch.
     pub span_us: u64,
-    pub global: LatencyHistogram,
     pub per_model: Vec<ModelMetrics>,
+    pub per_shard: Vec<ShardMetrics>,
+    pub per_class: [ClassMetrics; SloClass::COUNT],
 }
 
 impl ServeMetrics {
-    pub fn new(models: &[ServedModel]) -> ServeMetrics {
+    pub fn new(models: &[ServedModel], shards: usize) -> ServeMetrics {
         ServeMetrics {
             issued: 0,
             admitted: 0,
@@ -204,7 +243,6 @@ impl ServeMetrics {
             batches: 0,
             batched_requests: 0,
             span_us: 0,
-            global: LatencyHistogram::default(),
             per_model: models
                 .iter()
                 .map(|m| ModelMetrics {
@@ -217,13 +255,22 @@ impl ServeMetrics {
                     mapper_feasible: m.cost.mapper_feasible,
                 })
                 .collect(),
+            per_shard: (0..shards.max(1)).map(|_| ShardMetrics::default()).collect(),
+            per_class: Default::default(),
         }
     }
 
-    pub fn on_response(&mut self, r: &Response) {
+    /// Fleet-wide latency histogram: the merge of every shard's.
+    pub fn global(&self) -> LatencyHistogram {
+        LatencyHistogram::merged(self.per_shard.iter().map(|s| &s.hist))
+    }
+
+    pub fn on_response(&mut self, r: &Response, shard: usize) {
         let lat = r.latency_us();
         self.completed += 1;
-        self.global.record(lat);
+        self.per_shard[shard].hist.record(lat);
+        self.per_class[r.class.index()].completed += 1;
+        self.per_class[r.class.index()].hist.record(lat);
         self.per_model[r.model].completed += 1;
         self.per_model[r.model].hist.record(lat);
         self.span_us = self.span_us.max(r.done_us);
@@ -233,13 +280,19 @@ impl ServeMetrics {
         self.batches += 1;
         self.batched_requests += rec.ids.len() as u64;
         self.span_us = self.span_us.max(rec.done_us);
+        if let Some(sh) = self.per_shard.get_mut(rec.shard) {
+            sh.batches += 1;
+            sh.batched_requests += rec.ids.len() as u64;
+            sh.busy_us += rec.done_us.saturating_sub(rec.start_us);
+        }
     }
 
     /// Tolerates an out-of-range model (an `UnknownModel` rejection has
     /// no per-model row to charge) — the global counters still move.
-    pub fn on_reject(&mut self, model: usize) {
+    pub fn on_reject(&mut self, model: usize, class: SloClass) {
         self.issued += 1;
         self.rejected += 1;
+        self.per_class[class.index()].rejected += 1;
         if let Some(pm) = self.per_model.get_mut(model) {
             pm.rejected += 1;
         }
@@ -268,7 +321,18 @@ impl ServeMetrics {
         }
     }
 
+    /// Fraction of the run span shard `i` spent executing (0 when the
+    /// span is empty; can exceed 1.0 only if accounting is broken, which
+    /// the fleet tests would catch).
+    pub fn shard_occupancy(&self, i: usize) -> f64 {
+        match self.per_shard.get(i) {
+            Some(sh) if self.span_us > 0 => sh.busy_us as f64 / self.span_us as f64,
+            _ => 0.0,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
+        let g = self.global();
         Json::obj(vec![
             ("issued", Json::Num(self.issued as f64)),
             ("admitted", Json::Num(self.admitted as f64)),
@@ -278,12 +342,50 @@ impl ServeMetrics {
             ("batch_occupancy", Json::Num(self.batch_occupancy())),
             ("span_us", Json::Num(self.span_us as f64)),
             ("throughput_rps", Json::Num(self.throughput_rps())),
-            ("p50_us", Json::Num(self.global.percentile(0.50) as f64)),
-            ("p95_us", Json::Num(self.global.percentile(0.95) as f64)),
-            ("p99_us", Json::Num(self.global.percentile(0.99) as f64)),
-            ("min_us", Json::Num(self.global.min_us() as f64)),
-            ("max_us", Json::Num(self.global.max_us() as f64)),
-            ("mean_us", Json::Num(self.global.mean_us())),
+            ("p50_us", Json::Num(g.percentile(0.50) as f64)),
+            ("p95_us", Json::Num(g.percentile(0.95) as f64)),
+            ("p99_us", Json::Num(g.percentile(0.99) as f64)),
+            ("min_us", Json::Num(g.min_us() as f64)),
+            ("max_us", Json::Num(g.max_us() as f64)),
+            ("mean_us", Json::Num(g.mean_us())),
+            (
+                "shards",
+                Json::Arr(
+                    self.per_shard
+                        .iter()
+                        .enumerate()
+                        .map(|(i, sh)| {
+                            Json::obj(vec![
+                                ("shard", Json::Num(i as f64)),
+                                ("batches", Json::Num(sh.batches as f64)),
+                                ("batched_requests", Json::Num(sh.batched_requests as f64)),
+                                ("busy_us", Json::Num(sh.busy_us as f64)),
+                                ("occupancy", Json::Num(self.shard_occupancy(i))),
+                                ("p99_us", Json::Num(sh.hist.percentile(0.99) as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "classes",
+                Json::Arr(
+                    SloClass::ALL
+                        .iter()
+                        .map(|&c| {
+                            let cm = &self.per_class[c.index()];
+                            Json::obj(vec![
+                                ("class", Json::Str(c.name().to_string())),
+                                ("completed", Json::Num(cm.completed as f64)),
+                                ("rejected", Json::Num(cm.rejected as f64)),
+                                ("p50_us", Json::Num(cm.hist.percentile(0.50) as f64)),
+                                ("p95_us", Json::Num(cm.hist.percentile(0.95) as f64)),
+                                ("p99_us", Json::Num(cm.hist.percentile(0.99) as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "models",
                 Json::Arr(self.per_model.iter().map(|m| m.to_json()).collect()),
@@ -312,6 +414,33 @@ impl ServeMetrics {
             );
         }
         println!("{}", "-".repeat(94));
+        if self.per_shard.len() > 1 {
+            for (i, sh) in self.per_shard.iter().enumerate() {
+                println!(
+                    "shard {:<3} {:>6} batches {:>8} reqs  occupancy {:>6.3}  p99={}us",
+                    i,
+                    sh.batches,
+                    sh.batched_requests,
+                    self.shard_occupancy(i),
+                    sh.hist.percentile(0.99),
+                );
+            }
+        }
+        for c in SloClass::ALL {
+            let cm = &self.per_class[c.index()];
+            if cm.completed + cm.rejected > 0 {
+                println!(
+                    "class {:<12} {:>7} done {:>7} rejected  p50={}us p95={}us p99={}us",
+                    c.name(),
+                    cm.completed,
+                    cm.rejected,
+                    cm.hist.percentile(0.50),
+                    cm.hist.percentile(0.95),
+                    cm.hist.percentile(0.99),
+                );
+            }
+        }
+        let g = self.global();
         println!(
             "TOTAL: {}/{} completed ({} rejected) | {} batches, occupancy {:.2} | \
              {:.1} req/s over {:.3}s | p50={}us p95={}us p99={}us",
@@ -322,9 +451,9 @@ impl ServeMetrics {
             self.batch_occupancy(),
             self.throughput_rps(),
             self.span_us as f64 / 1e6,
-            self.global.percentile(0.50),
-            self.global.percentile(0.95),
-            self.global.percentile(0.99),
+            g.percentile(0.50),
+            g.percentile(0.95),
+            g.percentile(0.99),
         );
     }
 }
@@ -428,5 +557,34 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a, all);
+    }
+
+    #[test]
+    fn merged_shard_histograms_match_sorted_oracle() {
+        // The satellite pin: per-shard histograms folded by `merged`
+        // report fleet-wide percentiles within the single-histogram
+        // error bound of the true (sorted) order statistics.
+        let mut rng = Rng::new(99);
+        let mut shards: Vec<LatencyHistogram> =
+            (0..4).map(|_| LatencyHistogram::default()).collect();
+        let mut vals: Vec<u64> =
+            (0..12_000).map(|_| (rng.uniform() * 300_000.0) as u64 + 1).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            shards[i % 4].record(v); // round-robin across the fleet
+        }
+        let merged = LatencyHistogram::merged(shards.iter());
+        vals.sort_unstable();
+        assert_eq!(merged.count(), 12_000);
+        for p in [0.50, 0.95, 0.99] {
+            let exact = oracle(&vals, p);
+            let est = merged.percentile(p);
+            assert!(est >= exact, "p={p}: merged {est} < exact {exact}");
+            assert!(
+                est as f64 <= exact as f64 * (1.0 + 1.0 / 16.0) + 1.0,
+                "p={p}: merged {est} too far above exact {exact}"
+            );
+        }
+        assert_eq!(merged.percentile(1.0), *vals.last().unwrap());
+        assert_eq!(merged.min_us(), vals[0]);
     }
 }

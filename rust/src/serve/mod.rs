@@ -8,25 +8,37 @@
 //! accelerator cost joined from `mapper::auto_map`), and a [`Service`]
 //! coalesces incoming requests into batches under a
 //! `batch_max`/`deadline_us` policy with bounded-queue admission control
-//! (typed [`Rejected::QueueFull`] backpressure).
+//! (typed [`Rejected::QueueFull`] / [`Rejected::ClassFull`]
+//! backpressure). Scheduling is a **sharded executor fleet**: up to
+//! `ServeConfig::shards` batches execute concurrently, requests carry an
+//! [`SloClass`] (`interactive` drains strictly before `batch`, each
+//! class with its own admission cap), and `--adaptive` swaps the static
+//! full-batch-first rule for the [`AdaptiveBatcher`]'s per-model AIMD
+//! target sized against the class `slo_us`.
 //!
-//! Two execution modes share that core:
+//! Two execution modes share that core — every policy is priced in
+//! virtual time first and only then adopted by the wall-clock path:
 //!
 //! * **Virtual time** (`loadgen::run_loadtest`, CLI `nasa loadtest`) — a
 //!   discrete-event simulation driven by seeded open-/closed-loop
-//!   arrival processes; batches really execute through the engine while
-//!   time advances by the mapper-priced service model, so batch
-//!   composition, per-request latencies, and the metrics JSON are
-//!   bit-identical across runs (and across `--trace` replays).
-//! * **Wall clock** (`live::LiveService`, CLI `nasa serve`) — a
-//!   long-lived `util::par::Worker` batcher thread serving concurrent
+//!   arrival processes (uniform/Poisson/bursty, [`zipf_mix`] skew);
+//!   batches really execute through the engine while time advances by
+//!   the mapper-priced service model across N simulated shards, so batch
+//!   composition, shard placement, per-request latencies, and the
+//!   metrics JSON are bit-identical across runs (and across `--trace`
+//!   replays).
+//! * **Wall clock** (`live::LiveService`, CLI `nasa serve`) — a fleet of
+//!   long-lived `util::par::Worker` batcher threads (one per shard,
+//!   drawing on the global `util::par` thread budget) serving concurrent
 //!   callers over mpsc channels, recording a replayable arrival trace.
 //!
-//! `serve::metrics` streams p50/p95/p99 latency (HDR-style histogram),
-//! throughput, batch occupancy, and per-model energy/EDP estimates.
-//! Module map: [`model`] (served models + mapper cost join), [`service`]
-//! (queue/batcher/execution core), [`loadgen`] (arrival processes +
-//! virtual-time engine), [`live`] (threaded shell), [`metrics`].
+//! `serve::metrics` streams p50/p95/p99 latency (HDR-style mergeable
+//! histograms — per-shard histograms fold into the fleet readout),
+//! throughput, batch and per-shard occupancy, per-class latency, and
+//! per-model energy/EDP estimates. Module map: [`model`] (served models
+//! + mapper cost join), [`service`] (queues/batcher/execution core),
+//! [`loadgen`] (arrival processes + virtual-time engine), [`live`]
+//! (threaded fleet shell), [`metrics`].
 
 pub mod live;
 pub mod loadgen;
@@ -35,7 +47,13 @@ pub mod model;
 pub mod service;
 
 pub use live::{drive_closed_loop, LiveService};
-pub use loadgen::{gen_trace, replay_trace, run_loadtest, Arrival, LoadSpec, LoadtestOutcome, Process, Trace};
-pub use metrics::{LatencyHistogram, ModelMetrics, ServeMetrics};
+pub use loadgen::{
+    gen_trace, replay_trace, run_loadtest, zipf_mix, Arrival, LoadSpec, LoadtestOutcome, Process,
+    Trace,
+};
+pub use metrics::{ClassMetrics, LatencyHistogram, ModelMetrics, ServeMetrics, ShardMetrics};
 pub use model::{model_cost, model_cost_with_tilings, ModelCost, ServedModel};
-pub use service::{BatchQueue, BatchRecord, Rejected, Request, Response, ServeConfig, Service};
+pub use service::{
+    AdaptiveBatcher, BatchQueue, BatchRecord, ClassedQueue, Rejected, Request, Response,
+    ServeConfig, Service, SloClass,
+};

@@ -1,18 +1,30 @@
 //! The serving core: typed requests/responses, the bounded multi-model
-//! FIFO [`BatchQueue`] with admission control, and the [`Service`] that
-//! executes coalesced batches through ONE shared `runtime::Engine`.
+//! FIFO [`BatchQueue`] and its SLO-class wrapper [`ClassedQueue`] with
+//! per-class admission control, the [`AdaptiveBatcher`] that sizes
+//! batches against a latency SLO, and the [`Service`] that executes
+//! coalesced batches through ONE shared `runtime::Engine`.
 //!
 //! Batching policy (shared by the virtual-time loadtest and the threaded
 //! live service, so both modes batch identically):
 //!
-//! 1. **Full batch first** — any model with ≥ `batch_max` queued requests
+//! 1. **Full batch first** — any model with ≥ its *target* batch queued
 //!    dispatches immediately (round-robin across models for fairness).
+//!    The target is `batch_max` under the static rule, or the
+//!    [`AdaptiveBatcher`]'s per-model AIMD target when `--adaptive` is
+//!    on: the target grows by one while dispatches finish with SLO
+//!    head-room and halves whenever a batch's worst latency misses the
+//!    class SLO — trading amortization for latency exactly when the
+//!    deadline says to.
 //! 2. **Deadline flush** — otherwise, the model whose *oldest* queued
 //!    request has waited `deadline_us` dispatches whatever it has (up to
-//!    `batch_max`).
+//!    the target).
 //! 3. **Backpressure** — a submission that would push the total queued
-//!    count past `queue_cap` is refused with the typed
-//!    [`Rejected::QueueFull`] instead of growing the queue unboundedly.
+//!    count past `queue_cap` (or its SLO class past that class's cap) is
+//!    refused with the typed [`Rejected::QueueFull`] /
+//!    [`Rejected::ClassFull`] instead of growing the queue unboundedly.
+//! 4. **Class priority** — [`ClassedQueue`] drains `interactive` before
+//!    `batch`: a ready interactive dispatch always beats a ready batch
+//!    one; batch traffic only rides idle capacity.
 //!
 //! Everything is deterministic: ties break on (arrival, model index), the
 //! round-robin cursor advances identically for identical request streams,
@@ -26,6 +38,43 @@ use anyhow::{bail, Result};
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// Service-level-objective class of a request. `Interactive` traffic is
+/// latency-sensitive and always drains first; `Batch` traffic rides the
+/// capacity interactive leaves idle and tolerates a looser SLO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    Interactive,
+    Batch,
+}
+
+impl SloClass {
+    pub const COUNT: usize = 2;
+    /// Priority order: earlier entries drain first.
+    pub const ALL: [SloClass; SloClass::COUNT] = [SloClass::Interactive, SloClass::Batch];
+
+    /// Stable index into per-class arrays (also the trace-JSON encoding).
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Batch => 1,
+        }
+    }
+
+    /// Inverse of [`SloClass::index`]; out-of-range decodes as the
+    /// highest-priority class (back-compat: traces without a class column
+    /// are all-interactive, matching the pre-class scheduler).
+    pub fn from_index(i: usize) -> SloClass {
+        *SloClass::ALL.get(i).unwrap_or(&SloClass::Interactive)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+}
 
 /// Batching/admission policy knobs (CLI: `nasa serve` / `nasa loadtest`).
 #[derive(Clone, Copy, Debug)]
@@ -42,6 +91,18 @@ pub struct ServeConfig {
     pub batch_overhead_us: u64,
     /// Serve with FXP-round-tripped weights instead of FP32.
     pub fxp: bool,
+    /// Executor-fleet width: how many batches may execute concurrently
+    /// (1 = the historical single-executor loop).
+    pub shards: usize,
+    /// Size batches with the per-model AIMD [`AdaptiveBatcher`] instead
+    /// of the static full-batch-first rule.
+    pub adaptive: bool,
+    /// Per-class p99 latency objective, indexed by [`SloClass::index`]
+    /// (drives the adaptive batcher's grow/shrink decisions).
+    pub slo_us: [u64; SloClass::COUNT],
+    /// Per-class admission caps, indexed by [`SloClass::index`]
+    /// (`usize::MAX` = only the global `queue_cap` binds).
+    pub class_caps: [usize; SloClass::COUNT],
 }
 
 impl Default for ServeConfig {
@@ -52,6 +113,10 @@ impl Default for ServeConfig {
             queue_cap: 256,
             batch_overhead_us: 50,
             fxp: false,
+            shards: 1,
+            adaptive: false,
+            slo_us: [5_000, 50_000],
+            class_caps: [usize::MAX; SloClass::COUNT],
         }
     }
 }
@@ -61,6 +126,9 @@ impl Default for ServeConfig {
 pub enum Rejected {
     /// The bounded queue is at capacity; the request was NOT enqueued.
     QueueFull { queued: usize },
+    /// The request's SLO class is at its per-class cap (the global queue
+    /// still had room); the request was NOT enqueued.
+    ClassFull { class: SloClass, queued: usize },
     /// The request named a model index that is not registered.
     UnknownModel { model: usize, n_models: usize },
     /// The service is shutting down and refuses new work.
@@ -71,6 +139,9 @@ impl std::fmt::Display for Rejected {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Rejected::QueueFull { queued } => write!(f, "queue full ({queued} queued)"),
+            Rejected::ClassFull { class, queued } => {
+                write!(f, "{} class full ({queued} queued)", class.name())
+            }
             Rejected::UnknownModel { model, n_models } => {
                 write!(f, "unknown model {model} (have {n_models})")
             }
@@ -90,6 +161,7 @@ pub struct Request {
     pub client: usize,
     pub arrival_us: u64,
     pub seed: u64,
+    pub class: SloClass,
 }
 
 impl Request {
@@ -113,6 +185,7 @@ pub struct Response {
     pub batch_size: usize,
     /// Argmax class of the served logits (first index on ties).
     pub argmax: usize,
+    pub class: SloClass,
 }
 
 impl Response {
@@ -133,6 +206,10 @@ pub struct BatchRecord {
     pub start_us: u64,
     pub done_us: u64,
     pub ids: Vec<u64>,
+    pub class: SloClass,
+    /// Executor shard that ran this batch (0 in single-executor mode;
+    /// overwritten by the scheduler that placed the batch).
+    pub shard: usize,
 }
 
 /// Bounded per-model FIFO queues with the batching policy above.
@@ -159,6 +236,10 @@ impl BatchQueue {
         self.total
     }
 
+    pub fn n_models(&self) -> usize {
+        self.queues.len()
+    }
+
     /// Admit or refuse one request. Validating the model index here (not
     /// just at the trace/CLI boundary) keeps a bad `LiveService::submit`
     /// a typed refusal instead of an index panic inside the state mutex.
@@ -182,13 +263,34 @@ impl BatchQueue {
         batch_max: usize,
         deadline_us: u64,
     ) -> Option<(usize, Vec<Request>)> {
+        self.pop_ready_with(now_us, batch_max, deadline_us, None)
+    }
+
+    /// [`BatchQueue::pop_ready`] with optional per-model target batch
+    /// sizes (the [`AdaptiveBatcher`]'s `targets()`): a model dispatches
+    /// "full" at its target, and a deadline flush takes at most the
+    /// target. `None` targets ⇒ every model's target is `batch_max` (the
+    /// static rule, bit-identical to the historical policy).
+    pub fn pop_ready_with(
+        &mut self,
+        now_us: u64,
+        batch_max: usize,
+        deadline_us: u64,
+        targets: Option<&[usize]>,
+    ) -> Option<(usize, Vec<Request>)> {
         let n = self.queues.len();
         let batch_max = batch_max.max(1);
-        // 1. Full batch, round-robin from the cursor.
+        let tgt = |m: usize| -> usize {
+            targets
+                .map(|t| t.get(m).copied().unwrap_or(batch_max).clamp(1, batch_max))
+                .unwrap_or(batch_max)
+        };
+        // 1. Full batch (at the model's target), round-robin from the cursor.
         for k in 0..n {
             let m = (self.rr + k) % n;
-            if self.queues[m].len() >= batch_max {
-                return Some((m, self.take(m, batch_max)));
+            if self.queues[m].len() >= tgt(m) {
+                let take = tgt(m);
+                return Some((m, self.take(m, take)));
             }
         }
         // 2. Oldest expired head (ties: lower model index).
@@ -203,7 +305,7 @@ impl BatchQueue {
             }
         }
         best.map(|(_, m)| {
-            let take = self.queues[m].len().min(batch_max);
+            let take = self.queues[m].len().min(tgt(m));
             (m, self.take(m, take))
         })
     }
@@ -223,6 +325,122 @@ impl BatchQueue {
             .filter_map(|q| q.front())
             .map(|h| h.arrival_us.saturating_add(deadline_us))
             .min()
+    }
+}
+
+/// SLO-class admission and priority on top of [`BatchQueue`]: one inner
+/// queue per [`SloClass`], a shared global cap, and strict-priority
+/// draining (interactive first). With all-interactive traffic and no
+/// class caps this is behaviorally identical to a bare `BatchQueue` —
+/// the property the legacy determinism tests pin.
+#[derive(Clone, Debug)]
+pub struct ClassedQueue {
+    classes: [BatchQueue; SloClass::COUNT],
+    cap_total: usize,
+}
+
+impl ClassedQueue {
+    pub fn new(n_models: usize, cfg: &ServeConfig) -> ClassedQueue {
+        ClassedQueue {
+            classes: SloClass::ALL.map(|c| {
+                BatchQueue::new(n_models, cfg.queue_cap.min(cfg.class_caps[c.index()]).max(1))
+            }),
+            cap_total: cfg.queue_cap.max(1),
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.classes.iter().map(|q| q.total()).sum()
+    }
+
+    /// Admit or refuse one request: model validity, then the global cap
+    /// ([`Rejected::QueueFull`]), then the class cap
+    /// ([`Rejected::ClassFull`]).
+    pub fn submit(&mut self, req: Request) -> Result<(), Rejected> {
+        let class = req.class;
+        if req.model >= self.classes[0].n_models() {
+            return Err(Rejected::UnknownModel {
+                model: req.model,
+                n_models: self.classes[0].n_models(),
+            });
+        }
+        if self.total() >= self.cap_total {
+            return Err(Rejected::QueueFull { queued: self.total() });
+        }
+        self.classes[class.index()].submit(req).map_err(|e| match e {
+            Rejected::QueueFull { queued } => Rejected::ClassFull { class, queued },
+            other => other,
+        })
+    }
+
+    /// Pop the next dispatchable batch, draining classes in priority
+    /// order: a ready interactive batch always beats a ready batch-class
+    /// one regardless of arrival times.
+    pub fn pop_ready(
+        &mut self,
+        now_us: u64,
+        batch_max: usize,
+        deadline_us: u64,
+        targets: Option<&[usize]>,
+    ) -> Option<(usize, SloClass, Vec<Request>)> {
+        for c in SloClass::ALL {
+            if let Some((m, reqs)) =
+                self.classes[c.index()].pop_ready_with(now_us, batch_max, deadline_us, targets)
+            {
+                return Some((m, c, reqs));
+            }
+        }
+        None
+    }
+
+    /// Earliest deadline-flush horizon across all classes.
+    pub fn next_deadline(&self, deadline_us: u64) -> Option<u64> {
+        self.classes.iter().filter_map(|q| q.next_deadline(deadline_us)).min()
+    }
+}
+
+/// Per-model AIMD batch-size controller: the target batch starts at 1
+/// (smallest latency footprint), grows **additively** (+1) after a
+/// dispatch at the full target whose worst latency — doubled, as the
+/// growth head-room guard — still fits the class SLO, and shrinks
+/// **multiplicatively** (halves) whenever a batch's worst latency misses
+/// the SLO. Decisions use only completed-batch observations, so the
+/// controller is identical in virtual and wall-clock time.
+#[derive(Clone, Debug)]
+pub struct AdaptiveBatcher {
+    targets: Vec<usize>,
+    batch_max: usize,
+}
+
+impl AdaptiveBatcher {
+    pub fn new(n_models: usize, batch_max: usize) -> AdaptiveBatcher {
+        AdaptiveBatcher { targets: vec![1; n_models], batch_max: batch_max.max(1) }
+    }
+
+    /// Current per-model targets, shaped for
+    /// [`BatchQueue::pop_ready_with`]'s `targets` argument.
+    pub fn targets(&self) -> &[usize] {
+        &self.targets
+    }
+
+    /// Feed back one completed batch: `worst_latency_us` is the max
+    /// arrival→done latency inside the batch, `batch_len` its size,
+    /// `slo_us` the SLO of the class it served.
+    pub fn on_batch_done(
+        &mut self,
+        model: usize,
+        worst_latency_us: u64,
+        batch_len: usize,
+        slo_us: u64,
+    ) {
+        let Some(t) = self.targets.get_mut(model) else { return };
+        if worst_latency_us > slo_us {
+            *t = (*t / 2).max(1);
+        } else if batch_len >= *t && worst_latency_us.saturating_mul(2) <= slo_us {
+            // Only grow off full-target dispatches (a deadline flush of a
+            // trickle says nothing about amortization head-room).
+            *t = (*t + 1).min(self.batch_max);
+        }
     }
 }
 
@@ -333,6 +551,7 @@ impl Service {
                     done_us,
                     batch_size: reqs.len(),
                     argmax,
+                    class: r.class,
                 }
             })
             .collect();
@@ -341,6 +560,8 @@ impl Service {
             start_us,
             done_us,
             ids: reqs.iter().map(|r| r.id).collect(),
+            class: reqs[0].class,
+            shard: 0,
         };
         Ok((responses, rec))
     }
@@ -351,7 +572,14 @@ mod tests {
     use super::*;
 
     fn req(id: u64, model: usize, arrival: u64) -> Request {
-        Request { id, model, client: usize::MAX, arrival_us: arrival, seed: id ^ 0xABCD }
+        Request {
+            id,
+            model,
+            client: usize::MAX,
+            arrival_us: arrival,
+            seed: id ^ 0xABCD,
+            class: SloClass::Interactive,
+        }
     }
 
     #[test]
@@ -417,6 +645,90 @@ mod tests {
         let (m2, _) = q.pop_ready(0, 2, 1000).unwrap();
         let (m3, _) = q.pop_ready(0, 2, 1000).unwrap();
         assert_eq!(vec![m1, m2, m3], vec![0, 1, 0], "fairness cursor must alternate");
+    }
+
+    fn creq(id: u64, model: usize, arrival: u64, class: SloClass) -> Request {
+        Request { class, ..req(id, model, arrival) }
+    }
+
+    #[test]
+    fn classed_queue_interactive_priority_and_caps() {
+        let cfg = ServeConfig { queue_cap: 8, class_caps: [4, 2], ..ServeConfig::default() };
+        let mut q = ClassedQueue::new(1, &cfg);
+        // Batch class fills at its cap of 2.
+        q.submit(creq(100, 0, 0, SloClass::Batch)).unwrap();
+        q.submit(creq(101, 0, 0, SloClass::Batch)).unwrap();
+        assert_eq!(
+            q.submit(creq(102, 0, 0, SloClass::Batch)),
+            Err(Rejected::ClassFull { class: SloClass::Batch, queued: 2 })
+        );
+        // Interactive still has room up to its cap of 4...
+        for i in 0..4 {
+            q.submit(creq(i, 0, 1000, SloClass::Interactive)).unwrap();
+        }
+        assert_eq!(
+            q.submit(creq(4, 0, 1000, SloClass::Interactive)),
+            Err(Rejected::ClassFull { class: SloClass::Interactive, queued: 4 })
+        );
+        assert_eq!(q.total(), 6);
+        // Both classes have expired heads (batch arrived EARLIER), yet
+        // interactive drains first: strict class priority.
+        let (m, c, reqs) = q.pop_ready(10_000, 8, 100, None).unwrap();
+        assert_eq!((m, c, reqs.len()), (0, SloClass::Interactive, 4));
+        let (_, c2, reqs2) = q.pop_ready(10_000, 8, 100, None).unwrap();
+        assert_eq!((c2, reqs2.len()), (SloClass::Batch, 2));
+        assert_eq!(q.total(), 0);
+    }
+
+    #[test]
+    fn classed_queue_global_cap_binds_across_classes() {
+        // Global queue_cap 3 < sum of (uncapped) class caps: the third
+        // admission exhausts the shared budget whatever the class mix.
+        let cfg = ServeConfig { queue_cap: 3, ..ServeConfig::default() };
+        let mut q = ClassedQueue::new(1, &cfg);
+        q.submit(creq(0, 0, 0, SloClass::Interactive)).unwrap();
+        q.submit(creq(1, 0, 0, SloClass::Batch)).unwrap();
+        q.submit(creq(2, 0, 0, SloClass::Interactive)).unwrap();
+        assert_eq!(
+            q.submit(creq(3, 0, 0, SloClass::Batch)),
+            Err(Rejected::QueueFull { queued: 3 })
+        );
+        assert_eq!(
+            q.submit(creq(4, 0, 0, SloClass::Interactive)),
+            Err(Rejected::QueueFull { queued: 3 })
+        );
+    }
+
+    #[test]
+    fn adaptive_targets_grow_with_headroom_and_shrink_on_slo_miss() {
+        let mut ab = AdaptiveBatcher::new(2, 8);
+        assert_eq!(ab.targets(), &[1, 1]);
+        let slo = 1_000;
+        // Full-target dispatches with 2x head-room grow additively.
+        ab.on_batch_done(0, 400, 1, slo);
+        assert_eq!(ab.targets()[0], 2);
+        ab.on_batch_done(0, 500, 2, slo);
+        assert_eq!(ab.targets()[0], 3);
+        // Within SLO but without 2x head-room: hold steady.
+        ab.on_batch_done(0, 900, 3, slo);
+        assert_eq!(ab.targets()[0], 3);
+        // A partial (deadline-flush) batch below target never grows.
+        ab.on_batch_done(0, 10, 1, slo);
+        assert_eq!(ab.targets()[0], 3);
+        // An SLO miss halves.
+        ab.on_batch_done(0, 1_500, 3, slo);
+        assert_eq!(ab.targets()[0], 1);
+        // Growth clamps at batch_max; shrink floors at 1.
+        for _ in 0..20 {
+            ab.on_batch_done(1, 1, 8, slo);
+        }
+        assert_eq!(ab.targets()[1], 8);
+        for _ in 0..10 {
+            ab.on_batch_done(1, slo + 1, 1, slo);
+        }
+        assert_eq!(ab.targets()[1], 1);
+        // Unknown model index is ignored, not a panic.
+        ab.on_batch_done(99, 1, 1, slo);
     }
 
     #[test]

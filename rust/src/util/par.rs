@@ -11,13 +11,135 @@
 //! [`Worker`] is the complementary *long-lived* primitive: where the maps
 //! above fan a finite work list and join at the end of the call, a
 //! `Worker` owns one background OS thread running a service loop for the
-//! lifetime of a component (the serve subsystem's batcher drains its
-//! request queue through one). Shutdown is cooperative: a shared stop
-//! flag plus a caller-supplied wake callback (so a worker parked on a
-//! condvar is nudged out of its wait), joined on `stop_and_join`/drop.
+//! lifetime of a component (the serve subsystem's executor fleet drains
+//! its request queues through a pool of them). Shutdown is cooperative: a
+//! shared stop flag plus a caller-supplied wake callback (so a worker
+//! parked on a condvar is nudged out of its wait), joined on
+//! `stop_and_join`/drop.
+//!
+//! Both primitives draw on one process-wide [`ThreadBudget`]: the serve
+//! fleet's long-lived workers and the kernels' nested `par_map` fan-outs
+//! would otherwise multiply (shards × per-kernel threads) and
+//! oversubscribe the host. A `par_map`/`par_fold` claims its desired
+//! thread count and gracefully degrades to fewer threads — down to a
+//! sequential run on the caller's thread — when the budget is tight; a
+//! `Worker` claims exactly one thread for its lifetime (minimum grant 1:
+//! a service thread cannot be refused, so size the budget to at least the
+//! fleet width). The default budget is 0 = unlimited, preserving the
+//! historical behavior until `set_thread_budget` (CLI `--threads`) says
+//! otherwise.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+
+/// A concurrency budget shared by thread-spawning primitives. `cap = 0`
+/// means unlimited. Claims are non-blocking: a claimant is granted
+/// whatever head-room remains (possibly less than it wanted, floored at
+/// its `min_grant`), and releases it when the returned [`ThreadClaim`]
+/// drops. `high_water` records the peak concurrent grant — the quantity
+/// the oversubscription regression test pins.
+pub struct ThreadBudget {
+    cap: AtomicUsize,
+    in_use: AtomicUsize,
+    high: AtomicUsize,
+}
+
+impl ThreadBudget {
+    pub const fn new() -> ThreadBudget {
+        ThreadBudget {
+            cap: AtomicUsize::new(0),
+            in_use: AtomicUsize::new(0),
+            high: AtomicUsize::new(0),
+        }
+    }
+
+    /// Set the cap (0 = unlimited). Outstanding claims are unaffected.
+    pub fn set(&self, cap: usize) {
+        self.cap.store(cap, Ordering::SeqCst);
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap.load(Ordering::SeqCst)
+    }
+
+    /// Threads currently claimed.
+    pub fn in_use(&self) -> usize {
+        self.in_use.load(Ordering::SeqCst)
+    }
+
+    /// Peak concurrent claim since the last [`ThreadBudget::reset_high_water`].
+    pub fn high_water(&self) -> usize {
+        self.high.load(Ordering::SeqCst)
+    }
+
+    pub fn reset_high_water(&self) {
+        self.high.store(self.in_use.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    /// Claim up to `want` threads, never fewer than `min_grant` (which may
+    /// overshoot an exhausted cap — reserved for long-lived service
+    /// threads that cannot be refused). Returns the RAII claim; read the
+    /// actual grant with [`ThreadClaim::granted`].
+    pub fn claim(&self, want: usize, min_grant: usize) -> ThreadClaim<'_> {
+        let want = want.max(min_grant);
+        loop {
+            let cur = self.in_use.load(Ordering::SeqCst);
+            let cap = self.cap.load(Ordering::SeqCst);
+            let grant = if cap == 0 {
+                want
+            } else {
+                cap.saturating_sub(cur).min(want).max(min_grant)
+            };
+            if self
+                .in_use
+                .compare_exchange(cur, cur + grant, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.high.fetch_max(cur + grant, Ordering::SeqCst);
+                return ThreadClaim { budget: self, n: grant };
+            }
+        }
+    }
+}
+
+impl Default for ThreadBudget {
+    fn default() -> Self {
+        ThreadBudget::new()
+    }
+}
+
+/// RAII handle for a [`ThreadBudget::claim`]; dropping it returns the
+/// granted threads to the budget.
+pub struct ThreadClaim<'a> {
+    budget: &'a ThreadBudget,
+    n: usize,
+}
+
+impl ThreadClaim<'_> {
+    pub fn granted(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for ThreadClaim<'_> {
+    fn drop(&mut self) {
+        self.budget.in_use.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+static GLOBAL_BUDGET: ThreadBudget = ThreadBudget::new();
+
+/// The process-wide budget every [`Worker`], [`par_map`], and
+/// [`par_fold`] draws on.
+pub fn thread_budget() -> &'static ThreadBudget {
+    &GLOBAL_BUDGET
+}
+
+/// Convenience setter for the global budget (CLI `--threads N`; 0 =
+/// unlimited).
+pub fn set_thread_budget(cap: usize) {
+    GLOBAL_BUDGET.set(cap);
+}
 
 /// A long-lived background worker thread with cooperative shutdown.
 ///
@@ -32,6 +154,9 @@ pub struct Worker {
     stop: Arc<AtomicBool>,
     wake: Box<dyn Fn() + Send + Sync>,
     handle: Option<std::thread::JoinHandle<()>>,
+    /// Declared last so the budget slot is released only after `Drop`
+    /// (or `stop_and_join`) has joined the thread.
+    _claim: ThreadClaim<'static>,
 }
 
 impl Worker {
@@ -48,11 +173,14 @@ impl Worker {
     {
         let stop = Arc::new(AtomicBool::new(false));
         let flag = stop.clone();
+        // min_grant 1: a long-lived service thread is never refused, it
+        // just counts against the budget for its whole lifetime.
+        let claim = thread_budget().claim(1, 1);
         let handle = std::thread::Builder::new()
             .name(name.to_string())
             .spawn(move || body(&flag))
             .expect("spawn worker thread");
-        Worker { stop, wake: Box::new(wake), handle: Some(handle) }
+        Worker { stop, wake: Box::new(wake), handle: Some(handle), _claim: claim }
     }
 
     /// Whether shutdown has been requested (for callers holding only the
@@ -115,6 +243,14 @@ where
     if n < 2 || threads < 2 {
         return items.iter().map(&f).collect();
     }
+    // Shrink to the global budget's head-room (min_grant 0): a grant
+    // below 2 degrades to a sequential map on the caller's thread, so a
+    // tight budget throttles instead of blocking.
+    let claim = thread_budget().claim(threads, 0);
+    let threads = claim.granted();
+    if threads < 2 {
+        return items.iter().map(&f).collect();
+    }
     let mut out: Vec<Option<R>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
     let out_ptr = SendPtr(out.as_mut_ptr());
@@ -158,6 +294,13 @@ where
         .unwrap_or(4)
         .min(n.max(1));
     if n < 2 || threads < 2 {
+        return items.iter().fold(init, f);
+    }
+    // Same budget discipline as par_map_jobs: shrink to the head-room,
+    // sequential fallback when fewer than 2 threads are granted.
+    let claim = thread_budget().claim(threads, 0);
+    let threads = claim.granted();
+    if threads < 2 {
         return items.iter().fold(init, f);
     }
     let chunk = n.div_ceil(threads);
@@ -224,6 +367,37 @@ mod tests {
         let items: Vec<u64> = (1..=10_000).collect();
         let total = par_fold(&items, 0u64, |a, x| a + x, |a, b| a + b);
         assert_eq!(total, 10_000 * 10_001 / 2);
+    }
+
+    #[test]
+    fn thread_budget_claims_cap_and_release() {
+        // A local instance: the GLOBAL budget is shared by every test in
+        // this binary, so the arithmetic is pinned in isolation here and
+        // the global end-to-end check lives in tests/thread_budget.rs
+        // (its own process).
+        let b = ThreadBudget::new();
+        b.set(4);
+        let c1 = b.claim(3, 0);
+        assert_eq!(c1.granted(), 3);
+        let c2 = b.claim(3, 0); // only 1 slot of head-room left
+        assert_eq!(c2.granted(), 1);
+        let c3 = b.claim(2, 0); // exhausted: zero-grant
+        assert_eq!(c3.granted(), 0);
+        let c4 = b.claim(2, 1); // min_grant forces an overshoot grant
+        assert_eq!(c4.granted(), 1);
+        assert_eq!(b.in_use(), 5);
+        assert_eq!(b.high_water(), 5);
+        drop(c4);
+        drop(c3);
+        drop(c2);
+        drop(c1);
+        assert_eq!(b.in_use(), 0);
+        assert_eq!(b.high_water(), 5); // peak survives releases...
+        b.reset_high_water();
+        assert_eq!(b.high_water(), 0); // ...until explicitly reset
+        b.set(0); // unlimited: grants pass through untouched
+        let c5 = b.claim(64, 0);
+        assert_eq!(c5.granted(), 64);
     }
 
     #[test]

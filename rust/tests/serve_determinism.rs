@@ -1,14 +1,15 @@
 //! Serve-subsystem integration tests (stub backend, no artifacts
-//! needed): bit-determinism of the virtual-time loadtest, exact
-//! backpressure accounting, trace replay equivalence, multi-model
-//! batching isolation, and a live-service smoke.
+//! needed): bit-determinism of the virtual-time loadtest — including the
+//! sharded executor fleet — exact per-class backpressure accounting,
+//! trace replay equivalence, shard-count invariance of served results,
+//! multi-model batching isolation, and a live-service smoke.
 
 #![cfg(not(feature = "pjrt"))]
 
 use nasa::model::zoo::{resnet32_adder_like, shiftaddnet_like};
 use nasa::runtime::{Backend, Engine};
 use nasa::serve::{
-    drive_closed_loop, replay_trace, run_loadtest, LoadSpec, LoadtestOutcome, Process,
+    drive_closed_loop, gen_trace, replay_trace, run_loadtest, LoadSpec, LoadtestOutcome, Process,
     ServeConfig, ServedModel, Service,
 };
 use std::path::Path;
@@ -58,6 +59,7 @@ fn open_loop_replay_is_bit_deterministic() {
         requests: 120,
         process: Process::OpenPoisson { rps: 4_000.0 },
         mix: vec![3.0, 1.0],
+        ..LoadSpec::default()
     };
     let (a, b) = run_twice(&spec, ServeConfig::default(), 7);
     // Identical batch composition (ids + boundaries), per-request
@@ -78,6 +80,7 @@ fn closed_loop_is_bit_deterministic_and_replayable() {
         requests: 100,
         process: Process::Closed { clients: 5, think_us: 30 },
         mix: vec![],
+        ..LoadSpec::default()
     };
     let cfg = ServeConfig { batch_max: 4, deadline_us: 500, ..ServeConfig::default() };
     let (a, b) = run_twice(&spec, cfg, 21);
@@ -116,6 +119,7 @@ fn backpressure_rejections_are_accounted_exactly() {
         requests: 300,
         process: Process::OpenUniform { rps: 20_000.0 },
         mix: vec![1.0, 1.0],
+        ..LoadSpec::default()
     };
     let out = run_loadtest(&two_model_service(cfg), &spec, 3).unwrap();
     let m = &out.metrics;
@@ -147,6 +151,7 @@ fn batching_policy_respects_deadline_and_occupancy() {
         requests: 20,
         process: Process::OpenUniform { rps: 50.0 }, // 20ms apart
         mix: vec![1.0, 0.0],
+        ..LoadSpec::default()
     };
     let out = run_loadtest(&two_model_service(cfg), &sparse, 1).unwrap();
     assert_eq!(out.metrics.batches, 20);
@@ -161,6 +166,7 @@ fn batching_policy_respects_deadline_and_occupancy() {
         requests: 64,
         process: Process::OpenUniform { rps: 1_000_000.0 }, // ~1µs apart
         mix: vec![1.0, 0.0],
+        ..LoadSpec::default()
     };
     let out = run_loadtest(&two_model_service(dense_cfg), &dense, 1).unwrap();
     assert_eq!(out.metrics.batches, 8, "dense traffic must coalesce to full batches");
@@ -173,6 +179,7 @@ fn multi_model_mix_serves_both_models_in_pure_batches() {
         requests: 80,
         process: Process::OpenPoisson { rps: 3_000.0 },
         mix: vec![1.0, 1.0],
+        ..LoadSpec::default()
     };
     let out = run_loadtest(&two_model_service(ServeConfig::default()), &spec, 9).unwrap();
     assert!(out.metrics.per_model[0].completed > 0);
@@ -196,6 +203,7 @@ fn fxp_service_changes_outputs_but_not_schedule() {
         requests: 60,
         process: Process::OpenUniform { rps: 2_000.0 },
         mix: vec![],
+        ..LoadSpec::default()
     };
     let fp = run_loadtest(&two_model_service(ServeConfig::default()), &spec, 4).unwrap();
     let fx = run_loadtest(
@@ -227,6 +235,7 @@ fn cpu_backend_preserves_schedule_and_queue_accounting() {
         requests: 90,
         process: Process::OpenPoisson { rps: 3_500.0 },
         mix: vec![2.0, 1.0],
+        ..LoadSpec::default()
     };
     let cfg = ServeConfig { batch_max: 4, deadline_us: 800, ..ServeConfig::default() };
     let stub = run_loadtest(&two_model_service(cfg), &spec, 13).unwrap();
@@ -258,6 +267,7 @@ fn cpu_backend_replay_is_bit_deterministic() {
         requests: 70,
         process: Process::Closed { clients: 4, think_us: 20 },
         mix: vec![1.0, 1.0],
+        ..LoadSpec::default()
     };
     let cfg = ServeConfig { batch_max: 4, deadline_us: 500, ..ServeConfig::default() };
     let a = run_loadtest(&cpu_service(cfg), &spec, 31).unwrap();
@@ -275,6 +285,7 @@ fn cpu_backend_replay_is_bit_deterministic() {
         requests: 64,
         process: Process::OpenUniform { rps: 2_000.0 },
         mix: vec![1.0, 0.0],
+        ..LoadSpec::default()
     };
     let out = run_loadtest(&cpu_service(ServeConfig::default()), &spread, 5).unwrap();
     assert_eq!(out.metrics.completed, 64);
@@ -290,6 +301,7 @@ fn cpu_backend_fxp_mode_serves_and_differs() {
         requests: 120,
         process: Process::OpenUniform { rps: 2_000.0 },
         mix: vec![],
+        ..LoadSpec::default()
     };
     let fp = run_loadtest(&cpu_service(ServeConfig::default()), &spec, 17).unwrap();
     let fx = run_loadtest(
@@ -310,9 +322,121 @@ fn cpu_backend_fxp_mode_serves_and_differs() {
 }
 
 #[test]
+fn sharded_virtual_time_is_bit_deterministic() {
+    // The fleet scheduler keeps the loadtest's defining property: two
+    // fresh runs of the same seeded workload — 4 shards, adaptive
+    // batching, mixed SLO classes — agree byte-for-byte.
+    let cfg = ServeConfig {
+        batch_max: 4,
+        deadline_us: 800,
+        shards: 4,
+        adaptive: true,
+        ..ServeConfig::default()
+    };
+    let spec = LoadSpec {
+        requests: 160,
+        process: Process::OpenPoisson { rps: 8_000.0 },
+        mix: vec![1.0, 1.0],
+        interactive_frac: 0.5,
+    };
+    let (a, b) = run_twice(&spec, cfg, 23);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.responses, b.responses);
+    assert_eq!(a.trace, b.trace);
+    assert_eq!(a.metrics.to_json().to_string(), b.metrics.to_json().to_string());
+    assert_eq!(a.metrics.completed, 160);
+    // The fleet actually fans out (more than one shard executed batches)
+    // and both SLO classes flowed through the classed queue.
+    let shards_used: std::collections::BTreeSet<usize> =
+        a.batches.iter().map(|r| r.shard).collect();
+    assert!(shards_used.len() > 1, "fleet never used a second shard: {shards_used:?}");
+    for cm in &a.metrics.per_class {
+        assert!(cm.completed > 0, "an SLO class starved");
+    }
+}
+
+#[test]
+fn shard_count_changes_timing_but_not_results() {
+    // Shard count is purely a scheduling knob. The CPU backend's outputs
+    // are batch-composition invariant, so the same trace replayed through
+    // 1 and 4 shards must serve identical per-request results — only the
+    // timing may move (and the dense burst must finish strictly sooner
+    // on the wider fleet).
+    let base =
+        ServeConfig { batch_max: 4, deadline_us: 500, queue_cap: 4096, ..ServeConfig::default() };
+    let spec = LoadSpec {
+        requests: 64,
+        process: Process::OpenUniform { rps: 1_000_000.0 }, // ~1µs apart
+        mix: vec![1.0, 1.0],
+        ..LoadSpec::default()
+    };
+    let trace = gen_trace(&spec, 2, 77).unwrap();
+    let one = replay_trace(&cpu_service(base), &trace).unwrap();
+    let four = replay_trace(&cpu_service(ServeConfig { shards: 4, ..base }), &trace).unwrap();
+    assert_eq!(one.metrics.rejected, 0, "invariance needs a drop-free workload");
+    assert_eq!(four.metrics.rejected, 0, "invariance needs a drop-free workload");
+    let results = |o: &LoadtestOutcome| {
+        let mut v: Vec<(u64, usize, usize)> =
+            o.responses.iter().map(|r| (r.id, r.model, r.argmax)).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(results(&one), results(&four), "shard count changed a served result");
+    assert!(
+        four.metrics.span_us < one.metrics.span_us,
+        "4 shards should drain the burst sooner: {} vs {}",
+        four.metrics.span_us,
+        one.metrics.span_us
+    );
+}
+
+#[test]
+fn overload_recovery_accounts_rejections_per_class() {
+    // Bursty overload against tiny global + per-class caps: every
+    // refusal lands in exactly one class's ledger, the books balance
+    // across class and model breakdowns, every admitted request still
+    // completes once the burst passes, and the whole thing replays
+    // bit-identically.
+    let cfg = ServeConfig {
+        batch_max: 4,
+        deadline_us: 1_000,
+        queue_cap: 8,
+        batch_overhead_us: 2_000, // slow service => the burst overruns
+        shards: 2,
+        class_caps: [5, 2],
+        ..ServeConfig::default()
+    };
+    let spec = LoadSpec {
+        requests: 200,
+        process: Process::OpenBursty { rps: 20_000.0, on_us: 3_000, off_us: 30_000 },
+        mix: vec![1.0, 1.0],
+        interactive_frac: 0.6,
+    };
+    let out = run_loadtest(&two_model_service(cfg), &spec, 19).unwrap();
+    let m = &out.metrics;
+    assert_eq!(m.issued, 200);
+    assert_eq!(m.admitted + m.rejected, m.issued);
+    assert_eq!(m.completed, m.admitted, "every admitted request recovers and completes");
+    assert!(m.rejected > 0, "the burst must overrun the caps");
+    for cm in &m.per_class {
+        assert!(cm.rejected > 0, "both class caps should trip during the burst");
+    }
+    let class_rejects: u64 = m.per_class.iter().map(|c| c.rejected).sum();
+    let class_done: u64 = m.per_class.iter().map(|c| c.completed).sum();
+    assert_eq!(class_rejects, m.rejected, "per-class rejects must sum to the total");
+    assert_eq!(class_done, m.completed, "per-class completions must sum to the total");
+    let model_rejects: u64 = m.per_model.iter().map(|pm| pm.rejected).sum();
+    assert_eq!(model_rejects, m.rejected, "per-model rejects must sum to the total");
+    // Deterministic under bursty overload too.
+    let again = run_loadtest(&two_model_service(cfg), &spec, 19).unwrap();
+    assert_eq!(again.responses, out.responses);
+    assert_eq!(again.metrics.to_json().to_string(), m.to_json().to_string());
+}
+
+#[test]
 fn live_service_smoke_completes_all_requests() {
     let cfg = ServeConfig { deadline_us: 300, ..ServeConfig::default() };
-    let (metrics, trace) = drive_closed_loop(two_model_service(cfg), 3, 30, &[], 11).unwrap();
+    let (metrics, trace) = drive_closed_loop(two_model_service(cfg), 3, 30, &[], 1.0, 11).unwrap();
     assert_eq!(metrics.completed, 30);
     assert_eq!(trace.arrivals.len(), 30);
     assert!(metrics.batches >= 4, "30 requests can't fit in fewer than 4 batches of 8");

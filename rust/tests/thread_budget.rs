@@ -1,0 +1,52 @@
+//! End-to-end thread-budget regression: the live executor fleet and the
+//! CPU backend's batch-parallel kernels draw on ONE global `util::par`
+//! budget, so serving through both at a cap of 4 must never put more
+//! than 4 budgeted threads in flight at once (the oversubscription bug
+//! this knob exists to prevent).
+//!
+//! This is the only test binary that touches the process-global budget —
+//! the unit tests in `util::par` run against local `ThreadBudget`
+//! instances precisely so this file can own the global one.
+
+#![cfg(not(feature = "pjrt"))]
+
+use nasa::model::zoo::shiftaddnet_like;
+use nasa::runtime::{Backend, Engine};
+use nasa::serve::{drive_closed_loop, ServeConfig, ServedModel, Service};
+use nasa::util::par::{par_map, set_thread_budget, thread_budget};
+use std::path::Path;
+use std::sync::Arc;
+
+#[test]
+fn fleet_plus_kernels_respect_the_global_thread_budget() {
+    let budget = thread_budget();
+    set_thread_budget(4);
+    budget.reset_high_water();
+    assert_eq!(budget.in_use(), 0, "nothing should hold budget before the fleet starts");
+
+    // A 2-shard live fleet over the CPU backend: each batcher Worker
+    // claims one budgeted slot for its lifetime, and the kernels'
+    // batch-parallel `par_map` claims the rest of the pool underneath.
+    let m = ServedModel::from_arch("sa8", &shiftaddnet_like(8, 4), 1).unwrap();
+    let cfg = ServeConfig { deadline_us: 300, shards: 2, ..ServeConfig::default() };
+    let svc = Service::new(
+        Arc::new(Engine::with_backend(Backend::Cpu).unwrap()),
+        Path::new("artifacts"),
+        vec![m],
+        cfg,
+    )
+    .unwrap();
+    let (metrics, _trace) = drive_closed_loop(svc, 4, 40, &[], 1.0, 7).unwrap();
+    assert_eq!(metrics.completed, 40, "budgeted fleet must still answer everything");
+
+    // Pile a plain data-parallel map on top: same pool, same cap.
+    let items: Vec<usize> = (0..64).collect();
+    let doubled = par_map(&items, |&i| i * 2);
+    assert_eq!(doubled, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+
+    let high = budget.high_water();
+    assert!(high >= 2, "the 2-shard fleet alone holds 2 slots: high_water={high}");
+    assert!(high <= 4, "budgeted threads exceeded the cap of 4: high_water={high}");
+    assert_eq!(budget.in_use(), 0, "every claim must be released after shutdown");
+    set_thread_budget(0); // restore the unlimited default
+}
