@@ -171,7 +171,7 @@ impl CpuModel {
             let sample = h0 * w0 * c0;
             let idx: Vec<usize> = (0..batch).collect();
             let rows = crate::util::par::par_map(&idx, |&b| {
-                self.infer_seq(&x[b * sample..(b + 1) * sample])
+                self.infer_seq(params, &x[b * sample..(b + 1) * sample])
             });
             let mut out = Vec::with_capacity(batch * self.classes);
             for row in rows {
@@ -179,12 +179,12 @@ impl CpuModel {
             }
             return Ok(out);
         }
-        self.infer_seq(x)
+        self.infer_seq(params, x)
     }
 
     /// Single-sample layer pipeline (`x` is one `[h, w, c]` sample,
     /// already shape-checked by [`CpuModel::infer`]).
-    fn infer_seq(&self, x: &[f32]) -> Result<Vec<f32>> {
+    fn infer_seq(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
         let batch = 1usize;
         let [h0, w0, c0] = self.sample_shape();
         let mut cur = x.to_vec();
@@ -254,12 +254,14 @@ impl CpuModel {
             let xb = &x[b * sample_in..(b + 1) * sample_in];
             // Quantize this sample's activations; adder layers share one
             // scale between acts and weights so |xq - wq| dequantizes.
-            let (xq, wq, acc_scale): (Vec<i32>, Vec<i32>, f64) = match l.kind {
+            // Conv weight codes are the per-layer tensor prepped above —
+            // borrowed per sample, never cloned.
+            let (xq, wq_adder, acc_scale): (Vec<i32>, Vec<i32>, f64) = match l.kind {
                 OpKind::Conv => {
                     let xt = quantize(xb, spec.act_bits)?;
                     let wt = conv_wq.as_ref().expect("conv weights prepped");
                     let s = xt.scale as f64 * wt.scale as f64;
-                    (xt.q, wt.q.clone(), s)
+                    (xt.q, vec![], s)
                 }
                 OpKind::Shift => {
                     let xt = quantize(xb, spec.act_bits)?;
@@ -273,8 +275,12 @@ impl CpuModel {
                     (xt.q, wt.q, s as f64)
                 }
             };
+            let wq: &[i32] = match &conv_wq {
+                Some(t) => &t.q,
+                None => &wq_adder,
+            };
             let acc: Vec<i64> = if l.depthwise {
-                dw_fxp(l.kind, &xq, &wq, &shift_codes, 1, h, wd, l.cin, l.k, l.stride, l.tiling)
+                dw_fxp(l.kind, &xq, wq, &shift_codes, 1, h, wd, l.cin, l.k, l.stride, l.tiling)
             } else {
                 let (x2d, m, kk) = if l.k == 1 && l.stride == 1 {
                     (xq, h * wd, l.cin)
@@ -283,9 +289,9 @@ impl CpuModel {
                     (p, ho * wo, l.k * l.k * l.cin)
                 };
                 match l.kind {
-                    OpKind::Conv => conv_pw_fxp(&x2d, &wq, m, kk, l.cout, l.tiling),
+                    OpKind::Conv => conv_pw_fxp(&x2d, wq, m, kk, l.cout, l.tiling),
                     OpKind::Shift => shift_pw_fxp(&x2d, &shift_codes, m, kk, l.cout, l.tiling),
-                    OpKind::Adder => adder_pw_fxp(&x2d, &wq, m, kk, l.cout, l.tiling),
+                    OpKind::Adder => adder_pw_fxp(&x2d, wq, m, kk, l.cout, l.tiling),
                 }
             };
             out.extend(dequant_i64(&acc, acc_scale));
