@@ -24,6 +24,15 @@
 //! bit-identically just like the stub one (real-hardware rows for
 //! EXPERIMENTS.md §Perf Iteration 4).
 //!
+//! The **prepack exhibit** A/Bs the cpu backend's compile-once execution
+//! plans against the legacy re-derive-per-request path on the same seeded
+//! FXP workload: wall clock (`serve/speedup_prepack_vs_legacy`), virtual
+//! throughput (`serve/vthroughput_rps_prepack` must *strictly* beat
+//! `_legacy` — the service model deterministically prices the legacy
+//! path's per-sample weight re-derivation), and steady-state allocations
+//! per request via a counting global allocator
+//! (`serve/allocs_per_req_*`; prepacked must be strictly lower).
+//!
 //! Fleet exhibits (EXPERIMENTS.md §Perf Iteration 5):
 //!
 //! * **Sharded throughput** — the same seeded Poisson trace, offered at
@@ -42,14 +51,62 @@
 //!   4-shard fleet, recording p50/p95/p99 per SLO class.
 
 use nasa::model::zoo::{resnet32_adder_like, shiftaddnet_like};
-use nasa::runtime::{Backend, Engine};
+use nasa::runtime::{Backend, CpuModel, Engine};
 use nasa::serve::{
     gen_trace, replay_trace, run_loadtest, LoadSpec, Process, ServeConfig, ServedModel, Service,
     SloClass,
 };
 use nasa::util::bench::{env_usize, header, Runner};
+use nasa::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// `System` wrapper counting allocation events, for the prepack
+/// allocs-per-request rows (`serve/allocs_per_req_*`). Negligible
+/// overhead (one relaxed atomic add per allocation), identical for every
+/// exhibit in this binary.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Average allocations per single-sample request in steady state
+/// (3 warmup requests build the plan cache and size the scratch arenas).
+fn allocs_per_request(m: &CpuModel, params: &[f32], x: &[f32], iters: u64) -> f64 {
+    for _ in 0..3 {
+        m.infer(params, x, 1).unwrap();
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        std::hint::black_box(m.infer(params, x, 1).unwrap());
+    }
+    (ALLOCS.load(Ordering::Relaxed) - before) as f64 / iters as f64
+}
 
 fn service_with(cfg: ServeConfig, backend: Backend) -> Service {
     let m0 = ServedModel::from_arch("sa16", &shiftaddnet_like(16, 10), 1).unwrap();
@@ -167,6 +224,74 @@ fn main() {
         cpu_again.metrics.to_json().to_string(),
         out_cpu.metrics.to_json().to_string(),
         "cpu metrics JSON must replay exactly"
+    );
+
+    // --- Prepack exhibit: compile-once execution plans vs the legacy
+    // re-derive-per-request path, FXP cpu backend (where the per-request
+    // weight work — conv quantization, pow2 decomposition — is largest).
+    // Three claims: wall clock (recorded + loosely asserted), virtual
+    // throughput (strict, deterministic: the service model prices the
+    // legacy path's per-sample weight sweep), and steady-state
+    // allocations per request (strict).
+    let cpu_fxp = |prepack: bool| {
+        service_with(
+            ServeConfig { batch_max: 8, fxp: true, prepack, ..ServeConfig::default() },
+            Backend::Cpu,
+        )
+    };
+    let svc_pre = cpu_fxp(true);
+    let svc_leg = cpu_fxp(false);
+    let wall_pre = runner.bench("serve/loadtest_closed_batch8_cpu_prepack", || {
+        let out = run_loadtest(&svc_pre, &spec, 42).unwrap();
+        assert_eq!(out.metrics.completed as usize, n);
+        std::hint::black_box(out.metrics.span_us);
+    });
+    let wall_leg = runner.bench("serve/loadtest_closed_batch8_cpu_legacy", || {
+        let out = run_loadtest(&svc_leg, &spec, 42).unwrap();
+        assert_eq!(out.metrics.completed as usize, n);
+        std::hint::black_box(out.metrics.span_us);
+    });
+    runner.record_speedup("serve/speedup_prepack_vs_legacy", &wall_leg, &wall_pre);
+    // Loose wall guard only (CI hosts are noisy on models this small);
+    // the hard acceptance criterion is the virtual-time assert below.
+    assert!(
+        wall_pre.mean_ns <= wall_leg.mean_ns * 1.10,
+        "prepacked wall time regressed: {:.0}ns vs legacy {:.0}ns",
+        wall_pre.mean_ns,
+        wall_leg.mean_ns
+    );
+    let out_pre = run_loadtest(&svc_pre, &spec, 42).unwrap();
+    let out_leg = run_loadtest(&svc_leg, &spec, 42).unwrap();
+    assert_eq!(out_pre.metrics.completed as usize, n, "prepacked run dropped requests");
+    assert_eq!(out_leg.metrics.completed as usize, n, "legacy run dropped requests");
+    let (tp, tl) = (out_pre.metrics.throughput_rps(), out_leg.metrics.throughput_rps());
+    runner.record_value("serve/vthroughput_rps_prepack", tp);
+    runner.record_value("serve/vthroughput_rps_legacy", tl);
+    runner.record_value("serve/vthroughput_gain_prepack_vs_legacy", tp / tl);
+    assert!(
+        tp > tl,
+        "prepacked plans must beat the legacy path in virtual throughput: \
+         {tp:.1} vs {tl:.1} req/s"
+    );
+
+    // Steady-state allocations per request, measured at the model level
+    // (single-sample requests on this thread, warmed scratch arenas).
+    let alloc_arch = shiftaddnet_like(16, 10);
+    let m_pre = CpuModel::compile("sa16", &alloc_arch, true, &[]).unwrap();
+    let mut m_leg = CpuModel::compile("sa16", &alloc_arch, true, &[]).unwrap();
+    m_leg.set_prepack(false);
+    let mut rng = Rng::new(0xA110C);
+    let alloc_params: Vec<f32> =
+        (0..m_pre.n_params()).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let [ah, aw, ac] = m_pre.sample_shape();
+    let alloc_x: Vec<f32> = (0..ah * aw * ac).map(|_| rng.normal() as f32).collect();
+    let apr_pre = allocs_per_request(&m_pre, &alloc_params, &alloc_x, 32);
+    let apr_leg = allocs_per_request(&m_leg, &alloc_params, &alloc_x, 32);
+    runner.record_value("serve/allocs_per_req_prepack", apr_pre);
+    runner.record_value("serve/allocs_per_req_legacy", apr_leg);
+    assert!(
+        apr_pre < apr_leg,
+        "prepacked path must allocate less per request: {apr_pre} vs {apr_leg}"
     );
 
     // --- Fleet exhibit 1: sharded virtual throughput under overload. ---
@@ -294,6 +419,11 @@ fn main() {
          {rps:.0} offered rps); adaptive p99 {p99_adapt}us vs static {p99_static}us \
          against a {slo}us SLO",
         ts4 / ts1
+    );
+    println!(
+        "serve: prepack {tp:.1} req/s vs legacy {tl:.1} req/s (x{:.2} virtual), \
+         {apr_pre:.2} vs {apr_leg:.2} allocs/request steady-state",
+        tp / tl
     );
 
     runner.finish();

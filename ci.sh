@@ -10,7 +10,10 @@
 # `cargo test` includes the kernel differential harness
 # (tests/kernel_differential.rs): every native multiplication-free kernel
 # vs its naive oracle over seeded shape/tiling grids, plus the committed
-# Python-generated golden vectors in fixtures/kernel_golden/.
+# Python-generated golden vectors in fixtures/kernel_golden/. It also
+# includes the steady-state allocation-regression binary
+# (tests/alloc_regression.rs): the prepacked cpu hot path must stay
+# (nearly) allocation-free and strictly below the legacy path.
 
 set -eu
 
@@ -123,13 +126,21 @@ say "cpu backend smoke: nasa serve --backend cpu (real kernel inference)"
 cargo run --release --quiet -- serve --models "$SERVE_MODELS" \
     --backend cpu --requests 50 --clients 2 --batch-max 8 \
     --deadline-us 2000 --seed 7
+# The same workload with execution-plan prepacking disabled: the legacy
+# re-derive-per-request path must stay fully functional (and, per the
+# differential tests, bitwise identical in its outputs).
+cargo run --release --quiet -- serve --models "$SERVE_MODELS" \
+    --backend cpu --no-prepack --requests 50 --clients 2 --batch-max 8 \
+    --deadline-us 2000 --seed 7
 
 say "serve perf smoke: serve_loadtest --quick --json BENCH_serve.json"
 # Batched-vs-unbatched throughput exhibit (EXPERIMENTS.md §Perf
 # Iterations 3-4); the bench itself asserts batch-max=8 strictly beats
 # batch=1, that the seeded replay is bit-identical (stub AND cpu), and
 # emits the cpu-backend rows (real-kernel wall clock, cpu-vs-stub
-# speedup, modeled throughput/occupancy/p99) into the same JSON.
+# speedup, modeled throughput/occupancy/p99) into the same JSON — plus
+# the prepack exhibit (prepacked plans must strictly beat the legacy
+# path in virtual throughput and in steady-state allocs/request).
 cargo bench --bench serve_loadtest -- --quick --json BENCH_serve.json
 
 say "serve bench baseline diff (advisory)"

@@ -1,11 +1,41 @@
 //! AdderNet pointwise kernel: `out[i,j] = -Σ_t |x[i,t] - w[t,j]|` —
 //! similarity as negative ℓ1 distance, computed with subtractions,
 //! absolute values, and adds only.
+//!
+//! Like the other pointwise kernels, each precision has a `Vec`-returning
+//! parallel entry point and an allocation-free `_into` sibling built on
+//! the same row kernel (bitwise identical outputs).
 
 use crate::accel::Tiling;
 use crate::model::quant::qmax_for;
 
-use super::run_tiled;
+use super::{run_tiled, run_tiled_into};
+
+/// One f32 output-row segment (negated ℓ1 distance).
+#[inline]
+fn adder_row_f32(row: &mut [f32], xr: &[f32], w: &[f32], n: usize, n0: usize) {
+    for (dj, o) in row.iter_mut().enumerate() {
+        let j = n0 + dj;
+        let mut acc = 0.0f32;
+        for (t, &xv) in xr.iter().enumerate() {
+            acc += (xv - w[t * n + j]).abs();
+        }
+        *o = -acc;
+    }
+}
+
+/// One FXP output-row segment (negated integer ℓ1 distance).
+#[inline]
+fn adder_row_fxp(row: &mut [i64], xr: &[i32], wq: &[i32], n: usize, n0: usize) {
+    for (dj, o) in row.iter_mut().enumerate() {
+        let j = n0 + dj;
+        let mut acc = 0i64;
+        for (t, &xv) in xr.iter().enumerate() {
+            acc += (xv as i64 - wq[t * n + j] as i64).abs();
+        }
+        *o = -acc;
+    }
+}
 
 /// f32 adder GEMM. Same sequential per-element accumulation order as
 /// [`super::ref_impls::adder_pw_ref`], so the comparison is bit-exact.
@@ -13,19 +43,30 @@ pub fn adder_pw_f32(x2d: &[f32], w: &[f32], m: usize, k: usize, n: usize, tiling
     assert_eq!(x2d.len(), m * k, "adder_pw_f32 x2d shape");
     assert_eq!(w.len(), k * n, "adder_pw_f32 w shape");
     run_tiled(m, n, tiling, |m0, m1, n0, n1| {
-        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
-        for i in m0..m1 {
-            let xr = &x2d[i * k..(i + 1) * k];
-            for j in n0..n1 {
-                let mut acc = 0.0f32;
-                for (t, &xv) in xr.iter().enumerate() {
-                    acc += (xv - w[t * n + j]).abs();
-                }
-                block.push(-acc);
-            }
+        let mut block = vec![0.0f32; (m1 - m0) * (n1 - n0)];
+        for (r, row) in block.chunks_exact_mut(n1 - n0).enumerate() {
+            adder_row_f32(row, &x2d[(m0 + r) * k..(m0 + r + 1) * k], w, n, n0);
         }
         block
     })
+}
+
+/// [`adder_pw_f32`] into a caller-provided `[M, N]` slice: sequential,
+/// allocation-free, bit-exact (same row kernel).
+pub fn adder_pw_f32_into(
+    out: &mut [f32],
+    x2d: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(x2d.len(), m * k, "adder_pw_f32 x2d shape");
+    assert_eq!(w.len(), k * n, "adder_pw_f32 w shape");
+    run_tiled_into(out, m, n, tiling, |i, n0, row| {
+        adder_row_f32(row, &x2d[i * k..(i + 1) * k], w, n, n0);
+    });
 }
 
 /// FXP adder GEMM. ℓ1 distance only dequantizes linearly if activations
@@ -36,19 +77,52 @@ pub fn adder_pw_fxp(xq: &[i32], wq: &[i32], m: usize, k: usize, n: usize, tiling
     assert_eq!(xq.len(), m * k, "adder_pw_fxp xq shape");
     assert_eq!(wq.len(), k * n, "adder_pw_fxp wq shape");
     run_tiled(m, n, tiling, |m0, m1, n0, n1| {
-        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
-        for i in m0..m1 {
-            let xr = &xq[i * k..(i + 1) * k];
-            for j in n0..n1 {
-                let mut acc = 0i64;
-                for (t, &xv) in xr.iter().enumerate() {
-                    acc += (xv as i64 - wq[t * n + j] as i64).abs();
-                }
-                block.push(-acc);
-            }
+        let mut block = vec![0i64; (m1 - m0) * (n1 - n0)];
+        for (r, row) in block.chunks_exact_mut(n1 - n0).enumerate() {
+            adder_row_fxp(row, &xq[(m0 + r) * k..(m0 + r + 1) * k], wq, n, n0);
         }
         block
     })
+}
+
+/// [`adder_pw_fxp`] into a caller-provided `[M, N]` accumulator slice:
+/// sequential, allocation-free, bit-exact (same row kernel).
+pub fn adder_pw_fxp_into(
+    out: &mut [i64],
+    xq: &[i32],
+    wq: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(xq.len(), m * k, "adder_pw_fxp xq shape");
+    assert_eq!(wq.len(), k * n, "adder_pw_fxp wq shape");
+    run_tiled_into(out, m, n, tiling, |i, n0, row| {
+        adder_row_fxp(row, &xq[i * k..(i + 1) * k], wq, n, n0);
+    });
+}
+
+/// Max-abs over finite values, the reduction [`adder_shared_scale`] is
+/// built from. f32 `max` over non-NaN values is exactly associative and
+/// commutative, so folding the weight half once at plan-prepack time and
+/// joining it with the activation half per sample
+/// (`max_abs_finite(x).max(w_max)`) is bit-identical to the one-pass
+/// fold over the concatenation.
+pub fn max_abs_finite(v: &[f32]) -> f32 {
+    v.iter().map(|v| v.abs()).filter(|v| v.is_finite()).fold(0.0f32, f32::max)
+}
+
+/// Scale from a precomputed max-abs: `max_abs / qmax(bits)`, `1.0` when
+/// everything was zero/non-finite (the second half of
+/// [`adder_shared_scale`]).
+pub fn adder_shared_scale_from_max(max_abs: f32, bits: u32) -> f32 {
+    let qmax = qmax_for(bits) as f32;
+    if max_abs > 0.0 {
+        max_abs / qmax
+    } else {
+        1.0
+    }
 }
 
 /// The single scale an adder layer's activations *and* weights are
@@ -56,16 +130,5 @@ pub fn adder_pw_fxp(xq: &[i32], wq: &[i32], m: usize, k: usize, n: usize, tiling
 /// (mirroring `quant::quantize`'s max-abs rule, but over the union),
 /// `1.0` when everything is zero/non-finite.
 pub fn adder_shared_scale(x: &[f32], w: &[f32], bits: u32) -> f32 {
-    let qmax = qmax_for(bits) as f32;
-    let max_abs = x
-        .iter()
-        .chain(w.iter())
-        .map(|v| v.abs())
-        .filter(|v| v.is_finite())
-        .fold(0.0f32, f32::max);
-    if max_abs > 0.0 {
-        max_abs / qmax
-    } else {
-        1.0
-    }
+    adder_shared_scale_from_max(max_abs_finite(x).max(max_abs_finite(w)), bits)
 }

@@ -2,10 +2,45 @@
 //! operator the shift/adder kernels are traded against. `x2d` is the
 //! flattened activation matrix `[M, K]` (`M = B*H*W` pixels for a 1×1
 //! conv, or im2col patch rows for dense K×K), `w` is `[K, N]`.
+//!
+//! Each precision has two entry points sharing one row kernel: the
+//! `Vec`-returning form (tiled over `par_map`) and an `_into` form that
+//! writes a caller-provided slice sequentially with zero allocations —
+//! bitwise identical by construction, since both run the same per-cell
+//! sequential contraction.
 
 use crate::accel::Tiling;
 
-use super::run_tiled;
+use super::{run_tiled, run_tiled_into};
+
+/// One f32 output-row segment: `row` is `out[i, n0 .. n0 + row.len()]`,
+/// `xr` the activation row. The single sequential accumulator per cell is
+/// what keeps every entry point bitwise identical to
+/// [`super::ref_impls::conv_pw_ref`].
+#[inline]
+fn conv_row_f32(row: &mut [f32], xr: &[f32], w: &[f32], n: usize, n0: usize) {
+    for (dj, o) in row.iter_mut().enumerate() {
+        let j = n0 + dj;
+        let mut acc = 0.0f32;
+        for (t, &xv) in xr.iter().enumerate() {
+            acc += xv * w[t * n + j];
+        }
+        *o = acc;
+    }
+}
+
+/// One FXP output-row segment: pure i64 integer accumulation `Σ xq·wq`.
+#[inline]
+fn conv_row_fxp(row: &mut [i64], xr: &[i32], wq: &[i32], n: usize, n0: usize) {
+    for (dj, o) in row.iter_mut().enumerate() {
+        let j = n0 + dj;
+        let mut acc = 0i64;
+        for (t, &xv) in xr.iter().enumerate() {
+            acc += xv as i64 * wq[t * n + j] as i64;
+        }
+        *o = acc;
+    }
+}
 
 /// f32 GEMM, tiled per the mapper's choice. The inner contraction is a
 /// single sequential f32 accumulator per output element, so results are
@@ -15,19 +50,30 @@ pub fn conv_pw_f32(x2d: &[f32], w: &[f32], m: usize, k: usize, n: usize, tiling:
     assert_eq!(x2d.len(), m * k, "conv_pw_f32 x2d shape");
     assert_eq!(w.len(), k * n, "conv_pw_f32 w shape");
     run_tiled(m, n, tiling, |m0, m1, n0, n1| {
-        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
-        for i in m0..m1 {
-            let xr = &x2d[i * k..(i + 1) * k];
-            for j in n0..n1 {
-                let mut acc = 0.0f32;
-                for (t, &xv) in xr.iter().enumerate() {
-                    acc += xv * w[t * n + j];
-                }
-                block.push(acc);
-            }
+        let mut block = vec![0.0f32; (m1 - m0) * (n1 - n0)];
+        for (r, row) in block.chunks_exact_mut(n1 - n0).enumerate() {
+            conv_row_f32(row, &x2d[(m0 + r) * k..(m0 + r + 1) * k], w, n, n0);
         }
         block
     })
+}
+
+/// [`conv_pw_f32`] into a caller-provided `[M, N]` slice: sequential,
+/// allocation-free, bitwise identical (same row kernel).
+pub fn conv_pw_f32_into(
+    out: &mut [f32],
+    x2d: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(x2d.len(), m * k, "conv_pw_f32 x2d shape");
+    assert_eq!(w.len(), k * n, "conv_pw_f32 w shape");
+    run_tiled_into(out, m, n, tiling, |i, n0, row| {
+        conv_row_f32(row, &x2d[i * k..(i + 1) * k], w, n, n0);
+    });
 }
 
 /// FXP GEMM over quantized activations/weights: pure i64 integer
@@ -37,17 +83,28 @@ pub fn conv_pw_fxp(xq: &[i32], wq: &[i32], m: usize, k: usize, n: usize, tiling:
     assert_eq!(xq.len(), m * k, "conv_pw_fxp xq shape");
     assert_eq!(wq.len(), k * n, "conv_pw_fxp wq shape");
     run_tiled(m, n, tiling, |m0, m1, n0, n1| {
-        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
-        for i in m0..m1 {
-            let xr = &xq[i * k..(i + 1) * k];
-            for j in n0..n1 {
-                let mut acc = 0i64;
-                for (t, &xv) in xr.iter().enumerate() {
-                    acc += xv as i64 * wq[t * n + j] as i64;
-                }
-                block.push(acc);
-            }
+        let mut block = vec![0i64; (m1 - m0) * (n1 - n0)];
+        for (r, row) in block.chunks_exact_mut(n1 - n0).enumerate() {
+            conv_row_fxp(row, &xq[(m0 + r) * k..(m0 + r + 1) * k], wq, n, n0);
         }
         block
     })
+}
+
+/// [`conv_pw_fxp`] into a caller-provided `[M, N]` accumulator slice:
+/// sequential, allocation-free, bit-exact (same row kernel).
+pub fn conv_pw_fxp_into(
+    out: &mut [i64],
+    xq: &[i32],
+    wq: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(xq.len(), m * k, "conv_pw_fxp xq shape");
+    assert_eq!(wq.len(), k * n, "conv_pw_fxp wq shape");
+    run_tiled_into(out, m, n, tiling, |i, n0, row| {
+        conv_row_fxp(row, &xq[i * k..(i + 1) * k], wq, n, n0);
+    });
 }

@@ -9,14 +9,56 @@
 //! Tiling maps the mapper's `[M, N]` PE grid onto `M = B*Ho*Wo` output
 //! pixels × `N = C` channels via [`super::run_tiled`]; per-element
 //! accumulation runs the fixed `(ki, kj)` order, so outputs are bitwise
-//! tiling/thread-invariant and f32-comparable against the oracles.
+//! tiling/thread-invariant and f32-comparable against the oracles. The
+//! `_into` entry points reuse the identical per-cell function through
+//! [`super::run_tiled_into`], so they are bitwise identical too.
 
 use crate::accel::Tiling;
 use crate::model::OpKind;
 
-use super::{mul_pow2, run_tiled, same_out_hw, ShiftCode};
+use super::{mul_pow2, run_tiled, run_tiled_into, same_out_hw, ShiftCode};
+
+/// One f32 output cell: the fixed `(ki, kj)` tap order every entry point
+/// shares (`pix` already decomposed to `bi/oy/ox` by the caller).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn dw_cell_f32(
+    x: &[f32],
+    bi: usize,
+    oy: usize,
+    ox: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: isize,
+    ci: usize,
+    term: &impl Fn(f32, usize) -> f32,
+    negate: bool,
+) -> f32 {
+    let mut acc = 0.0f32;
+    for ki in 0..k {
+        for kj in 0..k {
+            let iy = (oy * stride + ki) as isize - pad;
+            let ix = (ox * stride + kj) as isize - pad;
+            let v = if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                x[((bi * h + iy as usize) * w + ix as usize) * c + ci]
+            } else {
+                0.0
+            };
+            acc += term(v, (ki * k + kj) * c + ci);
+        }
+    }
+    if negate {
+        -acc
+    } else {
+        acc
+    }
+}
 
 /// Shared geometry/dispatch for the three f32 depthwise kernels.
+#[allow(clippy::too_many_arguments)]
 fn dw_f32(
     x: &[f32],
     b: usize,
@@ -33,32 +75,48 @@ fn dw_f32(
     let pad = ((k - 1) / 2) as isize;
     let (ho, wo) = same_out_hw(h, w, k, stride);
     let m = b * ho * wo;
-    let flat = run_tiled(m, c, tiling, |m0, m1, n0, n1| {
+    run_tiled(m, c, tiling, |m0, m1, n0, n1| {
         let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
         for pix in m0..m1 {
             let bi = pix / (ho * wo);
             let oy = (pix / wo) % ho;
             let ox = pix % wo;
             for ci in n0..n1 {
-                let mut acc = 0.0f32;
-                for ki in 0..k {
-                    for kj in 0..k {
-                        let iy = (oy * stride + ki) as isize - pad;
-                        let ix = (ox * stride + kj) as isize - pad;
-                        let v = if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                            x[((bi * h + iy as usize) * w + ix as usize) * c + ci]
-                        } else {
-                            0.0
-                        };
-                        acc += term(v, (ki * k + kj) * c + ci);
-                    }
-                }
-                block.push(if negate { -acc } else { acc });
+                block.push(dw_cell_f32(x, bi, oy, ox, h, w, c, k, stride, pad, ci, &term, negate));
             }
         }
         block
+    })
+}
+
+/// Allocation-free sibling of [`dw_f32`]: fill a caller-provided
+/// `[B,Ho,Wo,C]` slice sequentially through the same per-cell function.
+#[allow(clippy::too_many_arguments)]
+fn dw_f32_into(
+    out: &mut [f32],
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+    term: impl Fn(f32, usize) -> f32,
+    negate: bool,
+) {
+    assert_eq!(x.len(), b * h * w * c, "dw kernel x shape");
+    let pad = ((k - 1) / 2) as isize;
+    let (ho, wo) = same_out_hw(h, w, k, stride);
+    let m = b * ho * wo;
+    run_tiled_into(out, m, c, tiling, |pix, n0, row| {
+        let bi = pix / (ho * wo);
+        let oy = (pix / wo) % ho;
+        let ox = pix % wo;
+        for (dc, o) in row.iter_mut().enumerate() {
+            *o = dw_cell_f32(x, bi, oy, ox, h, w, c, k, stride, pad, n0 + dc, &term, negate);
+        }
     });
-    flat
 }
 
 pub fn dw_conv_f32(
@@ -74,6 +132,24 @@ pub fn dw_conv_f32(
 ) -> Vec<f32> {
     assert_eq!(w.len(), k * k * c, "dw_conv_f32 w shape");
     dw_f32(x, b, h, wd, c, k, stride, tiling, |v, wi| v * w[wi], false)
+}
+
+/// [`dw_conv_f32`] into a caller-provided slice (bitwise identical).
+#[allow(clippy::too_many_arguments)]
+pub fn dw_conv_f32_into(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    h: usize,
+    wd: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(w.len(), k * k * c, "dw_conv_f32 w shape");
+    dw_f32_into(out, x, b, h, wd, c, k, stride, tiling, |v, wi| v * w[wi], false)
 }
 
 /// Depthwise shift: each tap is `±(v scaled by 2^p)` via exponent
@@ -92,25 +168,36 @@ pub fn dw_shift_f32(
     tiling: Option<Tiling>,
 ) -> Vec<f32> {
     assert_eq!(codes.len(), k * k * c, "dw_shift_f32 codes shape");
-    dw_f32(
-        x,
-        b,
-        h,
-        wd,
-        c,
-        k,
-        stride,
-        tiling,
-        |v, wi| {
-            let cd = codes[wi];
-            match cd.s {
-                0 => 0.0,
-                1 => mul_pow2(v, cd.p as i32),
-                _ => -mul_pow2(v, cd.p as i32),
-            }
-        },
-        false,
-    )
+    dw_f32(x, b, h, wd, c, k, stride, tiling, |v, wi| shift_term(codes, v, wi), false)
+}
+
+/// [`dw_shift_f32`] into a caller-provided slice (bitwise identical).
+#[allow(clippy::too_many_arguments)]
+pub fn dw_shift_f32_into(
+    out: &mut [f32],
+    x: &[f32],
+    codes: &[ShiftCode],
+    b: usize,
+    h: usize,
+    wd: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(codes.len(), k * k * c, "dw_shift_f32 codes shape");
+    dw_f32_into(out, x, b, h, wd, c, k, stride, tiling, |v, wi| shift_term(codes, v, wi), false)
+}
+
+/// The one shift tap both `dw_shift_f32` entry points apply.
+#[inline]
+fn shift_term(codes: &[ShiftCode], v: f32, wi: usize) -> f32 {
+    let cd = codes[wi];
+    match cd.s {
+        0 => 0.0,
+        1 => mul_pow2(v, cd.p as i32),
+        _ => -mul_pow2(v, cd.p as i32),
+    }
 }
 
 pub fn dw_adder_f32(
@@ -126,6 +213,81 @@ pub fn dw_adder_f32(
 ) -> Vec<f32> {
     assert_eq!(w.len(), k * k * c, "dw_adder_f32 w shape");
     dw_f32(x, b, h, wd, c, k, stride, tiling, |v, wi| (v - w[wi]).abs(), true)
+}
+
+/// [`dw_adder_f32`] into a caller-provided slice (bitwise identical).
+#[allow(clippy::too_many_arguments)]
+pub fn dw_adder_f32_into(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    h: usize,
+    wd: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(w.len(), k * k * c, "dw_adder_f32 w shape");
+    dw_f32_into(out, x, b, h, wd, c, k, stride, tiling, |v, wi| (v - w[wi]).abs(), true)
+}
+
+/// One FXP output cell shared by [`dw_fxp`] and [`dw_fxp_into`]
+/// (includes the adder negation, so both entry points emit finished
+/// accumulator values).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn dw_cell_fxp(
+    kind: OpKind,
+    xq: &[i32],
+    wq: &[i32],
+    codes: &[ShiftCode],
+    bi: usize,
+    oy: usize,
+    ox: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    pad: isize,
+    ci: usize,
+) -> i64 {
+    let mut acc = 0i64;
+    for ki in 0..k {
+        for kj in 0..k {
+            let iy = (oy * stride + ki) as isize - pad;
+            let ix = (ox * stride + kj) as isize - pad;
+            let v = if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                xq[((bi * h + iy as usize) * w + ix as usize) * c + ci] as i64
+            } else {
+                0
+            };
+            let wi = (ki * k + kj) * c + ci;
+            match kind {
+                OpKind::Conv => acc += v * wq[wi] as i64,
+                OpKind::Shift => {
+                    let cd = codes[wi];
+                    if cd.s != 0 {
+                        let e = (cd.p as i32 + super::shift_pw::SHIFT_FXP_EXP) as u32;
+                        let term = v << e;
+                        if cd.s > 0 {
+                            acc += term;
+                        } else {
+                            acc -= term;
+                        }
+                    }
+                }
+                OpKind::Adder => acc += (v - wq[wi] as i64).abs(),
+            }
+        }
+    }
+    if kind == OpKind::Adder {
+        -acc
+    } else {
+        acc
+    }
 }
 
 /// FXP depthwise, one entry point for all three kinds (quantized i32
@@ -162,38 +324,44 @@ pub fn dw_fxp(
             let oy = (pix / wo) % ho;
             let ox = pix % wo;
             for ci in n0..n1 {
-                let mut acc = 0i64;
-                for ki in 0..k {
-                    for kj in 0..k {
-                        let iy = (oy * stride + ki) as isize - pad;
-                        let ix = (ox * stride + kj) as isize - pad;
-                        let v = if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                            xq[((bi * h + iy as usize) * w + ix as usize) * c + ci] as i64
-                        } else {
-                            0
-                        };
-                        let wi = (ki * k + kj) * c + ci;
-                        match kind {
-                            OpKind::Conv => acc += v * wq[wi] as i64,
-                            OpKind::Shift => {
-                                let cd = codes[wi];
-                                if cd.s != 0 {
-                                    let e = (cd.p as i32 + super::shift_pw::SHIFT_FXP_EXP) as u32;
-                                    let term = v << e;
-                                    if cd.s > 0 {
-                                        acc += term;
-                                    } else {
-                                        acc -= term;
-                                    }
-                                }
-                            }
-                            OpKind::Adder => acc += (v - wq[wi] as i64).abs(),
-                        }
-                    }
-                }
-                block.push(if kind == OpKind::Adder { -acc } else { acc });
+                block.push(dw_cell_fxp(kind, xq, wq, codes, bi, oy, ox, h, w, c, k, stride, pad, ci));
             }
         }
         block
     })
+}
+
+/// [`dw_fxp`] into a caller-provided `[B,Ho,Wo,C]` accumulator slice:
+/// sequential, allocation-free, bit-exact (same per-cell function).
+#[allow(clippy::too_many_arguments)]
+pub fn dw_fxp_into(
+    out: &mut [i64],
+    kind: OpKind,
+    xq: &[i32],
+    wq: &[i32],
+    codes: &[ShiftCode],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(xq.len(), b * h * w * c, "dw_fxp xq shape");
+    match kind {
+        OpKind::Shift => assert_eq!(codes.len(), k * k * c, "dw_fxp codes shape"),
+        _ => assert_eq!(wq.len(), k * k * c, "dw_fxp wq shape"),
+    }
+    let pad = ((k - 1) / 2) as isize;
+    let (ho, wo) = same_out_hw(h, w, k, stride);
+    let m = b * ho * wo;
+    run_tiled_into(out, m, c, tiling, |pix, n0, row| {
+        let bi = pix / (ho * wo);
+        let oy = (pix / wo) % ho;
+        let ox = pix % wo;
+        for (dc, o) in row.iter_mut().enumerate() {
+            *o = dw_cell_fxp(kind, xq, wq, codes, bi, oy, ox, h, w, c, k, stride, pad, n0 + dc);
+        }
+    });
 }

@@ -8,10 +8,14 @@
 //!   to i32, each term is `±(xq << (p + SHIFT_FXP_EXP))`, and the i64
 //!   accumulator carries the result in the `2^-SHIFT_FXP_EXP` frame.
 //!   This is the paper's multiplication-free claim made literal.
+//!
+//! Like the other pointwise kernels, each precision has a `Vec`-returning
+//! parallel entry point and an allocation-free `_into` sibling built on
+//! the same row kernel (bitwise identical outputs).
 
 use crate::accel::Tiling;
 
-use super::{run_tiled, ShiftCode};
+use super::{run_tiled, run_tiled_into, ShiftCode};
 
 /// Fixed-point exponent offset for the FXP shift path: since
 /// `p ∈ [P_MIN, 0] = [-14, 0]`, biasing by 14 makes every shift amount
@@ -19,10 +23,52 @@ use super::{run_tiled, ShiftCode};
 /// with `acc * sx * 2^-SHIFT_FXP_EXP`.
 pub const SHIFT_FXP_EXP: i32 = -super::P_MIN;
 
+/// One f32 output-row segment. Zero codes (`s == 0`) are skipped —
+/// adding `±0.0` to a running sum that started at `+0.0` never changes
+/// its bits, so the skip is bitwise equivalent to the oracle's
+/// multiply-by-zero.
+#[inline]
+fn shift_row_f32(row: &mut [f32], xr: &[f32], codes: &[ShiftCode], n: usize, n0: usize) {
+    for (dj, o) in row.iter_mut().enumerate() {
+        let j = n0 + dj;
+        let mut acc = 0.0f32;
+        for (t, &xv) in xr.iter().enumerate() {
+            let c = codes[t * n + j];
+            match c.s {
+                0 => {}
+                1 => acc += super::mul_pow2(xv, c.p as i32),
+                _ => acc -= super::mul_pow2(xv, c.p as i32),
+            }
+        }
+        *o = acc;
+    }
+}
+
+/// One FXP output-row segment: `acc ± (xq << (p + SHIFT_FXP_EXP))`.
+#[inline]
+fn shift_row_fxp(row: &mut [i64], xr: &[i32], codes: &[ShiftCode], n: usize, n0: usize) {
+    for (dj, o) in row.iter_mut().enumerate() {
+        let j = n0 + dj;
+        let mut acc = 0i64;
+        for (t, &xv) in xr.iter().enumerate() {
+            let c = codes[t * n + j];
+            if c.s == 0 {
+                continue;
+            }
+            let e = (c.p as i32 + SHIFT_FXP_EXP) as u32;
+            let term = (xv as i64) << e;
+            if c.s > 0 {
+                acc += term;
+            } else {
+                acc -= term;
+            }
+        }
+        *o = acc;
+    }
+}
+
 /// f32 shift GEMM: `out[i,j] = Σ_t ± x[i,t]·2^p` applied via exponent
-/// arithmetic. Zero codes (`s == 0`) are skipped — adding `±0.0` to a
-/// running sum that started at `+0.0` never changes its bits, so the
-/// skip is bitwise equivalent to the oracle's multiply-by-zero.
+/// arithmetic, tiled over `par_map`.
 pub fn shift_pw_f32(
     x2d: &[f32],
     codes: &[ShiftCode],
@@ -34,24 +80,30 @@ pub fn shift_pw_f32(
     assert_eq!(x2d.len(), m * k, "shift_pw_f32 x2d shape");
     assert_eq!(codes.len(), k * n, "shift_pw_f32 codes shape");
     run_tiled(m, n, tiling, |m0, m1, n0, n1| {
-        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
-        for i in m0..m1 {
-            let xr = &x2d[i * k..(i + 1) * k];
-            for j in n0..n1 {
-                let mut acc = 0.0f32;
-                for (t, &xv) in xr.iter().enumerate() {
-                    let c = codes[t * n + j];
-                    match c.s {
-                        0 => {}
-                        1 => acc += super::mul_pow2(xv, c.p as i32),
-                        _ => acc -= super::mul_pow2(xv, c.p as i32),
-                    }
-                }
-                block.push(acc);
-            }
+        let mut block = vec![0.0f32; (m1 - m0) * (n1 - n0)];
+        for (r, row) in block.chunks_exact_mut(n1 - n0).enumerate() {
+            shift_row_f32(row, &x2d[(m0 + r) * k..(m0 + r + 1) * k], codes, n, n0);
         }
         block
     })
+}
+
+/// [`shift_pw_f32`] into a caller-provided `[M, N]` slice: sequential,
+/// allocation-free, bitwise identical (same row kernel).
+pub fn shift_pw_f32_into(
+    out: &mut [f32],
+    x2d: &[f32],
+    codes: &[ShiftCode],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(x2d.len(), m * k, "shift_pw_f32 x2d shape");
+    assert_eq!(codes.len(), k * n, "shift_pw_f32 codes shape");
+    run_tiled_into(out, m, n, tiling, |i, n0, row| {
+        shift_row_f32(row, &x2d[i * k..(i + 1) * k], codes, n, n0);
+    });
 }
 
 /// FXP shift GEMM: `acc ± (xq << (p + SHIFT_FXP_EXP))` — shifts and adds
@@ -68,27 +120,28 @@ pub fn shift_pw_fxp(
     assert_eq!(xq.len(), m * k, "shift_pw_fxp xq shape");
     assert_eq!(codes.len(), k * n, "shift_pw_fxp codes shape");
     run_tiled(m, n, tiling, |m0, m1, n0, n1| {
-        let mut block = Vec::with_capacity((m1 - m0) * (n1 - n0));
-        for i in m0..m1 {
-            let xr = &xq[i * k..(i + 1) * k];
-            for j in n0..n1 {
-                let mut acc = 0i64;
-                for (t, &xv) in xr.iter().enumerate() {
-                    let c = codes[t * n + j];
-                    if c.s == 0 {
-                        continue;
-                    }
-                    let e = (c.p as i32 + SHIFT_FXP_EXP) as u32;
-                    let term = (xv as i64) << e;
-                    if c.s > 0 {
-                        acc += term;
-                    } else {
-                        acc -= term;
-                    }
-                }
-                block.push(acc);
-            }
+        let mut block = vec![0i64; (m1 - m0) * (n1 - n0)];
+        for (r, row) in block.chunks_exact_mut(n1 - n0).enumerate() {
+            shift_row_fxp(row, &xq[(m0 + r) * k..(m0 + r + 1) * k], codes, n, n0);
         }
         block
     })
+}
+
+/// [`shift_pw_fxp`] into a caller-provided `[M, N]` accumulator slice:
+/// sequential, allocation-free, bit-exact (same row kernel).
+pub fn shift_pw_fxp_into(
+    out: &mut [i64],
+    xq: &[i32],
+    codes: &[ShiftCode],
+    m: usize,
+    k: usize,
+    n: usize,
+    tiling: Option<Tiling>,
+) {
+    assert_eq!(xq.len(), m * k, "shift_pw_fxp xq shape");
+    assert_eq!(codes.len(), k * n, "shift_pw_fxp codes shape");
+    run_tiled_into(out, m, n, tiling, |i, n0, row| {
+        shift_row_fxp(row, &xq[i * k..(i + 1) * k], codes, n, n0);
+    });
 }

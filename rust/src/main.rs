@@ -85,7 +85,7 @@ USAGE: nasa <subcommand> [--options]
            [--queue-cap 256] [--overhead-us 50] [--mix 3,1 | --zipf 1.2]
            [--shards 1] [--adaptive] [--slo-us 5000] [--slo-batch-us 50000]
            [--class-cap-interactive N] [--class-cap-batch N]
-           [--interactive-frac 1.0] [--threads 0] [--fxp]
+           [--interactive-frac 1.0] [--threads 0] [--fxp] [--no-prepack]
            [--seed 42] [--trace out.json] [--json metrics.json]
            (live threaded service, wall-clock numbers; --shards runs an
             executor fleet over one shared SLO-classed queue; --adaptive
@@ -93,8 +93,11 @@ USAGE: nasa <subcommand> [--options]
             full-batch-first rule; --threads caps TOTAL worker threads —
             fleet + kernel fan-out — via the shared budget, 0=unlimited;
             --backend cpu runs real multiplication-free kernels so
-            logits/argmax are genuine; --trace records a replayable
-            arrival schedule for `loadtest --trace`)
+            logits/argmax are genuine; --no-prepack disables the cpu
+            backend's compile-once execution plans, re-deriving weight
+            state per request (bitwise-identical outputs, legacy cost);
+            --trace records a replayable arrival schedule for
+            `loadtest --trace`)
   loadtest --models runs/a.json,runs/b.json [--requests 200] [--seed 42]
            (--rps 1000 [--poisson | --bursty ON_US,OFF_US]
             | --closed-loop 4 [--think-us 0] | --trace in.json)
@@ -102,7 +105,7 @@ USAGE: nasa <subcommand> [--options]
            [--queue-cap 256] [--overhead-us 50] [--mix 3,1 | --zipf 1.2]
            [--shards 1] [--adaptive] [--slo-us 5000] [--slo-batch-us 50000]
            [--class-cap-interactive N] [--class-cap-batch N]
-           [--interactive-frac 1.0] [--fxp]
+           [--interactive-frac 1.0] [--fxp] [--no-prepack]
            [--json metrics.json] [--save-trace out.json]
            (deterministic virtual-time load test across N simulated
             shards: identical flags+seed give bit-identical batches,
@@ -412,6 +415,7 @@ fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>, f64)> {
             args.usize_or("class-cap-interactive", usize::MAX)?,
             args.usize_or("class-cap-batch", usize::MAX)?,
         ],
+        prepack: !args.flag("no-prepack"),
     };
     let mix = match (args.get("mix"), args.get("zipf")) {
         (Some(_), Some(_)) => bail!("--mix and --zipf are mutually exclusive"),

@@ -102,6 +102,15 @@ fn check_bits(bits: u32) -> Result<()> {
 /// Symmetric per-tensor quantization: scale from the tensor's own max
 /// magnitude (so nothing saturates), 1.0 for all-zero/non-finite input.
 pub fn quantize(w: &[f32], bits: u32) -> Result<QuantTensor> {
+    let mut q = Vec::new();
+    let scale = quantize_into(w, bits, &mut q)?;
+    Ok(QuantTensor { bits, scale, q })
+}
+
+/// [`quantize`] into a caller-owned code buffer (cleared, then filled —
+/// capacity is reused across calls, the serve hot path's per-sample
+/// activation quantization). Returns the derived scale.
+pub fn quantize_into(w: &[f32], bits: u32, out: &mut Vec<i32>) -> Result<f32> {
     check_bits(bits)?;
     let max_abs = w
         .iter()
@@ -109,7 +118,8 @@ pub fn quantize(w: &[f32], bits: u32) -> Result<QuantTensor> {
         .filter(|x| x.is_finite())
         .fold(0.0f32, |m, x| m.max(x.abs()));
     let scale = if max_abs > 0.0 { max_abs / qmax_for(bits) as f32 } else { 1.0 };
-    quantize_with_scale(w, bits, scale)
+    quantize_with_scale_into(w, bits, scale, out)?;
+    Ok(scale)
 }
 
 /// Quantize with a caller-chosen scale; elements beyond `±qmax·scale`
@@ -117,25 +127,32 @@ pub fn quantize(w: &[f32], bits: u32) -> Result<QuantTensor> {
 /// tests pin). Non-finite elements also map to the saturated extremes
 /// (NaN to 0), so the round-trip is always finite.
 pub fn quantize_with_scale(w: &[f32], bits: u32, scale: f32) -> Result<QuantTensor> {
+    let mut q = Vec::new();
+    quantize_with_scale_into(w, bits, scale, &mut q)?;
+    Ok(QuantTensor { bits, scale, q })
+}
+
+/// [`quantize_with_scale`] into a caller-owned code buffer (cleared,
+/// then filled; capacity reused across calls). Same element mapping.
+pub fn quantize_with_scale_into(w: &[f32], bits: u32, scale: f32, out: &mut Vec<i32>) -> Result<()> {
     check_bits(bits)?;
     if !(scale > 0.0) || !scale.is_finite() {
         bail!("quantize: scale must be finite and positive, got {scale}");
     }
     let qmax = qmax_for(bits);
-    let q = w
-        .iter()
-        .map(|&x| {
-            if x.is_nan() {
-                0
-            } else {
-                // f32 -> f64 for the divide so huge x / tiny scale cannot
-                // overflow to inf before the clamp.
-                let r = (x as f64 / scale as f64).round();
-                r.clamp(-(qmax as f64), qmax as f64) as i32
-            }
-        })
-        .collect();
-    Ok(QuantTensor { bits, scale, q })
+    out.clear();
+    out.reserve(w.len());
+    for &x in w {
+        out.push(if x.is_nan() {
+            0
+        } else {
+            // f32 -> f64 for the divide so huge x / tiny scale cannot
+            // overflow to inf before the clamp.
+            let r = (x as f64 / scale as f64).round();
+            r.clamp(-(qmax as f64), qmax as f64) as i32
+        });
+    }
+    Ok(())
 }
 
 /// Map integer codes back to f32 weights.

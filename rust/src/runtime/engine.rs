@@ -133,7 +133,14 @@ impl Engine {
         _arch: &crate::model::Arch,
         _fxp: bool,
         _tilings: &[Option<crate::accel::Tiling>],
+        _prepack: bool,
     ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execution-plan warmup is likewise a `Backend::Cpu` concern; no-op
+    /// here to keep the Engine surface uniform.
+    pub fn warm_child_plan(&self, _name: &str, _params: &[f32]) -> Result<()> {
         Ok(())
     }
 

@@ -361,19 +361,47 @@ impl Engine {
     }
 
     /// Register a child arch for native execution under `Backend::Cpu`
-    /// (compiles it into a [`CpuModel`] kernel plan). A no-op engine-side
-    /// concern on the other backends, but callers register
-    /// unconditionally-cheaply only when the backend is Cpu.
+    /// (compiles it into a [`CpuModel`] kernel plan). `prepack` controls
+    /// the compile-once execution-plan cache (`CpuModel::set_prepack`) —
+    /// on by default in serving, off under `--no-prepack`; outputs are
+    /// bitwise identical either way. A no-op engine-side concern on the
+    /// other backends, but callers register unconditionally-cheaply only
+    /// when the backend is Cpu.
     pub fn register_child_arch(
         &self,
         name: &str,
         arch: &Arch,
         fxp: bool,
         tilings: &[Option<Tiling>],
+        prepack: bool,
     ) -> Result<()> {
-        let model = Arc::new(CpuModel::compile(name, arch, fxp, tilings)?);
-        self.cpu_models.lock().expect("cpu models poisoned").insert(name.to_string(), model);
+        let mut model = CpuModel::compile(name, arch, fxp, tilings)?;
+        model.set_prepack(prepack);
+        self.cpu_models
+            .lock()
+            .expect("cpu models poisoned")
+            .insert(name.to_string(), Arc::new(model));
         Ok(())
+    }
+
+    /// Prebuild the execution plan of a registered model for one weight
+    /// binding, so the first request doesn't pay prepack latency (serve
+    /// warmup calls this). No-op on non-Cpu backends and on models with
+    /// prepack disabled; a typed error for unregistered names.
+    pub fn warm_child_plan(&self, name: &str, params: &[f32]) -> Result<()> {
+        if self.backend != Backend::Cpu {
+            return Ok(());
+        }
+        let model = self
+            .cpu_models
+            .lock()
+            .expect("cpu models poisoned")
+            .get(name)
+            .cloned();
+        match model {
+            Some(m) => m.warm_plan(params),
+            None => bail!("cpu backend: no registered model '{name}' to warm"),
+        }
     }
 
     /// "Load" an artifact: record its I/O signature (cached by path).
@@ -618,8 +646,10 @@ mod tests {
         let engine = Engine::with_backend(Backend::Cpu).unwrap();
         assert_eq!(engine.backend(), Backend::Cpu);
         let arch = shiftaddnet_like(8, 4);
-        engine.register_child_arch("m", &arch, false, &[]).unwrap();
+        engine.register_child_arch("m", &arch, false, &[], true).unwrap();
         let n_params: usize = arch.layers.iter().map(|l| l.n_weights() as usize).sum();
+        // Unknown names are typed errors; registered ones warm cleanly.
+        assert!(engine.warm_child_plan("ghost", &[]).is_err());
         let f = |shape: &[usize]| (shape.to_vec(), "float32".to_string());
         let io = ArtifactIo {
             path: "serve/m@b2.hlo.txt".into(),
@@ -628,6 +658,7 @@ mod tests {
         let exe = engine.load(Path::new("x"), &io).unwrap();
         let mut rng = Rng::new(42);
         let params: Vec<f32> = (0..n_params).map(|_| (rng.normal() * 0.1) as f32).collect();
+        engine.warm_child_plan("m", &params).unwrap();
         let x: Vec<f32> = (0..2 * 192).map(|_| rng.normal() as f32).collect();
         let run = |x: &[f32]| {
             let inputs = vec![

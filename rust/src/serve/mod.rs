@@ -52,7 +52,7 @@ pub use loadgen::{
     Trace,
 };
 pub use metrics::{ClassMetrics, LatencyHistogram, ModelMetrics, ServeMetrics, ShardMetrics};
-pub use model::{model_cost, model_cost_with_tilings, ModelCost, ServedModel};
+pub use model::{model_cost, model_cost_with_tilings, ModelCost, ServedModel, PREP_ELEMS_PER_US};
 pub use service::{
     AdaptiveBatcher, BatchQueue, BatchRecord, ClassedQueue, Rejected, Request, Response,
     ServeConfig, Service, SloClass,

@@ -48,7 +48,24 @@ impl ModelCost {
         let compute = (batch as f64 * self.per_inf_us()).ceil() as u64;
         overhead_us.saturating_add(compute).max(1)
     }
+
+    /// [`ModelCost::service_us`] plus the per-sample weight-preparation
+    /// sweep a non-prepacked backend pays: each sample re-derives kernel
+    /// state over `prep_elems` weight elements at [`PREP_ELEMS_PER_US`]
+    /// (ceiling, so any nonzero sweep costs ≥ 1µs per sample). With
+    /// `prep_elems == 0` — the prepacked path, where cached execution
+    /// plans carry that state — this reduces exactly to `service_us`.
+    pub fn service_us_with_prep(&self, batch: usize, overhead_us: u64, prep_elems: u64) -> u64 {
+        let prep = (batch as u64).saturating_mul(prep_elems.div_ceil(PREP_ELEMS_PER_US));
+        self.service_us(batch, overhead_us).saturating_add(prep)
+    }
 }
+
+/// Weight elements a non-prepacked backend re-derives per µs of virtual
+/// time (quantization codes, pow2 decompositions) — the deterministic
+/// price [`ModelCost::service_us_with_prep`] charges per sample when
+/// execution-plan prepacking is off.
+pub const PREP_ELEMS_PER_US: u64 = 1_000;
 
 /// Price an arch on the default serving accelerator via the auto-mapper.
 /// Falls back to the all-RS expert baseline, then to an ops-proportional
@@ -273,5 +290,25 @@ mod tests {
         // Per-request time must strictly improve with batching.
         assert!((t8 as f64) / 8.0 < t1 as f64);
         assert!(cost.service_us(1, 0) >= 1);
+    }
+
+    #[test]
+    fn prep_pricing_scales_with_batch_and_vanishes_when_prepacked() {
+        let cost = ModelCost {
+            period_cycles: 1000.0,
+            energy_pj: 1.0,
+            clock_hz: 250e6,
+            mapper_feasible: true,
+        };
+        // prep_elems = 0 (prepacked) is exactly the base price.
+        assert_eq!(cost.service_us_with_prep(4, 50, 0), cost.service_us(4, 50));
+        // A nonzero sweep costs at least 1µs per sample (ceiling)...
+        assert_eq!(cost.service_us_with_prep(4, 50, 1), cost.service_us(4, 50) + 4);
+        // ...and scales linearly in both weight elements and batch size.
+        let sweep = 2_500u64.div_ceil(PREP_ELEMS_PER_US);
+        assert_eq!(
+            cost.service_us_with_prep(8, 50, 2_500),
+            cost.service_us(8, 50) + 8 * sweep
+        );
     }
 }

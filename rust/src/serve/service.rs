@@ -103,6 +103,12 @@ pub struct ServeConfig {
     /// Per-class admission caps, indexed by [`SloClass::index`]
     /// (`usize::MAX` = only the global `queue_cap` binds).
     pub class_caps: [usize; SloClass::COUNT],
+    /// Prepack per-model execution plans at registration (cpu backend):
+    /// weight-derived kernel state is computed once and cached instead of
+    /// re-derived per request. On by default; `--no-prepack` turns it off
+    /// (outputs are bitwise identical either way, only cost changes — the
+    /// virtual-time model prices the per-request re-derivation).
+    pub prepack: bool,
 }
 
 impl Default for ServeConfig {
@@ -117,6 +123,7 @@ impl Default for ServeConfig {
             adaptive: false,
             slo_us: [5_000, 50_000],
             class_caps: [usize::MAX; SloClass::COUNT],
+            prepack: true,
         }
     }
 }
@@ -484,7 +491,12 @@ impl Service {
         // warming, so the loads below resolve against registered models.
         if engine.backend() == crate::runtime::Backend::Cpu {
             for m in &models {
-                engine.register_child_arch(&m.name, &m.arch, cfg.fxp, &m.tilings)?;
+                engine.register_child_arch(&m.name, &m.arch, cfg.fxp, &m.tilings, cfg.prepack)?;
+                if cfg.prepack {
+                    // Prebuild the execution plan alongside the per-batch
+                    // executable warmup so the first request pays neither.
+                    engine.warm_child_plan(&m.name, m.params_for(cfg.fxp))?;
+                }
             }
         }
         for m in &models {
@@ -525,7 +537,12 @@ impl Service {
             );
         }
         let classes = logits.len() / reqs.len();
-        let done_us = start_us + m.cost.service_us(reqs.len(), self.cfg.batch_overhead_us);
+        // Without prepack, every sample re-derives the weight-side kernel
+        // state; the virtual-time model prices that sweep over the weight
+        // elements (zero when prepacked plans carry it).
+        let prep_elems = if self.cfg.prepack { 0 } else { m.n_params() as u64 };
+        let done_us = start_us
+            + m.cost.service_us_with_prep(reqs.len(), self.cfg.batch_overhead_us, prep_elems);
         let responses = reqs
             .iter()
             .enumerate()

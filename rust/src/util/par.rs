@@ -233,7 +233,27 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let n = items.len();
+    par_map_fn(items.len(), jobs, |i| f(&items[i]))
+}
+
+/// [`par_map`] over the index range `0..n` without materializing an item
+/// list — `f(i)` computes element `i`. The cpu backend's batch fan-out
+/// uses this so a serve request never allocates an index `Vec`.
+pub fn par_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    par_map_fn(n, 0, f)
+}
+
+/// The engine under every `par_map*` flavor: fan `f(0..n)` across the
+/// work-queue threads, results in index order.
+fn par_map_fn<R, F>(n: usize, jobs: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
     let threads = if jobs == 0 {
         std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
     } else {
@@ -241,7 +261,7 @@ where
     }
     .min(n.max(1));
     if n < 2 || threads < 2 {
-        return items.iter().map(&f).collect();
+        return (0..n).map(f).collect();
     }
     // Shrink to the global budget's head-room (min_grant 0): a grant
     // below 2 degrades to a sequential map on the caller's thread, so a
@@ -249,7 +269,7 @@ where
     let claim = thread_budget().claim(threads, 0);
     let threads = claim.granted();
     if threads < 2 {
-        return items.iter().map(&f).collect();
+        return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<R>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
@@ -265,7 +285,7 @@ where
                 if i >= n {
                     break;
                 }
-                let r = f(&items[i]);
+                let r = f(i);
                 // SAFETY: fetch_add hands each index to exactly one
                 // thread, and `out` outlives the scope.
                 unsafe { *out_ptr.0.add(i) = Some(r) };
@@ -351,6 +371,13 @@ mod tests {
             x * 2
         });
         assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_indexed_matches_sequential() {
+        let seq: Vec<usize> = (0..500).map(|i| i * 7).collect();
+        assert_eq!(par_map_indexed(500, |i| i * 7), seq);
+        assert_eq!(par_map_indexed(0, |i| i), Vec::<usize>::new());
     }
 
     #[test]

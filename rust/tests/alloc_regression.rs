@@ -1,0 +1,105 @@
+//! Steady-state allocation regression for the CPU backend hot path.
+//!
+//! Lives in its own test binary (like `thread_budget.rs`) because it
+//! installs a counting `#[global_allocator]` — per-binary state that must
+//! not skew other suites — and because the single `#[test]` measures
+//! allocator traffic on one thread without concurrent tests adding noise.
+//!
+//! The pinned contract: after warmup, a prepacked `CpuModel` serving
+//! single-sample requests performs (almost) no heap allocation — the
+//! returned logits `Vec` and nothing else — while the legacy
+//! re-derive-per-request path allocates strictly more. Both paths must
+//! agree bitwise first, so the counts compare equal work.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// `System` wrapper that counts allocation events (alloc / realloc /
+/// alloc_zeroed; frees are not interesting here).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_prepacked_hot_path_is_allocation_free() {
+    use nasa::model::zoo::shiftaddnet_like;
+    use nasa::runtime::CpuModel;
+    use nasa::util::rng::Rng;
+
+    // FXP mode exercises the full quantize → integer kernels → dequant
+    // pipeline, where the legacy path's per-request weight re-derivation
+    // (conv quantize, shift pow2 decomposition) allocates the most.
+    let arch = shiftaddnet_like(8, 4);
+    let pre = CpuModel::compile("pre", &arch, true, &[]).unwrap();
+    let mut leg = CpuModel::compile("leg", &arch, true, &[]).unwrap();
+    leg.set_prepack(false);
+    let mut rng = Rng::new(0x5EED);
+    let params: Vec<f32> = (0..pre.n_params()).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let [h, w, c] = pre.sample_shape();
+    let x: Vec<f32> = (0..h * w * c).map(|_| rng.normal() as f32).collect();
+
+    // The counts only compare equal work if the outputs agree bitwise.
+    let a = pre.infer(&params, &x, 1).unwrap();
+    let b = leg.infer(&params, &x, 1).unwrap();
+    assert_eq!(
+        a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "prepacked and legacy logits must be bitwise identical"
+    );
+
+    const ITERS: u64 = 64;
+    let measure = |m: &CpuModel| {
+        // Warm the plan cache and this thread's scratch arenas so the
+        // measured window is pure steady state.
+        for _ in 0..3 {
+            m.infer(&params, &x, 1).unwrap();
+        }
+        let before = allocs();
+        for _ in 0..ITERS {
+            std::hint::black_box(m.infer(&params, &x, 1).unwrap());
+        }
+        (allocs() - before) as f64 / ITERS as f64
+    };
+    let pre_avg = measure(&pre);
+    let leg_avg = measure(&leg);
+
+    // Prepacked steady state: one allocation per request (the returned
+    // logits), with a little slack for incidental runtime traffic.
+    assert!(pre_avg <= 4.0, "prepacked hot path allocates {pre_avg}/request");
+    // Legacy re-derives conv/shift weight state per request: strictly
+    // more allocator traffic, which is exactly what prepacking removes.
+    assert!(
+        leg_avg > pre_avg,
+        "legacy path ({leg_avg}/request) should out-allocate prepacked ({pre_avg}/request)"
+    );
+}
