@@ -8,9 +8,7 @@
 //! machine-readable records (ci.sh uses both to maintain
 //! BENCH_mapper.json).
 
-use nasa::accel::{
-    allocate, AreaBudget, ChunkAccelerator, Mapping, MemoryConfig, UNIT_ENERGY_45NM,
-};
+use nasa::accel::{HwConfig, Mapping};
 use nasa::mapper::{auto_map, auto_map_reference, MapperConfig};
 use nasa::model::zoo::mobilenet_v2_like;
 use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
@@ -47,10 +45,9 @@ fn main() {
     let mut runner = Runner::from_args();
     header();
     let q = QuantSpec::default();
-    let costs = UNIT_ENERGY_45NM;
+    let hw = HwConfig::eyeriss_class();
     let arch = hybrid_arch(6);
-    let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
-    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    let accel = hw.build(&arch);
     let mapping = Mapping::all_rs(arch.layers.len());
 
     runner.bench("accel/simulate_net_19layers", || {
@@ -62,8 +59,7 @@ fn main() {
     // (the Fig. 8 residency effect) — bench whichever outcome, since the
     // cost being measured is the simulation itself.
     let mbv2 = mobilenet_v2_like(OpKind::Adder, 16, 10, 500);
-    let alloc2 = allocate(&mbv2, AreaBudget::macs_equivalent(168, &costs), &costs);
-    let accel2 = ChunkAccelerator::new(alloc2, MemoryConfig::default(), costs);
+    let accel2 = hw.build(&mbv2);
     let mapping2 = Mapping::all_rs(mbv2.layers.len());
     runner.bench("accel/simulate_net_mbv2_53layers", || {
         let r = accel2.simulate(&mbv2, &mapping2, &q);

@@ -1,0 +1,123 @@
+//! Bench/exhibit: the joint architecture x accelerator co-search — the
+//! NASH-style step on top of NASA. Evaluates a small arch set against
+//! the reference hardware grid (`HwSpaceSpec::reference`, 24 cells),
+//! prints the accuracy x EDP Pareto frontier, demonstrates that a
+//! resumed run replays byte-identically, and times one cell evaluation
+//! (the unit the grid scales by).
+//!
+//! Archs come from runs/ when searches have been saved there (same
+//! convention as fig8), falling back to representative synthetic
+//! hybrids, so the exhibit always prints.
+//!
+//! Run: cargo bench --bench cosearch_grid
+
+use nasa::accel::HwSpaceSpec;
+use nasa::coordinator::{
+    cosearch, evaluate_cell, frontier, lookup_acc, results_to_json, save_frontier,
+    CosearchOptions,
+};
+use nasa::model::{Arch, LayerDesc, OpKind};
+use nasa::util::bench::{header, Runner};
+use std::path::Path;
+
+fn fallback_archs() -> Vec<Arch> {
+    let mk = |name: &str, kind, c: usize, hw: usize, k: usize| LayerDesc {
+        name: name.into(),
+        kind,
+        cin: c,
+        cout: c,
+        h_out: hw,
+        w_out: hw,
+        k,
+        stride: 1,
+        groups: 1,
+    };
+    vec![
+        Arch {
+            name: "hybrid_repr".into(),
+            layers: vec![
+                mk("c1", OpKind::Conv, 16, 16, 3),
+                mk("s2", OpKind::Shift, 24, 8, 3),
+                mk("a3", OpKind::Adder, 32, 8, 5),
+                mk("c4", OpKind::Conv, 32, 4, 3),
+            ],
+            choices: vec![],
+        },
+        Arch {
+            name: "conv_repr".into(),
+            layers: vec![
+                mk("c1", OpKind::Conv, 16, 16, 3),
+                mk("c2", OpKind::Conv, 32, 8, 3),
+                mk("c3", OpKind::Conv, 64, 4, 3),
+            ],
+            choices: vec![],
+        },
+    ]
+}
+
+fn main() {
+    let runs = Path::new("runs");
+    let mut archs = nasa::report::load_archs(runs).unwrap_or_default();
+    if archs.len() < 2 {
+        archs = fallback_archs();
+    }
+    archs.truncate(4); // keep the exhibit grid small
+    let cells = HwSpaceSpec::reference().enumerate();
+    let accs: Vec<Option<f64>> = archs.iter().map(|a| lookup_acc(runs, &a.name)).collect();
+    println!(
+        "co-search grid: {} archs x {} hw cells = {} evaluations",
+        archs.len(),
+        cells.len(),
+        archs.len() * cells.len()
+    );
+
+    let opts = CosearchOptions { out_dir: runs.to_path_buf(), ..CosearchOptions::default() };
+    let t0 = std::time::Instant::now();
+    let results = match cosearch(&archs, &cells, &accs, &opts) {
+        Ok(r) => r,
+        Err(e) => {
+            println!("co-search failed: {e}");
+            return;
+        }
+    };
+    let fresh_secs = t0.elapsed().as_secs_f64();
+    let front = frontier(&results);
+    nasa::report::cosearch::print_results(&results, &front);
+    match save_frontier(&results, &opts) {
+        Ok(p) => println!("frontier exhibit: {}", p.display()),
+        Err(e) => println!("saving frontier failed: {e}"),
+    }
+
+    // Resume determinism: a second pass replays every cell from its
+    // checkpoint and must reproduce the frontier JSON byte for byte.
+    let resume_opts = CosearchOptions { resume: true, ..opts.clone() };
+    let t1 = std::time::Instant::now();
+    match cosearch(&archs, &cells, &accs, &resume_opts) {
+        Ok(replayed) => {
+            let fresh = results_to_json(&results, &front).to_string();
+            let again = results_to_json(&replayed, &frontier(&replayed)).to_string();
+            println!(
+                "resume replay: {} ({} cells, {:.2}s fresh vs {:.3}s resumed)",
+                if fresh == again { "byte-identical" } else { "MISMATCH" },
+                replayed.len(),
+                fresh_secs,
+                t1.elapsed().as_secs_f64()
+            );
+            assert_eq!(fresh, again, "resumed co-search diverged from the fresh run");
+        }
+        Err(e) => println!("resume pass failed: {e}"),
+    }
+
+    println!();
+    header();
+    let mut runner = Runner::from_args();
+    let arch = &archs[0];
+    let cell = &cells[0];
+    runner.bench("cosearch/evaluate_one_cell", || {
+        let r = evaluate_cell(arch, cell, None, true);
+        std::hint::black_box(r.combos_tried);
+    });
+    runner.record_value("cosearch/grid_cells", (archs.len() * cells.len()) as f64);
+    runner.record_value("cosearch/frontier_size", front.len() as f64);
+    runner.finish();
+}

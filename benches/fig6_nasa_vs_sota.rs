@@ -19,10 +19,7 @@
 //!
 //! Run: cargo bench --bench fig6_nasa_vs_sota
 
-use nasa::accel::{
-    addernet_accel, allocate, AreaBudget, ChunkAccelerator, EyerissSim, MemoryConfig,
-    PeKind, UNIT_ENERGY_45NM,
-};
+use nasa::accel::{HwConfig, PeKind};
 use nasa::coordinator::{run_sweep, save_outcomes, SearchConfig, SweepOptions, SweepRun};
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::{zoo, Arch, OpKind, QuantSpec};
@@ -144,17 +141,16 @@ fn acc_from_runs(space: &str) -> Option<f64> {
 fn main() {
     refresh_searched_archs();
     let q = QuantSpec::default();
-    let costs = UNIT_ENERGY_45NM;
-    let budget = AreaBudget::macs_equivalent(168, &costs);
-    let mem = MemoryConfig::default();
+    // Every system in the figure shares ONE hardware point: the default
+    // 168-MAC-equivalent class. Only the PE family / host differs per row.
+    let hw = HwConfig::eyeriss_class();
     let mut points = Vec::new();
 
     // --- NASA: hybrid searched model on chunk accel + auto-mapper ---
     let hybrid = searched_hybrid();
     if let Some(arch) = &hybrid {
-        let alloc = allocate(arch, budget, &costs);
-        let accel = ChunkAccelerator::new(alloc, mem, costs);
-        if let Some((_, s)) = auto_map(&accel, arch, &q, &MapperConfig::default()).best {
+        let accel = hw.build(arch);
+        if let Some((_, s)) = auto_map(&accel, arch, &q, &MapperConfig::for_hw(&hw)).best {
             points.push(Fig6Point {
                 system: "NASA (hybrid + chunk accel + auto-mapper)".into(),
                 acc: acc_from_runs("hybrid_all_c10").unwrap_or(f64::NAN),
@@ -165,7 +161,7 @@ fn main() {
 
     // --- FBNet-on-Eyeriss(MAC) ---
     if let Some(arch) = &conv_searched() {
-        let ey = EyerissSim::with_budget(PeKind::Mac, budget.total_um2, mem, costs);
+        let ey = hw.build_eyeriss(PeKind::Mac);
         if let Ok(s) = ey.simulate(arch, &q) {
             let acc = if arch.name.contains("twin") {
                 acc_from_runs("conv_twin").unwrap_or(f64::NAN)
@@ -182,7 +178,7 @@ fn main() {
 
     // --- DeepShift-MBv2 on Eyeriss(Shift) ---
     let ds = zoo::mobilenet_v2_like(OpKind::Shift, 16, 10, 500);
-    let ey_s = EyerissSim::with_budget(PeKind::ShiftUnit, budget.total_um2, mem, costs);
+    let ey_s = hw.build_eyeriss(PeKind::ShiftUnit);
     if let Ok(s) = ey_s.simulate(&ds, &q) {
         points.push(Fig6Point {
             system: "DeepShift-MBv2 [6] on Eyeriss-Shift".into(),
@@ -193,7 +189,7 @@ fn main() {
 
     // --- AdderNet-MBv2 on Eyeriss(Adder) ---
     let an = zoo::mobilenet_v2_like(OpKind::Adder, 16, 10, 500);
-    let ey_a = EyerissSim::with_budget(PeKind::AdderUnit, budget.total_um2, mem, costs);
+    let ey_a = hw.build_eyeriss(PeKind::AdderUnit);
     if let Ok(s) = ey_a.simulate(&an, &q) {
         points.push(Fig6Point {
             system: "AdderNet-MBv2 [20] on Eyeriss-Adder".into(),
@@ -204,7 +200,7 @@ fn main() {
 
     // --- AdderNet-ResNet32 on the dedicated accelerator [21] ---
     let rn = zoo::resnet32_adder_like(16, 10);
-    let ded = addernet_accel(budget.total_um2, mem, costs);
+    let ded = hw.build_addernet();
     if let Ok(s) = ded.simulate(&rn, &q) {
         points.push(Fig6Point {
             system: "AdderNet-ResNet32 on dedicated accel [21]".into(),
@@ -231,8 +227,7 @@ fn main() {
     println!();
     header();
     if let Some(arch) = &hybrid {
-        let alloc = allocate(arch, budget, &costs);
-        let accel = ChunkAccelerator::new(alloc, mem, costs);
+        let accel = hw.build(arch);
         Bench::new("fig6/nasa_pipeline_simulation").run(|| {
             let m = nasa::accel::Mapping::all_rs(arch.layers.len());
             std::hint::black_box(accel.simulate(arch, &m, &q).map(|s| s.energy_pj).ok());

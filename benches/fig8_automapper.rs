@@ -5,7 +5,7 @@
 //!
 //! Run: cargo bench --bench fig8_automapper
 
-use nasa::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, UNIT_ENERGY_45NM};
+use nasa::accel::{HwConfig, MemoryConfig};
 use nasa::mapper::{auto_map, auto_map_reference, MapperConfig};
 use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
 use nasa::report::fig8::{print_rows, rows_to_log, Fig8Row};
@@ -79,13 +79,12 @@ fn model_set() -> Vec<Arch> {
 
 fn run_setting(models: &[Arch], mem: MemoryConfig, label: &str) -> Vec<Fig8Row> {
     let q = QuantSpec::default();
-    let costs = UNIT_ENERGY_45NM;
-    let budget = AreaBudget::macs_equivalent(168, &costs);
+    let mut hw = HwConfig::eyeriss_class();
+    hw.mem = mem;
     let mut rows = Vec::new();
     for arch in models {
-        let alloc = allocate(arch, budget, &costs);
-        let accel = ChunkAccelerator::new(alloc, mem, costs);
-        let r = auto_map(&accel, arch, &q, &MapperConfig::default());
+        let accel = hw.build(arch);
+        let r = auto_map(&accel, arch, &q, &MapperConfig::for_hw(&hw));
         let Some((m, s)) = &r.best else {
             println!("  {}/{}: nothing feasible!", label, arch.name);
             continue;
@@ -122,9 +121,7 @@ fn main() {
     header();
     let mut runner = Runner::from_args();
     let arch = &models[0];
-    let costs = UNIT_ENERGY_45NM;
-    let alloc = allocate(arch, AreaBudget::macs_equivalent(168, &costs), &costs);
-    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    let accel = HwConfig::eyeriss_class().build(arch);
     let q = QuantSpec::default();
     let cfg = MapperConfig::default();
     let factored = runner.bench("fig8/auto_map_one_model", || {

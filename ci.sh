@@ -50,6 +50,25 @@ cargo run --release --quiet -- sweep --artifacts fixtures/tiny_manifest \
 test -f target/ci_sweep/tiny_vanilla_recipe_s1/checkpoint.json
 test -f target/ci_sweep/arch_tiny_vanilla_recipe_s2.json
 
+say "cosearch smoke: nasa cosearch (2 archs x 4 hw cells, resume replay)"
+# Joint architecture x accelerator co-search over an explicit 2x2 hw
+# grid (gb x noc, seeded from the default cell) using the two archs the
+# sweep smoke just emitted: the frontier exhibit must carry its schema
+# tag and a full result row per (arch, cell), and a --resume rerun must
+# replay every cell from its per-cell checkpoint and reproduce
+# frontier.json byte for byte.
+rm -rf target/ci_cosearch
+COSEARCH_ARCHS=target/ci_sweep/arch_tiny_vanilla_recipe_s1.json,target/ci_sweep/arch_tiny_vanilla_recipe_s2.json
+cargo run --release --quiet -- cosearch --archs "$COSEARCH_ARCHS" \
+    --gb 55296,110592 --noc 8,16 --jobs 2 --out target/ci_cosearch
+cp target/ci_cosearch/cosearch/frontier.json target/ci_cosearch/frontier_fresh.json
+cargo run --release --quiet -- cosearch --archs "$COSEARCH_ARCHS" \
+    --gb 55296,110592 --noc 8,16 --jobs 2 --out target/ci_cosearch --resume
+cmp target/ci_cosearch/frontier_fresh.json target/ci_cosearch/cosearch/frontier.json
+grep -q '"schema":"cosearch_frontier_v1"' target/ci_cosearch/cosearch/frontier.json
+grep -q '"n_cells":4' target/ci_cosearch/cosearch/frontier.json
+grep -q '"n_archs":2' target/ci_cosearch/cosearch/frontier.json
+
 say "serve smoke: live service + deterministic loadtest replay"
 # Derive two tiny children from the committed fixture manifest, launch
 # the in-process live service (closed loop, 200 requests across 4

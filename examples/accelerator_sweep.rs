@@ -9,10 +9,7 @@
 //!
 //! Run: cargo run --release --example accelerator_sweep
 
-use nasa::accel::{
-    allocate, allocate_equal, AreaBudget, ChunkAccelerator, Mapping, MemoryConfig,
-    UNIT_ENERGY_45NM,
-};
+use nasa::accel::{AllocPolicy, HwConfig, Mapping, MemoryConfig};
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::zoo::mobilenet_v2_like;
 use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
@@ -52,7 +49,6 @@ fn hybrid_arch() -> Arch {
 
 fn main() {
     let q = QuantSpec::default();
-    let costs = UNIT_ENERGY_45NM;
     let workloads = vec![
         ("hybrid-searched", hybrid_arch()),
         ("deepshift-mbv2", mobilenet_v2_like(OpKind::Shift, 16, 10, 500)),
@@ -63,16 +59,15 @@ fn main() {
     println!("{:<18} {:>8} {:>10} {:>10} {:>10}", "workload", "budget", "CLP/SLP/ALP", "period", "EDP pJ*s");
     for (name, arch) in &workloads {
         for budget_pes in [64, 128, 168, 256, 512] {
-            let budget = AreaBudget::macs_equivalent(budget_pes, &costs);
-            let alloc = allocate(arch, budget, &costs);
-            let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
-            let r = auto_map(&accel, arch, &q, &MapperConfig::default());
+            let hw = HwConfig::with_budget_pes(budget_pes);
+            let accel = hw.build(arch);
+            let r = auto_map(&accel, arch, &q, &MapperConfig::for_hw(&hw));
             match r.best {
                 Some((_, s)) => println!(
                     "{:<18} {:>8} {:>10} {:>10.0} {:>10.3e}",
                     name,
                     budget_pes,
-                    format!("{}/{}/{}", alloc.clp, alloc.slp, alloc.alp),
+                    format!("{}/{}/{}", accel.alloc.clp, accel.alloc.slp, accel.alloc.alp),
                     s.period_cycles,
                     s.edp(accel.clock_hz)
                 ),
@@ -84,10 +79,12 @@ fn main() {
     println!("\n== (b) Eq. 8 proportional vs equal-split allocation (all-RS mapping) ==");
     println!("{:<18} {:>14} {:>14} {:>9}", "workload", "Eq.8 period", "equal period", "gain");
     for (name, arch) in &workloads {
-        let budget = AreaBudget::macs_equivalent(168, &costs);
         let m = Mapping::all_rs(arch.layers.len());
-        let prop = ChunkAccelerator::new(allocate(arch, budget, &costs), MemoryConfig::default(), costs);
-        let eq = ChunkAccelerator::new(allocate_equal(arch, budget, &costs), MemoryConfig::default(), costs);
+        let hw = HwConfig::eyeriss_class();
+        let mut hw_eq = hw.clone();
+        hw_eq.alloc_policy = AllocPolicy::Equal;
+        let prop = hw.build(arch);
+        let eq = hw_eq.build(arch);
         match (prop.simulate(arch, &m, &q), eq.simulate(arch, &m, &q)) {
             (Ok(sp), Ok(se)) => println!(
                 "{:<18} {:>14.0} {:>14.0} {:>8.1}%",
@@ -103,10 +100,11 @@ fn main() {
     println!("\n== (c) shared-buffer pressure (auto-mapper resilience) ==");
     println!("{:<18} {:>12} {:>12} {:>14}", "workload", "default EDP", "tight EDP", "RS@tight");
     for (name, arch) in &workloads {
-        let budget = AreaBudget::macs_equivalent(168, &costs);
-        let mk = |mem| {
-            let accel = ChunkAccelerator::new(allocate(arch, budget, &costs), mem, costs);
-            let r = auto_map(&accel, arch, &q, &MapperConfig::default());
+        let mk = |mem: MemoryConfig| {
+            let mut hw = HwConfig::eyeriss_class();
+            hw.mem = mem;
+            let accel = hw.build(arch);
+            let r = auto_map(&accel, arch, &q, &MapperConfig::for_hw(&hw));
             (accel, r)
         };
         let (a1, r1) = mk(MemoryConfig::default());

@@ -17,7 +17,7 @@
 //! (fast mode: NASA_E2E_FAST=1 shrinks epochs for CI-style smoke runs)
 
 use anyhow::{bail, Result};
-use nasa::accel::{allocate, AreaBudget, ChunkAccelerator, EyerissSim, MemoryConfig, PeKind, UNIT_ENERGY_45NM};
+use nasa::accel::{HwConfig, PeKind};
 use nasa::coordinator::{run_search, train_child, Dataset, DatasetConfig, SearchConfig, TrainConfig};
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::{arch_op_counts, QuantSpec};
@@ -42,8 +42,7 @@ fn main() -> Result<()> {
     std::fs::create_dir_all(runs)?;
     let engine = Engine::cpu()?;
     let q = QuantSpec::default();
-    let costs = UNIT_ENERGY_45NM;
-    let budget = AreaBudget::macs_equivalent(168, &costs);
+    let hw = HwConfig::eyeriss_class();
 
     let mut fig6_points = Vec::new();
 
@@ -86,9 +85,8 @@ fn main() -> Result<()> {
         let counts = arch_op_counts(arch);
         let (m, s, a) = counts.in_millions();
         println!("ops: mult={m:.2}M shift={s:.2}M add={a:.2}M");
-        let alloc = allocate(arch, budget, &costs);
-        let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
-        let mapped = auto_map(&accel, arch, &q, &MapperConfig::default());
+        let accel = hw.build(arch);
+        let mapped = auto_map(&accel, arch, &q, &MapperConfig::for_hw(&hw));
         let edp = match &mapped.best {
             Some((_, st)) => st.edp(accel.clock_hz),
             None => f64::NAN,
@@ -102,7 +100,7 @@ fn main() -> Result<()> {
 
         // Conv-only arch also on Eyeriss-MAC = the paper's FBNet baseline.
         if space.starts_with("conv") {
-            let ey = EyerissSim::with_budget(PeKind::Mac, budget.total_um2, MemoryConfig::default(), costs);
+            let ey = hw.build_eyeriss(PeKind::Mac);
             if let Ok(st) = ey.simulate(arch, &q) {
                 fig6_points.push(Fig6Point {
                     system: "FBNet-like on Eyeriss-MAC".into(),
@@ -140,7 +138,7 @@ fn main() -> Result<()> {
             tw_log.save(runs)?;
             let tw_arch = nasa::model::Arch::from_choices(sn, &twin, "conv_twin")?;
             tw_arch.save(&runs.join("arch_conv_twin.json"))?;
-            let ey = EyerissSim::with_budget(PeKind::Mac, budget.total_um2, MemoryConfig::default(), costs);
+            let ey = hw.build_eyeriss(PeKind::Mac);
             if let Ok(st) = ey.simulate(&tw_arch, &q) {
                 fig6_points.push(Fig6Point {
                     system: "Conv-twin of NASA arch on Eyeriss-MAC".into(),

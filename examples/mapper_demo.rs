@@ -5,10 +5,7 @@
 //!
 //! Run: cargo run --release --example mapper_demo
 
-use nasa::accel::{
-    allocate, AreaBudget, ChunkAccelerator, Mapping, MemoryConfig, UNIT_ENERGY_45NM,
-    ALL_DATAFLOWS,
-};
+use nasa::accel::{HwConfig, Mapping, ALL_DATAFLOWS};
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
 
@@ -42,12 +39,11 @@ fn demo_arch() -> Arch {
 fn main() {
     let arch = demo_arch();
     let q = QuantSpec::default();
-    let costs = UNIT_ENERGY_45NM;
-    let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
-    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    let hw = HwConfig::eyeriss_class();
+    let accel = hw.build(&arch);
     println!(
         "model '{}' -> Eq.8 allocation CLP={} SLP={} ALP={}",
-        arch.name, alloc.clp, alloc.slp, alloc.alp
+        arch.name, accel.alloc.clp, accel.alloc.slp, accel.alloc.alp
     );
 
     // Exhaustive view: EDP for every per-chunk dataflow combo (even split).
@@ -79,7 +75,7 @@ fn main() {
     }
 
     // Full search incl. tilings + splits.
-    let r = auto_map(&accel, &arch, &q, &MapperConfig::default());
+    let r = auto_map(&accel, &arch, &q, &MapperConfig::for_hw(&hw));
     println!(
         "\nfull auto-map: {} candidates evaluated, {} infeasible",
         r.combos_tried, r.combos_infeasible

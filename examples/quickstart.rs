@@ -10,7 +10,7 @@
 //! Run: cargo run --release --example quickstart
 
 use anyhow::{bail, Result};
-use nasa::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, UNIT_ENERGY_45NM};
+use nasa::accel::HwConfig;
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::{arch_op_counts, Arch, QuantSpec};
 use nasa::nas::init_params;
@@ -64,14 +64,13 @@ fn main() -> Result<()> {
     let (m, s, a) = counts.in_millions();
     println!("ops: mult={m:.2}M shift={s:.2}M add={a:.2}M");
 
-    let costs = UNIT_ENERGY_45NM;
-    let alloc = allocate(&arch, AreaBudget::macs_equivalent(168, &costs), &costs);
-    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    let hw = HwConfig::eyeriss_class();
+    let accel = hw.build(&arch);
     println!(
         "Eq.8 PE allocation under a 168-MAC-equivalent area budget: CLP={} SLP={} ALP={}",
         accel.alloc.clp, accel.alloc.slp, accel.alloc.alp
     );
-    let r = auto_map(&accel, &arch, &QuantSpec::default(), &MapperConfig::default());
+    let r = auto_map(&accel, &arch, &QuantSpec::default(), &MapperConfig::for_hw(&hw));
     if let Some((mapping, stats)) = &r.best {
         println!(
             "auto-mapped dataflows: CLP={} SLP={} ALP={} -> EDP {:.3e} pJ*s",

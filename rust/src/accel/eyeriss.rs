@@ -6,13 +6,16 @@
 //!   for FBNet, Shift Units for DeepShift, Adder Units for AdderNet; the
 //!   array size is re-derived from the same area budget (smaller units ->
 //!   more PEs).
-//! * `AdderNetAccel` — the dedicated AdderNet accelerator [21]: adder PE
-//!   array with a weight-stationary dataflow (its "minimalist" design),
-//!   sequential execution.
+//! * the dedicated AdderNet accelerator [21]: adder PE array with a
+//!   weight-stationary dataflow (its "minimalist" design), sequential
+//!   execution.
 //!
 //! Both share the chunk-level per-layer analytical model so comparisons
 //! against the NASA chunk accelerator isolate architecture (pipelining,
-//! allocation, mapping) rather than modeling differences.
+//! allocation, mapping) rather than modeling differences. Construction
+//! goes through [`crate::accel::HwConfig::build_eyeriss`] /
+//! [`crate::accel::HwConfig::build_addernet`] so baselines are priced at
+//! the same hardware point as the NASA accelerator they're compared to.
 
 use super::chunk::{Chunk, Infeasible};
 use super::dataflow::Dataflow;
@@ -40,18 +43,6 @@ pub struct EyerissSim {
 }
 
 impl EyerissSim {
-    /// Eyeriss with the PE datapath matched to `kind`, sized to `budget`.
-    pub fn with_budget(kind: PeKind, budget_um2: f64, mem: MemoryConfig, costs: UnitCosts) -> Self {
-        EyerissSim {
-            pe_kind: kind,
-            n_pes: pes_for_budget(kind, budget_um2, &costs),
-            dataflow: Dataflow::Rs,
-            mem,
-            costs,
-            clock_hz: 250e6,
-        }
-    }
-
     /// Execute every layer sequentially on the single array. Layers whose
     /// operator family does not match the PE kind run at the MAC-unit
     /// energy (the stem/head of multiplication-free baselines keep a
@@ -89,17 +80,10 @@ impl EyerissSim {
     }
 }
 
-/// The dedicated AdderNet accelerator [21]: adder array, WS dataflow.
-pub fn addernet_accel(budget_um2: f64, mem: MemoryConfig, costs: UnitCosts) -> EyerissSim {
-    EyerissSim {
-        dataflow: Dataflow::Ws,
-        ..EyerissSim::with_budget(PeKind::AdderUnit, budget_um2, mem, costs)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::hw::HwConfig;
     use crate::accel::pe::UNIT_ENERGY_45NM;
     use crate::model::zoo::mobilenet_v2_like;
 
@@ -118,8 +102,7 @@ mod tests {
 
     #[test]
     fn sequential_period_equals_latency() {
-        let c = UNIT_ENERGY_45NM;
-        let sim = EyerissSim::with_budget(PeKind::Mac, budget(), MemoryConfig::default(), c);
+        let sim = HwConfig::eyeriss_class().build_eyeriss(PeKind::Mac);
         let arch = mobilenet_v2_like(OpKind::Conv, 16, 10, 500);
         let s = sim.simulate(&arch, &QuantSpec::default()).unwrap();
         assert_eq!(s.period_cycles, s.latency_cycles);
@@ -127,15 +110,13 @@ mod tests {
 
     #[test]
     fn deepshift_on_shift_eyeriss_cheaper_energy_than_conv_on_mac_eyeriss() {
-        let c = UNIT_ENERGY_45NM;
+        let hw = HwConfig::eyeriss_class();
         let q = QuantSpec::default();
         let conv_net = mobilenet_v2_like(OpKind::Conv, 16, 10, 500);
         let shift_net = mobilenet_v2_like(OpKind::Shift, 16, 10, 500);
-        let mac_sim = EyerissSim::with_budget(PeKind::Mac, budget(), MemoryConfig::default(), c);
-        let shift_sim =
-            EyerissSim::with_budget(PeKind::ShiftUnit, budget(), MemoryConfig::default(), c);
-        let e_conv = mac_sim.simulate(&conv_net, &q).unwrap().energy_pj;
-        let e_shift = shift_sim.simulate(&shift_net, &q).unwrap().energy_pj;
+        let e_conv = hw.build_eyeriss(PeKind::Mac).simulate(&conv_net, &q).unwrap().energy_pj;
+        let e_shift =
+            hw.build_eyeriss(PeKind::ShiftUnit).simulate(&shift_net, &q).unwrap().energy_pj;
         assert!(e_shift < e_conv, "shift {e_shift} vs conv {e_conv}");
     }
 }

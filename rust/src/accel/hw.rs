@@ -1,0 +1,391 @@
+//! First-class accelerator hardware description (`HwConfig`) and the
+//! enumerable hardware search space (`HwSpaceSpec`) — the second half of
+//! the joint architecture x accelerator co-search.
+//!
+//! NASA fixes the accelerator (Eyeriss-class 108KB GB, 168-MAC-equivalent
+//! area, 45nm unit costs) and searches only the network + mapping; NASH
+//! (arXiv 2409.04829) searches the accelerator jointly. `HwConfig`
+//! gathers every previously hard-coded constant — area budget, memory
+//! geometry, unit-cost table, clock, PE-allocation policy and the mapper's
+//! dataflow set — into one value that flows explicitly through
+//! construction (`build` / `build_eyeriss` / `build_addernet`), the
+//! mapper (`MapperConfig::for_hw`, `auto_map_hw`), the NAS hardware loss
+//! (`nas::cost_table_for`) and the sweep orchestrator (`GridSpec::hw`).
+//!
+//! `HwSpaceSpec` enumerates divisor-style grids over the four searchable
+//! axes (gb_bytes / rf_bytes_per_pe / noc_bytes_per_cycle / area budget
+//! in MAC-equivalent PEs), validity-checks every cell (the RF must admit
+//! at least one dataflow for every PE kind, the area budget must admit
+//! >= 1 PE per chunk family) and dedups by bit pattern — the same idiom
+//! `mapper::space::gb_splits` uses for resource splits.
+
+use super::alloc::{allocate, allocate_equal, AreaBudget, PeAllocation};
+use super::dataflow::{rf_per_pe, Dataflow, LoopDims, ALL_DATAFLOWS};
+use super::eyeriss::{pes_for_budget, EyerissSim};
+use super::memory::MemoryConfig;
+use super::pe::{PeKind, UnitCosts, UNIT_ENERGY_45NM};
+use super::schedule::ChunkAccelerator;
+use crate::model::arch::{Arch, OpKind};
+use crate::model::quant::QuantSpec;
+
+/// How the area budget is split across the CLP/SLP/ALP chunk families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Eq. 8: PEs proportional to each family's op load (the paper's
+    /// latency-balancing rule).
+    Proportional,
+    /// Naive equal-area split across the families present in the arch
+    /// (the allocation-ablation baseline).
+    Equal,
+}
+
+/// One complete accelerator hardware point: everything the simulator,
+/// mapper and NAS hardware loss need to price an architecture. All
+/// construction of `ChunkAccelerator` / `EyerissSim` goes through the
+/// `build*` methods, so exhibits, co-search and serving price hardware
+/// identically.
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    /// Total silicon area for PEs (anchored in MAC equivalents, Sec. 5.2).
+    pub budget: AreaBudget,
+    /// Shared memory geometry: GB capacity, RF/PE, NoC and DRAM bandwidth.
+    pub mem: MemoryConfig,
+    /// Unit energy/area cost table (45nm by default).
+    pub costs: UnitCosts,
+    pub clock_hz: f64,
+    pub alloc_policy: AllocPolicy,
+    /// Dataflows the auto-mapper may assign per chunk. The full set is
+    /// the paper's 4 (RS/IS/WS/OS); restricting it narrows the mapping
+    /// space (a hardware property: which reuse patterns the NoC/RF
+    /// datapath supports).
+    pub dataflows: Vec<Dataflow>,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig::eyeriss_class()
+    }
+}
+
+impl HwConfig {
+    /// The paper's fixed accelerator: 168-MAC-equivalent area budget,
+    /// Eyeriss-class memory, 45nm costs, 250MHz, Eq. 8 allocation, all
+    /// four dataflows. Equal to what every call site hard-coded before
+    /// the hardware axis became searchable.
+    pub fn eyeriss_class() -> Self {
+        HwConfig::with_budget_pes(168)
+    }
+
+    /// `eyeriss_class` with the area budget re-anchored to `n` MAC
+    /// equivalents (the CLI `--budget-pes` axis).
+    pub fn with_budget_pes(n: usize) -> Self {
+        HwConfig {
+            budget: AreaBudget::macs_equivalent(n, &UNIT_ENERGY_45NM),
+            mem: MemoryConfig::default(),
+            costs: UNIT_ENERGY_45NM,
+            clock_hz: 250e6,
+            alloc_policy: AllocPolicy::Proportional,
+            dataflows: ALL_DATAFLOWS.to_vec(),
+        }
+    }
+
+    /// The PE allocation this hardware point gives `arch` under its
+    /// allocation policy.
+    pub fn allocate(&self, arch: &Arch) -> PeAllocation {
+        match self.alloc_policy {
+            AllocPolicy::Proportional => allocate(arch, self.budget, &self.costs),
+            AllocPolicy::Equal => allocate_equal(arch, self.budget, &self.costs),
+        }
+    }
+
+    /// The chunk-based NASA accelerator for `arch` at this hardware point
+    /// — the ONE construction path for `ChunkAccelerator`.
+    pub fn build(&self, arch: &Arch) -> ChunkAccelerator {
+        ChunkAccelerator {
+            alloc: self.allocate(arch),
+            mem: self.mem,
+            costs: self.costs,
+            clock_hz: self.clock_hz,
+        }
+    }
+
+    /// An Eyeriss-class single-array baseline with the PE datapath
+    /// matched to `kind`, sized to this hardware point's budget (RS
+    /// dataflow, sequential execution).
+    pub fn build_eyeriss(&self, kind: PeKind) -> EyerissSim {
+        EyerissSim {
+            pe_kind: kind,
+            n_pes: pes_for_budget(kind, self.budget.total_um2, &self.costs),
+            dataflow: Dataflow::Rs,
+            mem: self.mem,
+            costs: self.costs,
+            clock_hz: self.clock_hz,
+        }
+    }
+
+    /// The dedicated AdderNet accelerator [21]: adder PE array with a
+    /// weight-stationary dataflow (its "minimalist" design).
+    pub fn build_addernet(&self) -> EyerissSim {
+        EyerissSim { dataflow: Dataflow::Ws, ..self.build_eyeriss(PeKind::AdderUnit) }
+    }
+
+    /// Structural feasibility of this hardware point, independent of any
+    /// architecture: positive resources, an area budget admitting >= 1 PE
+    /// of EVERY chunk family, and an RF large enough that every PE kind
+    /// has at least one admissible dataflow (OS pins only
+    /// quantized-operand pairs + a psum, so its requirement is the
+    /// dims-independent floor).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.budget.total_um2 > 0.0) {
+            return Err(format!("non-positive area budget {}", self.budget.total_um2));
+        }
+        if self.mem.gb_bytes == 0 {
+            return Err("zero global buffer".into());
+        }
+        if !(self.mem.noc_bytes_per_cycle > 0.0 && self.mem.noc_bytes_per_cycle.is_finite()) {
+            return Err(format!("bad NoC bandwidth {}", self.mem.noc_bytes_per_cycle));
+        }
+        if !(self.mem.dram_bytes_per_cycle > 0.0 && self.mem.dram_bytes_per_cycle.is_finite()) {
+            return Err(format!("bad DRAM bandwidth {}", self.mem.dram_bytes_per_cycle));
+        }
+        if !(self.clock_hz > 0.0 && self.clock_hz.is_finite()) {
+            return Err(format!("bad clock {}", self.clock_hz));
+        }
+        if self.dataflows.is_empty() {
+            return Err("empty dataflow set".into());
+        }
+        let family_area: f64 = [PeKind::Mac, PeKind::ShiftUnit, PeKind::AdderUnit]
+            .iter()
+            .map(|k| k.area_um2(&self.costs))
+            .sum();
+        if self.budget.total_um2 < family_area {
+            return Err(format!(
+                "area budget {:.0}um2 cannot host one PE per chunk family ({family_area:.0}um2)",
+                self.budget.total_um2
+            ));
+        }
+        // RF floor: OS is dims-independent, so these are the minimum RF
+        // bytes any mapping of each family can need.
+        let q = QuantSpec::default();
+        let d = LoopDims { m: 1, n: 1, k: 1 };
+        for kind in [OpKind::Conv, OpKind::Shift, OpKind::Adder] {
+            let need = rf_per_pe(Dataflow::Os, &d, &q, kind);
+            if (self.mem.rf_bytes_per_pe as f64) < need {
+                return Err(format!(
+                    "RF {}B per PE below the {need:.0}B floor for {kind:?} (no dataflow fits)",
+                    self.mem.rf_bytes_per_pe
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Filesystem-safe cell name encoding the four searchable axes, used
+    /// for sweep run suffixes and co-search result files. f64 Display is
+    /// shortest-roundtrip, so names are stable across runs.
+    pub fn cell_name(&self) -> String {
+        format!(
+            "gb{}_rf{}_noc{}_pe{}",
+            self.mem.gb_bytes,
+            self.mem.rf_bytes_per_pe,
+            self.mem.noc_bytes_per_cycle,
+            (self.budget.total_um2 / PeKind::Mac.area_um2(&self.costs)).round() as usize,
+        )
+    }
+}
+
+/// One named, validity-checked cell of the hardware grid.
+#[derive(Clone, Debug)]
+pub struct HwCell {
+    pub name: String,
+    pub hw: HwConfig,
+}
+
+/// Divisor-style grids over the four searchable hardware axes. Enumerate
+/// with [`HwSpaceSpec::enumerate`]; cells that fail
+/// [`HwConfig::validate`] are dropped (feasible-by-construction), and the
+/// grid is deduplicated by bit pattern like `mapper::space::gb_splits`.
+#[derive(Clone, Debug)]
+pub struct HwSpaceSpec {
+    pub gb_bytes: Vec<usize>,
+    pub rf_bytes_per_pe: Vec<usize>,
+    pub noc_bytes_per_cycle: Vec<f64>,
+    /// Area budgets in MAC-equivalent PE counts.
+    pub budget_pes: Vec<usize>,
+}
+
+impl HwSpaceSpec {
+    /// The degenerate single-cell space: exactly the paper's fixed
+    /// accelerator.
+    pub fn default_cell() -> Self {
+        let d = MemoryConfig::default();
+        HwSpaceSpec {
+            gb_bytes: vec![d.gb_bytes],
+            rf_bytes_per_pe: vec![d.rf_bytes_per_pe],
+            noc_bytes_per_cycle: vec![d.noc_bytes_per_cycle],
+            budget_pes: vec![168],
+        }
+    }
+
+    /// The reference co-search grid: a power-of-two ladder around the
+    /// Eyeriss-class defaults on every memory axis at the paper's area
+    /// budget. 4 GB sizes x 2 RF sizes x 3 NoC widths x 1 budget =
+    /// 24 cells, all valid — the count `tests/hw_space.rs` pins.
+    pub fn reference() -> Self {
+        HwSpaceSpec {
+            gb_bytes: vec![27 * 1024, 54 * 1024, 108 * 1024, 216 * 1024],
+            rf_bytes_per_pe: vec![256, 512],
+            noc_bytes_per_cycle: vec![8.0, 16.0, 32.0],
+            budget_pes: vec![168],
+        }
+    }
+
+    /// Expand the grid into named, validity-checked, bit-pattern-deduped
+    /// cells, in axis-major order (gb, rf, noc, pes) so enumeration — and
+    /// everything keyed on it, like co-search result files — is
+    /// deterministic.
+    pub fn enumerate(&self) -> Vec<HwCell> {
+        let mut seen = std::collections::HashSet::new();
+        let mut cells = Vec::new();
+        for &gb in &self.gb_bytes {
+            for &rf in &self.rf_bytes_per_pe {
+                for &noc in &self.noc_bytes_per_cycle {
+                    for &pes in &self.budget_pes {
+                        if !seen.insert((gb, rf, noc.to_bits(), pes)) {
+                            continue;
+                        }
+                        let mut hw = HwConfig::with_budget_pes(pes);
+                        hw.mem.gb_bytes = gb;
+                        hw.mem.rf_bytes_per_pe = rf;
+                        hw.mem.noc_bytes_per_cycle = noc;
+                        if hw.validate().is_err() {
+                            continue;
+                        }
+                        cells.push(HwCell { name: hw.cell_name(), hw });
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::arch::LayerDesc;
+
+    fn hybrid_arch() -> Arch {
+        let mk = |kind, name: &str| LayerDesc {
+            name: name.into(),
+            kind,
+            cin: 16,
+            cout: 16,
+            h_out: 8,
+            w_out: 8,
+            k: 3,
+            stride: 1,
+            groups: 1,
+        };
+        Arch {
+            name: "hybrid".into(),
+            layers: vec![
+                mk(OpKind::Conv, "c1"),
+                mk(OpKind::Shift, "s2"),
+                mk(OpKind::Adder, "a3"),
+            ],
+            choices: vec![],
+        }
+    }
+
+    #[test]
+    fn default_matches_legacy_constants() {
+        let hw = HwConfig::default();
+        let legacy = AreaBudget::macs_equivalent(168, &UNIT_ENERGY_45NM);
+        assert_eq!(hw.budget.total_um2, legacy.total_um2);
+        assert_eq!(hw.mem.gb_bytes, 108 * 1024);
+        assert_eq!(hw.clock_hz, 250e6);
+        assert_eq!(hw.dataflows, ALL_DATAFLOWS.to_vec());
+        hw.validate().expect("default hw point is valid");
+    }
+
+    #[test]
+    fn build_matches_legacy_construction() {
+        let arch = hybrid_arch();
+        let hw = HwConfig::eyeriss_class();
+        let accel = hw.build(&arch);
+        let legacy = ChunkAccelerator::new(
+            allocate(&arch, hw.budget, &UNIT_ENERGY_45NM),
+            MemoryConfig::default(),
+            UNIT_ENERGY_45NM,
+        );
+        assert_eq!(accel.alloc, legacy.alloc);
+        assert_eq!(accel.clock_hz, legacy.clock_hz);
+        assert_eq!(accel.mem.gb_bytes, legacy.mem.gb_bytes);
+    }
+
+    #[test]
+    fn equal_policy_flows_through_build() {
+        let arch = hybrid_arch();
+        let mut hw = HwConfig::eyeriss_class();
+        hw.alloc_policy = AllocPolicy::Equal;
+        assert_eq!(hw.build(&arch).alloc, allocate_equal(&arch, hw.budget, &hw.costs));
+    }
+
+    #[test]
+    fn eyeriss_builders_size_from_budget() {
+        let hw = HwConfig::eyeriss_class();
+        let mac = hw.build_eyeriss(PeKind::Mac);
+        assert_eq!(mac.n_pes, 168);
+        assert_eq!(mac.dataflow, Dataflow::Rs);
+        let ded = hw.build_addernet();
+        assert_eq!(ded.pe_kind, PeKind::AdderUnit);
+        assert_eq!(ded.dataflow, Dataflow::Ws);
+        assert!(ded.n_pes > 3 * mac.n_pes, "adder units are >3x smaller");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_points() {
+        let mut hw = HwConfig::eyeriss_class();
+        hw.mem.gb_bytes = 0;
+        assert!(hw.validate().is_err());
+        let mut hw = HwConfig::eyeriss_class();
+        hw.mem.rf_bytes_per_pe = 4; // below the OS stationary-set floor
+        assert!(hw.validate().is_err());
+        let mut hw = HwConfig::with_budget_pes(1);
+        hw.budget.total_um2 = 100.0; // under one PE per family
+        assert!(hw.validate().is_err());
+        let mut hw = HwConfig::eyeriss_class();
+        hw.dataflows.clear();
+        assert!(hw.validate().is_err());
+        let mut hw = HwConfig::eyeriss_class();
+        hw.mem.noc_bytes_per_cycle = f64::NAN;
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn cell_names_are_stable_and_distinct() {
+        let cells = HwSpaceSpec::reference().enumerate();
+        let names: std::collections::BTreeSet<_> =
+            cells.iter().map(|c| c.name.clone()).collect();
+        assert_eq!(names.len(), cells.len());
+        assert!(names.contains("gb110592_rf512_noc16_pe168"), "{names:?}");
+    }
+
+    #[test]
+    fn enumerate_dedups_by_bit_pattern() {
+        let mut spec = HwSpaceSpec::default_cell();
+        spec.gb_bytes = vec![108 * 1024, 108 * 1024];
+        spec.noc_bytes_per_cycle = vec![16.0, 16.0, 8.0];
+        assert_eq!(spec.enumerate().len(), 2);
+    }
+
+    #[test]
+    fn enumerate_drops_invalid_cells() {
+        let mut spec = HwSpaceSpec::default_cell();
+        spec.rf_bytes_per_pe = vec![4, 512]; // 4B fails the RF floor
+        let cells = spec.enumerate();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].hw.mem.rf_bytes_per_pe, 512);
+    }
+}

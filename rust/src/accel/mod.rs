@@ -10,6 +10,7 @@ pub mod alloc;
 pub mod chunk;
 pub mod dataflow;
 pub mod eyeriss;
+pub mod hw;
 pub mod memory;
 pub mod pe;
 pub mod schedule;
@@ -17,7 +18,8 @@ pub mod schedule;
 pub use alloc::{allocate, allocate_equal, AreaBudget, PeAllocation};
 pub use chunk::{Chunk, Infeasible, LayerStats};
 pub use dataflow::{Dataflow, Tiling, ALL_DATAFLOWS};
-pub use eyeriss::{addernet_accel, EyerissSim};
+pub use eyeriss::{pes_for_budget, EyerissSim};
+pub use hw::{AllocPolicy, HwCell, HwConfig, HwSpaceSpec};
 pub use memory::MemoryConfig;
 pub use pe::{PeKind, UnitCosts, UNIT_ENERGY_45NM};
 pub use schedule::{

@@ -1,0 +1,341 @@
+//! `coordinator::cosearch` — the joint architecture x accelerator grid:
+//! evaluate every (arch, hw cell) pair of an `HwSpaceSpec` grid through
+//! the hardware-parameterized auto-mapper and rank the cells on the
+//! accuracy x EDP plane.
+//!
+//! This is the NASH-style (arXiv 2409.04829) step on top of NASA: the
+//! architectures come from saved search results (or handcrafted
+//! baselines), the hardware cells from `accel::HwSpaceSpec::enumerate`,
+//! and each pair is priced by `mapper::auto_map_hw` — one fresh mapper
+//! memo per hw cell, so a cell evaluation costs exactly what today's
+//! single-hw `auto_map` costs. The pinned invariant
+//! (`tests/cosearch_equivalence.rs`): restricting the grid to ONE hw
+//! cell reproduces a standalone `auto_map_hw` against that `HwConfig`
+//! bit for bit (best EDP, combos_tried, combos_infeasible).
+//!
+//! Results are checkpointed per cell (`<out>/cosearch/<arch>__<cell>
+//! .json`): `--resume` loads finished cells instead of re-searching,
+//! and because the JSON writer emits shortest-roundtrip f64, a resumed
+//! frontier file is byte-identical to the fresh one (asserted by the
+//! ci.sh smoke). The frontier itself is `accel::prune_pareto` on
+//! (EDP ascending, accuracy strictly ascending) — each survivor pays
+//! more EDP only for strictly more accuracy.
+
+use crate::accel::hw::HwCell;
+use crate::accel::prune_pareto;
+use crate::mapper::{auto_map, MapperConfig};
+use crate::model::quant::QuantSpec;
+use crate::model::Arch;
+use crate::util::json::Json;
+use crate::util::par::par_map_jobs;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// How a co-search executes.
+#[derive(Clone, Debug)]
+pub struct CosearchOptions {
+    /// Concurrent (arch, cell) workers (0 = one per core). Any value
+    /// yields identical results.
+    pub jobs: usize,
+    /// Runs root: per-cell results and the frontier land under
+    /// `<out_dir>/cosearch/`.
+    pub out_dir: PathBuf,
+    /// Load finished per-cell JSONs instead of re-searching them.
+    pub resume: bool,
+    /// Use the chunk-factorized mapper engine (false = the brute-force
+    /// `auto_map_reference` oracle; same result, used by the equivalence
+    /// regression to pin both rules).
+    pub factored: bool,
+}
+
+impl Default for CosearchOptions {
+    fn default() -> Self {
+        CosearchOptions {
+            jobs: 0,
+            out_dir: PathBuf::from("runs"),
+            resume: false,
+            factored: true,
+        }
+    }
+}
+
+/// One evaluated (arch, hw cell) pair.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub arch_name: String,
+    pub cell_name: String,
+    /// Accuracy joined from a training run (None = no run log found;
+    /// ranked as 0 on the frontier).
+    pub acc: Option<f64>,
+    /// Best EDP in pJ*s (None = no feasible mapping at this cell).
+    pub edp_pj_s: Option<f64>,
+    pub energy_pj: Option<f64>,
+    pub period_cycles: Option<f64>,
+    /// Winning per-chunk dataflows, e.g. "WS/OS/OS".
+    pub best_dfs: Option<String>,
+    /// Search-space accounting, pinned equal to standalone `auto_map`.
+    pub combos_tried: usize,
+    pub combos_infeasible: usize,
+}
+
+impl CellResult {
+    /// Frontier rank accuracy: unknown accuracy sorts below every known
+    /// one, so mapper-only co-searches degenerate to min-EDP ranking.
+    fn rank_acc(&self) -> f64 {
+        self.acc.unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("schema", Json::Str("cosearch_cell_v1".into())),
+            ("arch", Json::Str(self.arch_name.clone())),
+            ("cell", Json::Str(self.cell_name.clone())),
+            ("acc", num(self.acc)),
+            ("edp_pj_s", num(self.edp_pj_s)),
+            ("energy_pj", num(self.energy_pj)),
+            ("period_cycles", num(self.period_cycles)),
+            (
+                "best_dfs",
+                self.best_dfs.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+            ("combos_tried", Json::Num(self.combos_tried as f64)),
+            ("combos_infeasible", Json::Num(self.combos_infeasible as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CellResult> {
+        if j.req("schema")?.as_str()? != "cosearch_cell_v1" {
+            bail!("not a cosearch cell result");
+        }
+        let opt = |k: &str| -> Result<Option<f64>> {
+            Ok(match j.req(k)? {
+                Json::Null => None,
+                v => Some(v.as_f64()?),
+            })
+        };
+        Ok(CellResult {
+            arch_name: j.req("arch")?.as_str()?.to_string(),
+            cell_name: j.req("cell")?.as_str()?.to_string(),
+            acc: opt("acc")?,
+            edp_pj_s: opt("edp_pj_s")?,
+            energy_pj: opt("energy_pj")?,
+            period_cycles: opt("period_cycles")?,
+            best_dfs: match j.req("best_dfs")? {
+                Json::Null => None,
+                v => Some(v.as_str()?.to_string()),
+            },
+            combos_tried: j.req("combos_tried")?.as_usize()?,
+            combos_infeasible: j.req("combos_infeasible")?.as_usize()?,
+        })
+    }
+}
+
+/// Filesystem-safe stem for an (arch, cell) result file.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+        .collect()
+}
+
+fn cell_path(dir: &Path, arch: &str, cell: &str) -> PathBuf {
+    dir.join(format!("{}__{}.json", sanitize(arch), sanitize(cell)))
+}
+
+/// Accuracy join: the convention every exhibit uses — a training RunLog
+/// named `train_<arch>` in the runs root, scalar `test_acc_fp32`.
+pub fn lookup_acc(runs_dir: &Path, arch_name: &str) -> Option<f64> {
+    let p = runs_dir.join(format!("train_{arch_name}.json"));
+    crate::coordinator::RunLog::load(&p)
+        .ok()
+        .and_then(|l| l.scalar("test_acc_fp32"))
+        .filter(|a| a.is_finite())
+}
+
+/// Evaluate one (arch, cell) pair: build the accelerator through
+/// `HwConfig::build`, run the auto-mapper under `MapperConfig::for_hw`.
+/// Bit-identical to `mapper::auto_map_hw` when `factored` (that IS this
+/// call path); the reference rule flips only the engine flag.
+pub fn evaluate_cell(arch: &Arch, cell: &HwCell, acc: Option<f64>, factored: bool) -> CellResult {
+    let mut cfg = MapperConfig::for_hw(&cell.hw);
+    cfg.factored = factored;
+    let r = auto_map(&cell.hw.build(arch), arch, &QuantSpec::default(), &cfg);
+    let best = r.best.as_ref();
+    CellResult {
+        arch_name: arch.name.clone(),
+        cell_name: cell.name.clone(),
+        acc,
+        edp_pj_s: best.map(|(_, s)| s.edp(cell.hw.clock_hz)),
+        energy_pj: best.map(|(_, s)| s.energy_pj),
+        period_cycles: best.map(|(_, s)| s.period_cycles),
+        best_dfs: best.map(|(m, _)| {
+            format!("{}/{}/{}", m.clp_df.name(), m.slp_df.name(), m.alp_df.name())
+        }),
+        combos_tried: r.combos_tried,
+        combos_infeasible: r.combos_infeasible,
+    }
+}
+
+/// Run the (arch x cell) grid. Deterministic: results come back in
+/// arch-major x cell-enumeration order regardless of `jobs`; per-cell
+/// JSONs are written under `<out>/cosearch/` as checkpoints, and with
+/// `resume` finished cells replay from disk (their floats round-trip
+/// bit-exactly through the shortest-roundtrip writer).
+pub fn cosearch(
+    archs: &[Arch],
+    cells: &[HwCell],
+    accs: &[Option<f64>],
+    opts: &CosearchOptions,
+) -> Result<Vec<CellResult>> {
+    if archs.is_empty() || cells.is_empty() {
+        bail!("cosearch needs at least one arch and one hw cell");
+    }
+    if accs.len() != archs.len() {
+        bail!("accs must be per-arch ({} archs, {} accs)", archs.len(), accs.len());
+    }
+    {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in cells {
+            if !seen.insert(&c.name) {
+                bail!("duplicate hw cell name '{}'", c.name);
+            }
+        }
+    }
+    let dir = opts.out_dir.join("cosearch");
+    std::fs::create_dir_all(&dir)?;
+    let pairs: Vec<(usize, usize)> = (0..archs.len())
+        .flat_map(|a| (0..cells.len()).map(move |c| (a, c)))
+        .collect();
+    let results = par_map_jobs(&pairs, opts.jobs, |&(ai, ci)| {
+        let (arch, cell) = (&archs[ai], &cells[ci]);
+        let path = cell_path(&dir, &arch.name, &cell.name);
+        if opts.resume && path.exists() {
+            if let Ok(r) = Json::parse_file(&path).and_then(|j| CellResult::from_json(&j)) {
+                if r.arch_name == arch.name && r.cell_name == cell.name {
+                    return Ok(r);
+                }
+            }
+            // Unreadable/mismatched checkpoint: fall through and redo.
+        }
+        let r = evaluate_cell(arch, cell, accs[ai], opts.factored);
+        std::fs::write(&path, r.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(r)
+    });
+    results.into_iter().collect()
+}
+
+/// The accuracy x EDP Pareto frontier over mapped cells: EDP ascending,
+/// accuracy strictly ascending — every survivor pays more EDP only for
+/// strictly more accuracy. Unmapped cells (no feasible mapping) never
+/// make the frontier.
+pub fn frontier(results: &[CellResult]) -> Vec<CellResult> {
+    let mapped: Vec<CellResult> =
+        results.iter().filter(|r| r.edp_pj_s.is_some()).cloned().collect();
+    prune_pareto(mapped, |r| (r.edp_pj_s.unwrap(), -r.rank_acc()))
+}
+
+/// The report exhibit: all cells + the frontier, one JSON.
+pub fn results_to_json(results: &[CellResult], front: &[CellResult]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("cosearch_frontier_v1".into())),
+        ("n_archs", Json::Num(count_distinct(results, |r| &r.arch_name) as f64)),
+        ("n_cells", Json::Num(count_distinct(results, |r| &r.cell_name) as f64)),
+        ("results", Json::Arr(results.iter().map(|r| r.to_json()).collect())),
+        ("frontier", Json::Arr(front.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
+fn count_distinct<'a>(rs: &'a [CellResult], key: impl Fn(&'a CellResult) -> &'a String) -> usize {
+    rs.iter().map(key).collect::<std::collections::BTreeSet<_>>().len()
+}
+
+/// Write `<out>/cosearch/frontier.json` (the file `nasa report cosearch`
+/// and the ci.sh smoke read). Returns the path.
+pub fn save_frontier(results: &[CellResult], opts: &CosearchOptions) -> Result<PathBuf> {
+    let dir = opts.out_dir.join("cosearch");
+    std::fs::create_dir_all(&dir)?;
+    let front = frontier(results);
+    let path = dir.join("frontier.json");
+    std::fs::write(&path, results_to_json(results, &front).to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(arch: &str, cell: &str, acc: Option<f64>, edp: Option<f64>) -> CellResult {
+        CellResult {
+            arch_name: arch.into(),
+            cell_name: cell.into(),
+            acc,
+            edp_pj_s: edp,
+            energy_pj: edp.map(|e| e * 2.0),
+            period_cycles: edp.map(|_| 100.0),
+            best_dfs: edp.map(|_| "WS/OS/OS".into()),
+            combos_tried: 256,
+            combos_infeasible: 3,
+        }
+    }
+
+    #[test]
+    fn cell_result_json_roundtrip() {
+        for r in [
+            res("a", "gb1_rf2_noc3_pe4", Some(0.71625), Some(1.234e-5)),
+            res("b", "c", None, None),
+        ] {
+            let j = Json::parse(&r.to_json().to_string()).unwrap();
+            let back = CellResult::from_json(&j).unwrap();
+            assert_eq!(back.arch_name, r.arch_name);
+            assert_eq!(back.acc, r.acc);
+            // Bit-exact float round trip — the resume contract.
+            assert_eq!(back.edp_pj_s.map(f64::to_bits), r.edp_pj_s.map(f64::to_bits));
+            assert_eq!(back.combos_tried, r.combos_tried);
+            assert_eq!(back.best_dfs, r.best_dfs);
+        }
+    }
+
+    #[test]
+    fn frontier_keeps_strict_accuracy_improvements_only() {
+        let rs = vec![
+            res("a", "c1", Some(0.70), Some(3.0)),
+            res("a", "c2", Some(0.70), Some(1.0)), // same acc, cheaper: survives
+            res("b", "c1", Some(0.80), Some(5.0)), // more acc, more edp: survives
+            res("b", "c2", Some(0.75), Some(7.0)), // dominated by b/c1
+            res("a", "c3", None, Some(0.5)),       // unknown acc = 0, cheapest
+            res("b", "c3", Some(0.9), None),       // unmapped: excluded
+        ];
+        let f = frontier(&rs);
+        let names: Vec<_> =
+            f.iter().map(|r| format!("{}/{}", r.arch_name, r.cell_name)).collect();
+        assert_eq!(names, ["a/c3", "a/c2", "b/c1"]);
+        // EDP ascending, accuracy strictly ascending.
+        for w in f.windows(2) {
+            assert!(w[0].edp_pj_s.unwrap() <= w[1].edp_pj_s.unwrap());
+            assert!(w[0].rank_acc() < w[1].rank_acc());
+        }
+    }
+
+    #[test]
+    fn exhibit_json_counts_distinct_axes() {
+        let rs = vec![
+            res("a", "c1", Some(0.7), Some(1.0)),
+            res("a", "c2", Some(0.7), Some(2.0)),
+            res("b", "c1", Some(0.8), Some(3.0)),
+            res("b", "c2", Some(0.8), Some(4.0)),
+        ];
+        let j = results_to_json(&rs, &frontier(&rs));
+        assert_eq!(j.req("schema").unwrap().as_str().unwrap(), "cosearch_frontier_v1");
+        assert_eq!(j.req("n_archs").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("n_cells").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("results").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn sanitize_is_filesystem_safe() {
+        assert_eq!(sanitize("hybrid_all_c10"), "hybrid_all_c10");
+        assert_eq!(sanitize("a/b c:d"), "a_b_c_d");
+    }
+}

@@ -1,9 +1,11 @@
 //! L3 coordinator: data pipeline, NAS search loop (PGP + DNAS) with
-//! checkpoint/resume, the parallel multi-search sweep orchestrator, child
-//! train-from-scratch loop, and run metrics. Everything here drives the
-//! AOT HLO artifacts through runtime::Engine — python is never invoked.
+//! checkpoint/resume, the parallel multi-search sweep orchestrator, the
+//! joint architecture x accelerator co-search, child train-from-scratch
+//! loop, and run metrics. Everything here drives the AOT HLO artifacts
+//! through runtime::Engine — python is never invoked.
 
 pub mod checkpoint;
+pub mod cosearch;
 pub mod data;
 pub mod metrics;
 pub mod search_loop;
@@ -11,6 +13,10 @@ pub mod sweep;
 pub mod train_loop;
 
 pub use checkpoint::Checkpoint;
+pub use cosearch::{
+    cosearch, evaluate_cell, frontier, lookup_acc, results_to_json, save_frontier, CellResult,
+    CosearchOptions,
+};
 pub use data::{Batcher, BatcherState, Dataset, DatasetConfig, Split};
 pub use metrics::{sparkline, Curve, RunLog};
 pub use search_loop::{

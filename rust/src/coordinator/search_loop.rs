@@ -15,9 +15,7 @@
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::data::{Batcher, Dataset};
 use crate::coordinator::metrics::RunLog;
-use crate::nas::{
-    cost_table, derive_arch, init_params, ArchParams, PgpSchedule, PgpStage, TauSchedule,
-};
+use crate::nas::{derive_arch, init_params, ArchParams, PgpSchedule, PgpStage, TauSchedule};
 use crate::nas::optimizer::{Adam, CosineLr, LrSchedule, Sgdm};
 use crate::nas::pgp::stage_grad_gate;
 use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, Engine, Literal, Manifest, SupernetManifest};
@@ -48,6 +46,11 @@ pub struct SearchConfig {
     pub gamma_zero_recipe: bool,
     /// Evaluate on the val split every `eval_every` epochs (0 = never).
     pub eval_every: usize,
+    /// Unit-cost table pricing the hardware loss (Eq. 5). The searched hw
+    /// point's costs under co-search; the 45nm default otherwise. Not a
+    /// checkpoint-guard field: resuming a run under different costs is a
+    /// deliberate what-if, not a corruption.
+    pub unit_costs: crate::accel::UnitCosts,
 }
 
 impl SearchConfig {
@@ -91,6 +94,7 @@ impl SearchConfig {
             tau: TauSchedule::default(),
             gamma_zero_recipe: true,
             eval_every: 0,
+            unit_costs: crate::accel::UNIT_ENERGY_45NM,
         }
     }
 }
@@ -379,7 +383,7 @@ pub fn run_search_resumable(
         _ => LoopState::fresh(sn, dataset, cfg)?,
     };
 
-    let cost = cost_table(sn);
+    let cost = crate::nas::cost_table_for(sn, &cfg.unit_costs);
     let total_epochs = cfg.schedule.total_epochs();
     let lr_sched = CosineLr { lr0: cfg.lr_w, total: total_epochs * cfg.steps_per_epoch };
 

@@ -90,6 +90,12 @@ pub struct GridSpec {
     /// Override Eq. 5's lambda for every cell (None = per-space default).
     pub lambda_hw: Option<f32>,
     pub eval_every: usize,
+    /// The joint-search hardware axis: named hw cells crossed with every
+    /// other axis. Each cell's unit-cost table prices that run's hardware
+    /// loss and the cell name suffixes the run name. Empty = the single
+    /// default (Eyeriss-class) cell with NO name suffix, so pre-co-search
+    /// run names, logs and checkpoints are untouched.
+    pub hw: Vec<(String, crate::accel::HwConfig)>,
 }
 
 impl GridSpec {
@@ -104,14 +110,24 @@ impl GridSpec {
             steps_per_epoch: 16,
             lambda_hw: None,
             eval_every: 0,
+            hw: Vec::new(),
         }
     }
 
     /// Expand to the full run list. Names are
-    /// `<space>_<pgp|vanilla>_<recipe|plain>_s<seed>` and unique by
-    /// construction.
+    /// `<space>_<pgp|vanilla>_<recipe|plain>_s<seed>`, suffixed
+    /// `__<hw-cell>` per hardware cell when the hw axis is non-empty,
+    /// and unique by construction.
     pub fn expand(&self) -> Vec<SweepRun> {
         use crate::nas::PgpSchedule;
+        // The default cell: untouched SearchConfig (45nm costs), no name
+        // suffix — the pre-co-search grid, bit for bit.
+        let hw_cells: Vec<(Option<&str>, Option<&crate::accel::HwConfig>)> = if self.hw.is_empty()
+        {
+            vec![(None, None)]
+        } else {
+            self.hw.iter().map(|(n, h)| (Some(n.as_str()), Some(h))).collect()
+        };
         let mut runs = Vec::new();
         for space in &self.spaces {
             let schedules: &[bool] = if self.ablate_pgp { &[false, true] } else { &[false] };
@@ -119,38 +135,47 @@ impl GridSpec {
             for &flip_schedule in schedules {
                 for &recipe in recipes {
                     for &seed in &self.seeds {
-                        let mut cfg = SearchConfig::for_space(
-                            space,
-                            self.pretrain_epochs,
-                            self.search_epochs,
-                        );
-                        let use_pgp = SearchConfig::default_is_pgp(space) ^ flip_schedule;
-                        cfg.schedule = if use_pgp {
-                            PgpSchedule::pgp(self.pretrain_epochs, self.search_epochs)
-                        } else {
-                            PgpSchedule::vanilla(self.pretrain_epochs, self.search_epochs)
-                        };
-                        // The bigger lr travels WITH the PGP schedule in
-                        // both directions (paper recipe pairing), so a
-                        // "pgp" cell means the same recipe on every space
-                        // and cells are comparable across spaces; vanilla
-                        // twins use the small lr (the Fig. 7 baseline).
-                        cfg.lr_w = SearchConfig::lr_for(use_pgp);
-                        cfg.gamma_zero_recipe = recipe;
-                        cfg.seed = seed;
-                        cfg.steps_per_epoch = self.steps_per_epoch;
-                        cfg.eval_every = self.eval_every;
-                        if let Some(l) = self.lambda_hw {
-                            cfg.lambda_hw = l;
-                        }
-                        runs.push(SweepRun {
-                            name: format!(
+                        for (hw_name, hw) in &hw_cells {
+                            let mut cfg = SearchConfig::for_space(
+                                space,
+                                self.pretrain_epochs,
+                                self.search_epochs,
+                            );
+                            let use_pgp = SearchConfig::default_is_pgp(space) ^ flip_schedule;
+                            cfg.schedule = if use_pgp {
+                                PgpSchedule::pgp(self.pretrain_epochs, self.search_epochs)
+                            } else {
+                                PgpSchedule::vanilla(self.pretrain_epochs, self.search_epochs)
+                            };
+                            // The bigger lr travels WITH the PGP schedule in
+                            // both directions (paper recipe pairing), so a
+                            // "pgp" cell means the same recipe on every space
+                            // and cells are comparable across spaces; vanilla
+                            // twins use the small lr (the Fig. 7 baseline).
+                            cfg.lr_w = SearchConfig::lr_for(use_pgp);
+                            cfg.gamma_zero_recipe = recipe;
+                            cfg.seed = seed;
+                            cfg.steps_per_epoch = self.steps_per_epoch;
+                            cfg.eval_every = self.eval_every;
+                            if let Some(l) = self.lambda_hw {
+                                cfg.lambda_hw = l;
+                            }
+                            if let Some(hw) = hw {
+                                cfg.unit_costs = hw.costs;
+                            }
+                            let base = format!(
                                 "{space}_{}_{}_s{seed}",
                                 if use_pgp { "pgp" } else { "vanilla" },
                                 if recipe { "recipe" } else { "plain" },
-                            ),
-                            cfg,
-                        });
+                            );
+                            runs.push(SweepRun {
+                                name: match hw_name {
+                                    Some(h) => format!("{base}__{h}"),
+                                    None => base,
+                                },
+                                cfg,
+                            });
+                        }
                     }
                 }
             }
@@ -313,6 +338,29 @@ mod tests {
             .expect("shift default");
         assert_eq!(van_shift.cfg.lr_w, 0.05);
         assert!(runs.iter().any(|r| !r.cfg.gamma_zero_recipe));
+    }
+
+    #[test]
+    fn hw_axis_crosses_grid_and_preserves_default_names() {
+        use crate::accel::HwConfig;
+        let mut g = GridSpec::new(vec!["hybrid_all_c10".into()], vec![1, 2]);
+        // Empty hw axis: the pre-co-search names, exactly.
+        let base: Vec<_> = g.expand().iter().map(|r| r.name.clone()).collect();
+        assert_eq!(base, ["hybrid_all_c10_pgp_recipe_s1", "hybrid_all_c10_pgp_recipe_s2"]);
+        let mut cheap_shift = HwConfig::eyeriss_class();
+        cheap_shift.costs.shift8_pj /= 2.0;
+        g.hw = vec![
+            ("default".into(), HwConfig::eyeriss_class()),
+            ("cheapshift".into(), cheap_shift),
+        ];
+        let runs = g.expand();
+        assert_eq!(runs.len(), 4);
+        assert_eq!(runs[0].name, "hybrid_all_c10_pgp_recipe_s1__default");
+        assert_eq!(runs[1].name, "hybrid_all_c10_pgp_recipe_s1__cheapshift");
+        // Each cell's unit costs price its own hardware loss.
+        assert_eq!(runs[0].cfg.unit_costs.shift8_pj, 2.0 * runs[1].cfg.unit_costs.shift8_pj);
+        let names: std::collections::BTreeSet<_> = runs.iter().map(|r| r.name.clone()).collect();
+        assert_eq!(names.len(), runs.len());
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //!   train     train a derived choice vector from scratch + eval FP32/FXP
 //!   simulate  run an arch through the chunk accelerator / baselines
 //!   map       run the auto-mapper on an arch (Fig. 8 machinery)
+//!   cosearch  joint (arch x hw) grid: auto-map every arch at every
+//!             hardware cell, emit the accuracy x EDP Pareto frontier
 //!   serve     run the live dynamic-batching inference service in-process
 //!             (closed-loop self-drive, replayable --trace output)
 //!   loadtest  deterministic virtual-time load test of the same service
@@ -14,13 +16,11 @@
 //!   report    print paper-style tables/figures from saved runs
 
 use anyhow::{bail, Result};
-use nasa::accel::{
-    allocate, AreaBudget, ChunkAccelerator, EyerissSim, Mapping, MemoryConfig, PeKind,
-    UNIT_ENERGY_45NM,
-};
+use nasa::accel::{HwConfig, HwSpaceSpec, Mapping, MemoryConfig, PeKind};
 use nasa::coordinator::{
-    dataset_for_supernet, print_summary, run_search, run_sweep, save_outcomes, train_child,
-    GridSpec, SearchConfig, SweepOptions, TrainConfig,
+    cosearch, dataset_for_supernet, lookup_acc, print_summary, run_search, run_sweep,
+    save_frontier, save_outcomes, train_child, CosearchOptions, GridSpec, SearchConfig,
+    SweepOptions, TrainConfig,
 };
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::{arch_op_counts, Arch, QuantSpec};
@@ -44,6 +44,7 @@ fn main() -> Result<()> {
         "derive" => cmd_derive(&args),
         "simulate" => cmd_simulate(&args),
         "map" => cmd_map(&args),
+        "cosearch" => cmd_cosearch(&args),
         "serve" => cmd_serve(&args),
         "loadtest" => cmd_loadtest(&args),
         "check" => cmd_check(&args),
@@ -80,6 +81,18 @@ USAGE: nasa <subcommand> [--options]
   simulate --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
   map      --arch runs/<arch>.json [--budget-pes 168] [--tight-mem]
            [--greedy-tiling] [--no-lattice] [--tied-noc] [--reference]
+  cosearch --archs runs/arch_a.json,runs/arch_b.json
+           [--gb BYTES,..] [--rf BYTES,..] [--noc B/CYC,..]
+           [--budget-pes N,..] [--jobs 0] [--resume] [--reference]
+           [--out runs]
+           (joint architecture x accelerator grid: auto-map every arch
+            at every valid hardware cell — default grid is the 24-cell
+            reference HwSpace; any axis flag switches to an explicit
+            grid over the given values. Accuracies join from
+            <out>/train_<arch>.json when present. Per-cell results
+            checkpoint under <out>/cosearch/ (--resume replays them
+            bit-identically) and the accuracy x EDP Pareto frontier
+            lands in <out>/cosearch/frontier.json)
   serve    --models runs/a.json,runs/b.json [--requests 200] [--clients 4]
            [--backend stub|cpu] [--batch-max 8] [--deadline-us 2000]
            [--queue-cap 256] [--overhead-us 50] [--mix 3,1 | --zipf 1.2]
@@ -114,7 +127,7 @@ USAGE: nasa <subcommand> [--options]
             a seeded on/off duty cycle, --zipf derives a skewed-popularity
             model mix)
   check    [--artifacts artifacts]
-  report   table2|fig2|fig6|fig7|fig8 [--out runs]
+  report   table2|fig2|fig6|fig7|fig8|cosearch [--out runs]
 "
     );
 }
@@ -277,21 +290,21 @@ fn load_arch(args: &Args) -> Result<Arch> {
     Arch::load(Path::new(path))
 }
 
-fn accel_setup(args: &Args, arch: &Arch) -> Result<ChunkAccelerator> {
-    let costs = UNIT_ENERGY_45NM;
-    let budget = AreaBudget::macs_equivalent(args.usize_or("budget-pes", 168)?, &costs);
-    let mem = if args.flag("tight-mem") {
-        MemoryConfig::tight()
-    } else {
-        MemoryConfig::default()
-    };
-    let alloc = allocate(arch, budget, &costs);
-    Ok(ChunkAccelerator::new(alloc, mem, costs))
+/// The hardware point the CLI flags describe — every `simulate`/`map`
+/// construction goes through `HwConfig::build*` from here.
+fn hw_setup(args: &Args) -> Result<HwConfig> {
+    let mut hw = HwConfig::with_budget_pes(args.usize_or("budget-pes", 168)?);
+    if args.flag("tight-mem") {
+        hw.mem = MemoryConfig::tight();
+    }
+    hw.validate().map_err(|e| anyhow::anyhow!("invalid hw config: {e}"))?;
+    Ok(hw)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let arch = load_arch(args)?;
-    let accel = accel_setup(args, &arch)?;
+    let hw = hw_setup(args)?;
+    let accel = hw.build(&arch);
     let q = QuantSpec::default();
     println!(
         "arch '{}': {} layers, alloc CLP={} SLP={} ALP={}",
@@ -312,9 +325,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ),
         Err((i, e)) => println!("NASA chunk accel (all-RS): INFEASIBLE at layer {i}: {e}"),
     }
-    let costs = UNIT_ENERGY_45NM;
-    let budget = AreaBudget::macs_equivalent(args.usize_or("budget-pes", 168)?, &costs);
-    let eyeriss = EyerissSim::with_budget(PeKind::Mac, budget.total_um2, accel.mem, costs);
+    let eyeriss = hw.build_eyeriss(PeKind::Mac);
     match eyeriss.simulate(&arch, &q) {
         Ok(s) => println!(
             "Eyeriss-MAC (sequential RS): latency={:.0}cyc energy={:.2}uJ EDP={:.3e} pJ*s",
@@ -329,7 +340,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_map(args: &Args) -> Result<()> {
     let arch = load_arch(args)?;
-    let accel = accel_setup(args, &arch)?;
+    let hw = hw_setup(args)?;
+    let accel = hw.build(&arch);
     let q = QuantSpec::default();
     // Every MapperConfig axis is drivable from the CLI: compatibility
     // greedy tiling rule, power-of-two-only tilings, NoC tied to GB, and
@@ -339,7 +351,7 @@ fn cmd_map(args: &Args) -> Result<()> {
         full_tiling_lattice: !args.flag("no-lattice"),
         independent_noc: !args.flag("tied-noc"),
         factored: !args.flag("reference"),
-        ..MapperConfig::default()
+        ..MapperConfig::for_hw(&hw)
     };
     println!(
         "mapper config: engine={} tiling={} lattice={} noc={}",
@@ -376,6 +388,80 @@ fn cmd_map(args: &Args) -> Result<()> {
     if let Some(saving) = r.edp_saving_vs_rs(accel.clock_hz) {
         println!("auto-mapper EDP saving vs RS: {:.1}%", saving * 100.0);
     }
+    Ok(())
+}
+
+/// Joint architecture x accelerator co-search: every `--archs` entry
+/// crossed with every valid cell of the hardware grid, mapped through
+/// `auto_map` at that cell's `HwConfig`, ranked on the accuracy x EDP
+/// plane. Deterministic and resumable (per-cell JSON checkpoints).
+fn cmd_cosearch(args: &Args) -> Result<()> {
+    let arch_paths = parse_list(args.require("archs")?, |t| Ok(t.to_string()))?;
+    if arch_paths.is_empty() {
+        bail!("--archs needs at least one arch JSON path");
+    }
+    let mut archs = Vec::new();
+    for p in &arch_paths {
+        archs.push(Arch::load(Path::new(p))?);
+    }
+
+    // Default grid: the 24-cell reference HwSpace. Any axis flag switches
+    // to an explicit grid seeded from the single default cell, so e.g.
+    // `--gb 55296,110592 --noc 8,16` is exactly a 2x2 grid.
+    let explicit =
+        ["gb", "rf", "noc", "budget-pes"].iter().any(|k| args.get(k).is_some());
+    let mut spec = if explicit { HwSpaceSpec::default_cell() } else { HwSpaceSpec::reference() };
+    let usize_list = |s: &str, flag: &str| {
+        parse_list(s, |t| t.parse::<usize>().map_err(|e| anyhow::anyhow!("--{flag}: {e}")))
+    };
+    if let Some(s) = args.get("gb") {
+        spec.gb_bytes = usize_list(s, "gb")?;
+    }
+    if let Some(s) = args.get("rf") {
+        spec.rf_bytes_per_pe = usize_list(s, "rf")?;
+    }
+    if let Some(s) = args.get("noc") {
+        spec.noc_bytes_per_cycle =
+            parse_list(s, |t| t.parse::<f64>().map_err(|e| anyhow::anyhow!("--noc: {e}")))?;
+    }
+    if let Some(s) = args.get("budget-pes") {
+        spec.budget_pes = usize_list(s, "budget-pes")?;
+    }
+    let cells = spec.enumerate();
+    if cells.is_empty() {
+        bail!("hardware grid has no valid cells (every candidate failed validation)");
+    }
+
+    let opts = CosearchOptions {
+        jobs: args.usize_or("jobs", 0)?,
+        out_dir: runs_dir(args),
+        resume: args.flag("resume"),
+        factored: !args.flag("reference"),
+    };
+    // Accuracy join: a train run named train_<arch> in the runs root.
+    let accs: Vec<Option<f64>> =
+        archs.iter().map(|a| lookup_acc(&opts.out_dir, &a.name)).collect();
+    println!(
+        "cosearch: {} archs x {} hw cells = {} evaluations (engine={}, jobs={}, resume={})",
+        archs.len(),
+        cells.len(),
+        archs.len() * cells.len(),
+        if opts.factored { "factored" } else { "reference" },
+        if opts.jobs == 0 { "auto".to_string() } else { opts.jobs.to_string() },
+        opts.resume
+    );
+    let t0 = std::time::Instant::now();
+    let results = cosearch(&archs, &cells, &accs, &opts)?;
+    let path = save_frontier(&results, &opts)?;
+    let front = nasa::coordinator::frontier(&results);
+    nasa::report::cosearch::print_results(&results, &front);
+    println!(
+        "cosearch done in {:.2}s: {} cells mapped, {} on the frontier; exhibit -> {}",
+        t0.elapsed().as_secs_f64(),
+        results.iter().filter(|r| r.edp_pj_s.is_some()).count(),
+        front.len(),
+        path.display()
+    );
     Ok(())
 }
 
@@ -579,6 +665,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         "fig6" => nasa::report::fig6::print_from_dir(&runs),
         "fig7" => nasa::report::fig7::print_from_dir(&runs),
         "fig8" => nasa::report::fig8::print_from_dir(&runs),
+        "cosearch" => nasa::report::cosearch::print_from_dir(&runs),
         other => bail!("unknown report '{other}'"),
     }
 }

@@ -14,14 +14,21 @@
 //! (`MapperConfig::greedy_tiling`, compatibility flag) could not. The
 //! brute-force oracle `auto_map_reference` is retained for equivalence
 //! regressions and before/after benchmarks.
+//!
+//! The mapper is hardware-parameterized: `MapperConfig::for_hw` derives
+//! the mapper view (objective clock, supported dataflow set) of an
+//! `accel::HwConfig`, and `auto_map_hw` is the one-call path from a
+//! hardware point to a mapped network. Each `auto_map` call owns its
+//! memo, so the joint (arch, hw) search keeps one memo per hw cell and
+//! every cell evaluation stays as cheap as the single-hw path.
 
 pub mod chunk_eval;
 pub mod search;
 pub mod space;
 
 pub use chunk_eval::{chunk_frontier, eval_chunk, ChunkEval, ChunkKey};
-pub use search::{auto_map, auto_map_reference, MapperConfig, MapperResult};
+pub use search::{auto_map, auto_map_hw, auto_map_reference, MapperConfig, MapperResult};
 pub use space::{
-    candidates, dataflow_combos, gb_splits, noc_splits, tiling_candidates,
-    tiling_candidates_full, MapCandidate,
+    candidates, candidates_for, dataflow_combos, dataflow_combos_from, gb_splits, noc_splits,
+    tiling_candidates, tiling_candidates_full, MapCandidate,
 };

@@ -26,6 +26,8 @@ use std::collections::{HashMap, HashSet};
 use super::chunk_eval::{chunk_frontier, eval_chunk, ChunkEval, ChunkKey};
 use super::space::MapCandidate;
 use crate::accel::chunk::Infeasible;
+use crate::accel::dataflow::{Dataflow, ALL_DATAFLOWS};
+use crate::accel::hw::HwConfig;
 use crate::accel::schedule::{ChunkAccelerator, ChunkFrontier, ChunkStats, Mapping, NetStats};
 use crate::accel::Tiling;
 use crate::model::arch::{Arch, OpKind};
@@ -38,6 +40,10 @@ pub struct MapperConfig {
     pub search_tilings: bool,
     /// Clock for the EDP objective.
     pub clock_hz: f64,
+    /// The hardware's supported dataflow set (per-chunk assignments are
+    /// drawn from this). The full paper set by default; a searched
+    /// `HwConfig` may restrict it.
+    pub dataflows: Vec<Dataflow>,
     /// Widened space: choose the NoC split independently of the GB split
     /// (false = pre-widening behaviour, NoC tied to GB).
     pub independent_noc: bool,
@@ -64,10 +70,25 @@ impl Default for MapperConfig {
         MapperConfig {
             search_tilings: true,
             clock_hz: 250e6,
+            dataflows: ALL_DATAFLOWS.to_vec(),
             independent_noc: true,
             full_tiling_lattice: true,
             factored: true,
             greedy_tiling: false,
+        }
+    }
+}
+
+impl MapperConfig {
+    /// The mapper view of a hardware point: objective clock and dataflow
+    /// set come from the `HwConfig`, search-engine knobs stay at their
+    /// defaults. Defined here (not on `HwConfig`) so `accel` stays
+    /// independent of the mapper.
+    pub fn for_hw(hw: &HwConfig) -> Self {
+        MapperConfig {
+            clock_hz: hw.clock_hz,
+            dataflows: hw.dataflows.clone(),
+            ..Default::default()
         }
     }
 }
@@ -242,7 +263,8 @@ pub fn auto_map(
         return auto_map_reference(accel, arch, q, cfg);
     }
     let op_loads = crate::accel::alloc::op_loads(arch);
-    let cands = super::space::candidates(&accel.alloc, &op_loads, cfg.independent_noc);
+    let cands =
+        super::space::candidates_for(&accel.alloc, &op_loads, cfg.independent_noc, &cfg.dataflows);
     let fam = family_layers(arch);
 
     // Distinct per-chunk configurations across all candidates; chunks
@@ -311,6 +333,17 @@ pub fn auto_map(
     MapperResult { best, rs_baseline, combos_tried: cands.len(), combos_infeasible }
 }
 
+/// Map `arch` onto the accelerator described by a hardware point: build
+/// the `ChunkAccelerator` through the one `HwConfig::build` path, derive
+/// the mapper view with `MapperConfig::for_hw`, and run `auto_map`. The
+/// co-search path is pinned to be bit-identical to this call at every hw
+/// cell (`tests/cosearch_equivalence.rs`). The chunk-evaluation memo is
+/// per call, i.e. one memo per hw cell — a second hw point never reuses
+/// frontiers priced under different memory geometry.
+pub fn auto_map_hw(hw: &HwConfig, arch: &Arch, q: &QuantSpec) -> MapperResult {
+    auto_map(&hw.build(arch), arch, q, &MapperConfig::for_hw(hw))
+}
+
 /// Build one candidate's chunk frontiers from scratch (no memo table) —
 /// the reference path's view of the shared `chunk_eval::chunk_frontier`
 /// rule. `None` = some populated family is infeasible.
@@ -350,7 +383,8 @@ pub fn auto_map_reference(
     cfg: &MapperConfig,
 ) -> MapperResult {
     let op_loads = crate::accel::alloc::op_loads(arch);
-    let cands = super::space::candidates(&accel.alloc, &op_loads, cfg.independent_noc);
+    let cands =
+        super::space::candidates_for(&accel.alloc, &op_loads, cfg.independent_noc, &cfg.dataflows);
     let fam = family_layers(arch);
 
     // Score every candidate with a fresh, unmemoized frontier build —

@@ -21,10 +21,19 @@ use crate::model::arch::LayerDesc;
 
 /// All 64 per-chunk dataflow assignments (CLP, SLP, ALP).
 pub fn dataflow_combos() -> Vec<[Dataflow; 3]> {
-    let mut v = Vec::with_capacity(64);
-    for &c in &ALL_DATAFLOWS {
-        for &s in &ALL_DATAFLOWS {
-            for &a in &ALL_DATAFLOWS {
+    dataflow_combos_from(&ALL_DATAFLOWS)
+}
+
+/// Per-chunk dataflow assignments drawn from a restricted hardware
+/// dataflow set (`HwConfig::dataflows`). With the full set this is
+/// exactly `dataflow_combos` — same CLP-major nesting order, so the
+/// candidate iteration order (and with it tie-breaking and the
+/// `combos_tried` counters) is unchanged for existing callers.
+pub fn dataflow_combos_from(dataflows: &[Dataflow]) -> Vec<[Dataflow; 3]> {
+    let mut v = Vec::with_capacity(dataflows.len().pow(3));
+    for &c in dataflows {
+        for &s in dataflows {
+            for &a in dataflows {
                 v.push([c, s, a]);
             }
         }
@@ -137,7 +146,7 @@ pub fn noc_splits(alloc: &PeAllocation, op_loads: &[u64; 3]) -> Vec<[f64; 3]> {
 /// One point of the mapper's outer search space: per-chunk dataflows plus
 /// the two resource splits. The per-layer tiling axis is resolved inside
 /// the per-chunk evaluation (layers decompose once the chunk is fixed).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MapCandidate {
     /// Dataflow per chunk (CLP, SLP, ALP).
     pub dfs: [Dataflow; 3],
@@ -155,7 +164,19 @@ pub fn candidates(
     op_loads: &[u64; 3],
     independent_noc: bool,
 ) -> Vec<MapCandidate> {
-    let combos = dataflow_combos();
+    candidates_for(alloc, op_loads, independent_noc, &ALL_DATAFLOWS)
+}
+
+/// `candidates` over a restricted hardware dataflow set
+/// (`HwConfig::dataflows`). Identical iteration order to `candidates`
+/// when given the full set.
+pub fn candidates_for(
+    alloc: &PeAllocation,
+    op_loads: &[u64; 3],
+    independent_noc: bool,
+    dataflows: &[Dataflow],
+) -> Vec<MapCandidate> {
+    let combos = dataflow_combos_from(dataflows);
     let gbs = gb_splits(alloc, op_loads);
     let nocs = noc_splits(alloc, op_loads);
     let per_combo = if independent_noc { gbs.len() * nocs.len() } else { gbs.len() };
@@ -200,6 +221,21 @@ mod tests {
         let set: std::collections::BTreeSet<_> =
             c.iter().map(|d| format!("{d:?}")).collect();
         assert_eq!(set.len(), 64);
+    }
+
+    #[test]
+    fn restricted_dataflow_set_shrinks_combos_and_preserves_order() {
+        use crate::accel::dataflow::ALL_DATAFLOWS;
+        assert_eq!(dataflow_combos_from(&ALL_DATAFLOWS), dataflow_combos());
+        let two = dataflow_combos_from(&[Dataflow::Ws, Dataflow::Os]);
+        assert_eq!(two.len(), 8);
+        assert_eq!(two[0], [Dataflow::Ws; 3]);
+        let alloc = PeAllocation { clp: 10, slp: 10, alp: 10 };
+        let loads = [100u64, 50, 25];
+        assert_eq!(
+            candidates(&alloc, &loads, true),
+            candidates_for(&alloc, &loads, true, &ALL_DATAFLOWS)
+        );
     }
 
     #[test]

@@ -10,14 +10,21 @@
 //! `cost[l][i]` = scaled-FLOPs of candidate `i` at layer `l`, normalized
 //! by the largest entry so lambda is scale-free across configs.
 
-use crate::accel::pe::UNIT_ENERGY_45NM;
+use crate::accel::pe::{UnitCosts, UNIT_ENERGY_45NM};
 use crate::model::arch::push_block;
 use crate::model::ops::layer_op_counts;
 use crate::runtime::SupernetManifest;
 
-/// Energy-normalized op cost ratios vs an 8-bit multiply.
+/// Energy-normalized op cost ratios vs an 8-bit multiply, at the default
+/// 45nm cost table.
 pub fn op_ratios() -> (f64, f64, f64) {
-    let e = &UNIT_ENERGY_45NM;
+    op_ratios_for(&UNIT_ENERGY_45NM)
+}
+
+/// Energy-normalized op cost ratios vs an 8-bit multiply under an
+/// explicit unit-cost table — the searched hardware point's costs, not
+/// the global default.
+pub fn op_ratios_for(e: &UnitCosts) -> (f64, f64, f64) {
     let mult = e.mult8_pj;
     (
         1.0,                     // conv multiply
@@ -26,9 +33,17 @@ pub fn op_ratios() -> (f64, f64, f64) {
     )
 }
 
-/// Build the [n_layers x n_cand] hardware cost table (row-major).
+/// Build the [n_layers x n_cand] hardware cost table (row-major) at the
+/// default 45nm unit costs.
 pub fn cost_table(sn: &SupernetManifest) -> Vec<f32> {
-    let (r_mult, r_shift, r_add) = op_ratios();
+    cost_table_for(sn, &UNIT_ENERGY_45NM)
+}
+
+/// `cost_table` under an explicit unit-cost table, so the NAS hardware
+/// loss prices the hw point actually being searched
+/// (`SearchConfig::unit_costs`).
+pub fn cost_table_for(sn: &SupernetManifest, costs: &UnitCosts) -> Vec<f32> {
+    let (r_mult, r_shift, r_add) = op_ratios_for(costs);
     let mut table = vec![0.0f64; sn.n_layers * sn.n_cand];
     for (l, geom) in sn.layers.iter().enumerate() {
         for (i, cand) in sn.cands.iter().enumerate() {
@@ -60,6 +75,15 @@ mod tests {
         assert!(s < 0.5, "shift ratio {s}");
         assert!(a < 0.5, "add ratio {a}");
         assert!(s < a, "shift should be cheaper than add at 45nm");
+    }
+
+    #[test]
+    fn explicit_costs_change_the_ratios() {
+        assert_eq!(op_ratios_for(&UNIT_ENERGY_45NM), op_ratios());
+        let mut c = UNIT_ENERGY_45NM;
+        c.shift8_pj = c.mult8_pj; // shifts priced like multiplies
+        let (_, s, _) = op_ratios_for(&c);
+        assert_eq!(s, 1.0);
     }
     // cost_table itself is exercised against the real manifest in
     // rust/tests/nas_integration.rs (bigger E/K must cost more; shift

@@ -18,7 +18,7 @@ pub mod search_space;
 pub use arch_params::ArchParams;
 pub use derive::derive_arch;
 pub use gumbel::TauSchedule;
-pub use hw_loss::cost_table;
+pub use hw_loss::{cost_table, cost_table_for, op_ratios, op_ratios_for};
 pub use optimizer::{Adam, CosineLr, LrSchedule, MultiStepLr, Sgdm};
 pub use params::{grad_gate, init_params};
 pub use pgp::{PgpSchedule, PgpStage};

@@ -1,0 +1,60 @@
+//! Co-search exhibit: the accuracy x EDP Pareto frontier over the joint
+//! (architecture, hardware cell) grid, read back from the
+//! `cosearch/frontier.json` that `nasa cosearch` (or
+//! `benches/cosearch_grid.rs`) writes under the runs root.
+
+use crate::coordinator::cosearch::CellResult;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::Path;
+
+fn parse_results(j: &Json, key: &str) -> Result<Vec<CellResult>> {
+    j.req(key)?.as_arr()?.iter().map(CellResult::from_json).collect()
+}
+
+pub fn print_results(results: &[CellResult], front: &[CellResult]) {
+    let on_front: std::collections::BTreeSet<(&str, &str)> = front
+        .iter()
+        .map(|r| (r.arch_name.as_str(), r.cell_name.as_str()))
+        .collect();
+    let mut t = super::Table::new(&[
+        "Arch",
+        "HW cell",
+        "Accuracy",
+        "EDP (pJ*s)",
+        "Dataflows",
+        "Frontier",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.arch_name.clone(),
+            r.cell_name.clone(),
+            r.acc.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or_else(|| "-".into()),
+            r.edp_pj_s.map(|e| format!("{e:.3e}")).unwrap_or_else(|| "unmapped".into()),
+            r.best_dfs.clone().unwrap_or_else(|| "-".into()),
+            if on_front.contains(&(r.arch_name.as_str(), r.cell_name.as_str())) {
+                "*".into()
+            } else {
+                String::new()
+            },
+        ]);
+    }
+    println!("\n== Co-search: accuracy vs EDP over the (arch, hw) grid ==");
+    println!("(joint NASH-style search: each cell is one accelerator hardware point;");
+    println!(" '*' rows form the Pareto frontier — more EDP only buys strictly more accuracy)\n");
+    t.print();
+}
+
+/// Print the exhibit from `<runs>/cosearch/frontier.json`.
+pub fn print_from_dir(runs: &Path) -> Result<()> {
+    let path = runs.join("cosearch").join("frontier.json");
+    if !path.exists() {
+        println!("(no co-search results yet — run `nasa cosearch --archs <a.json,b.json>`)");
+        return Ok(());
+    }
+    let j = Json::parse_file(&path)?;
+    let results = parse_results(&j, "results")?;
+    let front = parse_results(&j, "frontier")?;
+    print_results(&results, &front);
+    Ok(())
+}

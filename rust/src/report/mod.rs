@@ -2,6 +2,7 @@
 //! rows/series of one exhibit from the paper's evaluation (Sec. 5),
 //! reading the JSON run logs the coordinator/benches save under runs/.
 
+pub mod cosearch;
 pub mod fig2;
 pub mod fig6;
 pub mod fig7;

@@ -7,7 +7,7 @@
 //! virtual-time service model of the deterministic loadtest and feeds the
 //! per-model energy/EDP estimates in `serve::metrics`.
 
-use crate::accel::{allocate, AreaBudget, ChunkAccelerator, MemoryConfig, Tiling, UNIT_ENERGY_45NM};
+use crate::accel::{HwConfig, Tiling};
 use crate::mapper::{auto_map, MapperConfig};
 use crate::model::{Arch, QuantSpec};
 use crate::runtime::ArtifactIo;
@@ -81,13 +81,11 @@ pub fn model_cost(arch: &Arch, budget_pes: usize) -> ModelCost {
 /// every layer, on the fallback paths) get `None` (kernel default
 /// blocking).
 pub fn model_cost_with_tilings(arch: &Arch, budget_pes: usize) -> (ModelCost, Vec<Option<Tiling>>) {
-    let costs = UNIT_ENERGY_45NM;
-    let budget = AreaBudget::macs_equivalent(budget_pes, &costs);
-    let alloc = allocate(arch, budget, &costs);
-    let accel = ChunkAccelerator::new(alloc, MemoryConfig::default(), costs);
+    let hw = HwConfig::with_budget_pes(budget_pes);
+    let accel = hw.build(arch);
     let clock_hz = accel.clock_hz;
     let no_tilings = || vec![None; arch.layers.len()];
-    let r = auto_map(&accel, arch, &QuantSpec::default(), &MapperConfig::default());
+    let r = auto_map(&accel, arch, &QuantSpec::default(), &MapperConfig::for_hw(&hw));
     if let Some((mapping, s)) = r.best {
         let cost = ModelCost {
             period_cycles: s.period_cycles,

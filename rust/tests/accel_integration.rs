@@ -2,15 +2,14 @@
 //! the qualitative claims of Sec. 5.2/5.4 as assertions.
 
 use nasa::accel::{
-    addernet_accel, allocate, allocate_equal, AreaBudget, ChunkAccelerator, EyerissSim,
-    Mapping, MemoryConfig, PeKind, UNIT_ENERGY_45NM,
+    allocate_equal, ChunkAccelerator, HwConfig, Mapping, MemoryConfig, PeKind, UNIT_ENERGY_45NM,
 };
 use nasa::mapper::{auto_map, MapperConfig};
 use nasa::model::zoo::{mobilenet_v2_like, resnet32_adder_like};
 use nasa::model::{Arch, OpKind, QuantSpec};
 
-fn budget() -> AreaBudget {
-    AreaBudget::macs_equivalent(168, &UNIT_ENERGY_45NM)
+fn hw() -> HwConfig {
+    HwConfig::with_budget_pes(168)
 }
 
 /// A representative NASA-searched hybrid at the reproduction scale.
@@ -48,8 +47,9 @@ fn hybrid_arch() -> Arch {
 }
 
 fn nasa_accel(arch: &Arch, mem: MemoryConfig) -> ChunkAccelerator {
-    let costs = UNIT_ENERGY_45NM;
-    ChunkAccelerator::new(allocate(arch, budget(), &costs), mem, costs)
+    let mut hw = hw();
+    hw.mem = mem;
+    hw.build(arch)
 }
 
 #[test]
@@ -63,13 +63,7 @@ fn hybrid_on_nasa_beats_hybrid_on_eyeriss_mac() {
         .best
         .expect("feasible mapping")
         .1;
-    let eyeriss = EyerissSim::with_budget(
-        PeKind::Mac,
-        budget().total_um2,
-        MemoryConfig::default(),
-        UNIT_ENERGY_45NM,
-    );
-    let base = eyeriss.simulate(&arch, &q).unwrap();
+    let base = hw().build_eyeriss(PeKind::Mac).simulate(&arch, &q).unwrap();
     let nasa_edp = best.edp(250e6);
     let eyeriss_edp = base.edp(250e6);
     // Fig. 6 shape: NASA gets a large EDP reduction (the paper reports
@@ -86,12 +80,11 @@ fn eq8_allocation_beats_equal_split() {
     // Ablation of the PE allocation strategy (Eq. 8).
     let arch = hybrid_arch();
     let q = QuantSpec::default();
-    let costs = UNIT_ENERGY_45NM;
-    let prop = ChunkAccelerator::new(allocate(&arch, budget(), &costs), MemoryConfig::default(), costs);
+    let prop = hw().build(&arch);
     let eq = ChunkAccelerator::new(
-        allocate_equal(&arch, budget(), &costs),
+        allocate_equal(&arch, hw().budget, &UNIT_ENERGY_45NM),
         MemoryConfig::default(),
-        costs,
+        UNIT_ENERGY_45NM,
     );
     let m = Mapping::all_rs(arch.layers.len());
     let sp = prop.simulate(&arch, &m, &q).unwrap();
@@ -111,20 +104,12 @@ fn multiplication_free_baselines_on_matching_eyeriss() {
     // DeepShift on Shift-Eyeriss must beat conv-MBv2 on MAC-Eyeriss in
     // energy; AdderNet likewise (Sec. 5.2's baseline setup).
     let q = QuantSpec::default();
-    let mem = MemoryConfig::default();
-    let c = UNIT_ENERGY_45NM;
     let conv = mobilenet_v2_like(OpKind::Conv, 16, 10, 500);
     let shift = mobilenet_v2_like(OpKind::Shift, 16, 10, 500);
     let adder = mobilenet_v2_like(OpKind::Adder, 16, 10, 500);
-    let e_conv = EyerissSim::with_budget(PeKind::Mac, budget().total_um2, mem, c)
-        .simulate(&conv, &q)
-        .unwrap();
-    let e_shift = EyerissSim::with_budget(PeKind::ShiftUnit, budget().total_um2, mem, c)
-        .simulate(&shift, &q)
-        .unwrap();
-    let e_adder = EyerissSim::with_budget(PeKind::AdderUnit, budget().total_um2, mem, c)
-        .simulate(&adder, &q)
-        .unwrap();
+    let e_conv = hw().build_eyeriss(PeKind::Mac).simulate(&conv, &q).unwrap();
+    let e_shift = hw().build_eyeriss(PeKind::ShiftUnit).simulate(&shift, &q).unwrap();
+    let e_adder = hw().build_eyeriss(PeKind::AdderUnit).simulate(&adder, &q).unwrap();
     assert!(e_shift.energy_pj < e_conv.energy_pj);
     assert!(e_adder.energy_pj < e_conv.energy_pj);
 }
@@ -132,7 +117,7 @@ fn multiplication_free_baselines_on_matching_eyeriss() {
 #[test]
 fn addernet_dedicated_accel_runs_resnet32() {
     let q = QuantSpec::default();
-    let accel = addernet_accel(budget().total_um2, MemoryConfig::default(), UNIT_ENERGY_45NM);
+    let accel = hw().build_addernet();
     let arch = resnet32_adder_like(16, 100);
     let s = accel.simulate(&arch, &q).unwrap();
     assert!(s.energy_pj > 0.0 && s.latency_cycles > 0.0);

@@ -1,0 +1,171 @@
+//! Co-search regression pins:
+//!
+//! 1. Restricting the (arch x hw) grid to ONE hw cell reproduces a
+//!    standalone `mapper::auto_map_hw` at that `HwConfig` bit for bit —
+//!    best EDP, combos_tried, combos_infeasible — under both the
+//!    factored engine and the brute-force reference rule.
+//! 2. On a compute-bound workload the co-search frontier contains a
+//!    non-default hardware cell that strictly beats the default cell on
+//!    EDP at equal accuracy — the reason the hardware axis is worth
+//!    searching at all. (EDP does not price area, and PE count only
+//!    gates tile feasibility, so a larger area budget admits strictly
+//!    larger tiles at identical energy.)
+
+use nasa::accel::{HwSpaceSpec, MemoryConfig};
+use nasa::coordinator::{cosearch, frontier, CosearchOptions};
+use nasa::mapper::{auto_map, auto_map_hw, MapperConfig};
+use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("nasa_cosearch_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn hybrid_arch() -> Arch {
+    let mk = |name: &str, kind, c: usize| LayerDesc {
+        name: name.into(),
+        kind,
+        cin: c,
+        cout: c,
+        h_out: 8,
+        w_out: 8,
+        k: 3,
+        stride: 1,
+        groups: 1,
+    };
+    Arch {
+        name: "eq_hybrid".into(),
+        layers: vec![
+            mk("c1", OpKind::Conv, 16),
+            mk("s2", OpKind::Shift, 24),
+            mk("a3", OpKind::Adder, 24),
+        ],
+        choices: vec![],
+    }
+}
+
+/// Wide 3x3 convs: compute cycles (~m*n*k / tile) dominate both memory
+/// streams, so the area-budget axis is the binding hardware lever.
+fn compute_bound_arch() -> Arch {
+    let mk = |name: &str| LayerDesc {
+        name: name.into(),
+        kind: OpKind::Conv,
+        cin: 16,
+        cout: 256,
+        h_out: 16,
+        w_out: 16,
+        k: 3,
+        stride: 1,
+        groups: 1,
+    };
+    Arch { name: "compute_bound".into(), layers: vec![mk("c1"), mk("c2")], choices: vec![] }
+}
+
+#[test]
+fn single_cell_cosearch_matches_standalone_auto_map() {
+    let arch = hybrid_arch();
+    let q = QuantSpec::default();
+    let cells = HwSpaceSpec::default_cell().enumerate();
+    assert_eq!(cells.len(), 1);
+    let hw = &cells[0].hw;
+
+    for factored in [true, false] {
+        let opts = CosearchOptions {
+            out_dir: tmp_dir(if factored { "eq_f" } else { "eq_r" }),
+            factored,
+            ..CosearchOptions::default()
+        };
+        let results =
+            cosearch(std::slice::from_ref(&arch), &cells, &[Some(0.5)], &opts).unwrap();
+        assert_eq!(results.len(), 1);
+        let got = &results[0];
+
+        let standalone = if factored {
+            auto_map_hw(hw, &arch, &q)
+        } else {
+            let mut cfg = MapperConfig::for_hw(hw);
+            cfg.factored = false;
+            auto_map(&hw.build(&arch), &arch, &q, &cfg)
+        };
+        let (_, s) = standalone.best.as_ref().expect("feasible mapping");
+        // Bit-identical best EDP and identical search-space accounting.
+        assert_eq!(
+            got.edp_pj_s.map(f64::to_bits),
+            Some(s.edp(hw.clock_hz).to_bits()),
+            "factored={factored}"
+        );
+        assert_eq!(got.combos_tried, standalone.combos_tried, "factored={factored}");
+        assert_eq!(got.combos_infeasible, standalone.combos_infeasible, "factored={factored}");
+        let _ = std::fs::remove_dir_all(&opts.out_dir);
+    }
+}
+
+#[test]
+fn factored_and_reference_rules_agree_on_every_reference_cell() {
+    let arch = hybrid_arch();
+    let cells = HwSpaceSpec::reference().enumerate();
+    let accs = [Some(0.5)];
+    let f_opts = CosearchOptions { out_dir: tmp_dir("rule_f"), ..CosearchOptions::default() };
+    let r_opts = CosearchOptions {
+        out_dir: tmp_dir("rule_r"),
+        factored: false,
+        ..CosearchOptions::default()
+    };
+    let f = cosearch(std::slice::from_ref(&arch), &cells, &accs, &f_opts).unwrap();
+    let r = cosearch(std::slice::from_ref(&arch), &cells, &accs, &r_opts).unwrap();
+    assert_eq!(f.len(), r.len());
+    for (a, b) in f.iter().zip(&r) {
+        assert_eq!(a.cell_name, b.cell_name);
+        assert_eq!(
+            a.edp_pj_s.map(f64::to_bits),
+            b.edp_pj_s.map(f64::to_bits),
+            "engines disagree at {}",
+            a.cell_name
+        );
+        assert_eq!(a.combos_tried, b.combos_tried, "at {}", a.cell_name);
+        assert_eq!(a.combos_infeasible, b.combos_infeasible, "at {}", a.cell_name);
+    }
+    let _ = std::fs::remove_dir_all(&f_opts.out_dir);
+    let _ = std::fs::remove_dir_all(&r_opts.out_dir);
+}
+
+#[test]
+fn frontier_finds_non_default_cell_strictly_better_on_edp() {
+    // The seeded acceptance grid: default memory point plus a bigger GB,
+    // a wider NoC, and a larger area budget.
+    let mut spec = HwSpaceSpec::default_cell();
+    spec.gb_bytes = vec![108 * 1024, 216 * 1024];
+    spec.noc_bytes_per_cycle = vec![16.0, 32.0];
+    spec.budget_pes = vec![168, 336];
+    let cells = spec.enumerate();
+    assert_eq!(cells.len(), 8);
+    let default_name = HwSpaceSpec::default_cell().enumerate()[0].name.clone();
+    assert!(cells.iter().any(|c| c.name == default_name), "grid must seed the default cell");
+
+    let arch = compute_bound_arch();
+    let opts = CosearchOptions { out_dir: tmp_dir("win"), ..CosearchOptions::default() };
+    // One arch at fixed accuracy: every cell competes at EQUAL accuracy,
+    // so the frontier degenerates to the single min-EDP cell.
+    let results = cosearch(std::slice::from_ref(&arch), &cells, &[Some(0.9)], &opts).unwrap();
+    let default_edp = results
+        .iter()
+        .find(|r| r.cell_name == default_name)
+        .and_then(|r| r.edp_pj_s)
+        .expect("default cell must map the workload");
+
+    let front = frontier(&results);
+    assert_eq!(front.len(), 1, "equal accuracy -> single min-EDP survivor");
+    let winner = &front[0];
+    assert_ne!(winner.cell_name, default_name, "a non-default cell must win");
+    assert!(
+        winner.edp_pj_s.unwrap() < default_edp,
+        "winner {} EDP {:.3e} must strictly beat default {:.3e}",
+        winner.cell_name,
+        winner.edp_pj_s.unwrap(),
+        default_edp
+    );
+    let _ = std::fs::remove_dir_all(&opts.out_dir);
+}

@@ -1,0 +1,88 @@
+//! The enumerable hardware search space (`accel::HwSpaceSpec`): every
+//! cell is feasible by construction, grids are duplicate-free, and the
+//! reference spec's cell count is pinned.
+
+use nasa::accel::{HwSpaceSpec, MemoryConfig};
+use nasa::mapper::auto_map_hw;
+use nasa::model::{Arch, LayerDesc, OpKind, QuantSpec};
+
+fn tiny_hybrid() -> Arch {
+    let mk = |name: &str, kind| LayerDesc {
+        name: name.into(),
+        kind,
+        cin: 8,
+        cout: 8,
+        h_out: 8,
+        w_out: 8,
+        k: 3,
+        stride: 1,
+        groups: 1,
+    };
+    Arch {
+        name: "tiny_hybrid".into(),
+        layers: vec![
+            mk("c", OpKind::Conv),
+            mk("s", OpKind::Shift),
+            mk("a", OpKind::Adder),
+        ],
+        choices: vec![],
+    }
+}
+
+#[test]
+fn reference_grid_has_pinned_cell_count() {
+    // 4 GB sizes x 2 RF sizes x 3 NoC widths x 1 budget, all valid.
+    assert_eq!(HwSpaceSpec::reference().enumerate().len(), 24);
+}
+
+#[test]
+fn every_reference_cell_is_feasible_by_construction() {
+    let arch = tiny_hybrid();
+    let q = QuantSpec::default();
+    for cell in HwSpaceSpec::reference().enumerate() {
+        cell.hw.validate().unwrap_or_else(|e| panic!("{}: {e}", cell.name));
+        // And not just structurally: the auto-mapper finds a feasible
+        // mapping for a small hybrid at every cell of the shipped grid.
+        let r = auto_map_hw(&cell.hw, &arch, &q);
+        assert!(r.best.is_some(), "no feasible mapping at {}", cell.name);
+    }
+}
+
+#[test]
+fn enumeration_is_deterministic_and_duplicate_free() {
+    let a = HwSpaceSpec::reference().enumerate();
+    let b = HwSpaceSpec::reference().enumerate();
+    let names: Vec<&str> = a.iter().map(|c| c.name.as_str()).collect();
+    assert_eq!(names, b.iter().map(|c| c.name.as_str()).collect::<Vec<_>>());
+    let set: std::collections::BTreeSet<&str> = names.iter().copied().collect();
+    assert_eq!(set.len(), names.len(), "duplicate cell names: {names:?}");
+}
+
+#[test]
+fn overlapping_axis_values_are_deduped() {
+    let mut spec = HwSpaceSpec::default_cell();
+    spec.gb_bytes = vec![108 * 1024, 108 * 1024, 54 * 1024];
+    spec.noc_bytes_per_cycle = vec![16.0, 16.0];
+    assert_eq!(spec.enumerate().len(), 2);
+}
+
+#[test]
+fn default_cell_is_the_papers_fixed_accelerator() {
+    let cells = HwSpaceSpec::default_cell().enumerate();
+    assert_eq!(cells.len(), 1);
+    let d = MemoryConfig::default();
+    let hw = &cells[0].hw;
+    assert_eq!(hw.mem.gb_bytes, d.gb_bytes);
+    assert_eq!(hw.mem.rf_bytes_per_pe, d.rf_bytes_per_pe);
+    assert_eq!(hw.mem.noc_bytes_per_cycle, d.noc_bytes_per_cycle);
+    assert_eq!(cells[0].name, hw.cell_name());
+}
+
+#[test]
+fn infeasible_axis_values_are_dropped_not_kept() {
+    let mut spec = HwSpaceSpec::reference();
+    spec.rf_bytes_per_pe = vec![4, 256, 512]; // 4B is below the RF floor
+    let cells = spec.enumerate();
+    assert_eq!(cells.len(), 24);
+    assert!(cells.iter().all(|c| c.hw.mem.rf_bytes_per_pe >= 256));
+}
