@@ -408,6 +408,45 @@ fn main() {
         }
     }
 
+    // --- Obs exhibit: span tracing overhead on the serve path. ---
+    // The same seeded workload with `--obs-level spans` worth of tracing
+    // enabled: the virtual-time schedule must not shift at all (spans
+    // observe the clock, they never advance it), modeled throughput must
+    // stay within 5% (the acceptance criterion — trivial while the
+    // schedule is untouched, and exactly the regression gate if tracing
+    // ever leaks into scheduling), and the wall-clock ratio is recorded
+    // as an advisory row (ring pushes are ~ns against ms workloads).
+    let svc_obs = service(8);
+    let wall_obs_off = runner.bench("serve/loadtest_obs_off", || {
+        let out = run_loadtest(&svc_obs, &spec, 42).unwrap();
+        assert_eq!(out.metrics.completed as usize, n);
+        std::hint::black_box(out.metrics.span_us);
+    });
+    let out_obs_off = run_loadtest(&svc_obs, &spec, 42).unwrap();
+    nasa::obs::set_level(nasa::obs::Level::Spans);
+    let wall_obs_on = runner.bench("serve/loadtest_obs_spans", || {
+        nasa::obs::reset();
+        let out = run_loadtest(&svc_obs, &spec, 42).unwrap();
+        assert_eq!(out.metrics.completed as usize, n);
+        std::hint::black_box(out.metrics.span_us);
+    });
+    nasa::obs::reset();
+    let out_obs_on = run_loadtest(&svc_obs, &spec, 42).unwrap();
+    nasa::obs::set_level(nasa::obs::Level::Off);
+    let (to_off, to_on) =
+        (out_obs_off.metrics.throughput_rps(), out_obs_on.metrics.throughput_rps());
+    runner.record_value("serve/vthroughput_rps_obs_off", to_off);
+    runner.record_value("serve/vthroughput_rps_obs_spans", to_on);
+    runner.record_speedup("serve/obs_overhead_spans_vs_off", &wall_obs_on, &wall_obs_off);
+    assert!(
+        to_on >= 0.95 * to_off,
+        "span tracing costs >5% virtual throughput: {to_on:.1} vs {to_off:.1} req/s"
+    );
+    assert_eq!(
+        out_obs_on.batches, out_obs_off.batches,
+        "span tracing must not perturb the virtual-time schedule"
+    );
+
     println!(
         "serve: batch8 {t8:.1} req/s vs batch1 {t1:.1} req/s (x{:.2} virtual), \
          occupancy {:.2}, deterministic replay OK (stub + cpu)",

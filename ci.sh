@@ -137,6 +137,42 @@ cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
 cmp target/ci_serve/burst1.json target/ci_serve/burst2.json
 grep -q '"completed":300' target/ci_serve/burst1.json
 
+say "obs smoke: traced loadtest replay, valid Chrome trace, byte-identical"
+# The same recorded trace replayed twice at --obs-level spans: both the
+# metrics JSON (now carrying the obs counter block) and the exported
+# Chrome trace-event timeline must be byte-identical — the virtual-clock
+# stamping contract. The trace must be well-formed (python json.load),
+# carry serve.batch_exec spans, and feed the nasa report trace profiler.
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --trace target/ci_serve/trace.json --batch-max 8 --deadline-us 2000 \
+    --obs-level spans --trace-out target/ci_serve/obs1.json \
+    --json target/ci_serve/obs_m1.json
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --trace target/ci_serve/trace.json --batch-max 8 --deadline-us 2000 \
+    --obs-level spans --trace-out target/ci_serve/obs2.json \
+    --json target/ci_serve/obs_m2.json
+cmp target/ci_serve/obs1.json target/ci_serve/obs2.json
+cmp target/ci_serve/obs_m1.json target/ci_serve/obs_m2.json
+grep -q '"obs"' target/ci_serve/obs_m1.json
+# --trace-out alone implies spans; metrics at level off stay legacy-shaped.
+cargo run --release --quiet -- loadtest --models "$SERVE_MODELS" \
+    --trace target/ci_serve/trace.json --batch-max 8 --deadline-us 2000 \
+    --json target/ci_serve/obs_off.json
+cmp target/ci_serve/replay1.json target/ci_serve/obs_off.json
+python3 - <<'EOF'
+import json
+doc = json.load(open("target/ci_serve/obs1.json"))
+evs = doc["traceEvents"]
+assert evs, "trace recorded no events"
+for ev in evs:
+    for key in ("name", "cat", "ph", "ts", "dur", "pid", "tid"):
+        assert key in ev, f"event missing {key}: {ev}"
+assert any(ev["name"] == "serve.batch_exec" for ev in evs), "no batch spans"
+assert doc["dropped_events"] == 0, "ci workload must fit the span ring"
+print(f"obs trace OK: {len(evs)} events, counters={len(doc['counters'])}")
+EOF
+cargo run --release --quiet -- report trace target/ci_serve/obs1.json
+
 say "cpu backend smoke: nasa serve --backend cpu (real kernel inference)"
 # Same derived children, served through the native multiplication-free
 # kernels instead of the stub: 50 closed-loop requests must all complete

@@ -207,6 +207,12 @@ pub fn cosearch(
         .flat_map(|a| (0..cells.len()).map(move |c| (a, c)))
         .collect();
     let results = par_map_jobs(&pairs, opts.jobs, |&(ai, ci)| {
+        // Wall-clock span on the worker thread; one per (arch, hw cell).
+        let _span = crate::obs::span_args(
+            "cosearch.cell",
+            0,
+            &[("arch", ai as i64), ("cell", ci as i64)],
+        );
         let (arch, cell) = (&archs[ai], &cells[ci]);
         let path = cell_path(&dir, &arch.name, &cell.name);
         if opts.resume && path.exists() {

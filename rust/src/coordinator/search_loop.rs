@@ -372,7 +372,8 @@ pub fn run_search_resumable(
         Some(spec) if spec.resume && spec.path.exists() => {
             let c = Checkpoint::load(&spec.path)?;
             let st = LoopState::restore(c, sn, dataset, cfg)?;
-            eprintln!(
+            crate::log!(
+                Info,
                 "[search {}] resumed from {} at epoch {}",
                 cfg.space_key,
                 spec.path.display(),
@@ -466,7 +467,8 @@ pub fn run_search_resumable(
             )?;
             st.log.curve_mut("val_acc").push(epoch as f64, acc);
         }
-        eprintln!(
+        crate::log!(
+            Info,
             "[search {}] epoch {:>3}/{} stage={:?} loss={:.3} acc={:.3} tau={:.2}",
             cfg.space_key,
             epoch + 1,

@@ -227,6 +227,8 @@ pub fn run_sweep(
     }
 
     let results = par_map_jobs(runs, opts.jobs, |run| {
+        // Wall-clock span on the worker thread; one per sweep cell.
+        let _span = crate::obs::span("sweep.run");
         let t0 = std::time::Instant::now();
         let dataset = &datasets[&run.cfg.space_key];
         let spec = opts.checkpoint.then(|| {

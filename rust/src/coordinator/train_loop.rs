@@ -98,7 +98,8 @@ pub fn train_child(
         log.curve_mut("train_loss")
             .push(epoch as f64, eloss / cfg.steps_per_epoch as f64);
         log.curve_mut("train_acc").push(epoch as f64, ecorrect / n);
-        eprintln!(
+        crate::log!(
+            Info,
             "[train {}] epoch {:>3}/{} loss={:.3} acc={:.3}",
             cfg.space_key,
             epoch + 1,

@@ -30,6 +30,7 @@ pub mod kernels;
 pub mod mapper;
 pub mod model;
 pub mod nas;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

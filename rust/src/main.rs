@@ -36,6 +36,13 @@ use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args = Args::parse_env()?;
+    // Global verbosity: --quiet / --verbose beat the NASA_LOG env filter.
+    if args.flag("quiet") {
+        nasa::obs::set_log_level(nasa::obs::LogLevel::Warn);
+    }
+    if args.flag("verbose") {
+        nasa::obs::set_log_level(nasa::obs::LogLevel::Debug);
+    }
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     let r = match sub.as_str() {
         "search" => cmd_search(&args),
@@ -56,9 +63,37 @@ fn main() -> Result<()> {
     };
     let unknown = args.unknown();
     if !unknown.is_empty() {
-        eprintln!("warning: unrecognized options: {unknown:?}");
+        nasa::log!(Warn, "unrecognized options: {unknown:?}");
     }
     r
+}
+
+/// Parse `--obs-level off|counters|spans` and `--trace-out <path>`;
+/// `--trace-out` alone implies the spans level. Returns the trace path.
+fn obs_setup(args: &Args) -> Result<Option<PathBuf>> {
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    match args.get("obs-level") {
+        Some(s) => match nasa::obs::parse_level(s) {
+            Some(l) => nasa::obs::set_level(l),
+            None => bail!("--obs-level wants off|counters|spans (got '{s}')"),
+        },
+        None if trace_out.is_some() => nasa::obs::set_level(nasa::obs::Level::Spans),
+        None => {}
+    }
+    Ok(trace_out)
+}
+
+/// Export the Chrome trace recorded during the command, if requested.
+fn obs_finish(trace_out: &Option<PathBuf>) -> Result<()> {
+    if let Some(p) = trace_out {
+        nasa::obs::write_chrome_trace(p)?;
+        println!(
+            "chrome trace -> {} (open in ui.perfetto.dev; profile: nasa report trace {})",
+            p.display(),
+            p.display()
+        );
+    }
+    Ok(())
 }
 
 fn print_help() {
@@ -73,6 +108,7 @@ USAGE: nasa <subcommand> [--options]
            [--ablate-pgp] [--ablate-recipe] [--pretrain 9] [--epochs 12]
            [--steps 16] [--lambda 0.05] [--eval-every 0] [--jobs 0]
            [--resume] [--no-checkpoint] [--out runs]
+           [--obs-level off|counters|spans] [--trace-out trace.json]
            (grid = spaces x schedules x recipes x seeds, run concurrently
             through one shared engine; checkpoints land in
             <out>/<run>/checkpoint.json at PGP stage boundaries)
@@ -85,6 +121,7 @@ USAGE: nasa <subcommand> [--options]
            [--gb BYTES,..] [--rf BYTES,..] [--noc B/CYC,..]
            [--budget-pes N,..] [--jobs 0] [--resume] [--reference]
            [--out runs]
+           [--obs-level off|counters|spans] [--trace-out trace.json]
            (joint architecture x accelerator grid: auto-map every arch
             at every valid hardware cell — default grid is the 24-cell
             reference HwSpace; any axis flag switches to an explicit
@@ -100,6 +137,7 @@ USAGE: nasa <subcommand> [--options]
            [--class-cap-interactive N] [--class-cap-batch N]
            [--interactive-frac 1.0] [--threads 0] [--fxp] [--no-prepack]
            [--seed 42] [--trace out.json] [--json metrics.json]
+           [--obs-level off|counters|spans] [--trace-out trace.json]
            (live threaded service, wall-clock numbers; --shards runs an
             executor fleet over one shared SLO-classed queue; --adaptive
             sizes batches against the per-class SLO instead of the static
@@ -120,6 +158,7 @@ USAGE: nasa <subcommand> [--options]
            [--class-cap-interactive N] [--class-cap-batch N]
            [--interactive-frac 1.0] [--fxp] [--no-prepack]
            [--json metrics.json] [--save-trace out.json]
+           [--obs-level off|counters|spans] [--trace-out trace.json]
            (deterministic virtual-time load test across N simulated
             shards: identical flags+seed give bit-identical batches,
             shard placements, latencies and metrics JSON; scheduling is
@@ -128,6 +167,17 @@ USAGE: nasa <subcommand> [--options]
             model mix)
   check    [--artifacts artifacts]
   report   table2|fig2|fig6|fig7|fig8|cosearch [--out runs]
+           | trace <trace.json>   (top-k self-time profile of a --trace-out file)
+
+GLOBAL OPTIONS
+  --quiet / --verbose   stderr log threshold (warn / debug; default info,
+                        or the NASA_LOG env var: error|warn|info|debug)
+  --obs-level LEVEL     telemetry: off (default, zero-cost), counters
+                        (monotonic counter registry, merged into metrics
+                        JSON), spans (counters + ring-buffered spans)
+  --trace-out PATH      export spans+counters as Chrome trace-event JSON
+                        (implies --obs-level spans; deterministic under
+                        loadtest virtual time)
 "
     );
 }
@@ -163,7 +213,7 @@ fn cmd_search(args: &Args) -> Result<()> {
     let engine = Engine::cpu()?;
     let t0 = std::time::Instant::now();
     let outcome = run_search(&engine, &manifest, &dataset, &cfg)?;
-    println!("search done in {:.1}s", t0.elapsed().as_secs_f64());
+    nasa::log!(Info, "search done in {:.1}s", t0.elapsed().as_secs_f64());
     println!("choices: {:?}", outcome.choices);
     let counts = arch_op_counts(&outcome.arch);
     let (m, s, a) = counts.in_millions();
@@ -191,6 +241,7 @@ fn parse_list<T, F: Fn(&str) -> Result<T>>(s: &str, parse: F) -> Result<Vec<T>> 
 /// every cell concurrently through ONE shared engine, print the summary,
 /// save logs + derived archs.
 fn cmd_sweep(args: &Args) -> Result<()> {
+    let trace_out = obs_setup(args)?;
     let spaces = parse_list(&args.str_or("spaces", "hybrid_all_c10"), |t| Ok(t.to_string()))?;
     let seeds = parse_list(&args.str_or("seeds", "42"), |t| {
         t.parse::<u64>().map_err(|e| anyhow::anyhow!("--seeds: {e}"))
@@ -218,7 +269,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let manifest = Manifest::load(&artifacts_dir(args))?;
     let engine = Engine::cpu()?;
-    println!(
+    nasa::log!(
+        Info,
         "sweep: {} runs (spaces x schedules x recipes x seeds), jobs={}, checkpoint={}, resume={}",
         runs.len(),
         if opts.jobs == 0 { "auto".to_string() } else { opts.jobs.to_string() },
@@ -229,7 +281,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let results = run_sweep(&engine, &manifest, &runs, &opts)?;
     print_summary(&results);
     let ok = save_outcomes(&results, &opts.out_dir)?;
-    println!(
+    nasa::log!(
+        Info,
         "sweep done in {:.1}s: {ok}/{} runs ok; logs + archs in {}",
         t0.elapsed().as_secs_f64(),
         results.len(),
@@ -238,7 +291,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if ok < results.len() {
         bail!("{} sweep run(s) failed", results.len() - ok);
     }
-    Ok(())
+    obs_finish(&trace_out)
 }
 
 /// Write the concrete Arch JSON for a choice vector (no PJRT needed).
@@ -396,6 +449,7 @@ fn cmd_map(args: &Args) -> Result<()> {
 /// `auto_map` at that cell's `HwConfig`, ranked on the accuracy x EDP
 /// plane. Deterministic and resumable (per-cell JSON checkpoints).
 fn cmd_cosearch(args: &Args) -> Result<()> {
+    let trace_out = obs_setup(args)?;
     let arch_paths = parse_list(args.require("archs")?, |t| Ok(t.to_string()))?;
     if arch_paths.is_empty() {
         bail!("--archs needs at least one arch JSON path");
@@ -441,7 +495,8 @@ fn cmd_cosearch(args: &Args) -> Result<()> {
     // Accuracy join: a train run named train_<arch> in the runs root.
     let accs: Vec<Option<f64>> =
         archs.iter().map(|a| lookup_acc(&opts.out_dir, &a.name)).collect();
-    println!(
+    nasa::log!(
+        Info,
         "cosearch: {} archs x {} hw cells = {} evaluations (engine={}, jobs={}, resume={})",
         archs.len(),
         cells.len(),
@@ -455,14 +510,15 @@ fn cmd_cosearch(args: &Args) -> Result<()> {
     let path = save_frontier(&results, &opts)?;
     let front = nasa::coordinator::frontier(&results);
     nasa::report::cosearch::print_results(&results, &front);
-    println!(
-        "cosearch done in {:.2}s: {} cells mapped, {} on the frontier; exhibit -> {}",
+    nasa::log!(
+        Info,
+        "cosearch done in {:.2}s: {} cells mapped, {} on the frontier",
         t0.elapsed().as_secs_f64(),
         results.iter().filter(|r| r.edp_pj_s.is_some()).count(),
-        front.len(),
-        path.display()
+        front.len()
     );
-    Ok(())
+    println!("frontier exhibit -> {}", path.display());
+    obs_finish(&trace_out)
 }
 
 /// Shared `serve`/`loadtest` plumbing: models from `--models` arch-JSON
@@ -518,9 +574,10 @@ fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>, f64)> {
         None => Arc::new(Engine::cpu()?),
         Some(b) => Arc::new(Engine::with_backend(Backend::parse(b)?)?),
     };
-    println!("backend: {}", engine.platform());
+    nasa::log!(Info, "backend: {}", engine.platform());
     for m in &models {
-        println!(
+        nasa::log!(
+            Info,
             "model '{}': {} layers, {} params, {:.1} cyc/inf, {:.3} uJ/inf{}",
             m.name,
             m.arch.layers.len(),
@@ -537,11 +594,13 @@ fn serve_setup(args: &Args) -> Result<(Service, Vec<f64>, f64)> {
 
 /// Run the live threaded service and self-drive it closed-loop.
 fn cmd_serve(args: &Args) -> Result<()> {
+    let trace_out = obs_setup(args)?;
     let (svc, mix, frac) = serve_setup(args)?;
     let requests = args.usize_or("requests", 200)?;
     let clients = args.usize_or("clients", 4)?;
     let seed = args.u64_or("seed", 42)?;
-    println!(
+    nasa::log!(
+        Info,
         "serve: {} batcher shard(s) ({} batching, batch_max={} deadline={}us queue_cap={}), \
          {} closed-loop clients x {} requests ({:.0}% interactive)",
         svc.cfg.shards,
@@ -555,7 +614,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let t0 = std::time::Instant::now();
     let (metrics, trace) = drive_closed_loop(svc, clients, requests, &mix, frac, seed)?;
-    println!("serve done in {:.2}s (wall)", t0.elapsed().as_secs_f64());
+    nasa::log!(Info, "serve done in {:.2}s (wall)", t0.elapsed().as_secs_f64());
     metrics.print_table();
     if let Some(p) = args.get("trace") {
         trace.save(Path::new(p))?;
@@ -568,11 +627,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if metrics.completed as usize != requests {
         bail!("serve: completed {} of {requests} requests", metrics.completed);
     }
-    Ok(())
+    obs_finish(&trace_out)
 }
 
 /// Deterministic virtual-time load test of the same serving core.
 fn cmd_loadtest(args: &Args) -> Result<()> {
+    let trace_out = obs_setup(args)?;
+    // Command-level virtual scope: even setup-phase telemetry (mapper
+    // spans while pricing models) stamps deterministically at t=0, so the
+    // exported trace is byte-identical across replays.
+    let _vclock = nasa::obs::VirtualClockGuard::new();
     let (svc, mix, frac) = serve_setup(args)?;
     let seed = args.u64_or("seed", 42)?;
     let requests = args.usize_or("requests", 200)?;
@@ -609,7 +673,8 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         let spec = LoadSpec { requests, process, mix, interactive_frac: frac };
         (run_loadtest(&svc, &spec, seed)?, format!("open-loop ({rps} rps)"))
     };
-    println!(
+    nasa::log!(
+        Info,
         "loadtest [{what}] seed={seed}: simulated {:.3}s of traffic in {:.2}s wall",
         outcome.metrics.span_us as f64 / 1e6,
         t0.elapsed().as_secs_f64()
@@ -630,7 +695,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             outcome.metrics.completed
         );
     }
-    Ok(())
+    obs_finish(&trace_out)
 }
 
 fn cmd_check(args: &Args) -> Result<()> {
@@ -666,6 +731,12 @@ fn cmd_report(args: &Args) -> Result<()> {
         "fig7" => nasa::report::fig7::print_from_dir(&runs),
         "fig8" => nasa::report::fig8::print_from_dir(&runs),
         "cosearch" => nasa::report::cosearch::print_from_dir(&runs),
+        "trace" => {
+            let Some(file) = args.positional.get(1) else {
+                bail!("report trace wants a file: nasa report trace <trace.json>");
+            };
+            nasa::report::trace::print_from_file(Path::new(file))
+        }
         other => bail!("unknown report '{other}'"),
     }
 }

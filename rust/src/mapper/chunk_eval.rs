@@ -192,9 +192,13 @@ pub fn eval_chunk(
     q: &QuantSpec,
     cfg: &MapperConfig,
 ) -> ChunkEval {
+    crate::obs::counters().mapper_chunk_eval_evals.inc();
     let kind = OpKind::ALL[key.chunk_idx];
     let chunk = accel.chunk_with(kind, key.df, key.gb_share(), key.noc_share());
     let result = chunk_frontier(accel, arch, layer_idxs, &chunk, key.chunk_idx, q, cfg);
+    if result.is_err() {
+        crate::obs::counters().mapper_chunk_eval_infeasible.inc();
+    }
     ChunkEval { key, result }
 }
 

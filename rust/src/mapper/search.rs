@@ -262,6 +262,7 @@ pub fn auto_map(
     if !cfg.factored {
         return auto_map_reference(accel, arch, q, cfg);
     }
+    let _span = crate::obs::span("mapper.auto_map");
     let op_loads = crate::accel::alloc::op_loads(arch);
     let cands =
         super::space::candidates_for(&accel.alloc, &op_loads, cfg.independent_noc, &cfg.dataflows);
@@ -280,7 +281,10 @@ pub fn auto_map(
             }
             let k = ChunkKey::new(fi, c.dfs[fi], c.gb[fi], c.noc[fi]);
             if seen.insert(k) {
+                crate::obs::counters().mapper_chunk_memo_miss.inc();
                 keys.push(k);
+            } else {
+                crate::obs::counters().mapper_chunk_memo_hit.inc();
             }
         }
     }

@@ -1,0 +1,155 @@
+//! Process-global monotonic counter registry.
+//!
+//! Counters are plain `AtomicU64`s named hierarchically (`mapper.chunk_memo.hit`).
+//! Increments are gated on the global obs level: at [`crate::obs::Level::Off`]
+//! an `inc()` is one relaxed atomic load and a taken-not branch. Reads
+//! (`get`, [`counter_values`], [`counters_json`]) are never gated so tests
+//! and exporters can always observe state.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Counter {
+    name: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    const fn new(name: &'static str) -> Counter {
+        Counter { name, value: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Add 1 if counters are enabled; no-op (one atomic load) otherwise.
+    #[inline]
+    pub fn inc(&self) {
+        if super::counters_enabled() {
+            self.value.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Add `n` if counters are enabled.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if super::counters_enabled() {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value; not gated on the obs level.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Every counter in the process, one field per name. Adding a counter means
+/// adding a field here and a row in `all()` — the declaration order is the
+/// export order.
+pub struct Counters {
+    pub mapper_chunk_memo_hit: Counter,
+    pub mapper_chunk_memo_miss: Counter,
+    pub mapper_chunk_eval_evals: Counter,
+    pub mapper_chunk_eval_infeasible: Counter,
+    pub runtime_cpu_plan_hit: Counter,
+    pub runtime_cpu_plan_rebuild: Counter,
+    pub runtime_exec_cache_hit: Counter,
+    pub runtime_exec_cache_miss: Counter,
+    pub par_thread_budget_granted: Counter,
+    pub par_thread_budget_denied: Counter,
+    pub serve_queue_admit: Counter,
+    pub serve_queue_reject_queue_full: Counter,
+    pub serve_queue_reject_class_full: Counter,
+    pub serve_batch_dispatch: Counter,
+}
+
+impl Counters {
+    pub fn all(&self) -> [&Counter; 14] {
+        [
+            &self.mapper_chunk_memo_hit,
+            &self.mapper_chunk_memo_miss,
+            &self.mapper_chunk_eval_evals,
+            &self.mapper_chunk_eval_infeasible,
+            &self.runtime_cpu_plan_hit,
+            &self.runtime_cpu_plan_rebuild,
+            &self.runtime_exec_cache_hit,
+            &self.runtime_exec_cache_miss,
+            &self.par_thread_budget_granted,
+            &self.par_thread_budget_denied,
+            &self.serve_queue_admit,
+            &self.serve_queue_reject_queue_full,
+            &self.serve_queue_reject_class_full,
+            &self.serve_batch_dispatch,
+        ]
+    }
+}
+
+static COUNTERS: Counters = Counters {
+    mapper_chunk_memo_hit: Counter::new("mapper.chunk_memo.hit"),
+    mapper_chunk_memo_miss: Counter::new("mapper.chunk_memo.miss"),
+    mapper_chunk_eval_evals: Counter::new("mapper.chunk_eval.evals"),
+    mapper_chunk_eval_infeasible: Counter::new("mapper.chunk_eval.infeasible"),
+    runtime_cpu_plan_hit: Counter::new("runtime.cpu.plan_hit"),
+    runtime_cpu_plan_rebuild: Counter::new("runtime.cpu.plan_rebuild"),
+    runtime_exec_cache_hit: Counter::new("runtime.exec_cache.hit"),
+    runtime_exec_cache_miss: Counter::new("runtime.exec_cache.miss"),
+    par_thread_budget_granted: Counter::new("par.thread_budget.granted"),
+    par_thread_budget_denied: Counter::new("par.thread_budget.denied"),
+    serve_queue_admit: Counter::new("serve.queue.admit"),
+    serve_queue_reject_queue_full: Counter::new("serve.queue.reject.queue_full"),
+    serve_queue_reject_class_full: Counter::new("serve.queue.reject.class_full"),
+    serve_batch_dispatch: Counter::new("serve.batch.dispatch"),
+};
+
+/// The process-global counter registry.
+#[inline]
+pub fn counters() -> &'static Counters {
+    &COUNTERS
+}
+
+/// Snapshot of every counter `(name, value)` in declaration order.
+pub fn counter_values() -> Vec<(&'static str, u64)> {
+    COUNTERS.all().iter().map(|c| (c.name, c.get())).collect()
+}
+
+/// Flat JSON object of every counter (zeros included, declaration order).
+pub fn counters_json() -> Json {
+    Json::obj(counter_values().into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect())
+}
+
+pub(crate) fn reset_counters() {
+    for c in COUNTERS.all() {
+        c.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_hierarchical_and_unique() {
+        let names: Vec<&str> = COUNTERS.all().iter().map(|c| c.name()).collect();
+        for n in &names {
+            assert!(n.contains('.'), "counter name {n:?} is not hierarchical");
+        }
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate counter names");
+    }
+
+    #[test]
+    fn json_snapshot_lists_every_counter() {
+        let j = counters_json().to_string();
+        for c in COUNTERS.all() {
+            assert!(j.contains(c.name()), "{} missing from counters_json", c.name());
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Leveled diagnostic logging on stderr.
+//!
+//! Replaces the scattered ad-hoc `eprintln!` diagnostics with one gated
+//! surface: `crate::log!(Info, "...")` (or `nasa::log!` from the binary).
+//! The threshold comes from, in priority order: an explicit
+//! [`set_log_level`] call (the CLI maps `--quiet` → Warn, `--verbose` →
+//! Debug), else the `NASA_LOG` env var (`error|warn|info|debug`), else
+//! Info. User-facing program output (report tables, bench rows, result
+//! paths) stays on plain stdout and is not routed through here.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum LogLevel {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl LogLevel {
+    fn tag(self) -> &'static str {
+        match self {
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+}
+
+/// Parse a `NASA_LOG` value.
+pub fn parse_log_level(s: &str) -> Option<LogLevel> {
+    match s {
+        "error" => Some(LogLevel::Error),
+        "warn" => Some(LogLevel::Warn),
+        "info" => Some(LogLevel::Info),
+        "debug" => Some(LogLevel::Debug),
+        _ => None,
+    }
+}
+
+/// Sentinel: threshold not yet resolved from the environment.
+const UNSET: u8 = u8::MAX;
+
+static LOG_THRESHOLD: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Override the threshold (wins over `NASA_LOG`).
+pub fn set_log_level(level: LogLevel) {
+    LOG_THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+fn threshold() -> u8 {
+    let v = LOG_THRESHOLD.load(Ordering::Relaxed);
+    if v != UNSET {
+        return v;
+    }
+    let resolved = std::env::var("NASA_LOG")
+        .ok()
+        .and_then(|s| parse_log_level(s.trim()))
+        .unwrap_or(LogLevel::Info);
+    LOG_THRESHOLD.store(resolved as u8, Ordering::Relaxed);
+    resolved as u8
+}
+
+/// Would a message at `level` be emitted? Used by the `log!` macro so the
+/// format arguments are never evaluated for suppressed levels.
+#[inline]
+pub fn log_enabled(level: LogLevel) -> bool {
+    (level as u8) <= threshold()
+}
+
+/// Emit a pre-checked message. Call through the `log!` macro.
+pub fn log_emit(level: LogLevel, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{}] {}", level.tag(), args);
+}
+
+/// Leveled stderr logging: `crate::log!(Warn, "failed to write {p}: {e}")`.
+/// Level idents are [`LogLevel`] variants. Format args are only evaluated
+/// when the level passes the threshold.
+#[macro_export]
+macro_rules! log {
+    ($lvl:ident, $($arg:tt)*) => {
+        if $crate::obs::log_enabled($crate::obs::LogLevel::$lvl) {
+            $crate::obs::log_emit($crate::obs::LogLevel::$lvl, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_log_level_values() {
+        assert_eq!(parse_log_level("error"), Some(LogLevel::Error));
+        assert_eq!(parse_log_level("warn"), Some(LogLevel::Warn));
+        assert_eq!(parse_log_level("info"), Some(LogLevel::Info));
+        assert_eq!(parse_log_level("debug"), Some(LogLevel::Debug));
+        assert_eq!(parse_log_level("trace"), None);
+    }
+
+    #[test]
+    fn ordering_matches_severity() {
+        assert!(LogLevel::Error < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+    }
+
+    #[test]
+    fn threshold_gates_levels() {
+        // Shared-process test: set an explicit level, check gating, restore
+        // the default resolution path is not needed (Info default).
+        set_log_level(LogLevel::Warn);
+        assert!(log_enabled(LogLevel::Error));
+        assert!(log_enabled(LogLevel::Warn));
+        assert!(!log_enabled(LogLevel::Info));
+        set_log_level(LogLevel::Info);
+        assert!(log_enabled(LogLevel::Info));
+        assert!(!log_enabled(LogLevel::Debug));
+    }
+}

@@ -1,0 +1,166 @@
+//! Observability: structured spans, monotonic counters, leveled logging.
+//!
+//! Design goals, in order:
+//!
+//! 1. **Zero-cost when off.** The global level defaults to [`Level::Off`];
+//!    every counter increment, span guard, and log site starts with one
+//!    relaxed atomic load and a branch. No allocation, no locking, no
+//!    formatting happens unless the corresponding level is enabled.
+//! 2. **Deterministic under virtual time.** The discrete-event loadtest
+//!    drives a virtual clock; spans recorded while a [`VirtualClockGuard`]
+//!    is installed are stamped from that clock, so two replays of the same
+//!    trace export byte-identical timelines. Wall-clock stamping is used
+//!    only on the live serve path and in the coordinators.
+//! 3. **Alloc-free steady state.** Span events land in thread-local ring
+//!    buffers preallocated at first use ([`span::RING_CAP`] events); pushing
+//!    within capacity never allocates, keeping the prepacked cpu request
+//!    path inside the PR-8 alloc budget even at `--obs-level spans`.
+//!
+//! The process-global collector ([`span::snapshot_events`]) merges per-thread
+//! rings in registration order; [`export::chrome_trace_json`] turns them into
+//! Chrome trace-event JSON loadable in Perfetto / `chrome://tracing`.
+
+pub mod counters;
+pub mod export;
+pub mod log;
+pub mod span;
+
+pub use counters::{counter_values, counters, counters_json, Counters};
+pub use export::{chrome_trace_json, write_chrome_trace};
+pub use log::{log_emit, log_enabled, parse_log_level, set_log_level, LogLevel};
+pub use span::{record_span, snapshot_events, span, span_args, SpanEvent, MAX_ARGS};
+
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Telemetry level. `Counters` enables counters only; `Spans` enables both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Counters = 1,
+    Spans = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Off as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        1 => Level::Counters,
+        _ => Level::Spans,
+    }
+}
+
+#[inline]
+pub(crate) fn counters_enabled() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= Level::Counters as u8
+}
+
+#[inline]
+pub(crate) fn spans_enabled() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= Level::Spans as u8
+}
+
+/// Parse an `--obs-level` value.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s {
+        "off" => Some(Level::Off),
+        "counters" => Some(Level::Counters),
+        "spans" => Some(Level::Spans),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------- clock --
+
+/// Depth of nested virtual-clock scopes; > 0 means virtual time is active.
+static VIRTUAL_DEPTH: AtomicUsize = AtomicUsize::new(0);
+/// Current virtual time in microseconds, driven by the simulator.
+static VNOW: AtomicU64 = AtomicU64::new(0);
+/// Lazily pinned wall-clock epoch; all wall timestamps are relative to it.
+static WALL_EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// RAII scope during which [`now_us`] reads the virtual clock. Nesting-safe:
+/// the discrete-event simulator installs one inside a command-level guard.
+pub struct VirtualClockGuard(());
+
+impl VirtualClockGuard {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> VirtualClockGuard {
+        VIRTUAL_DEPTH.fetch_add(1, Ordering::Relaxed);
+        VirtualClockGuard(())
+    }
+}
+
+impl Drop for VirtualClockGuard {
+    fn drop(&mut self) {
+        VIRTUAL_DEPTH.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Advance the virtual clock (µs). Only meaningful inside a virtual scope.
+#[inline]
+pub fn set_vnow(us: u64) {
+    VNOW.store(us, Ordering::Relaxed);
+}
+
+/// Current timestamp in µs: virtual time inside a [`VirtualClockGuard`]
+/// scope, wall time (relative to a process-local epoch) otherwise.
+#[inline]
+pub fn now_us() -> u64 {
+    if VIRTUAL_DEPTH.load(Ordering::Relaxed) > 0 {
+        VNOW.load(Ordering::Relaxed)
+    } else {
+        WALL_EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+    }
+}
+
+/// Reset all telemetry state: counters to zero, virtual clock to zero, and
+/// span rings to empty (registrations and ring capacity are kept). Used
+/// between in-process replays so repeated runs export identical traces.
+pub fn reset() {
+    counters::reset_counters();
+    span::clear_rings();
+    VNOW.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_roundtrip() {
+        assert_eq!(parse_level("off"), Some(Level::Off));
+        assert_eq!(parse_level("counters"), Some(Level::Counters));
+        assert_eq!(parse_level("spans"), Some(Level::Spans));
+        assert_eq!(parse_level("verbose"), None);
+    }
+
+    #[test]
+    fn virtual_clock_nests_and_restores() {
+        // Runs in the shared lib-test process: only check scoping behavior,
+        // not absolute wall values.
+        set_vnow(41);
+        {
+            let _outer = VirtualClockGuard::new();
+            assert_eq!(now_us(), 41);
+            {
+                let _inner = VirtualClockGuard::new();
+                set_vnow(42);
+                assert_eq!(now_us(), 42);
+            }
+            assert_eq!(now_us(), 42);
+        }
+        // Outside all guards the wall clock is monotone, not VNOW-pinned.
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

@@ -8,6 +8,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod table2;
+pub mod trace;
 
 use crate::util::json::Json;
 use anyhow::Result;

@@ -1,0 +1,198 @@
+//! `nasa report trace <file>` — self-time profile of a Chrome trace export.
+//!
+//! Reads a trace written by `--trace-out`, reconstructs span nesting per
+//! (pid, tid) lane from the complete events (`"ph":"X"`), and prints a
+//! per-name table of call count, total time, and self time (total minus
+//! time spent in contained child spans), ranked by self time. This answers
+//! "where did the microseconds go" without leaving the terminal.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+struct Ev {
+    name: String,
+    ts: u64,
+    dur: u64,
+    pid: u64,
+    tid: u64,
+}
+
+#[derive(Default)]
+struct NameStats {
+    count: u64,
+    total_us: u64,
+    self_us: u64,
+}
+
+/// Number of rows printed by the profile table.
+const TOP_K: usize = 20;
+
+fn parse_events(doc: &Json) -> Result<Vec<Ev>> {
+    let events = doc
+        .get("traceEvents")
+        .context("not a Chrome trace: missing 'traceEvents'")?
+        .as_arr()?;
+    let mut out = Vec::with_capacity(events.len());
+    for e in events {
+        // Tolerate foreign traces: skip non-complete or malformed events.
+        let ph = e.get("ph").and_then(|p| p.as_str().ok()).unwrap_or("");
+        if ph != "X" {
+            continue;
+        }
+        let (Some(name), Some(ts), Some(dur)) = (
+            e.get("name").and_then(|v| v.as_str().ok()),
+            e.get("ts").and_then(|v| v.as_f64().ok()),
+            e.get("dur").and_then(|v| v.as_f64().ok()),
+        ) else {
+            continue;
+        };
+        out.push(Ev {
+            name: name.to_string(),
+            ts: ts as u64,
+            dur: dur as u64,
+            pid: e.get("pid").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64,
+            tid: e.get("tid").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64,
+        });
+    }
+    Ok(out)
+}
+
+/// Fold events into per-name stats. Nesting is recovered per (pid, tid)
+/// lane with a containment stack: a span is a child of the nearest open
+/// span whose [ts, ts+dur] interval contains it, and child time is
+/// subtracted from the parent's self time.
+fn fold_stats(mut events: Vec<Ev>) -> BTreeMap<String, NameStats> {
+    // Sort by lane, then start; for equal starts the longer (outer) span
+    // first so it becomes the parent.
+    events.sort_by(|a, b| {
+        (a.pid, a.tid, a.ts, std::cmp::Reverse(a.dur))
+            .cmp(&(b.pid, b.tid, b.ts, std::cmp::Reverse(b.dur)))
+    });
+    let mut stats: BTreeMap<String, NameStats> = BTreeMap::new();
+    // Open-span stack for the current lane: (end_ts, index into `stats` key).
+    let mut stack: Vec<(u64, String)> = Vec::new();
+    let mut lane = (u64::MAX, u64::MAX);
+    for e in &events {
+        if (e.pid, e.tid) != lane {
+            lane = (e.pid, e.tid);
+            stack.clear();
+        }
+        while let Some((end, _)) = stack.last() {
+            if e.ts >= *end {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        let s = stats.entry(e.name.clone()).or_default();
+        s.count += 1;
+        s.total_us += e.dur;
+        s.self_us += e.dur;
+        if let Some((_, parent)) = stack.last() {
+            let p = stats.entry(parent.clone()).or_default();
+            p.self_us = p.self_us.saturating_sub(e.dur);
+        }
+        stack.push((e.ts.saturating_add(e.dur), e.name.clone()));
+    }
+    stats
+}
+
+/// Print the top-[`TOP_K`] self-time table for a `--trace-out` file.
+pub fn print_from_file(path: &Path) -> Result<()> {
+    let doc = Json::parse_file(path)?;
+    let events = parse_events(&doc)?;
+    if events.is_empty() {
+        bail!(
+            "{}: no complete span events (was the run made with --obs-level spans?)",
+            path.display()
+        );
+    }
+    let n_events = events.len();
+    let stats = fold_stats(events);
+    let mut rows: Vec<(&String, &NameStats)> = stats.iter().collect();
+    rows.sort_by(|a, b| b.1.self_us.cmp(&a.1.self_us).then_with(|| a.0.cmp(b.0)));
+
+    println!("trace: {} ({} span events)", path.display(), n_events);
+    let mut table = super::Table::new(&["span", "count", "total_us", "self_us", "self_%"]);
+    let grand_self: u64 = rows.iter().map(|(_, s)| s.self_us).sum();
+    for (name, s) in rows.iter().take(TOP_K) {
+        let pct = if grand_self == 0 {
+            0.0
+        } else {
+            100.0 * s.self_us as f64 / grand_self as f64
+        };
+        table.row(vec![
+            (*name).clone(),
+            s.count.to_string(),
+            s.total_us.to_string(),
+            s.self_us.to_string(),
+            format!("{pct:.1}"),
+        ]);
+    }
+    table.print();
+    if rows.len() > TOP_K {
+        println!("... {} more span names", rows.len() - TOP_K);
+    }
+    if let Some(d) = doc.get("dropped_events").and_then(|v| v.as_f64().ok()) {
+        if d > 0.0 {
+            println!("warning: {d} events dropped at capture (ring overflow)");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, ts: u64, dur: u64) -> Ev {
+        Ev { name: name.to_string(), ts, dur, pid: 0, tid: 0 }
+    }
+
+    #[test]
+    fn self_time_subtracts_children() {
+        // outer [0, 100] contains child [10, 40] and child [50, 70].
+        let stats = fold_stats(vec![ev("outer", 0, 100), ev("child", 10, 30), ev("child", 50, 20)]);
+        assert_eq!(stats["outer"].total_us, 100);
+        assert_eq!(stats["outer"].self_us, 50);
+        assert_eq!(stats["child"].count, 2);
+        assert_eq!(stats["child"].self_us, 50);
+    }
+
+    #[test]
+    fn lanes_do_not_nest_across_pids() {
+        let mut a = ev("a", 0, 100);
+        let mut b = ev("b", 10, 10);
+        a.pid = 0;
+        b.pid = 1;
+        let stats = fold_stats(vec![a, b]);
+        // b is on another lane, so it must not eat a's self time.
+        assert_eq!(stats["a"].self_us, 100);
+        assert_eq!(stats["b"].self_us, 10);
+    }
+
+    #[test]
+    fn equal_start_longer_span_is_parent() {
+        let stats = fold_stats(vec![ev("inner", 0, 10), ev("outer", 0, 100)]);
+        assert_eq!(stats["outer"].self_us, 90);
+        assert_eq!(stats["inner"].self_us, 10);
+    }
+
+    #[test]
+    fn parses_only_complete_events() {
+        let doc = Json::parse(
+            r#"{"traceEvents":[
+                {"name":"x","cat":"c","ph":"X","ts":1,"dur":2,"pid":0,"tid":0},
+                {"name":"m","ph":"M","ts":0},
+                {"ph":"X","ts":0,"dur":1}
+            ]}"#,
+        )
+        .unwrap();
+        let evs = parse_events(&doc).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "x");
+    }
+}

@@ -263,9 +263,11 @@ impl CpuModel {
             if p.params.len() == params.len()
                 && p.params.iter().zip(params).all(|(a, b)| a.to_bits() == b.to_bits())
             {
+                crate::obs::counters().runtime_cpu_plan_hit.inc();
                 return Ok(Some(Arc::clone(p)));
             }
         }
+        crate::obs::counters().runtime_cpu_plan_rebuild.inc();
         let fresh = Arc::new(self.prepare(params)?);
         *slot = Some(Arc::clone(&fresh));
         Ok(Some(fresh))
@@ -314,6 +316,7 @@ impl CpuModel {
                 x.len()
             );
         }
+        let _span = crate::obs::span_args("runtime.cpu.infer", 0, &[("batch", batch as i64)]);
         let plan = self.plan_for(params)?;
         if batch > 1 {
             let sample = h0 * w0 * c0;

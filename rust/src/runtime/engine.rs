@@ -158,8 +158,10 @@ impl Engine {
         };
         let mut slot = entry.lock().expect("engine cache entry poisoned");
         if let Some(e) = &*slot {
+            crate::obs::counters().runtime_exec_cache_hit.inc();
             return Ok(e.clone());
         }
+        crate::obs::counters().runtime_exec_cache_miss.inc();
         let full = dir.join(&io.path);
         let t0 = std::time::Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
@@ -176,7 +178,8 @@ impl Engine {
             exe,
             input_shapes: io.input_shapes.clone(),
         });
-        eprintln!(
+        crate::log!(
+            Info,
             "[engine] compiled {} in {:.1}s",
             io.path,
             t0.elapsed().as_secs_f64()

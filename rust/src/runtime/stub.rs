@@ -413,8 +413,10 @@ impl Engine {
     pub fn load(&self, _dir: &Path, io: &ArtifactIo) -> Result<Arc<Executable>> {
         let mut cache = self.cache.lock().expect("engine cache poisoned");
         if let Some(e) = cache.get(&io.path) {
+            crate::obs::counters().runtime_exec_cache_hit.inc();
             return Ok(e.clone());
         }
+        crate::obs::counters().runtime_exec_cache_miss.inc();
         let kind = ArtifactKind::infer(io);
         let mode = match self.backend {
             Backend::Cpu => {

@@ -182,7 +182,15 @@ fn batcher_loop(shared: &LiveShared, shard: usize, stop: &AtomicBool) {
                 reqs.iter().map(|r| st.pending.remove(&r.id)).collect();
             drop(st); // execute without holding the lock
             let start = shared.t0.elapsed().as_micros() as u64;
-            let result = shared.svc.execute_batch(model, &reqs, start);
+            let result = {
+                // Wall-clock span on the worker thread (live path only).
+                let _span = crate::obs::span_args(
+                    "serve.batch_exec",
+                    shard as u32,
+                    &[("model", model as i64), ("batch", reqs.len() as i64)],
+                );
+                shared.svc.execute_batch(model, &reqs, start)
+            };
             st = shared.state.lock().expect("live state poisoned");
             match result {
                 Ok((mut resps, mut rec)) => {

@@ -342,6 +342,10 @@ enum Source {
 const OPEN_CLIENT: usize = usize::MAX;
 
 fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
+    // All telemetry inside the event loop is stamped from the virtual
+    // clock, so replays of one trace export byte-identical timelines.
+    let _vclock = crate::obs::VirtualClockGuard::new();
+    crate::obs::set_vnow(0);
     let cfg = svc.cfg;
     let shards = cfg.shards.max(1);
     let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
@@ -411,6 +415,13 @@ fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
                 .min();
             let Some((_, si)) = due else { break };
             let (resps, rec) = inflight[si].take().unwrap();
+            crate::obs::record_span(
+                "serve.batch_exec",
+                rec.start_us,
+                rec.done_us.saturating_sub(rec.start_us),
+                si as u32,
+                &[("model", rec.model as i64), ("batch", rec.ids.len() as i64)],
+            );
             if cfg.adaptive {
                 let worst = resps.iter().map(|r| r.latency_us()).max().unwrap_or(0);
                 adaptive.on_batch_done(
@@ -503,6 +514,7 @@ fn simulate(svc: &Service, mut source: Source) -> Result<LoadtestOutcome> {
             Some(t) => {
                 debug_assert!(t >= now, "virtual time must not run backwards");
                 now = t.max(now);
+                crate::obs::set_vnow(now);
             }
         }
     }

@@ -333,7 +333,7 @@ impl ServeMetrics {
 
     pub fn to_json(&self) -> Json {
         let g = self.global();
-        Json::obj(vec![
+        let mut fields = vec![
             ("issued", Json::Num(self.issued as f64)),
             ("admitted", Json::Num(self.admitted as f64)),
             ("completed", Json::Num(self.completed as f64)),
@@ -390,7 +390,13 @@ impl ServeMetrics {
                 "models",
                 Json::Arr(self.per_model.iter().map(|m| m.to_json()).collect()),
             ),
-        ])
+        ];
+        // Only when telemetry is on — with obs off the document must stay
+        // byte-identical to the pre-obs format (ci.sh cmp-pins it).
+        if crate::obs::level() != crate::obs::Level::Off {
+            fields.push(("obs", crate::obs::counters_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Human table (the `nasa serve`/`nasa loadtest` terminal readout).

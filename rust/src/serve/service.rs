@@ -372,12 +372,19 @@ impl ClassedQueue {
             });
         }
         if self.total() >= self.cap_total {
+            crate::obs::counters().serve_queue_reject_queue_full.inc();
             return Err(Rejected::QueueFull { queued: self.total() });
         }
-        self.classes[class.index()].submit(req).map_err(|e| match e {
-            Rejected::QueueFull { queued } => Rejected::ClassFull { class, queued },
-            other => other,
-        })
+        self.classes[class.index()]
+            .submit(req)
+            .map(|()| crate::obs::counters().serve_queue_admit.inc())
+            .map_err(|e| match e {
+                Rejected::QueueFull { queued } => {
+                    crate::obs::counters().serve_queue_reject_class_full.inc();
+                    Rejected::ClassFull { class, queued }
+                }
+                other => other,
+            })
     }
 
     /// Pop the next dispatchable batch, draining classes in priority
@@ -519,6 +526,7 @@ impl Service {
         if reqs.is_empty() {
             bail!("serve: empty batch dispatched");
         }
+        crate::obs::counters().serve_batch_dispatch.inc();
         let m = &self.models[model];
         let exe = self.engine.load(&self.dir, &m.infer_io(reqs.len()))?;
         let samples: Vec<Vec<f32>> = reqs.iter().map(|r| r.sample(m.sample_len())).collect();

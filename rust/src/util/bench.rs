@@ -215,11 +215,19 @@ impl Runner {
     /// Errors are reported but non-fatal (benches still printed stats).
     pub fn finish(&self) {
         let Some(path) = &self.json_path else { return };
-        let body = format!("[\n{}\n]\n", self.records.join(",\n"));
+        let mut records = self.records.clone();
+        // Telemetry counters ride along as extra `value` records, but only
+        // when obs is on — baseline BENCH files stay byte-stable otherwise.
+        if crate::obs::level() != crate::obs::Level::Off {
+            for (name, v) in crate::obs::counter_values() {
+                records.push(format!("{{\"bench\":\"obs/{name}\",\"value\":{v}}}"));
+            }
+        }
+        let body = format!("[\n{}\n]\n", records.join(",\n"));
         if let Err(e) = std::fs::write(path, body) {
-            eprintln!("bench: failed to write {}: {e}", path.display());
+            crate::log!(Warn, "bench: failed to write {}: {e}", path.display());
         } else {
-            println!("bench: wrote {} records to {}", self.records.len(), path.display());
+            println!("bench: wrote {} records to {}", records.len(), path.display());
         }
     }
 }

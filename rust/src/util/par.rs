@@ -96,6 +96,10 @@ impl ThreadBudget {
                 .is_ok()
             {
                 self.high.fetch_max(cur + grant, Ordering::SeqCst);
+                crate::obs::counters().par_thread_budget_granted.inc();
+                if grant < want {
+                    crate::obs::counters().par_thread_budget_denied.inc();
+                }
                 return ThreadClaim { budget: self, n: grant };
             }
         }

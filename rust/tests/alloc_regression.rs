@@ -102,4 +102,16 @@ fn steady_state_prepacked_hot_path_is_allocation_free() {
         leg_avg > pre_avg,
         "legacy path ({leg_avg}/request) should out-allocate prepacked ({pre_avg}/request)"
     );
+
+    // Tracing on must not re-open the budget: span guards write into a
+    // preallocated thread-local ring, so the steady-state count stays
+    // within the same ceiling. The warmup inside `measure` absorbs the
+    // one-time ring allocation on first touch.
+    nasa::obs::set_level(nasa::obs::Level::Spans);
+    let pre_spans_avg = measure(&pre);
+    nasa::obs::set_level(nasa::obs::Level::Off);
+    assert!(
+        pre_spans_avg <= 4.0,
+        "prepacked hot path with spans on allocates {pre_spans_avg}/request"
+    );
 }

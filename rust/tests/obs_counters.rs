@@ -1,0 +1,251 @@
+//! Exact-count pins for the obs counter registry.
+//!
+//! Lives in its own test binary because the counters are process-global:
+//! a dedicated process (plus the `GUARD` mutex serializing the `#[test]`
+//! fns) means nothing else increments them mid-assertion. Every test
+//! resets the registry, raises the level to `Counters`, exercises one
+//! hit path and one miss path, and pins the exact deltas; the level is
+//! dropped back to `Off` before releasing the lock.
+
+#![cfg(not(feature = "pjrt"))]
+
+use nasa::model::zoo::shiftaddnet_like;
+use nasa::obs::{self, Level};
+use std::sync::{Mutex, MutexGuard};
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+/// Serialize tests and enter counter-recording mode with a clean slate.
+fn counting() -> MutexGuard<'static, ()> {
+    let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_level(Level::Off);
+    obs::reset();
+    obs::set_level(Level::Counters);
+    g
+}
+
+#[test]
+fn plan_cache_counts_hits_and_rebuilds() {
+    use nasa::runtime::CpuModel;
+    use nasa::util::rng::Rng;
+
+    let arch = shiftaddnet_like(8, 4);
+    let model = CpuModel::compile("obs_plan", &arch, false, &[]).unwrap();
+    let mut rng = Rng::new(0xC0);
+    let mut params: Vec<f32> =
+        (0..model.n_params()).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let [h, w, c] = model.sample_shape();
+    let x: Vec<f32> = (0..h * w * c).map(|_| rng.normal() as f32).collect();
+
+    let _g = counting();
+    let hits = || obs::counters().runtime_cpu_plan_hit.get();
+    let rebuilds = || obs::counters().runtime_cpu_plan_rebuild.get();
+
+    // Cold: first request builds the plan.
+    model.infer(&params, &x, 1).unwrap();
+    assert_eq!((rebuilds(), hits()), (1, 0));
+    // Warm: same binding hits.
+    model.infer(&params, &x, 1).unwrap();
+    model.infer(&params, &x, 1).unwrap();
+    assert_eq!((rebuilds(), hits()), (1, 2));
+    // Rebind: one changed weight forces exactly one rebuild…
+    params[0] += 1.0;
+    model.infer(&params, &x, 1).unwrap();
+    assert_eq!((rebuilds(), hits()), (2, 2));
+    // …and the new binding hits again.
+    model.infer(&params, &x, 1).unwrap();
+    assert_eq!((rebuilds(), hits()), (2, 3));
+    obs::set_level(Level::Off);
+}
+
+#[test]
+fn exec_cache_counts_loads() {
+    use nasa::runtime::{ArtifactIo, Engine};
+    use std::path::Path;
+
+    let engine = Engine::cpu().unwrap();
+    let io = |p: &str| ArtifactIo {
+        path: p.to_string(),
+        input_shapes: vec![(vec![4], "float32".to_string())],
+    };
+
+    let _g = counting();
+    let hits = || obs::counters().runtime_exec_cache_hit.get();
+    let misses = || obs::counters().runtime_exec_cache_miss.get();
+
+    engine.load(Path::new("artifacts"), &io("obs_a.hlo.txt")).unwrap();
+    assert_eq!((misses(), hits()), (1, 0));
+    engine.load(Path::new("artifacts"), &io("obs_a.hlo.txt")).unwrap();
+    engine.load(Path::new("artifacts"), &io("obs_a.hlo.txt")).unwrap();
+    assert_eq!((misses(), hits()), (1, 2));
+    engine.load(Path::new("artifacts"), &io("obs_b.hlo.txt")).unwrap();
+    assert_eq!((misses(), hits()), (2, 2));
+    obs::set_level(Level::Off);
+}
+
+#[test]
+fn thread_budget_counts_grants_and_denials() {
+    use nasa::util::par::ThreadBudget;
+
+    let budget = ThreadBudget::new();
+    let _g = counting();
+    let granted = || obs::counters().par_thread_budget_granted.get();
+    let denied = || obs::counters().par_thread_budget_denied.get();
+
+    // Unlimited (cap 0): wants are granted in full.
+    let c = budget.claim(4, 1);
+    assert_eq!(c.granted(), 4);
+    assert_eq!((granted(), denied()), (1, 0));
+    drop(c);
+
+    // Capped: the second claim gets clipped and counts a denial.
+    budget.set(4);
+    let a = budget.claim(3, 1);
+    assert_eq!(a.granted(), 3);
+    let b = budget.claim(3, 1);
+    assert_eq!(b.granted(), 1, "cap 4 leaves one thread for the second claim");
+    assert_eq!((granted(), denied()), (3, 1));
+    drop(b);
+    drop(a);
+
+    // Released budget grants in full again.
+    let c = budget.claim(4, 1);
+    assert_eq!(c.granted(), 4);
+    assert_eq!((granted(), denied()), (4, 1));
+    obs::set_level(Level::Off);
+}
+
+#[test]
+fn classed_queue_counts_admits_and_both_reject_kinds() {
+    use nasa::serve::{ClassedQueue, Rejected, Request, ServeConfig, SloClass};
+
+    let cfg = ServeConfig {
+        queue_cap: 4,
+        class_caps: [2, usize::MAX],
+        ..ServeConfig::default()
+    };
+    let mut q = ClassedQueue::new(1, &cfg);
+    let req = |id: u64, class: SloClass| Request {
+        id,
+        model: 0,
+        client: usize::MAX,
+        arrival_us: id,
+        seed: id,
+        class,
+    };
+
+    let _g = counting();
+    let admits = || obs::counters().serve_queue_admit.get();
+    let class_full = || obs::counters().serve_queue_reject_class_full.get();
+    let queue_full = || obs::counters().serve_queue_reject_queue_full.get();
+
+    q.submit(req(0, SloClass::Interactive)).unwrap();
+    q.submit(req(1, SloClass::Interactive)).unwrap();
+    assert_eq!((admits(), class_full(), queue_full()), (2, 0, 0));
+
+    // Interactive class cap (2) trips while the global queue has room.
+    let e = q.submit(req(2, SloClass::Interactive)).unwrap_err();
+    assert!(matches!(e, Rejected::ClassFull { .. }));
+    assert_eq!((admits(), class_full(), queue_full()), (2, 1, 0));
+
+    q.submit(req(3, SloClass::Batch)).unwrap();
+    q.submit(req(4, SloClass::Batch)).unwrap();
+    assert_eq!(admits(), 4);
+
+    // Global cap (4) trips before any class is consulted.
+    let e = q.submit(req(5, SloClass::Batch)).unwrap_err();
+    assert!(matches!(e, Rejected::QueueFull { .. }));
+    assert_eq!((admits(), class_full(), queue_full()), (4, 1, 1));
+    obs::set_level(Level::Off);
+}
+
+#[test]
+fn loadtest_counters_reconcile_with_metrics() {
+    use nasa::runtime::Engine;
+    use nasa::serve::{
+        run_loadtest, LoadSpec, Process, ServeConfig, ServedModel, Service,
+    };
+    use std::path::Path;
+    use std::sync::Arc;
+
+    // Overloaded workload so every queue counter moves: tiny queue, slow
+    // service, open-loop arrivals far above capacity.
+    let models = vec![ServedModel::from_arch("sa8", &shiftaddnet_like(8, 4), 1).unwrap()];
+    let cfg = ServeConfig {
+        batch_max: 4,
+        deadline_us: 1_000,
+        queue_cap: 6,
+        batch_overhead_us: 2_000,
+        ..ServeConfig::default()
+    };
+    let svc =
+        Service::new(Arc::new(Engine::cpu().unwrap()), Path::new("artifacts"), models, cfg)
+            .unwrap();
+    let spec = LoadSpec {
+        requests: 200,
+        process: Process::OpenUniform { rps: 20_000.0 },
+        mix: vec![1.0],
+        ..LoadSpec::default()
+    };
+
+    let _g = counting();
+    let out = run_loadtest(&svc, &spec, 3).unwrap();
+    let m = &out.metrics;
+    let c = obs::counters();
+    assert_eq!(c.serve_queue_admit.get(), m.admitted, "admit counter vs metrics ledger");
+    assert_eq!(
+        c.serve_queue_reject_queue_full.get() + c.serve_queue_reject_class_full.get(),
+        m.rejected,
+        "reject counters vs metrics ledger"
+    );
+    assert!(m.rejected > 0, "overload must actually reject");
+    assert_eq!(c.serve_batch_dispatch.get(), m.batches, "dispatch counter vs batch count");
+
+    // At Counters level the metrics JSON carries the registry snapshot…
+    let with_obs = m.to_json();
+    let obs_obj = with_obs.get("obs").expect("metrics JSON gains an 'obs' object");
+    assert_eq!(
+        obs_obj.get("serve.queue.admit").unwrap().as_f64().unwrap() as u64,
+        m.admitted
+    );
+    // …and at Off the document is byte-identical to the legacy format.
+    obs::set_level(Level::Off);
+    assert!(m.to_json().get("obs").is_none(), "obs key must vanish at level off");
+}
+
+#[test]
+fn chunk_memo_and_eval_counts_are_exact_and_repeatable() {
+    use nasa::accel::HwConfig;
+    use nasa::mapper::auto_map_hw;
+    use nasa::model::QuantSpec;
+
+    let arch = shiftaddnet_like(8, 4);
+    let hw = HwConfig::with_budget_pes(168);
+    let q = QuantSpec::default();
+
+    let _g = counting();
+    let snap = || {
+        let c = obs::counters();
+        (
+            c.mapper_chunk_memo_hit.get(),
+            c.mapper_chunk_memo_miss.get(),
+            c.mapper_chunk_eval_evals.get(),
+        )
+    };
+    let r = auto_map_hw(&hw, &arch, &q);
+    let (hit, miss, evals) = snap();
+    // Every distinct chunk configuration is evaluated exactly once…
+    assert_eq!(evals, miss, "one eval per memo miss");
+    // …the memo is consulted once per (candidate, populated family)…
+    assert!(r.combos_tried > 0);
+    assert_eq!((hit + miss) % r.combos_tried as u64, 0, "lookups are per-candidate");
+    assert!(hit + miss >= r.combos_tried as u64);
+    // …and memoization is doing real work on this grid.
+    assert!(hit > 0, "expected shared chunk configs across candidates");
+
+    // A second identical run doubles every delta exactly.
+    let r2 = auto_map_hw(&hw, &arch, &q);
+    assert_eq!(r2.combos_tried, r.combos_tried);
+    assert_eq!(snap(), (hit * 2, miss * 2, evals * 2));
+    obs::set_level(Level::Off);
+}

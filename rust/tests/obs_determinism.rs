@@ -1,0 +1,137 @@
+//! Trace-export determinism: replaying one arrival trace twice at
+//! `--obs-level spans` must export byte-identical Chrome-trace JSON.
+//!
+//! This is the observable contract behind the virtual clock: every span
+//! recorded inside the loadtest event loop is stamped from virtual time
+//! (not wall time), and spans on virtual paths are recorded only from
+//! the simulating thread, so ring order is deterministic too. Runs in
+//! its own test binary because the span rings and level are
+//! process-global; the `GUARD` mutex serializes the `#[test]` fns.
+
+#![cfg(not(feature = "pjrt"))]
+
+use nasa::model::zoo::{resnet32_adder_like, shiftaddnet_like};
+use nasa::obs::{self, Level};
+use nasa::runtime::Engine;
+use nasa::serve::{
+    gen_trace, replay_trace, LoadSpec, Process, ServeConfig, ServedModel, Service,
+};
+use nasa::util::json::Json;
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn tracing() -> MutexGuard<'static, ()> {
+    let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_level(Level::Off);
+    obs::reset();
+    obs::set_level(Level::Spans);
+    g
+}
+
+fn models() -> Vec<ServedModel> {
+    static MODELS: OnceLock<Vec<ServedModel>> = OnceLock::new();
+    MODELS
+        .get_or_init(|| {
+            vec![
+                ServedModel::from_arch("sa8", &shiftaddnet_like(8, 4), 1).unwrap(),
+                ServedModel::from_arch("ra32", &resnet32_adder_like(8, 4), 2).unwrap(),
+            ]
+        })
+        .clone()
+}
+
+fn service(shards: usize) -> Service {
+    let cfg = ServeConfig { shards, ..ServeConfig::default() };
+    Service::new(Arc::new(Engine::cpu().unwrap()), Path::new("artifacts"), models(), cfg)
+        .unwrap()
+}
+
+/// Replay `trace` against a fresh ring state and export the timeline.
+fn exported_timeline(svc: &Service, trace: &nasa::serve::Trace) -> String {
+    obs::reset();
+    replay_trace(svc, trace).unwrap();
+    obs::chrome_trace_json().to_string()
+}
+
+#[test]
+fn replayed_trace_exports_identical_timelines() {
+    let spec = LoadSpec {
+        requests: 60,
+        process: Process::OpenPoisson { rps: 4_000.0 },
+        mix: vec![2.0, 1.0],
+        ..LoadSpec::default()
+    };
+
+    for shards in [1usize, 4] {
+        let svc = service(shards);
+        let trace = gen_trace(&spec, 2, 77).unwrap();
+
+        let _g = tracing();
+        let a = exported_timeline(&svc, &trace);
+        let b = exported_timeline(&svc, &trace);
+        assert_eq!(a, b, "shards={shards}: two replays must export byte-identical traces");
+        obs::set_level(Level::Off);
+
+        // The export is well-formed Chrome trace JSON with the expected
+        // serve spans on it, not just a stable empty document.
+        let doc = Json::parse(&a).unwrap();
+        let events = match doc.get("traceEvents").expect("traceEvents key") {
+            Json::Arr(v) => v,
+            other => panic!("traceEvents must be an array, got {other:?}"),
+        };
+        assert!(!events.is_empty(), "shards={shards}: trace recorded no events");
+        let mut max_pid = 0u64;
+        let mut batch_execs = 0usize;
+        for ev in events {
+            for key in ["name", "cat", "ph", "ts", "dur", "pid", "tid"] {
+                assert!(ev.get(key).is_some(), "event missing '{key}': {ev:?}");
+            }
+            let pid = ev.get("pid").unwrap().as_f64().unwrap() as u64;
+            max_pid = max_pid.max(pid);
+            if matches!(ev.get("name"), Some(Json::Str(n)) if n == "serve.batch_exec") {
+                batch_execs += 1;
+                // Virtual stamping: a 60-request loadtest finishes in well
+                // under a virtual second; wall stamps would be epoch-scale.
+                assert!(ev.get("ts").unwrap().as_f64().unwrap() < 10_000_000.0);
+            }
+        }
+        assert!(batch_execs > 0, "shards={shards}: no serve.batch_exec spans");
+        // One span track (pid) per shard actually exercised.
+        assert!(
+            (max_pid as usize) < shards,
+            "shards={shards}: span track {max_pid} out of range"
+        );
+        assert_eq!(
+            doc.get("dropped_events").unwrap().as_f64().unwrap(),
+            0.0,
+            "this workload must fit the ring"
+        );
+    }
+}
+
+#[test]
+fn reset_clears_the_timeline_between_runs() {
+    let spec = LoadSpec {
+        requests: 8,
+        process: Process::OpenUniform { rps: 1_000.0 },
+        mix: vec![1.0, 1.0],
+        ..LoadSpec::default()
+    };
+    let svc = service(1);
+    let trace = gen_trace(&spec, 2, 5).unwrap();
+
+    let _g = tracing();
+    let full = exported_timeline(&svc, &trace);
+    obs::reset();
+    let empty = obs::chrome_trace_json().to_string();
+    obs::set_level(Level::Off);
+
+    assert_ne!(full, empty);
+    let doc = Json::parse(&empty).unwrap();
+    match doc.get("traceEvents").unwrap() {
+        Json::Arr(v) => assert!(v.is_empty(), "reset must clear recorded spans"),
+        other => panic!("traceEvents must be an array, got {other:?}"),
+    }
+}
